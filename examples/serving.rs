@@ -1,0 +1,109 @@
+//! Serving demo: the full production path.
+//!
+//! Trains a hashed linear classifier OFFLINE (rust, dual coordinate
+//! descent), exports the weights in the `[K, 2^b, C]` layout, and then
+//! SERVES batched classification requests through the fused
+//! `hash_score` PJRT artifact — raw vector in, class scores out, with
+//! Python nowhere on the path. Reports latency percentiles and
+//! throughput like a vLLM-style router demo.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serving`
+
+use std::time::Instant;
+
+use minmax::coordinator::{export_scorer_weights, hash_dataset, PipelineConfig};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::{Dataset, Matrix};
+use minmax::runtime::{default_artifacts_dir, literal_f32, Engine};
+use minmax::util::stats::Reservoir;
+
+fn pad_cols(m: &Matrix, d: usize) -> Matrix {
+    let dense = m.to_dense();
+    let mut out = minmax::data::Dense::zeros(dense.rows(), d);
+    for i in 0..dense.rows() {
+        out.row_mut(i)[..dense.cols()].copy_from_slice(dense.row(i));
+    }
+    Matrix::Dense(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::load_subset(&dir, &["hash_score"])?;
+    let spec = engine.spec("hash_score")?.clone();
+    let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.inputs[1].shape[0];
+    let codes = spec.inputs[4].shape[1];
+    let classes = spec.inputs[4].shape[2];
+    println!("artifact hash_score: batch={b} dim={d} k={k} codes={codes} classes={classes}");
+
+    // ---- Offline: train on the youtube analog, export weights.
+    let seed = 4242u64;
+    let raw = generate("youtube", SynthConfig { seed, n_train: 400, n_test: 1024 })
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let ds = Dataset {
+        name: raw.name.clone(),
+        train_x: pad_cols(&raw.train_x, d),
+        train_y: raw.train_y.clone(),
+        test_x: pad_cols(&raw.test_x, d),
+        test_y: raw.test_y.clone(),
+    };
+    let pcfg = PipelineConfig { seed, k, i_bits: 8, t_bits: 0 };
+    let t0 = Instant::now();
+    let hashed = hash_dataset(&ds, &pcfg);
+    let w = export_scorer_weights(&hashed.train, &ds.train_y, classes, &hashed.expansion, 1.0);
+    println!("offline train: {:.2}s ({} train rows)", t0.elapsed().as_secs_f64(), ds.n_train());
+
+    // ---- Online: serve the test set in fixed-size batches via PJRT.
+    let (r, c, beta) = minmax::cws::materialize_params(seed, d, k);
+    let rl = literal_f32(&r, &[k, d])?;
+    let cl = literal_f32(&c, &[k, d])?;
+    let bl = literal_f32(&beta, &[k, d])?;
+    let wl = literal_f32(&w, &[k, codes, classes])?;
+
+    let test = ds.test_x.to_dense();
+    let n = (test.rows() / b) * b;
+    let mut lat = Reservoir::new();
+    let mut correct = 0usize;
+    let serve_start = Instant::now();
+    for batch_start in (0..n).step_by(b) {
+        let xb = &test.data()[batch_start * d..(batch_start + b) * d];
+        let t = Instant::now();
+        let outs = engine.run_decoded(
+            "hash_score",
+            &[literal_f32(xb, &[b, d])?, rl.clone(), cl.clone(), bl.clone(), wl.clone()],
+        )?;
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+        let scores = outs[0].as_f32().unwrap();
+        for i in 0..b {
+            let row = &scores[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, bb| a.1.partial_cmp(bb.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if pred == ds.test_y[batch_start + i] {
+                correct += 1;
+            }
+        }
+    }
+    let elapsed = serve_start.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests in {elapsed:.2}s  ({:.0} req/s, batch={b})",
+        n as f64 / elapsed
+    );
+    println!(
+        "batch latency: p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+        lat.percentile(50.0),
+        lat.percentile(95.0),
+        lat.percentile(99.0)
+    );
+    println!("served accuracy: {:.1}%", 100.0 * correct as f64 / n as f64);
+    println!("serving OK (PJRT, python-free request path)");
+    Ok(())
+}

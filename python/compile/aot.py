@@ -1,0 +1,125 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO **text** artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with ``return_tuple=True``; the rust
+side unwraps with ``to_tuple1``/``to_tuple``.
+
+Each artifact is described in ``manifest.json`` (name, file, input/output
+shapes + dtypes) consumed by ``rust/src/runtime/artifact.rs``.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact variants. Shapes are chosen so one PJRT execute is a
+# meaningful unit of coordinator work while staying quick to compile in
+# interpret mode. The rust batcher pads batches to B.
+VARIANTS = {
+    "cws_hash": dict(b=64, d=256, k=128),
+    "cws_hash_small": dict(b=16, d=64, k=64),
+    "minmax_block": dict(m=64, n=64, d=256),
+    "linear_block": dict(m=64, n=64, d=256),
+    "hash_score": dict(b=64, d=256, k=128, bits=8, classes=16),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_variant(name: str, spec: dict):
+    """Returns (lowered, input_descs, output_descs)."""
+    if name.startswith("cws_hash"):
+        b, d, k = spec["b"], spec["d"], spec["k"]
+        lowered = jax.jit(model.hash_batch).lower(
+            f32(b, d), f32(k, d), f32(k, d), f32(k, d)
+        )
+        ins = [("x", (b, d), "f32"), ("r", (k, d), "f32"), ("c", (k, d), "f32"),
+               ("beta", (k, d), "f32")]
+        outs = [("i_star", (b, k), "s32"), ("t_star", (b, k), "s32")]
+    elif name.startswith("minmax_block"):
+        m, n, d = spec["m"], spec["n"], spec["d"]
+        lowered = jax.jit(model.minmax_block).lower(f32(m, d), f32(n, d))
+        ins = [("x", (m, d), "f32"), ("y", (n, d), "f32")]
+        outs = [("k", (m, n), "f32")]
+    elif name.startswith("linear_block"):
+        m, n, d = spec["m"], spec["n"], spec["d"]
+        lowered = jax.jit(model.linear_block).lower(f32(m, d), f32(n, d))
+        ins = [("x", (m, d), "f32"), ("y", (n, d), "f32")]
+        outs = [("k", (m, n), "f32")]
+    elif name.startswith("hash_score"):
+        b, d, k = spec["b"], spec["d"], spec["k"]
+        codes = 1 << spec["bits"]
+        cls = spec["classes"]
+        lowered = jax.jit(model.hash_and_score).lower(
+            f32(b, d), f32(k, d), f32(k, d), f32(k, d), f32(k, codes, cls)
+        )
+        ins = [("x", (b, d), "f32"), ("r", (k, d), "f32"), ("c", (k, d), "f32"),
+               ("beta", (k, d), "f32"), ("w", (k, codes, cls), "f32")]
+        outs = [("scores", (b, cls), "f32")]
+    else:
+        raise ValueError(f"unknown variant {name}")
+    return lowered, ins, outs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--variants", default=",".join(VARIANTS), help="comma-separated subset"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": {}}
+    for name in args.variants.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        spec = VARIANTS[name]
+        lowered, ins, outs = lower_variant(name, spec)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "spec": spec,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": dt} for (n, s, dt) in ins
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": dt} for (n, s, dt) in outs
+            ],
+        }
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json with {len(manifest['entries'])} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

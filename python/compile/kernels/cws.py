@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel: the ICWS sampling hot-spot.
+
+The ICWS inner loop (per batch row, per hash slot: a masked argmin of
+``a = c * exp(-r*(t-beta) - r)`` over the D data coordinates) is the
+paper's computational bottleneck for large-scale hashing. This kernel
+tiles it for VMEM:
+
+* grid = (B / BB, K / BK) — one program instance produces a
+  ``[BB, BK]`` tile of ``(i*, t*)``;
+* the ``[BB, D]`` data panel and the three ``[BK, D]`` parameter panels
+  stream HBM->VMEM once per grid step (BlockSpec);
+* the ``[BB, BK, D]`` intermediate lives only in VMEM/registers, and the
+  argmin is carried as a running (value, index) pair — the TPU analog of
+  what a CUDA design would do with warp-shuffle reductions (DESIGN.md
+  §Hardware-Adaptation).
+
+MUST run with ``interpret=True`` on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerics are validated
+against :mod:`.ref` by ``python/tests/test_cws_kernel.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_K = 16
+
+
+def _cws_kernel(x_ref, r_ref, c_ref, b_ref, istar_ref, tstar_ref, *, block_d):
+    """One grid step: data tile [BB, D] x params tile [BK, D] -> [BB, BK]."""
+    x = x_ref[...]  # [BB, D]
+    r = r_ref[...]  # [BK, D]
+    c = c_ref[...]
+    b = b_ref[...]
+
+    d = x.shape[-1]
+    bb = x.shape[0]
+    bk = r.shape[0]
+
+    # Running argmin accumulators. Processing D in chunks of block_d keeps
+    # the [BB, BK, block_d] intermediate small enough for VMEM while still
+    # vectorizing well.
+    best_a = jnp.full((bb, bk), ref.BIG, dtype=jnp.float32)
+    best_i = jnp.zeros((bb, bk), dtype=jnp.int32)
+    best_t = jnp.zeros((bb, bk), dtype=jnp.float32)
+
+    n_chunks = (d + block_d - 1) // block_d
+    for ci in range(n_chunks):
+        lo = ci * block_d
+        hi = min(lo + block_d, d)
+        xs = x[:, None, lo:hi]  # [BB, 1, dc]
+        rs = r[None, :, lo:hi]  # [1, BK, dc]
+        cs = c[None, :, lo:hi]
+        bs = b[None, :, lo:hi]
+        pos = xs > 0
+        logx = jnp.log(jnp.where(pos, xs, 1.0))
+        t = jnp.floor(logx / rs + bs)
+        a = cs * jnp.exp(-rs * (t - bs) - rs)
+        a = jnp.where(pos, a, ref.BIG)
+        # Chunk-local argmin over the last axis.
+        idx = jnp.argmin(a, axis=-1)  # [BB, BK]
+        amin = jnp.take_along_axis(a, idx[..., None], axis=-1)[..., 0]
+        tmin = jnp.take_along_axis(t, idx[..., None], axis=-1)[..., 0]
+        gidx = (idx + lo).astype(jnp.int32)
+        take = amin < best_a
+        best_i = jnp.where(take, gidx, best_i)
+        best_t = jnp.where(take, tmin, best_t)
+        best_a = jnp.where(take, amin, best_a)
+
+    istar_ref[...] = best_i
+    tstar_ref[...] = jnp.clip(best_t, -2.0e9, 2.0e9).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_k", "block_d", "interpret")
+)
+def cws_hash(
+    x,
+    r,
+    c,
+    beta,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Batched ICWS hash via the Pallas kernel.
+
+    Args:
+      x: ``[B, D]`` float32 nonnegative data batch.
+      r, c, beta: ``[K, D]`` float32 parameter matrices.
+
+    Returns:
+      (i_star, t_star): each ``[B, K]`` int32.
+    """
+    bsz, d = x.shape
+    k = r.shape[0]
+    assert r.shape == (k, d) and c.shape == (k, d) and beta.shape == (k, d)
+    bb = min(block_b, bsz)
+    bk = min(block_k, k)
+    assert bsz % bb == 0, f"batch {bsz} not divisible by block_b {bb}"
+    assert k % bk == 0, f"k {k} not divisible by block_k {bk}"
+    grid = (bsz // bb, k // bk)
+    kernel = functools.partial(_cws_kernel, block_d=block_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, r, c, beta)
+
+
+def vmem_estimate_bytes(block_b: int, block_k: int, block_d: int, d: int) -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §9).
+
+    Input panels: data [BB, D] + 3 param panels [BK, D]; intermediate
+    [BB, BK, block_d] triples (t, a, mask-merged); accumulators 3x[BB, BK].
+    """
+    f32 = 4
+    panels = (block_b * d + 3 * block_k * d) * f32
+    inter = 2 * block_b * block_k * block_d * f32
+    accum = 3 * block_b * block_k * f32
+    return panels + inter + accum

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: blocked min-max kernel-matrix tile.
+
+Computes ``K[i, j] = sum_d min(x[i,d], y[j,d]) / sum_d max(x[i,d], y[j,d])``
+for a tile of the Gram matrix. Tiling mirrors a matmul epilogue: the
+``[BM, D]`` and ``[BN, D]`` panels stream through VMEM, and the reduction
+over D happens entirely on-chip (VPU min/max + adds; the MXU stays idle —
+see DESIGN.md §Hardware-Adaptation). The *linear* baseline tile
+(``linear_matrix``) is a plain dot and does use the MXU on real hardware.
+
+interpret=True only on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 32
+DEFAULT_BLOCK_N = 32
+
+
+def _minmax_kernel(x_ref, y_ref, o_ref, *, block_d):
+    x = x_ref[...]  # [BM, D]
+    y = y_ref[...]  # [BN, D]
+    bm, d = x.shape
+    bn = y.shape[0]
+    smin = jnp.zeros((bm, bn), dtype=jnp.float32)
+    smax = jnp.zeros((bm, bn), dtype=jnp.float32)
+    n_chunks = (d + block_d - 1) // block_d
+    for ci in range(n_chunks):
+        lo = ci * block_d
+        hi = min(lo + block_d, d)
+        xs = x[:, None, lo:hi]  # [BM, 1, dc]
+        ys = y[None, :, lo:hi]  # [1, BN, dc]
+        smin = smin + jnp.sum(jnp.minimum(xs, ys), axis=-1)
+        smax = smax + jnp.sum(jnp.maximum(xs, ys), axis=-1)
+    o_ref[...] = jnp.where(smax > 0, smin / jnp.where(smax > 0, smax, 1.0), 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_d", "interpret")
+)
+def minmax_matrix(
+    x,
+    y,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Min-max Gram block between ``x: [M, D]`` and ``y: [N, D]``."""
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, "dimension mismatch"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not divisible by ({bm},{bn})"
+    kernel = functools.partial(_minmax_kernel, block_d=block_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def _linear_kernel(x_ref, y_ref, o_ref):
+    # MXU-targeted tile: a single dot per grid step.
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...].T)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def linear_matrix(
+    x,
+    y,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Linear Gram block ``x @ y.T`` as a Pallas tile (the baseline)."""
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _linear_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_estimate_bytes(block_m: int, block_n: int, block_d: int, d: int) -> int:
+    """Static VMEM footprint estimate for one min-max grid step."""
+    f32 = 4
+    panels = (block_m * d + block_n * d) * f32
+    inter = block_m * block_n * block_d * f32
+    accum = 2 * block_m * block_n * f32
+    return panels + inter + accum

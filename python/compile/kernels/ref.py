@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+These are the ground truth every Pallas kernel is tested against
+(``python/tests/``), and they double as readable specifications:
+
+* :func:`cws_ref` — Ioffe's ICWS (Algorithm 1 of the paper) applied to a
+  batch, given externally supplied random matrices ``(r, c, beta)``.
+  The rust coordinator materializes those matrices with the *same*
+  counter-based recipe (``rust/src/cws/sampler.rs::materialize_params``),
+  so rust-native hashing and the AOT executables agree.
+* :func:`minmax_ref` — the min-max kernel matrix (Eq. 1).
+* :func:`score_ref` — the hashed-feature linear scorer: one-hot(0-bit
+  CWS codes) · W, evaluated as a gather (never materializing the one-hot).
+"""
+
+import jax.numpy as jnp
+
+# Sentinel "a" value for masked (zero-weight) coordinates. Finite (not
+# +inf) so the XLA CPU argmin lowering never sees NaN/inf comparisons.
+# A plain Python float (NOT a jnp array): pallas kernels may not capture
+# module-level traced constants.
+BIG = 3.4e38
+
+
+def cws_elements(x, r, c, beta):
+    """The per-coordinate ICWS quantities, batched.
+
+    Args:
+      x: ``[B, D]`` nonnegative float32 data.
+      r, c, beta: ``[K, D]`` float32 CWS parameter matrices
+        (r, c ~ Gamma(2,1); beta ~ U[0,1)).
+
+    Returns:
+      (t, a): each ``[B, K, D]`` float32; ``a`` is BIG where ``x == 0``.
+    """
+    x = x[:, None, :]  # [B, 1, D]
+    r_ = r[None, :, :]  # [1, K, D]
+    c_ = c[None, :, :]
+    b_ = beta[None, :, :]
+    pos = x > 0
+    logx = jnp.log(jnp.where(pos, x, 1.0))
+    t = jnp.floor(logx / r_ + b_)
+    # a = c / (y * exp(r)), y = exp(r (t - beta))  =>  a = c e^{-r(t-b)-r}
+    a = c_ * jnp.exp(-r_ * (t - b_) - r_)
+    a = jnp.where(pos, a, BIG)
+    return t, a
+
+
+def cws_ref(x, r, c, beta):
+    """Reference ICWS hash of a batch.
+
+    Returns:
+      (i_star, t_star): each ``[B, K]`` int32 — the argmin index and the
+      quantized offset at the argmin.
+    """
+    t, a = cws_elements(x, r, c, beta)
+    i_star = jnp.argmin(a, axis=-1).astype(jnp.int32)  # [B, K]
+    t_star = jnp.take_along_axis(t, i_star[..., None], axis=-1)
+    t_star = jnp.clip(t_star[..., 0], -2.0e9, 2.0e9).astype(jnp.int32)
+    return i_star, t_star
+
+
+def minmax_ref(x, y):
+    """Min-max kernel matrix: ``K[i, j] = sum min(xi, yj) / sum max(xi, yj)``.
+
+    Args:
+      x: ``[M, D]``; y: ``[N, D]`` — nonnegative float32.
+
+    Returns:
+      ``[M, N]`` float32 in [0, 1]; pairs of all-zero rows give 1.0
+      (identical inputs), matching the rust convention.
+    """
+    xs = x[:, None, :]
+    ys = y[None, :, :]
+    smin = jnp.sum(jnp.minimum(xs, ys), axis=-1)
+    smax = jnp.sum(jnp.maximum(xs, ys), axis=-1)
+    return jnp.where(smax > 0, smin / jnp.where(smax > 0, smax, 1.0), 1.0)
+
+
+def linear_ref(x, y):
+    """Linear kernel matrix ``x @ y.T`` (the MXU-friendly baseline tile)."""
+    return x @ y.T
+
+
+def score_ref(codes, w):
+    """Hashed-feature linear scorer.
+
+    Args:
+      codes: ``[B, K]`` int32 in ``[0, 2^b)`` — the 0-bit CWS codes
+        (``i* mod 2^b``) per sample slot.
+      w: ``[K, 2^b, C]`` float32 — per-slot weight blocks of the linear
+        model (the reshaped LIBLINEAR weight vector).
+
+    Returns:
+      ``[B, C]`` scores: ``sum_k w[k, codes[b, k], :]``.
+    """
+    gathered = jnp.take_along_axis(
+        w[None, :, :, :],  # [1, K, 2^b, C]
+        codes[:, :, None, None].astype(jnp.int32).clip(0, w.shape[1] - 1),
+        axis=2,
+    )  # [B, K, 1, C]
+    return jnp.sum(gathered[:, :, 0, :], axis=1)

@@ -1,0 +1,57 @@
+"""Layer-2 JAX model: the build-time compute graphs the rust coordinator
+executes via PJRT.
+
+Three entry points, each jitted and AOT-lowered by :mod:`.aot`:
+
+* :func:`hash_batch` — batched 0-bit CWS hashing (calls the Layer-1
+  Pallas kernel :func:`compile.kernels.cws.cws_hash`).
+* :func:`minmax_block` — min-max Gram block (Pallas kernel).
+* :func:`hash_and_score` — the full serving fwd pass: hash a batch, code
+  the samples to ``b_i`` bits, and score against a hashed linear model —
+  one fused HLO module so the request path is a single PJRT execute.
+
+Python never runs at serving time: these functions exist to be lowered
+once (``make artifacts``) to HLO text.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cws as cws_kernel
+from .kernels import minmax as minmax_kernel
+from .kernels import ref
+
+
+def hash_batch(x, r, c, beta):
+    """Hash a ``[B, D]`` batch with ``K`` CWS samples -> ``(i*, t*)``.
+
+    The random matrices are runtime inputs (materialized by the rust
+    side) so randomness is owned by one place only.
+    """
+    return cws_kernel.cws_hash(x, r, c, beta)
+
+
+def minmax_block(x, y):
+    """Min-max Gram block between two row batches."""
+    return minmax_kernel.minmax_matrix(x, y)
+
+
+def linear_block(x, y):
+    """Linear Gram block (baseline)."""
+    return minmax_kernel.linear_matrix(x, y)
+
+
+def hash_and_score(x, r, c, beta, w):
+    """Fused serving path: CWS-hash ``x``, 0-bit-code to ``b_i`` bits
+    (``2^b = w.shape[1]``), and score with the hashed linear model.
+
+    Args:
+      x: ``[B, D]`` batch; r/c/beta: ``[K, D]`` params.
+      w: ``[K, 2^b, C]`` linear-model weights.
+
+    Returns:
+      scores ``[B, C]`` float32.
+    """
+    i_star, _t_star = cws_kernel.cws_hash(x, r, c, beta)
+    n_codes = w.shape[1]  # 2^b, static
+    codes = jnp.remainder(i_star, n_codes)
+    return ref.score_ref(codes, w)

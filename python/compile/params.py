@@ -1,0 +1,95 @@
+"""Counter-based CWS parameter derivation — the cross-language contract.
+
+This is the *specification* of how `(r, c, beta)` are derived from
+`(seed, sample j, dim i)`. `rust/src/cws/sampler.rs::params_at` implements
+the same function; both sides are pinned to shared golden vectors
+(`python/tests/test_params.py` and the rust unit tests), so the rust
+coordinator can materialize parameter matrices for the AOT executables
+and the two backends hash identically.
+
+Recipe (all arithmetic mod 2^64):
+
+    key  = seed XOR mix64((j << 32) | i)
+    u_m  = uniform(mix64(key + m * GOLDEN)),  m = 1..5
+    r    = -ln(u1 * u2)          # Gamma(2, 1)
+    c    = -ln(u3 * u4)          # Gamma(2, 1)
+    beta = 1 - u5                # Uniform[0, 1)
+
+where `mix64` is the SplitMix64 finalizer and
+`uniform(x) = ((x >> 11) + 1) * 2^-53` (in (0, 1], ln-safe).
+"""
+
+import math
+
+import numpy as np
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def mix64(z: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer, vectorized over uint64 arrays."""
+    z = np.asarray(z, dtype=np.uint64)
+    z = (z ^ (z >> np.uint64(30))) * _M1
+    z = (z ^ (z >> np.uint64(27))) * _M2
+    return z ^ (z >> np.uint64(31))
+
+
+def _uniform(x: np.ndarray) -> np.ndarray:
+    """(0, 1] uniforms from uint64s (53-bit mantissa)."""
+    return ((x >> np.uint64(11)) + np.uint64(1)).astype(np.float64) * (0.5**53)
+
+
+def params_at(seed: int, j, i):
+    """Vectorized `(r, c, beta)` for sample(s) j and dim(s) i.
+
+    Args:
+      seed: python int (u64).
+      j, i: scalars or broadcastable integer arrays.
+
+    Returns:
+      (r, c, beta) float64 arrays of the broadcast shape.
+    """
+    with np.errstate(over="ignore"):
+        j = np.asarray(j, dtype=np.uint64)
+        i = np.asarray(i, dtype=np.uint64)
+        key = np.uint64(seed) ^ mix64((j << np.uint64(32)) | i)
+        us = [
+            _uniform(mix64(key + GOLDEN * np.uint64(m)))
+            for m in range(1, 6)
+        ]
+    r = -np.log(us[0] * us[1])
+    c = -np.log(us[2] * us[3])
+    beta = 1.0 - us[4]
+    return r, c, beta
+
+
+def materialize(seed: int, d: int, k: int):
+    """The `[K, D]` float32 parameter matrices the AOT graphs consume —
+    identical to `rust materialize_params(seed, d, k)`."""
+    jj, ii = np.meshgrid(np.arange(k), np.arange(d), indexing="ij")
+    r, c, beta = params_at(seed, jj, ii)
+    return (
+        r.astype(np.float32),
+        c.astype(np.float32),
+        beta.astype(np.float32),
+    )
+
+
+# Golden vectors shared with rust/src/cws/sampler.rs (f64, exact).
+GOLDEN_VECTORS = [
+    # (seed, j, i, r, c, beta)
+    (42, 0, 0, 2.1321342897249402, 2.34453352747202, 0.9619698314597537),
+    (42, 3, 7, 0.9596960229776987, 1.5230354601677472, 0.4030703586081501),
+    (2015, 127, 255, 2.5218182169423575, 2.662209577473352, 0.642316614160663),
+    (123456789, 65535, 4095, 0.822830793014408, 1.7835555440010344, 0.3710858790607353),
+]
+
+
+def check_golden() -> None:
+    for seed, j, i, er, ec, eb in GOLDEN_VECTORS:
+        r, c, b = params_at(seed, j, i)
+        assert math.isclose(float(r), er, rel_tol=0, abs_tol=0), (r, er)
+        assert math.isclose(float(c), ec, rel_tol=0, abs_tol=0), (c, ec)
+        assert math.isclose(float(b), eb, rel_tol=0, abs_tol=0), (b, eb)

@@ -1,0 +1,33 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Tests may be launched from the repo root or from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def make_params(rng: np.random.Generator, k: int, d: int):
+    """(r, c, beta) matrices with the Algorithm-1 distributions."""
+    r = rng.gamma(2.0, 1.0, size=(k, d)).astype(np.float32)
+    c = rng.gamma(2.0, 1.0, size=(k, d)).astype(np.float32)
+    beta = rng.uniform(0.0, 1.0, size=(k, d)).astype(np.float32)
+    return r, c, beta
+
+
+def make_data(rng: np.random.Generator, b: int, d: int, zero_frac: float = 0.3):
+    """Nonnegative heavy-tailed data batch with exact zeros."""
+    x = rng.lognormal(0.0, 1.0, size=(b, d)).astype(np.float32)
+    mask = rng.uniform(size=(b, d)) < zero_frac
+    x[mask] = 0.0
+    # Ensure no all-zero rows (CWS is undefined there).
+    for i in range(b):
+        if not x[i].any():
+            x[i, rng.integers(0, d)] = 1.0
+    return x
+
+
+@pytest.fixture
+def np_rng():
+    return np.random.default_rng(2015)

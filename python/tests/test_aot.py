@@ -1,0 +1,47 @@
+"""AOT lowering: HLO-text generation and manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_lower_small_variant_produces_hlo_text():
+    lowered, ins, outs = aot.lower_variant("cws_hash_small", aot.VARIANTS["cws_hash_small"])
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 1000
+    assert ins[0][0] == "x" and outs[0][0] == "i_star"
+
+
+def test_all_variants_lower():
+    for name, spec in aot.VARIANTS.items():
+        lowered, ins, outs = aot.lower_variant(name, spec)
+        assert lowered is not None, name
+        assert ins and outs, name
+
+
+def test_unknown_variant_rejected():
+    with pytest.raises(ValueError):
+        aot.lower_variant("nope", {})
+
+
+def test_manifest_on_disk_if_built():
+    # `make artifacts` output, when present, must be consistent.
+    root = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))), "artifacts")
+    manifest_path = os.path.join(root, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    for name, entry in manifest["entries"].items():
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, name
+        assert entry["inputs"] and entry["outputs"], name

@@ -1,0 +1,123 @@
+"""Pallas ICWS kernel vs the pure-jnp oracle — the core L1 correctness
+signal, including a hypothesis sweep over shapes and block configs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cws, ref
+from .conftest import make_data, make_params
+
+
+def run_both(x, r, c, beta, **kw):
+    got_i, got_t = cws.cws_hash(x, r, c, beta, **kw)
+    want_i, want_t = ref.cws_ref(x, r, c, beta)
+    return (np.asarray(got_i), np.asarray(got_t)), (
+        np.asarray(want_i),
+        np.asarray(want_t),
+    )
+
+
+def test_matches_ref_default_blocks(np_rng):
+    x = make_data(np_rng, 16, 64)
+    r, c, beta = make_params(np_rng, 32, 64)
+    (gi, gt), (wi, wt) = run_both(x, r, c, beta)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(gt, wt)
+
+
+def test_matches_ref_asymmetric_blocks(np_rng):
+    x = make_data(np_rng, 12, 40)
+    r, c, beta = make_params(np_rng, 24, 40)
+    (gi, gt), (wi, wt) = run_both(x, r, c, beta, block_b=4, block_k=8, block_d=16)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(gt, wt)
+
+
+def test_blocking_does_not_change_result(np_rng):
+    x = make_data(np_rng, 8, 96)
+    r, c, beta = make_params(np_rng, 16, 96)
+    base = None
+    for bb, bk, bd in [(8, 16, 128), (4, 8, 32), (2, 16, 96), (8, 4, 7)]:
+        gi, gt = cws.cws_hash(x, r, c, beta, block_b=bb, block_k=bk, block_d=bd)
+        gi, gt = np.asarray(gi), np.asarray(gt)
+        if base is None:
+            base = (gi, gt)
+        else:
+            np.testing.assert_array_equal(gi, base[0], err_msg=f"{bb},{bk},{bd}")
+            np.testing.assert_array_equal(gt, base[1], err_msg=f"{bb},{bk},{bd}")
+
+
+def test_zero_entries_never_selected(np_rng):
+    x = make_data(np_rng, 8, 32, zero_frac=0.8)
+    r, c, beta = make_params(np_rng, 16, 32)
+    gi, _ = cws.cws_hash(x, r, c, beta)
+    gi = np.asarray(gi)
+    for b in range(8):
+        for k in range(16):
+            assert x[b, gi[b, k]] > 0.0
+
+
+def test_identical_rows_hash_identically(np_rng):
+    x0 = make_data(np_rng, 1, 48)
+    x = np.vstack([x0, x0, x0, x0])
+    r, c, beta = make_params(np_rng, 16, 48)
+    gi, gt = cws.cws_hash(x, r, c, beta)
+    gi, gt = np.asarray(gi), np.asarray(gt)
+    for b in range(1, 4):
+        np.testing.assert_array_equal(gi[b], gi[0])
+        np.testing.assert_array_equal(gt[b], gt[0])
+
+
+def test_collision_probability_tracks_minmax(np_rng):
+    # Eq. (7)/(8) sanity through the kernel itself: the (i*, t*)
+    # collision fraction over k samples approximates K_MM.
+    d = 64
+    u = make_data(np_rng, 1, d, zero_frac=0.2)[0]
+    v = u * np_rng.lognormal(0.0, 0.5, size=d).astype(np.float32)
+    x = np.stack([u, v])
+    k = 512
+    r, c, beta = make_params(np_rng, k, d)
+    gi, gt = cws.cws_hash(x, r, c, beta, block_b=2, block_k=16)
+    gi, gt = np.asarray(gi), np.asarray(gt)
+    kmm = float(np.minimum(u, v).sum() / np.maximum(u, v).sum())
+    full = float(np.mean((gi[0] == gi[1]) & (gt[0] == gt[1])))
+    zero = float(np.mean(gi[0] == gi[1]))
+    tol = 4.0 * np.sqrt(kmm * (1 - kmm) / k) + 0.02
+    assert abs(full - kmm) < tol, (full, kmm)
+    assert abs(zero - kmm) < tol, (zero, kmm)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b_pow=st.integers(0, 3),
+    k_pow=st.integers(0, 3),
+    d=st.integers(3, 80),
+    zero_frac=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep_matches_ref(b_pow, k_pow, d, zero_frac, seed):
+    rng = np.random.default_rng(seed)
+    b, k = 2**b_pow, 2**k_pow
+    x = make_data(rng, b, d, zero_frac)
+    r, c, beta = make_params(rng, k, d)
+    (gi, gt), (wi, wt) = run_both(
+        x, r, c, beta, block_b=min(4, b), block_k=min(4, k), block_d=32
+    )
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(gt, wt)
+
+
+def test_indivisible_batch_rejected(np_rng):
+    x = make_data(np_rng, 6, 16)
+    r, c, beta = make_params(np_rng, 8, 16)
+    with pytest.raises(AssertionError):
+        cws.cws_hash(x, r, c, beta, block_b=4, block_k=8)
+
+
+def test_vmem_estimate_reasonable():
+    # Default config must fit a 16 MiB VMEM budget with margin.
+    bytes_ = cws.vmem_estimate_bytes(
+        cws.DEFAULT_BLOCK_B, cws.DEFAULT_BLOCK_K, 128, 256
+    )
+    assert bytes_ < 4 * 1024 * 1024, bytes_

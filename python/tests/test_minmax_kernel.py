@@ -1,0 +1,85 @@
+"""Pallas min-max Gram kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minmax, ref
+from .conftest import make_data
+
+
+def test_matches_ref(np_rng):
+    x = make_data(np_rng, 32, 64)
+    y = make_data(np_rng, 32, 64)
+    got = np.asarray(minmax.minmax_matrix(x, y))
+    want = np.asarray(ref.minmax_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_blocking_invariance(np_rng):
+    x = make_data(np_rng, 16, 48)
+    y = make_data(np_rng, 24, 48)
+    base = np.asarray(minmax.minmax_matrix(x, y, block_m=16, block_n=24))
+    for bm, bn, bd in [(4, 8, 16), (8, 12, 48), (16, 24, 7), (2, 2, 1)]:
+        got = np.asarray(minmax.minmax_matrix(x, y, block_m=bm, block_n=bn, block_d=bd))
+        np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-7)
+
+
+def test_self_gram_diag_is_one(np_rng):
+    x = make_data(np_rng, 16, 32)
+    k = np.asarray(minmax.minmax_matrix(x, x))
+    np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-6)
+    # symmetric
+    np.testing.assert_allclose(k, k.T, rtol=1e-6, atol=1e-7)
+
+
+def test_bounded_01(np_rng):
+    x = make_data(np_rng, 8, 40, zero_frac=0.6)
+    y = make_data(np_rng, 8, 40, zero_frac=0.6)
+    k = np.asarray(minmax.minmax_matrix(x, y))
+    assert (k >= 0).all() and (k <= 1 + 1e-6).all()
+
+
+def test_zero_rows_convention():
+    x = np.zeros((4, 8), dtype=np.float32)
+    y = np.zeros((4, 8), dtype=np.float32)
+    x[0, 0] = 1.0  # one nonzero row
+    k = np.asarray(minmax.minmax_matrix(x, y))
+    # zero-vs-zero = 1.0 (identical), nonzero-vs-zero = 0.0
+    assert k[1, 0] == 1.0
+    assert k[0, 0] == 0.0
+
+
+def test_linear_block_matches_dot(np_rng):
+    x = make_data(np_rng, 16, 32)
+    y = make_data(np_rng, 8, 32)
+    got = np.asarray(minmax.linear_matrix(x, y, block_m=8, block_n=8))
+    np.testing.assert_allclose(got, x @ y.T, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m_pow=st.integers(0, 3),
+    n_pow=st.integers(0, 3),
+    d=st.integers(1, 64),
+    zero_frac=st.floats(0.0, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(m_pow, n_pow, d, zero_frac, seed):
+    rng = np.random.default_rng(seed)
+    m, n = 2**m_pow, 2**n_pow
+    x = rng.lognormal(0.0, 1.0, size=(m, d)).astype(np.float32)
+    y = rng.lognormal(0.0, 1.0, size=(n, d)).astype(np.float32)
+    x[rng.uniform(size=(m, d)) < zero_frac] = 0.0
+    y[rng.uniform(size=(n, d)) < zero_frac] = 0.0
+    got = np.asarray(
+        minmax.minmax_matrix(x, y, block_m=min(4, m), block_n=min(4, n), block_d=16)
+    )
+    want = np.asarray(ref.minmax_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_vmem_estimate_reasonable():
+    bytes_ = minmax.vmem_estimate_bytes(
+        minmax.DEFAULT_BLOCK_M, minmax.DEFAULT_BLOCK_N, 128, 256
+    )
+    assert bytes_ < 4 * 1024 * 1024, bytes_

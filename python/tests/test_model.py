@@ -1,0 +1,59 @@
+"""Layer-2 model graphs: composition correctness and scorer semantics."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_data, make_params
+
+
+def test_hash_and_score_equals_composition(np_rng):
+    b, d, k, bits, cls = 8, 32, 16, 4, 3
+    x = make_data(np_rng, b, d)
+    r, c, beta = make_params(np_rng, k, d)
+    w = np_rng.normal(size=(k, 1 << bits, cls)).astype(np.float32)
+    fused = np.asarray(model.hash_and_score(x, r, c, beta, w))
+    i_star, _ = ref.cws_ref(x, r, c, beta)
+    codes = np.asarray(i_star) % (1 << bits)
+    want = np.asarray(ref.score_ref(codes, w))
+    np.testing.assert_allclose(fused, want, rtol=1e-6, atol=1e-6)
+
+
+def test_score_ref_equals_onehot_matmul(np_rng):
+    # The gather-scorer must equal the explicit one-hot × W product —
+    # i.e. exactly the linear model the rust LIBLINEAR-style solver
+    # trains on expanded features.
+    b, k, bits, cls = 6, 8, 3, 4
+    codes = np_rng.integers(0, 1 << bits, size=(b, k)).astype(np.int32)
+    w = np_rng.normal(size=(k, 1 << bits, cls)).astype(np.float32)
+    got = np.asarray(ref.score_ref(codes, w))
+    # Explicit expansion.
+    onehot = np.zeros((b, k * (1 << bits)), dtype=np.float32)
+    for i in range(b):
+        for j in range(k):
+            onehot[i, j * (1 << bits) + codes[i, j]] = 1.0
+    w_flat = w.reshape(k * (1 << bits), cls)
+    want = onehot @ w_flat
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hash_batch_shapes(np_rng):
+    x = make_data(np_rng, 16, 64)
+    r, c, beta = make_params(np_rng, 32, 64)
+    i_star, t_star = model.hash_batch(x, r, c, beta)
+    assert i_star.shape == (16, 32) and t_star.shape == (16, 32)
+    assert str(i_star.dtype) == "int32" and str(t_star.dtype) == "int32"
+
+
+def test_minmax_block_matches_ref(np_rng):
+    x = make_data(np_rng, 8, 32)
+    y = make_data(np_rng, 8, 32)
+    got = np.asarray(model.minmax_block(x, y))
+    np.testing.assert_allclose(got, np.asarray(ref.minmax_ref(x, y)), rtol=1e-6)
+
+
+def test_linear_block_matches_ref(np_rng):
+    x = make_data(np_rng, 8, 32)
+    y = make_data(np_rng, 8, 32)
+    got = np.asarray(model.linear_block(x, y))
+    np.testing.assert_allclose(got, x @ y.T, rtol=1e-5)

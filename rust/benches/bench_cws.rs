@@ -1,0 +1,95 @@
+//! CWS hashing benchmarks — the paper's core cost (Figures 4–8 all sit
+//! on top of this loop) and the §Perf L1/L3 comparison point.
+//!
+//! Run: `cargo bench --bench bench_cws [-- --quick]`
+
+use minmax::bench::{black_box, Runner};
+use minmax::cws::{materialize_params, CwsHasher};
+use minmax::data::dense::Dense;
+use minmax::data::sparse::Csr;
+use minmax::features::Expansion;
+use minmax::util::rng::Pcg64;
+
+fn random_dense(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Dense {
+    let mut rng = Pcg64::new(seed);
+    let mut d = Dense::from_vec(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| {
+                if rng.uniform() < zero_frac {
+                    0.0
+                } else {
+                    rng.lognormal(0.0, 1.0) as f32
+                }
+            })
+            .collect(),
+    );
+    for i in 0..rows {
+        if !d.row(i).iter().any(|&v| v > 0.0) {
+            d.row_mut(i)[0] = 1.0;
+        }
+    }
+    d
+}
+
+fn main() {
+    let mut r = Runner::new();
+
+    // Dense hashing across (D, k) shapes: cost is O(D·k) cells.
+    for (d, k) in [(64usize, 64usize), (256, 128), (1024, 256)] {
+        let x = random_dense(1, d, 0.0, 1);
+        let h = CwsHasher::new(7, k);
+        r.bench_with_throughput(
+            &format!("hash-dense/D{d}/k{k}"),
+            Some(((d * k) as f64, "cell")),
+            || {
+                black_box(h.hash_dense(x.row(0)));
+            },
+        );
+    }
+
+    // Amortized dense batch hashing (the service hot path).
+    for (d, k) in [(256usize, 128usize), (1024, 256)] {
+        let x = random_dense(1, d, 0.0, 1);
+        let h = CwsHasher::new(7, k).dense_batch(d);
+        r.bench_with_throughput(
+            &format!("hash-batch/D{d}/k{k}"),
+            Some(((d * k) as f64, "cell")),
+            || {
+                black_box(h.hash(x.row(0)));
+            },
+        );
+    }
+
+    // Sparse hashing: only nonzeros pay.
+    let sp = Csr::from_dense(&random_dense(1, 65536, 0.995, 2));
+    let h = CwsHasher::new(7, 128);
+    r.bench_with_throughput(
+        &format!("hash-sparse/nnz{}/k128", sp.nnz()),
+        Some(((sp.nnz() * 128) as f64, "cell")),
+        || {
+            black_box(h.hash_sparse(sp.row(0)));
+        },
+    );
+
+    // Parameter materialization (PJRT setup cost, once per service).
+    r.bench_with_throughput(
+        "materialize-params/D256/k128",
+        Some(((256 * 128) as f64, "cell")),
+        || {
+            black_box(materialize_params(3, 256, 128));
+        },
+    );
+
+    // Feature expansion (0-bit codes -> sparse one-hot).
+    let x = random_dense(1, 256, 0.3, 3);
+    let h2 = CwsHasher::new(9, 256);
+    let samples = h2.hash_dense(x.row(0));
+    let e = Expansion::new(256, 8);
+    r.bench_with_throughput("expand/k256/b8", Some((256.0, "sample")), || {
+        black_box(e.expand_row(&samples));
+    });
+
+    r.save("bench_cws");
+}

@@ -1,0 +1,85 @@
+//! Kernel-evaluation benchmarks — the compute behind Table 1 /
+//! Figures 1–3 (kernel matrices) and the §Perf L3 roofline analysis.
+//!
+//! Run: `cargo bench --bench bench_kernels [-- --filter minmax --quick]`
+
+use minmax::bench::{black_box, Runner};
+use minmax::data::dense::Dense;
+use minmax::data::sparse::Csr;
+use minmax::data::Matrix;
+use minmax::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
+use minmax::kernels::Kernel;
+use minmax::util::rng::Pcg64;
+
+fn random_dense(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Dense {
+    let mut rng = Pcg64::new(seed);
+    Dense::from_vec(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| {
+                if rng.uniform() < zero_frac {
+                    0.0
+                } else {
+                    rng.lognormal(0.0, 1.0) as f32
+                }
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut r = Runner::new();
+
+    // Pairwise kernel evaluation (per-element costs).
+    let a = random_dense(1, 1024, 0.0, 1);
+    let b = random_dense(1, 1024, 0.0, 2);
+    for kern in [Kernel::Linear, Kernel::MinMax, Kernel::Intersection, Kernel::Chi2] {
+        r.bench_with_throughput(
+            &format!("pairwise/{}/d1024", kern.name()),
+            Some((1024.0, "elem")),
+            || {
+                black_box(kern.eval_dense(a.row(0), b.row(0)));
+            },
+        );
+    }
+
+    // Sparse merge-join path at 10% density.
+    let sa = Csr::from_dense(&random_dense(1, 4096, 0.9, 3));
+    let sb = Csr::from_dense(&random_dense(1, 4096, 0.9, 4));
+    for kern in [Kernel::Linear, Kernel::MinMax, Kernel::Resemblance] {
+        r.bench_with_throughput(
+            &format!("pairwise-sparse/{}/d4096@10%", kern.name()),
+            Some(((sa.nnz() + sb.nnz()) as f64, "nnz")),
+            || {
+                black_box(kern.eval_sparse(sa.row(0), sb.row(0)));
+            },
+        );
+    }
+
+    // Kernel-matrix blocks (the Table-1 hot path).
+    let x = random_dense(128, 64, 0.0, 5);
+    let y = random_dense(128, 64, 0.0, 6);
+    let mx = Matrix::Dense(x);
+    let my = Matrix::Dense(y);
+    for kern in [Kernel::Linear, Kernel::MinMax] {
+        r.bench_with_throughput(
+            &format!("matrix/{}/128x128xD64", kern.name()),
+            Some(((128 * 128) as f64, "pair")),
+            || {
+                black_box(kernel_matrix(kern, &mx, &my));
+            },
+        );
+    }
+
+    // Symmetric (training) Gram: upper triangle + mirror.
+    r.bench_with_throughput(
+        "matrix-sym/min-max/128x128xD64",
+        Some(((128 * 129 / 2) as f64, "pair")),
+        || {
+            black_box(kernel_matrix_sym(Kernel::MinMax, &mx));
+        },
+    );
+
+    r.save("bench_kernels");
+}

@@ -1,0 +1,117 @@
+//! End-to-end coordinator benchmarks: the online hashing service (native
+//! and PJRT backends) and the fused PJRT serving path. The numbers here
+//! are the paper's "industrial applications" story quantified, and the
+//! before/after log in EXPERIMENTS.md §Perf is measured with this
+//! binary.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_pipeline [-- --quick]`
+
+use std::time::Duration;
+
+use minmax::bench::{black_box, Runner};
+use minmax::coordinator::{Backend, HashService, ServiceConfig};
+use minmax::runtime::default_artifacts_dir;
+use minmax::util::rng::Pcg64;
+
+fn random_vec(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..dim).map(|_| rng.lognormal(0.0, 1.0) as f32).collect()
+}
+
+fn main() {
+    let mut r = Runner::new();
+    let dim = 256;
+    let k = 128;
+
+    // Native service, closed loop, single submitter.
+    let svc = HashService::start(
+        ServiceConfig {
+            seed: 1,
+            k,
+            dim,
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 4096,
+        },
+        Backend::Native,
+    );
+    let v = random_vec(dim, 2);
+    let mut id = 0u64;
+    r.bench_with_throughput("service-native/hash_blocking/D256k128", Some((1.0, "req")), || {
+        id += 1;
+        black_box(svc.hash_blocking(id, v.clone()).unwrap());
+    });
+    // Burst submission (exercises the dynamic batcher).
+    r.bench_with_throughput("service-native/burst32/D256k128", Some((32.0, "req")), || {
+        let rxs: Vec<_> = (0..32)
+            .map(|i| loop {
+                match svc.submit(i, v.clone()) {
+                    Ok(rx) => break rx,
+                    Err(_) => std::thread::yield_now(),
+                }
+            })
+            .collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap());
+        }
+    });
+    svc.shutdown();
+
+    // PJRT-backed service (skipped without artifacts).
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let svc = HashService::start(
+            ServiceConfig {
+                seed: 1,
+                k,
+                dim,
+                max_batch: 64,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 4096,
+            },
+            Backend::Pjrt { artifacts_dir: dir.clone(), artifact: "cws_hash".into() },
+        );
+        r.bench_with_throughput("service-pjrt/burst64/D256k128", Some((64.0, "req")), || {
+            let rxs: Vec<_> = (0..64)
+                .map(|i| loop {
+                    match svc.submit(i, v.clone()) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::yield_now(),
+                    }
+                })
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+        });
+        svc.shutdown();
+
+        // Raw PJRT execute (no service overhead) for overhead accounting.
+        use minmax::cws::materialize_params;
+        use minmax::runtime::{literal_f32, Engine};
+        let engine = Engine::load_subset(&dir, &["cws_hash"]).unwrap();
+        let spec = engine.spec("cws_hash").unwrap().clone();
+        let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let kk = spec.inputs[1].shape[0];
+        let (rr, cc, bb) = materialize_params(1, d, kk);
+        let xl = literal_f32(&random_vec(b * d, 5), &[b, d]).unwrap();
+        let rl = literal_f32(&rr, &[kk, d]).unwrap();
+        let cl = literal_f32(&cc, &[kk, d]).unwrap();
+        let bl = literal_f32(&bb, &[kk, d]).unwrap();
+        r.bench_with_throughput(
+            &format!("pjrt-raw/cws_hash/B{b}D{d}K{kk}"),
+            Some((b as f64, "vec")),
+            || {
+                black_box(
+                    engine
+                        .run("cws_hash", &[xl.clone(), rl.clone(), cl.clone(), bl.clone()])
+                        .unwrap(),
+                );
+            },
+        );
+    } else {
+        eprintln!("skipping PJRT benches: run `make artifacts` first");
+    }
+
+    r.save("bench_pipeline");
+}

@@ -1,0 +1,68 @@
+//! SVM solver benchmarks — the training side of Table 1 (precomputed
+//! kernel SVM) and Figures 7–8 (linear SVM on hashed features).
+//!
+//! Run: `cargo bench --bench bench_svm [-- --quick]`
+
+use minmax::bench::{black_box, Runner};
+use minmax::coordinator::{hash_dataset, PipelineConfig};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Matrix;
+use minmax::kernels::matrix::kernel_matrix_sym;
+use minmax::kernels::Kernel;
+use minmax::svm::{KernelSvmParams, LinearSvmParams};
+
+fn main() {
+    let mut r = Runner::new();
+
+    // Binary kernel-SVM training on a precomputed Gram (n=256).
+    let ds = generate("ijcnn", SynthConfig { seed: 1, n_train: 256, n_test: 10 }).unwrap();
+    let gram = kernel_matrix_sym(Kernel::MinMax, &ds.train_x);
+    let y: Vec<i32> = ds.train_y.iter().map(|&c| if c == 0 { 1 } else { -1 }).collect();
+    r.bench_with_throughput("kernel-svm/train/n256", Some((256.0, "row")), || {
+        black_box(minmax::svm::kernel::train_binary(
+            &gram,
+            &y,
+            &KernelSvmParams { c: 1.0, ..Default::default() },
+        ));
+    });
+
+    // Gram computation itself (dominates the Table-1 protocol).
+    r.bench_with_throughput(
+        "kernel-svm/gram/minmax/n256xD24",
+        Some(((256 * 257 / 2) as f64, "pair")),
+        || {
+            black_box(kernel_matrix_sym(Kernel::MinMax, &ds.train_x));
+        },
+    );
+
+    // Linear SVM on hashed CWS features (Figure 7's inner loop).
+    let ds2 = generate("letter", SynthConfig { seed: 2, n_train: 300, n_test: 10 }).unwrap();
+    let hashed = hash_dataset(&ds2, &PipelineConfig::new(3, 128, 8));
+    let y2: Vec<i32> = ds2.train_y.iter().map(|&c| if c == 0 { 1 } else { -1 }).collect();
+    r.bench_with_throughput(
+        "linear-svm/train/n300/k128b8",
+        Some(((300 * 128) as f64, "nnz"),),
+        || {
+            black_box(minmax::svm::linear::train_binary(
+                &hashed.train,
+                &y2,
+                &LinearSvmParams { c: 1.0, ..Default::default() },
+            ));
+        },
+    );
+
+    // Full hashed pipeline step: hash + expand (Figure 7 outer loop).
+    let dsm = match &ds2.train_x {
+        Matrix::Dense(d) => d.clone(),
+        _ => unreachable!(),
+    };
+    r.bench_with_throughput(
+        "pipeline/hash+expand/n300/k128",
+        Some(((dsm.rows() * dsm.cols() * 128) as f64, "cell")),
+        || {
+            black_box(hash_dataset(&ds2, &PipelineConfig::new(4, 128, 8)));
+        },
+    );
+
+    r.save("bench_svm");
+}

@@ -1,0 +1,284 @@
+//! Criterion-style measurement harness (the vendor set has no criterion).
+//!
+//! Each `rust/benches/*.rs` binary (built with `harness = false`) creates
+//! a [`Runner`], registers benchmark closures, and the runner handles
+//! warmup, adaptive iteration counts, robust statistics (median + MAD),
+//! throughput reporting, and `--filter`/`--quick` CLI flags so
+//! `cargo bench -- --filter cws` works as expected.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Reservoir;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Minimum measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Max samples collected.
+    pub max_samples: usize,
+    /// Substring filter on benchmark names.
+    pub filter: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(1500),
+            warmup_time: Duration::from_millis(300),
+            max_samples: 60,
+            filter: None,
+        }
+    }
+}
+
+impl Config {
+    /// Parse `cargo bench` style args: `--filter <substr>`, `--quick`.
+    pub fn from_args() -> Self {
+        let mut cfg = Self::default();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--filter" if i + 1 < args.len() => {
+                    cfg.filter = Some(args[i + 1].clone());
+                    i += 1;
+                }
+                s if s.starts_with("--filter=") => {
+                    cfg.filter = Some(s["--filter=".len()..].to_string());
+                }
+                "--quick" => {
+                    cfg.measure_time = Duration::from_millis(300);
+                    cfg.warmup_time = Duration::from_millis(50);
+                    cfg.max_samples = 15;
+                }
+                // `cargo bench` passes --bench; ignore unknown flags.
+                _ => {}
+            }
+            i += 1;
+        }
+        if std::env::var("MINMAX_BENCH_QUICK").is_ok() {
+            cfg.measure_time = Duration::from_millis(300);
+            cfg.warmup_time = Duration::from_millis(50);
+            cfg.max_samples = 15;
+        }
+        cfg
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    pub p05: f64,
+    pub p95: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    /// Optional work units per iteration (elements, bytes…), for
+    /// throughput reporting.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        let t = fmt_time(self.median);
+        let lo = fmt_time(self.p05);
+        let hi = fmt_time(self.p95);
+        let thr = match self.throughput {
+            Some((units, label)) if self.median > 0.0 => {
+                format!("  {} {label}/s", fmt_count(units / self.median))
+            }
+            _ => String::new(),
+        };
+        println!(
+            "{:<48} {t:>10}  [{lo} .. {hi}]  ({} samples x {} iters){thr}",
+            self.name, self.samples, self.iters_per_sample
+        );
+    }
+}
+
+pub struct Runner {
+    cfg: Config,
+    results: Vec<Measurement>,
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        Self { cfg: Config::from_args(), results: Vec::new() }
+    }
+
+    pub fn with_config(cfg: Config) -> Self {
+        Self { cfg, results: Vec::new() }
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.cfg.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_with_throughput(name, None, f)
+    }
+
+    /// Benchmark with a throughput annotation: `units` of `label` are
+    /// processed per call (e.g. `(n_elems as f64, "elem")`).
+    pub fn bench_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        mut f: F,
+    ) {
+        if !self.selected(name) {
+            return;
+        }
+        // Warmup + calibrate iterations per sample so one sample takes
+        // ~measure_time / max_samples.
+        let warmup_end = Instant::now() + self.cfg.warmup_time;
+        let mut calls = 0u64;
+        let warm_start = Instant::now();
+        while Instant::now() < warmup_end || calls == 0 {
+            f();
+            calls += 1;
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls as f64;
+        let target_sample = self.cfg.measure_time.as_secs_f64() / self.cfg.max_samples as f64;
+        let iters = ((target_sample / per_call.max(1e-9)).ceil() as u64).max(1);
+
+        let mut res = Reservoir::new();
+        let measure_end = Instant::now() + self.cfg.measure_time;
+        let mut samples = 0usize;
+        while (Instant::now() < measure_end || samples < 5) && samples < self.cfg.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            res.push(t0.elapsed().as_secs_f64() / iters as f64);
+            samples += 1;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            median: res.percentile(50.0),
+            p05: res.percentile(5.0),
+            p95: res.percentile(95.0),
+            samples,
+            iters_per_sample: iters,
+            throughput,
+        };
+        m.report();
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as JSON under `results/bench/<file>.json`.
+    pub fn save(&self, file: &str) {
+        use crate::util::json::{write_json, Json};
+        let mut arr = Vec::new();
+        for m in &self.results {
+            let mut o = Json::obj();
+            o.set("name", m.name.as_str())
+                .set("median_s", m.median)
+                .set("p05_s", m.p05)
+                .set("p95_s", m.p95)
+                .set("samples", m.samples)
+                .set("iters", m.iters_per_sample as u64);
+            if let Some((units, label)) = m.throughput {
+                o.set("throughput_per_s", units / m.median.max(1e-12)).set("unit", label);
+            }
+            arr.push(o);
+        }
+        let path = std::path::Path::new("results/bench").join(format!("{file}.json"));
+        if let Err(e) = write_json(&path, &Json::Arr(arr)) {
+            eprintln!("warning: could not save bench results: {e}");
+        }
+    }
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = Config {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 5,
+            filter: None,
+        };
+        let mut r = Runner::with_config(cfg);
+        let mut acc = 0u64;
+        r.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.results().len(), 1);
+        assert!(r.results()[0].median >= 0.0);
+    }
+
+    #[test]
+    fn filter_excludes() {
+        let cfg = Config {
+            measure_time: Duration::from_millis(10),
+            warmup_time: Duration::from_millis(2),
+            max_samples: 3,
+            filter: Some("match-me".to_string()),
+        };
+        let mut r = Runner::with_config(cfg);
+        r.bench("other", || {});
+        assert!(r.results().is_empty());
+        r.bench("yes-match-me", || {});
+        assert_eq!(r.results().len(), 1);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+        assert_eq!(fmt_count(1500.0), "1.50K");
+    }
+}

@@ -1,0 +1,164 @@
+//! Service metrics: request/batch counters, latency percentiles,
+//! throughput — the observability layer of the hashing service.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{Online, Reservoir};
+
+#[derive(Debug)]
+struct Inner {
+    started: Instant,
+    requests: u64,
+    rejected: u64,
+    batches: u64,
+    batch_fill: Online,
+    latency_ms: Reservoir,
+    queue_wait_ms: Reservoir,
+}
+
+/// Thread-safe metrics sink shared by the service and its workers.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                started: Instant::now(),
+                requests: 0,
+                rejected: 0,
+                batches: 0,
+                batch_fill: Online::new(),
+                latency_ms: Reservoir::new(),
+                queue_wait_ms: Reservoir::new(),
+            }),
+        }
+    }
+
+    pub fn record_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// `fill` is the fraction of the batch capacity actually used.
+    pub fn record_batch(&self, size: usize, capacity: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_fill.push(size as f64 / capacity.max(1) as f64);
+    }
+
+    pub fn record_latency_ms(&self, ms: f64) {
+        self.inner.lock().unwrap().latency_ms.push(ms);
+    }
+
+    pub fn record_queue_wait_ms(&self, ms: f64) {
+        self.inner.lock().unwrap().queue_wait_ms.push(ms);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut m = self.inner.lock().unwrap();
+        let elapsed = m.started.elapsed().as_secs_f64();
+        Snapshot {
+            requests: m.requests,
+            rejected: m.rejected,
+            batches: m.batches,
+            elapsed_s: elapsed,
+            throughput_rps: if elapsed > 0.0 { m.requests as f64 / elapsed } else { 0.0 },
+            mean_batch_fill: m.batch_fill.mean(),
+            latency_p50_ms: m.latency_ms.percentile(50.0),
+            latency_p95_ms: m.latency_ms.percentile(95.0),
+            latency_p99_ms: m.latency_ms.percentile(99.0),
+            queue_wait_p50_ms: m.queue_wait_ms.percentile(50.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub mean_batch_fill: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub queue_wait_p50_ms: f64,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("requests", self.requests)
+            .set("rejected", self.rejected)
+            .set("batches", self.batches)
+            .set("elapsed_s", self.elapsed_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("mean_batch_fill", self.mean_batch_fill)
+            .set("latency_p50_ms", self.latency_p50_ms)
+            .set("latency_p95_ms", self.latency_p95_ms)
+            .set("latency_p99_ms", self.latency_p99_ms);
+        j
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} rejected={} batches={} rps={:.1} fill={:.2} p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            self.requests,
+            self.rejected,
+            self.batches,
+            self.throughput_rps,
+            self.mean_batch_fill,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_request();
+        }
+        m.record_rejected();
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        m.record_latency_ms(1.0);
+        m.record_latency_ms(3.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
+        assert!(s.latency_p50_ms >= 1.0 && s.latency_p50_ms <= 3.0);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn snapshot_renders_and_serializes() {
+        let m = Metrics::new();
+        m.record_request();
+        let s = m.snapshot();
+        assert!(s.render().contains("requests=1"));
+        assert!(s.to_json().to_string().contains("\"requests\""));
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer 3: the coordinator — the deployable system around the paper's
+//! algorithm.
+//!
+//! * [`service`] — the online hashing service: bounded-queue submission
+//!   (backpressure), dynamic batching (size/deadline), native or PJRT
+//!   execution, per-request latency metrics.
+//! * [`pipeline`] — the offline batch pipeline: hash a dataset, expand
+//!   0-bit CWS one-hot features, train/evaluate the linear model, and
+//!   export weights in the layout the `hash_score` AOT serving artifact
+//!   consumes.
+//! * [`metrics`] — shared observability.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod service;
+
+pub use metrics::{Metrics, Snapshot};
+pub use pipeline::{
+    export_scorer_weights, hash_dataset, hashed_linear_accuracy, hashed_linear_sweep,
+    HashedDataset, PipelineConfig,
+};
+pub use router::{RoutedResponse, Router};
+pub use service::{Backend, HashResponse, HashService, ServiceConfig, SubmitError};

@@ -1,0 +1,228 @@
+//! Offline pipeline orchestration: the "hash a whole dataset, train a
+//! linear model in min-max space, evaluate" flow of §4 — the batch
+//! counterpart of the online [`super::service::HashService`].
+//!
+//! This is what the experiment drivers (Figures 7–8) and the end-to-end
+//! example call. It owns the bookkeeping the paper glosses over:
+//! skipping empty rows, aligning train/test hashing under one seed, and
+//! choosing native vs PJRT execution.
+
+use crate::cws::{CwsHasher, CwsSample};
+use crate::data::{Csr, Dataset, Matrix};
+use crate::features::Expansion;
+use crate::svm::{linear_svm_accuracy, LinearSvmParams};
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub seed: u64,
+    pub k: usize,
+    pub i_bits: u8,
+    /// Figure 8's variant: also keep this many bits of t*.
+    pub t_bits: u8,
+}
+
+impl PipelineConfig {
+    pub fn new(seed: u64, k: usize, i_bits: u8) -> Self {
+        Self { seed, k, i_bits, t_bits: 0 }
+    }
+}
+
+/// Hash every row of a matrix (native backend); empty rows yield `None`.
+pub fn hash_matrix_native(m: &Matrix, seed: u64, k: usize) -> Vec<Option<Vec<CwsSample>>> {
+    let hasher = CwsHasher::new(seed, k);
+    match m {
+        Matrix::Sparse(s) => hasher.hash_matrix(s),
+        Matrix::Dense(d) => {
+            // Amortize (r, c, β) materialization across all rows.
+            let batch = hasher.dense_batch(d.cols());
+            (0..d.rows())
+                .map(|i| {
+                    let row = d.row(i);
+                    if row.iter().any(|&v| v > 0.0) {
+                        Some(batch.hash(row))
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// The hashed features of one dataset split.
+pub struct HashedDataset {
+    pub train: Csr,
+    pub test: Csr,
+    pub expansion: Expansion,
+}
+
+/// Hash train and test under one seed and expand to one-hot features.
+pub fn hash_dataset(ds: &Dataset, cfg: &PipelineConfig) -> HashedDataset {
+    let expansion = if cfg.t_bits > 0 {
+        Expansion::new(cfg.k, cfg.i_bits).with_t_bits(cfg.t_bits)
+    } else {
+        Expansion::new(cfg.k, cfg.i_bits)
+    };
+    let train_samples = hash_matrix_native(&ds.train_x, cfg.seed, cfg.k);
+    let test_samples = hash_matrix_native(&ds.test_x, cfg.seed, cfg.k);
+    HashedDataset {
+        train: expansion.expand(&train_samples),
+        test: expansion.expand(&test_samples),
+        expansion,
+    }
+}
+
+/// Full §4 pipeline at one C: hash → expand → linear SVM → test accuracy.
+pub fn hashed_linear_accuracy(ds: &Dataset, cfg: &PipelineConfig, c: f64) -> f64 {
+    let hashed = hash_dataset(ds, cfg);
+    linear_svm_accuracy(
+        &hashed.train,
+        &ds.train_y,
+        &hashed.test,
+        &ds.test_y,
+        ds.n_classes(),
+        c,
+    )
+}
+
+/// Sweep C on pre-hashed features (hashing dominates cost; reuse it).
+pub fn hashed_linear_sweep(ds: &Dataset, cfg: &PipelineConfig, cs: &[f64]) -> Vec<(f64, f64)> {
+    let hashed = hash_dataset(ds, cfg);
+    cs.iter()
+        .map(|&c| {
+            (
+                c,
+                linear_svm_accuracy(
+                    &hashed.train,
+                    &ds.train_y,
+                    &hashed.test,
+                    &ds.test_y,
+                    ds.n_classes(),
+                    c,
+                ),
+            )
+        })
+        .collect()
+}
+
+/// Train the final hashed linear model and export its weights in the
+/// `[K, 2^bits, C]` layout the `hash_score` AOT artifact consumes — the
+/// bridge from offline training to PJRT serving.
+pub fn export_scorer_weights(
+    train: &Csr,
+    train_y: &[i32],
+    n_classes: usize,
+    expansion: &Expansion,
+    c: f64,
+) -> Vec<f32> {
+    use crate::svm::LinearOvR;
+    let p = LinearSvmParams { c, ..Default::default() };
+    let model = LinearOvR::train(train, train_y, n_classes, &p);
+    let codes = expansion.code_space();
+    let k = expansion.k;
+    // w[j, code, class] = weight of feature (j * codes + code) in class.
+    let mut w = vec![0.0f32; k * codes * n_classes];
+    for (cls, m) in model.models().iter().enumerate() {
+        for j in 0..k {
+            for code in 0..codes {
+                let fidx = j * codes + code;
+                // Fold the per-class bias into every code of slot 0 so the
+                // serving gather (which has no bias input) is exact:
+                // every row selects exactly one code per slot.
+                let bias_share = if j == 0 { m.b } else { 0.0 };
+                w[(j * codes + code) * n_classes + cls] =
+                    (m.w[fidx] + bias_share) as f32;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::svm::c_grid;
+
+    fn small(name: &str) -> Dataset {
+        generate(name, SynthConfig { seed: 3, n_train: 120, n_test: 120 }).unwrap()
+    }
+
+    #[test]
+    fn hashing_is_deterministic_across_calls() {
+        let ds = small("letter");
+        let cfg = PipelineConfig::new(1, 32, 8);
+        let a = hash_dataset(&ds, &cfg);
+        let b = hash_dataset(&ds, &cfg);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        a.train.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hashed_rows_have_k_ones() {
+        let ds = small("letter");
+        let cfg = PipelineConfig::new(2, 16, 4);
+        let h = hash_dataset(&ds, &cfg);
+        for i in 0..h.train.rows() {
+            assert_eq!(h.train.row(i).nnz(), 16);
+        }
+        assert_eq!(h.train.cols(), 16 * 16);
+    }
+
+    #[test]
+    fn accuracy_improves_with_k() {
+        // The Figure-7 trend: larger k → closer to the min-max kernel.
+        let ds = small("letter");
+        let acc_small = hashed_linear_accuracy(&ds, &PipelineConfig::new(5, 8, 8), 1.0);
+        let acc_large = hashed_linear_accuracy(&ds, &PipelineConfig::new(5, 256, 8), 1.0);
+        assert!(
+            acc_large > acc_small + 0.05,
+            "k=8 {acc_small} vs k=256 {acc_large}"
+        );
+    }
+
+    #[test]
+    fn sweep_reuses_hash_and_returns_curve() {
+        let ds = small("vowel");
+        let curve = hashed_linear_sweep(&ds, &PipelineConfig::new(7, 64, 4), &c_grid(3));
+        assert_eq!(curve.len(), 3);
+        assert!(curve.iter().all(|&(_, a)| (0.0..=1.0).contains(&a)));
+    }
+
+    #[test]
+    fn exported_weights_reproduce_ovr_decisions() {
+        use crate::svm::LinearOvR;
+        let ds = small("vowel");
+        let cfg = PipelineConfig::new(9, 16, 4);
+        let h = hash_dataset(&ds, &cfg);
+        let c = 1.0;
+        let w = export_scorer_weights(&h.train, &ds.train_y, ds.n_classes(), &h.expansion, c);
+        // Reference decisions from the OvR model directly.
+        let p = LinearSvmParams { c, ..Default::default() };
+        let model = LinearOvR::train(&h.train, &ds.train_y, ds.n_classes(), &p);
+        let codes = h.expansion.code_space();
+        let n_classes = ds.n_classes();
+        for i in 0..h.test.rows().min(20) {
+            let row = h.test.row(i);
+            let want = model.decisions(row);
+            // Score via the exported layout (gather + sum).
+            let mut got = vec![0.0f64; n_classes];
+            for &col in row.indices {
+                let j = col as usize / codes;
+                let code = col as usize % codes;
+                for cls in 0..n_classes {
+                    got[cls] += w[(j * codes + code) * n_classes + cls] as f64;
+                }
+            }
+            for cls in 0..n_classes {
+                assert!(
+                    (got[cls] - want[cls]).abs() < 1e-4 * (1.0 + want[cls].abs()),
+                    "row {i} class {cls}: {} vs {}",
+                    got[cls],
+                    want[cls]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Request router over multiple hashing-service replicas — the vLLM-
+//! router-shaped front door for multi-worker deployments. On this
+//! single-core container it exists for correctness (and because the L3
+//! contribution of a serving stack *is* this layer); on real hardware
+//! each replica owns a core / PJRT device.
+//!
+//! Routing policy: least-outstanding-requests with round-robin
+//! tie-breaking; full replicas are skipped; if every queue is full the
+//! submit fails fast with backpressure, preserving the per-replica
+//! semantics.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use super::metrics::Snapshot;
+use super::service::{Backend, HashResponse, HashService, ServiceConfig, SubmitError};
+
+pub struct Router {
+    replicas: Vec<HashService>,
+    outstanding: Vec<AtomicUsize>,
+    rr: AtomicU64,
+}
+
+impl Router {
+    /// Spawn `n` replicas of the same service configuration. Replica i
+    /// uses the SAME hashing seed (they must be interchangeable).
+    pub fn start(n: usize, cfg: ServiceConfig, backend: impl Fn(usize) -> Backend) -> Router {
+        assert!(n > 0);
+        let replicas: Vec<HashService> =
+            (0..n).map(|i| HashService::start(cfg.clone(), backend(i))).collect();
+        let outstanding = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        Router { replicas, outstanding, rr: AtomicU64::new(0) }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pick the replica with the fewest outstanding requests (ties by
+    /// rotating round-robin start so load spreads under uniform traffic).
+    fn pick(&self) -> usize {
+        let n = self.replicas.len();
+        let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for off in 0..n {
+            let i = (start + off) % n;
+            let load = self.outstanding[i].load(Ordering::Relaxed);
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Route one request. The outstanding counter for the chosen replica
+    /// is decremented when the response is received (wrapped receiver).
+    pub fn submit(
+        &self,
+        id: u64,
+        vector: Vec<f32>,
+    ) -> Result<RoutedResponse<'_>, SubmitError> {
+        let n = self.replicas.len();
+        let first = self.pick();
+        // Try the least-loaded pick, then fall over the rest.
+        for off in 0..n {
+            let i = (first + off) % n;
+            match self.replicas[i].submit(id, vector.clone()) {
+                Ok(rx) => {
+                    self.outstanding[i].fetch_add(1, Ordering::Relaxed);
+                    return Ok(RoutedResponse { router: self, replica: i, rx });
+                }
+                Err(SubmitError::QueueFull) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(SubmitError::QueueFull)
+    }
+
+    pub fn hash_blocking(&self, id: u64, vector: Vec<f32>) -> Result<HashResponse, SubmitError> {
+        let routed = self.submit(id, vector)?;
+        routed.wait()
+    }
+
+    /// Aggregate metrics across replicas.
+    pub fn snapshot(&self) -> Vec<Snapshot> {
+        self.replicas.iter().map(|r| r.metrics().snapshot()).collect()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.snapshot().iter().map(|s| s.requests).sum()
+    }
+
+    pub fn shutdown(self) {
+        for r in self.replicas {
+            r.shutdown();
+        }
+    }
+}
+
+/// A response handle that keeps the router's load accounting correct.
+pub struct RoutedResponse<'r> {
+    router: &'r Router,
+    replica: usize,
+    rx: mpsc::Receiver<HashResponse>,
+}
+
+impl<'r> RoutedResponse<'r> {
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    pub fn wait(self) -> Result<HashResponse, SubmitError> {
+        let res = self.rx.recv().map_err(|_| SubmitError::ShuttingDown);
+        self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::CwsHasher;
+    use std::time::Duration;
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig {
+            seed: 11,
+            k: 8,
+            dim: 16,
+            max_batch: 4,
+            max_wait: Duration::from_micros(300),
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn replicas_are_interchangeable() {
+        let router = Router::start(3, cfg(), |_| Backend::Native);
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let want = CwsHasher::new(11, 8).hash_dense(&v);
+        for i in 0..30 {
+            let resp = router.hash_blocking(i, v.clone()).unwrap();
+            assert_eq!(resp.samples, want, "request {i}");
+        }
+        assert_eq!(router.total_requests(), 30);
+        router.shutdown();
+    }
+
+    #[test]
+    fn load_spreads_across_replicas() {
+        let router = Router::start(4, cfg(), |_| Backend::Native);
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        // Submit a burst without waiting, then collect.
+        let mut handles = Vec::new();
+        for i in 0..40 {
+            handles.push(router.submit(i, v.clone()).unwrap());
+        }
+        let mut used = [0usize; 4];
+        for h in handles {
+            used[h.replica()] += 1;
+            h.wait().unwrap();
+        }
+        // Every replica sees some work under round-robin + least-loaded.
+        assert!(used.iter().all(|&u| u > 0), "replica usage {used:?}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn failover_on_full_queue() {
+        // Tiny queues: the router must keep accepting while ANY replica
+        // has room, and fail fast only when all are full.
+        let small = ServiceConfig { queue_cap: 1, max_batch: 1, ..cfg() };
+        let router = Router::start(2, small, |_| Backend::Native);
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut handles = Vec::new();
+        for i in 0..50 {
+            match router.submit(i, v.clone()) {
+                Ok(h) => {
+                    accepted += 1;
+                    handles.push(h);
+                }
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(accepted > 0);
+        for h in handles {
+            h.wait().unwrap();
+        }
+        // Whether rejections occur depends on timing; the invariant is
+        // that accepted + rejected == 50 and nothing is lost.
+        assert_eq!(accepted + rejected, 50);
+        router.shutdown();
+    }
+
+    #[test]
+    fn snapshot_aggregates() {
+        let router = Router::start(2, cfg(), |_| Backend::Native);
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        for i in 0..10 {
+            router.hash_blocking(i, v.clone()).unwrap();
+        }
+        let snaps = router.snapshot();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps.iter().map(|s| s.requests).sum::<u64>(), 10);
+        router.shutdown();
+    }
+}

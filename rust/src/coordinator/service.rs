@@ -1,0 +1,447 @@
+//! The hashing service: the deployable L3 piece the paper's §5 pitch
+//! implies ("a tool for feature engineering … extremely efficient and
+//! scalable linear methods").
+//!
+//! Shape: callers submit single nonnegative vectors and receive their
+//! CWS samples asynchronously. Internally:
+//!
+//! ```text
+//! submit() ─► bounded queue (backpressure) ─► dynamic batcher
+//!             (max batch size OR deadline) ─► backend
+//!                 backend = PJRT engine (AOT cws_hash artifact, padded
+//!                           fixed-shape batches)  or  native CwsHasher
+//!             ─► per-request responses (mpsc)
+//! ```
+//!
+//! Both backends draw the same counter-based randomness, so which one a
+//! deployment uses is a pure throughput/operational choice (validated by
+//! `rust/tests/pipeline_integration.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cws::{materialize_params, CwsHasher, CwsSample};
+use crate::runtime::{literal_f32, Engine};
+
+use super::metrics::Metrics;
+
+/// Which compute backend executes the hash batches.
+///
+/// The PJRT client is not `Send`, so the variant carries the artifact
+/// *location*; the worker thread constructs (and exclusively owns) the
+/// engine.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Rust-native ICWS (any D, any k).
+    Native,
+    /// PJRT engine over `artifacts_dir`, running `artifact` (which fixes
+    /// B, D, K at AOT time).
+    Pjrt { artifacts_dir: std::path::PathBuf, artifact: String },
+}
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub seed: u64,
+    /// Samples per vector (k). For the PJRT backend this must match the
+    /// artifact's K.
+    pub k: usize,
+    /// Input dimensionality. For PJRT must match the artifact's D.
+    pub dim: usize,
+    /// Dynamic batcher: flush at this many requests…
+    pub max_batch: usize,
+    /// …or after this long since the first queued request.
+    pub max_wait: Duration,
+    /// Bounded queue capacity (backpressure): submits fail fast beyond it.
+    pub queue_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 2015,
+            k: 64,
+            dim: 64,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+pub struct HashResponse {
+    pub id: u64,
+    pub samples: Vec<CwsSample>,
+    /// Total time from submit to completion.
+    pub latency: Duration,
+}
+
+struct Request {
+    id: u64,
+    vector: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<HashResponse>,
+}
+
+enum Msg {
+    Req(Request),
+    Flush,
+    Shutdown,
+}
+
+/// Handle to the running service.
+pub struct HashService {
+    tx: mpsc::SyncSender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    stopping: Arc<AtomicBool>,
+    cfg: ServiceConfig,
+}
+
+#[derive(Debug)]
+pub enum SubmitError {
+    QueueFull,
+    ShuttingDown,
+    BadInput(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full (backpressure)"),
+            SubmitError::ShuttingDown => write!(f, "service shutting down"),
+            SubmitError::BadInput(s) => write!(f, "bad input: {s}"),
+        }
+    }
+}
+impl std::error::Error for SubmitError {}
+
+impl HashService {
+    pub fn start(cfg: ServiceConfig, backend: Backend) -> HashService {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let m2 = Arc::clone(&metrics);
+        let cfg2 = cfg.clone();
+        let worker = std::thread::Builder::new()
+            .name("minmax-hash-service".into())
+            .spawn(move || run_worker(cfg2, backend, rx, m2))
+            .expect("spawn service worker");
+        HashService { tx, worker: Some(worker), metrics, stopping, cfg }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Submit one vector; the response arrives on the returned channel.
+    /// Fails fast with `QueueFull` under backpressure.
+    pub fn submit(
+        &self,
+        id: u64,
+        vector: Vec<f32>,
+    ) -> Result<mpsc::Receiver<HashResponse>, SubmitError> {
+        if self.stopping.load(Ordering::Relaxed) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if vector.len() != self.cfg.dim {
+            return Err(SubmitError::BadInput(format!(
+                "dim {} != {}",
+                vector.len(),
+                self.cfg.dim
+            )));
+        }
+        if !vector.iter().any(|&v| v > 0.0) {
+            return Err(SubmitError::BadInput("all-zero vector".into()));
+        }
+        if vector.iter().any(|&v| v < 0.0 || !v.is_finite()) {
+            return Err(SubmitError::BadInput("negative or non-finite entry".into()));
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { id, vector, submitted: Instant::now(), resp: rtx };
+        self.metrics.record_request();
+        match self.tx.try_send(Msg::Req(req)) {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(SubmitError::QueueFull)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn hash_blocking(&self, id: u64, vector: Vec<f32>) -> Result<HashResponse, SubmitError> {
+        let rx = self.submit(id, vector)?;
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    /// Ask the batcher to flush a partial batch immediately.
+    pub fn flush(&self) {
+        let _ = self.tx.try_send(Msg::Flush);
+    }
+
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HashService {
+    fn drop(&mut self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_worker(cfg: ServiceConfig, backend: Backend, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>) {
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    // PJRT backend state: the engine is created HERE (the PJRT client is
+    // not Send; this thread owns it exclusively), with pre-materialized
+    // parameter literals.
+    let pjrt: Option<(Engine, String, usize, usize, (xla::Literal, xla::Literal, xla::Literal))> =
+        match &backend {
+            Backend::Pjrt { artifacts_dir, artifact } => {
+                let engine = Engine::load_subset(artifacts_dir, &[artifact.as_str()])
+                    .expect("loading PJRT engine in service worker");
+                let spec = engine.spec(artifact).expect("artifact in manifest").clone();
+                let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+                let k = spec.inputs[1].shape[0];
+                assert_eq!(d, cfg.dim, "artifact D != service dim");
+                assert_eq!(k, cfg.k, "artifact K != service k");
+                let (r, c, beta) = materialize_params(cfg.seed, d, k);
+                let lits = (
+                    literal_f32(&r, &[k, d]).unwrap(),
+                    literal_f32(&c, &[k, d]).unwrap(),
+                    literal_f32(&beta, &[k, d]).unwrap(),
+                );
+                Some((engine, artifact.clone(), b, d, lits))
+            }
+            Backend::Native => None,
+        };
+    // Native backend: amortize parameter materialization across the whole
+    // service lifetime (identical output to per-row hashing).
+    let hasher = CwsHasher::new(cfg.seed, cfg.k);
+    let batch_hasher =
+        if pjrt.is_none() { Some(hasher.dense_batch(cfg.dim)) } else { None };
+
+    loop {
+        // Wait for the first request (or control message)…
+        let first_deadline = if pending.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => {
+                    pending.push(r);
+                    Instant::now() + cfg.max_wait
+                }
+                Ok(Msg::Flush) => continue,
+                Ok(Msg::Shutdown) | Err(_) => break,
+            }
+        } else {
+            Instant::now() + cfg.max_wait
+        };
+        // …then fill the batch until size or deadline.
+        let mut flush_now = false;
+        let mut shutdown = false;
+        while pending.len() < cfg.max_batch && !flush_now {
+            let left = first_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Flush) => flush_now = true,
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if !pending.is_empty() {
+            let batch: Vec<Request> = pending.drain(..).collect();
+            metrics.record_batch(batch.len(), cfg.max_batch);
+            for r in &batch {
+                metrics
+                    .record_queue_wait_ms(r.submitted.elapsed().as_secs_f64() * 1e3);
+            }
+            match &pjrt {
+                Some((engine, artifact, b, d, (rl, cl, bl))) => {
+                    // Pad the batch to the artifact's fixed B with a safe
+                    // dummy row (all ones).
+                    for chunk in batch.chunks(*b) {
+                        let mut x = vec![1.0f32; b * d];
+                        for (row, req) in chunk.iter().enumerate() {
+                            x[row * d..(row + 1) * d].copy_from_slice(&req.vector);
+                        }
+                        let xl = literal_f32(&x, &[*b, *d]).unwrap();
+                        let outs = engine
+                            .run_decoded(artifact, &[xl, rl.clone(), cl.clone(), bl.clone()])
+                            .expect("pjrt execute");
+                        let i_star = outs[0].as_i32().unwrap();
+                        let t_star = outs[1].as_i32().unwrap();
+                        let k = cfg.k;
+                        for (row, req) in chunk.iter().enumerate() {
+                            let samples: Vec<CwsSample> = (0..k)
+                                .map(|j| CwsSample {
+                                    i_star: i_star[row * k + j] as u32,
+                                    t_star: t_star[row * k + j] as i64,
+                                })
+                                .collect();
+                            respond(req, samples, &metrics);
+                        }
+                    }
+                }
+                None => {
+                    let bh = batch_hasher.as_ref().unwrap();
+                    for req in &batch {
+                        let samples = bh.hash(&req.vector);
+                        respond(req, samples, &metrics);
+                    }
+                }
+            }
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+fn respond(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
+    let latency = req.submitted.elapsed();
+    metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
+    let _ = req.resp.send(HashResponse { id: req.id, samples, latency });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(k: usize, dim: usize) -> ServiceConfig {
+        ServiceConfig { k, dim, max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() }
+    }
+
+    fn vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.lognormal(0.0, 1.0) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn native_service_matches_direct_hasher() {
+        let c = cfg(16, 24);
+        let seed = c.seed;
+        let svc = HashService::start(c, Backend::Native);
+        let inputs = vecs(20, 24, 3);
+        let mut rxs = Vec::new();
+        for (i, v) in inputs.iter().enumerate() {
+            rxs.push(svc.submit(i as u64, v.clone()).unwrap());
+        }
+        let hasher = CwsHasher::new(seed, 16);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.samples, hasher.hash_dense(&inputs[i]));
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.requests, 20);
+        assert!(snap.batches >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_vectors() {
+        let svc = HashService::start(cfg(4, 8), Backend::Native);
+        assert!(matches!(
+            svc.submit(0, vec![0.0; 8]),
+            Err(SubmitError::BadInput(_))
+        ));
+        assert!(matches!(
+            svc.submit(0, vec![1.0; 4]),
+            Err(SubmitError::BadInput(_))
+        ));
+        assert!(matches!(
+            svc.submit(0, vec![-1.0; 8]),
+            Err(SubmitError::BadInput(_))
+        ));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue and a slow drain: rapid submits must hit QueueFull.
+        let c = ServiceConfig {
+            k: 256,
+            dim: 512,
+            max_batch: 2,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 2,
+            ..Default::default()
+        };
+        let svc = HashService::start(c, Backend::Native);
+        let v: Vec<f32> = (0..512).map(|i| (i + 1) as f32).collect();
+        let mut full = 0;
+        let mut rxs = Vec::new();
+        for i in 0..200 {
+            match svc.submit(i, v.clone()) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::QueueFull) => full += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(full > 0, "expected backpressure rejections");
+        assert!(svc.metrics().snapshot().rejected > 0);
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hash_blocking_roundtrip() {
+        let svc = HashService::start(cfg(8, 8), Backend::Native);
+        let resp = svc.hash_blocking(7, vec![1.0; 8]).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.samples.len(), 8);
+        assert!(resp.latency.as_secs_f64() >= 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let svc = std::sync::Arc::new(HashService::start(
+            ServiceConfig { queue_cap: 4096, ..cfg(8, 16) },
+            Backend::Native,
+        ));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let svc = std::sync::Arc::clone(&svc);
+            handles.push(std::thread::spawn(move || {
+                let inputs = vecs(25, 16, 100 + t);
+                for (i, v) in inputs.into_iter().enumerate() {
+                    let resp = svc.hash_blocking(t * 1000 + i as u64, v).unwrap();
+                    assert_eq!(resp.samples.len(), 8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.metrics().snapshot().requests, 100);
+    }
+}

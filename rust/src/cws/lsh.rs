@@ -1,0 +1,252 @@
+//! LSH index over 0-bit CWS samples — similarity search in min-max
+//! space, the retrieval use-case the paper's lineage (near-duplicate
+//! detection, nearest-neighbor caching [4, 5, 13, 26]) motivates.
+//!
+//! Standard banding: `k = bands × rows_per_band` samples per vector; a
+//! band's `rows_per_band` sample values are concatenated into one bucket
+//! key. Two vectors with min-max similarity `s` share a specific band
+//! with probability `s^r`, hence collide in ≥1 of `b` bands with
+//! probability `1 − (1 − s^r)^b` — the classic S-curve, tuned by
+//! (bands, rows_per_band). Candidates are exactly re-ranked with the
+//! sparse min-max kernel.
+
+use std::collections::HashMap;
+
+use crate::data::sparse::{Csr, SparseRow};
+use crate::kernels::sparse_minmax;
+
+use super::sampler::{CwsHasher, CwsSample};
+
+#[derive(Debug, Clone, Copy)]
+pub struct LshConfig {
+    pub bands: usize,
+    pub rows_per_band: usize,
+    pub seed: u64,
+}
+
+impl LshConfig {
+    pub fn k(&self) -> usize {
+        self.bands * self.rows_per_band
+    }
+
+    /// Probability that a pair at similarity `s` becomes a candidate.
+    pub fn candidate_probability(&self, s: f64) -> f64 {
+        1.0 - (1.0 - s.powi(self.rows_per_band as i32)).powi(self.bands as i32)
+    }
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        Self { bands: 16, rows_per_band: 4, seed: 2015 }
+    }
+}
+
+/// An LSH index over the 0-bit CWS samples of a corpus.
+pub struct LshIndex {
+    cfg: LshConfig,
+    hasher: CwsHasher,
+    /// One bucket map per band: band key -> row ids.
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+    /// Stored samples (for optional sample-level re-rank) and the corpus.
+    corpus: Csr,
+}
+
+impl LshIndex {
+    /// Build over all rows of `corpus` (rows with no nonzeros are
+    /// skipped — they can never be retrieved).
+    pub fn build(corpus: Csr, cfg: LshConfig) -> LshIndex {
+        let hasher = CwsHasher::new(cfg.seed, cfg.k());
+        let mut tables: Vec<HashMap<u64, Vec<u32>>> = vec![HashMap::new(); cfg.bands];
+        for row_id in 0..corpus.rows() {
+            let row = corpus.row(row_id);
+            if row.nnz() == 0 {
+                continue;
+            }
+            let samples = hasher.hash_sparse(row);
+            for (band, key) in band_keys(&samples, cfg.rows_per_band).enumerate() {
+                tables[band].entry(key).or_default().push(row_id as u32);
+            }
+        }
+        LshIndex { cfg, hasher, tables, corpus }
+    }
+
+    pub fn config(&self) -> &LshConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.corpus.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.corpus.rows() == 0
+    }
+
+    /// Candidate row ids for a query (deduplicated, unordered).
+    pub fn candidates(&self, query: SparseRow<'_>) -> Vec<u32> {
+        let samples = self.hasher.hash_sparse(query);
+        let mut seen = std::collections::HashSet::new();
+        for (band, key) in band_keys(&samples, self.cfg.rows_per_band).enumerate() {
+            if let Some(ids) = self.tables[band].get(&key) {
+                seen.extend(ids.iter().copied());
+            }
+        }
+        seen.into_iter().collect()
+    }
+
+    /// Top-`n` most similar corpus rows by exact min-max similarity,
+    /// re-ranked over the LSH candidates. Returns (row_id, similarity),
+    /// descending.
+    pub fn query(&self, query: SparseRow<'_>, n: usize) -> Vec<(u32, f64)> {
+        let mut scored: Vec<(u32, f64)> = self
+            .candidates(query)
+            .into_iter()
+            .map(|id| (id, sparse_minmax(query, self.corpus.row(id as usize))))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(n);
+        scored
+    }
+
+    /// Average bucket occupancy per band (diagnostics / tests).
+    pub fn mean_bucket_size(&self) -> f64 {
+        let (mut total, mut buckets) = (0usize, 0usize);
+        for t in &self.tables {
+            for ids in t.values() {
+                total += ids.len();
+                buckets += 1;
+            }
+        }
+        if buckets == 0 {
+            0.0
+        } else {
+            total as f64 / buckets as f64
+        }
+    }
+}
+
+/// Iterate the band keys of a sample vector: each band hashes its
+/// `rows_per_band` `i*` values (0-bit: `t*` ignored) into one u64.
+fn band_keys<'a>(
+    samples: &'a [CwsSample],
+    rows_per_band: usize,
+) -> impl Iterator<Item = u64> + 'a {
+    samples.chunks(rows_per_band).map(|chunk| {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for s in chunk {
+            h ^= s.i_star as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrBuilder;
+    use crate::util::rng::Pcg64;
+
+    /// Corpus of `groups` clusters: `per_group` near-duplicates each.
+    fn corpus(groups: usize, per_group: usize, dim: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut b = CsrBuilder::new(dim);
+        for _g in 0..groups {
+            let proto: Vec<f32> = (0..dim)
+                .map(|_| if rng.uniform() < 0.5 { 0.0 } else { rng.lognormal(0.0, 1.0) as f32 })
+                .collect();
+            for _ in 0..per_group {
+                let row: Vec<(u32, f32)> = proto
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v > 0.0)
+                    .map(|(i, &v)| (i as u32, (v as f64 * rng.lognormal(0.0, 0.12)) as f32))
+                    .collect();
+                b.push_row(row);
+            }
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn near_duplicates_are_retrieved() {
+        let per = 4;
+        let c = corpus(12, per, 64, 1);
+        let idx = LshIndex::build(c.clone(), LshConfig { bands: 24, rows_per_band: 3, seed: 9 });
+        // Query with each row; its group mates must dominate the top-k.
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for q in 0..c.rows() {
+            let group = q / per;
+            let top = idx.query(c.row(q), per);
+            for (id, sim) in &top {
+                total += 1;
+                if (*id as usize) / per == group {
+                    hits += 1;
+                }
+                assert!((0.0..=1.0).contains(sim));
+            }
+        }
+        assert!(hits as f64 / total as f64 > 0.9, "group precision {hits}/{total}");
+    }
+
+    #[test]
+    fn self_query_returns_self_first() {
+        let c = corpus(6, 3, 48, 2);
+        let idx = LshIndex::build(c.clone(), LshConfig::default());
+        for q in [0usize, 5, 11] {
+            let top = idx.query(c.row(q), 1);
+            assert_eq!(top[0].0 as usize, q);
+            assert!((top[0].1 - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn s_curve_is_monotone() {
+        let cfg = LshConfig { bands: 16, rows_per_band: 4, seed: 0 };
+        let probs: Vec<f64> =
+            (0..=10).map(|i| cfg.candidate_probability(i as f64 / 10.0)).collect();
+        assert!(probs.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+        assert!(probs[0] < 1e-6);
+        assert!((probs[10] - 1.0).abs() < 1e-9);
+        // Threshold behavior: far below (1/b)^(1/r) → tiny.
+        assert!(cfg.candidate_probability(0.2) < 0.1);
+        assert!(cfg.candidate_probability(0.9) > 0.99);
+    }
+
+    #[test]
+    fn dissimilar_vectors_rarely_candidates() {
+        // Disjoint supports → similarity 0 → never candidates (band keys
+        // derive from i*, which lives in disjoint index sets).
+        let mut b = CsrBuilder::new(1000);
+        b.push_row((0..50).map(|i| (i as u32, 1.0)).collect());
+        b.push_row((500..550).map(|i| (i as u32, 1.0)).collect());
+        let c = b.finish();
+        let idx = LshIndex::build(c.clone(), LshConfig::default());
+        let cands = idx.candidates(c.row(1));
+        assert!(!cands.contains(&0), "disjoint vectors must not collide");
+    }
+
+    #[test]
+    fn empty_rows_skipped_not_panicking() {
+        let mut b = CsrBuilder::new(8);
+        b.push_row(vec![(1, 1.0)]);
+        b.push_row(vec![]);
+        let idx = LshIndex::build(b.finish(), LshConfig::default());
+        assert_eq!(idx.len(), 2);
+        let mut q = CsrBuilder::new(8);
+        q.push_row(vec![(1, 1.0)]);
+        let qm = q.finish();
+        let top = idx.query(qm.row(0), 2);
+        assert_eq!(top[0].0, 0);
+        assert_eq!(top.len(), 1); // the empty row is unreachable
+    }
+
+    #[test]
+    fn bucket_stats_reasonable() {
+        let c = corpus(10, 3, 64, 3);
+        let idx = LshIndex::build(c, LshConfig { bands: 8, rows_per_band: 2, seed: 4 });
+        let m = idx.mean_bucket_size();
+        assert!(m >= 1.0 && m <= 30.0, "mean bucket size {m}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Classical minwise hashing — the binary-data baseline the paper
+//! generalizes (§1: "the resemblance kernel has been widely used in
+//! practice on binary (or binarized) data [4, 5, …]", and [20]'s b-bit
+//! minwise hashing).
+//!
+//! For a binary set S ⊆ {0..D−1} and a random hash π_j,
+//! `h_j(S) = min_{i∈S} π_j(i)` and `Pr[h_j(S) = h_j(T)] = R(S,T)`
+//! (the resemblance, Eq. 2). The b-bit variant stores only the lowest
+//! b bits of the min-hash; [20] shows collisions then estimate
+//! `C + (1−C)·R` with `C ≈ 2^{−b}` for sparse data — we expose the
+//! unbiased corrected estimator.
+//!
+//! This exists (a) as the baseline CWS must beat on *weighted* data
+//! (0-bit CWS estimates K_MM, minwise only ever sees the support) and
+//! (b) to validate that CWS on binarized input matches minwise-estimated
+//! resemblance — two very different samplers, one statistic.
+
+use crate::data::sparse::SparseRow;
+
+use super::sampler::mix64;
+
+/// Minwise hasher: `k` independent permutations approximated by 64-bit
+/// universal hashing (collision-free in practice for D ≤ 2^32).
+#[derive(Debug, Clone)]
+pub struct MinwiseHasher {
+    seed: u64,
+    k: usize,
+}
+
+impl MinwiseHasher {
+    pub fn new(seed: u64, k: usize) -> Self {
+        assert!(k > 0);
+        Self { seed, k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Hash the support of a sparse row: `k` min-hash values.
+    pub fn hash(&self, row: SparseRow<'_>) -> Vec<u64> {
+        assert!(row.nnz() > 0, "minwise hashing is undefined on the empty set");
+        (0..self.k as u64)
+            .map(|j| {
+                row.indices
+                    .iter()
+                    .map(|&i| mix64(self.seed ^ (j << 32) ^ mix64(i as u64 + 1)))
+                    .min()
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// b-bit codes of the min-hashes ([20]).
+    pub fn hash_b_bits(&self, row: SparseRow<'_>, b: u8) -> Vec<u64> {
+        assert!(b >= 1 && b <= 63);
+        let mask = (1u64 << b) - 1;
+        self.hash(row).into_iter().map(|h| h & mask).collect()
+    }
+}
+
+/// Plain collision-fraction estimator of the resemblance.
+pub fn estimate_resemblance(a: &[u64], b: &[u64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+/// The b-bit-minwise corrected estimator of [20]:
+/// `R̂ = (P̂ − C) / (1 − C)` with `C = 2^{−b}` (the accidental-collision
+/// rate for b-bit codes under near-uniform min-hash values).
+pub fn estimate_resemblance_b_bits(a: &[u64], b: &[u64], bits: u8) -> f64 {
+    let p = estimate_resemblance(a, b);
+    let c = 0.5f64.powi(bits as i32);
+    ((p - c) / (1.0 - c)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::CwsHasher;
+    use crate::data::sparse::CsrBuilder;
+    use crate::kernels::sparse_resemblance;
+    use crate::util::rng::Pcg64;
+
+    /// Two binary rows with controlled overlap.
+    fn binary_pair(d: usize, f1: usize, f2: usize, shared: usize, seed: u64) -> crate::data::Csr {
+        let mut rng = Pcg64::new(seed);
+        let idx = rng.sample_indices(d, f1 + f2 - shared);
+        let u: Vec<(u32, f32)> = idx[..f1].iter().map(|&i| (i as u32, 1.0)).collect();
+        let v: Vec<(u32, f32)> =
+            idx[f1 - shared..].iter().map(|&i| (i as u32, 1.0)).collect();
+        let mut b = CsrBuilder::new(d);
+        b.push_row(u);
+        b.push_row(v);
+        b.finish()
+    }
+
+    #[test]
+    fn collision_rate_estimates_resemblance() {
+        let m = binary_pair(10_000, 300, 200, 100, 1);
+        let truth = sparse_resemblance(m.row(0), m.row(1));
+        let h = MinwiseHasher::new(7, 4000);
+        let est = estimate_resemblance(&h.hash(m.row(0)), &h.hash(m.row(1)));
+        let tol = 4.0 * (truth * (1.0 - truth) / 4000.0).sqrt();
+        assert!((est - truth).abs() < tol.max(0.02), "{est} vs {truth}");
+    }
+
+    #[test]
+    fn b_bit_corrected_estimator_tracks_truth() {
+        let m = binary_pair(10_000, 400, 400, 240, 2);
+        let truth = sparse_resemblance(m.row(0), m.row(1));
+        let h = MinwiseHasher::new(11, 6000);
+        for bits in [1u8, 2, 4, 8] {
+            let a = h.hash_b_bits(m.row(0), bits);
+            let b = h.hash_b_bits(m.row(1), bits);
+            let est = estimate_resemblance_b_bits(&a, &b, bits);
+            // Fewer bits → noisier but still unbiased-ish.
+            let tol = 0.04 + 0.06 / bits as f64;
+            assert!((est - truth).abs() < tol, "b={bits}: {est} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn raw_b_bit_collisions_exceed_resemblance() {
+        // Without the correction, accidental collisions inflate P.
+        let m = binary_pair(10_000, 300, 300, 30, 3);
+        let truth = sparse_resemblance(m.row(0), m.row(1));
+        let h = MinwiseHasher::new(3, 4000);
+        let a = h.hash_b_bits(m.row(0), 1);
+        let b = h.hash_b_bits(m.row(1), 1);
+        let raw = estimate_resemblance(&a, &b);
+        assert!(raw > truth + 0.1, "raw {raw} should exceed R {truth}");
+    }
+
+    #[test]
+    fn cws_on_binary_matches_minwise_statistic() {
+        // Two different samplers, one estimand: CWS collisions on binary
+        // data and minwise collisions both estimate the resemblance.
+        let m = binary_pair(5_000, 250, 220, 110, 4);
+        let truth = sparse_resemblance(m.row(0), m.row(1));
+        let k = 4000;
+        let mh = MinwiseHasher::new(5, k);
+        let ch = CwsHasher::new(5, k);
+        let minwise = estimate_resemblance(&mh.hash(m.row(0)), &mh.hash(m.row(1)));
+        let su = ch.hash_sparse(m.row(0));
+        let sv = ch.hash_sparse(m.row(1));
+        let cws = su.iter().zip(&sv).filter(|(a, b)| a == b).count() as f64 / k as f64;
+        assert!((minwise - truth).abs() < 0.03);
+        assert!((cws - truth).abs() < 0.03);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = binary_pair(1000, 50, 50, 25, 6);
+        let h = MinwiseHasher::new(9, 32);
+        assert_eq!(h.hash(m.row(0)), h.hash(m.row(0)));
+        let h2 = MinwiseHasher::new(10, 32);
+        assert_ne!(h.hash(m.row(0)), h2.hash(m.row(0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined on the empty set")]
+    fn empty_set_panics() {
+        let mut b = CsrBuilder::new(4);
+        b.push_row(vec![]);
+        let m = b.finish();
+        MinwiseHasher::new(1, 4).hash(m.row(0));
+    }
+}

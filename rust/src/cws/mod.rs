@@ -1,0 +1,39 @@
+//! Consistent Weighted Sampling (CWS) — Algorithm 1 of the paper — and
+//! the paper's contribution: the **0-bit scheme** (discard `t*`) plus the
+//! general b-bit encodings of `(i*, t*)` studied in Figures 4–8.
+//!
+//! The sampler follows Ioffe's ICWS exactly:
+//!
+//! ```text
+//! for i with uᵢ > 0:
+//!     rᵢ, cᵢ ~ Gamma(2,1),  βᵢ ~ Uniform(0,1)          (fixed per (sample j, dim i))
+//!     tᵢ = ⌊ln uᵢ / rᵢ + βᵢ⌋
+//!     yᵢ = exp(rᵢ (tᵢ − βᵢ))
+//!     aᵢ = cᵢ / (yᵢ exp(rᵢ))
+//! (i*, t*) = (argminᵢ aᵢ, t_{i*})
+//! Pr[(i*ᵤ, t*ᵤ) = (i*ᵥ, t*ᵥ)] = K_MM(u, v)            (Eq. 7)
+//! ```
+//!
+//! The random triples `(rᵢⱼ, cᵢⱼ, βᵢⱼ)` are **counter-based**: derived
+//! deterministically from `(seed, j, i)` via a SplitMix64 finalizer, so
+//!
+//! * sparse vectors only pay for their nonzeros (no D×k materialization),
+//! * the dense PJRT path and the rust-native path draw *identical*
+//!   randomness (the L2 executable receives matrices materialized from
+//!   the same function — see [`materialize_params`]), and
+//! * two processes hashing the same data with the same seed agree.
+//!
+//! On binary input CWS degenerates to minwise hashing and the collision
+//! probability is the resemblance (Eq. 2) — that is the sense in which
+//! min-max generalizes resemblance, and it is how the b-bit-minwise
+//! baseline is obtained here (binarize, then hash).
+
+pub mod lsh;
+pub mod minwise;
+pub mod sampler;
+pub mod schemes;
+
+pub use lsh::{LshConfig, LshIndex};
+pub use minwise::MinwiseHasher;
+pub use sampler::{materialize_params, CwsHasher, CwsSample, DenseBatchHasher};
+pub use schemes::{collision_fraction, Scheme};

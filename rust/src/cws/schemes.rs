@@ -1,0 +1,192 @@
+//! Bit-budget encodings of CWS samples `(i*, t*)` — the design space the
+//! paper explores in §3.3–§4 and Figures 4–8.
+//!
+//! A [`Scheme`] chooses how many bits of `i*` and of `t*` survive:
+//!
+//! * the paper's proposal is `t_bits = Some(0)` (**0-bit CWS**);
+//! * the original ("full") scheme is `t_bits = None` (keep everything);
+//! * Figures 4–5 add the 1-bit scheme (`t*` parity);
+//! * Figure 6 inverts the question (`i_bits ∈ {0,1,2,4}` with full `t*`);
+//! * Figures 7–8 use `i_bits ∈ {1,2,4,8}` with `t_bits ∈ {0, 2}`.
+//!
+//! `b`-bit truncation of a sample component keeps its value mod `2^b`
+//! (for `t*`, on the euclidean remainder so negative offsets behave).
+
+use super::sampler::CwsSample;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Scheme {
+    /// Bits kept of `i*`; `None` = all.
+    pub i_bits: Option<u8>,
+    /// Bits kept of `t*`; `None` = all, `Some(0)` = the 0-bit scheme.
+    pub t_bits: Option<u8>,
+}
+
+impl Scheme {
+    /// The original CWS scheme: keep everything.
+    pub const FULL: Scheme = Scheme { i_bits: None, t_bits: None };
+    /// The paper's 0-bit scheme: `i*` only.
+    pub const ZERO_BIT: Scheme = Scheme { i_bits: None, t_bits: Some(0) };
+    /// The 1-bit scheme of Figures 4–5: `i*` plus the parity of `t*`.
+    pub const ONE_BIT: Scheme = Scheme { i_bits: None, t_bits: Some(1) };
+
+    pub fn with_i_bits(b: u8) -> Scheme {
+        Scheme { i_bits: Some(b), t_bits: Some(0) }
+    }
+
+    pub fn name(&self) -> String {
+        let i = match self.i_bits {
+            None => "i:full".to_string(),
+            Some(b) => format!("i:{b}b"),
+        };
+        let t = match self.t_bits {
+            None => "t:full".to_string(),
+            Some(b) => format!("t:{b}b"),
+        };
+        format!("{i}/{t}")
+    }
+
+    /// Encode one sample under this scheme. Equality of codes is the
+    /// collision event whose probability estimates `K_MM`.
+    #[inline]
+    pub fn encode(&self, s: &CwsSample) -> u128 {
+        let i_part: u64 = match self.i_bits {
+            None => s.i_star as u64,
+            Some(0) => 0,
+            Some(b) if b >= 32 => s.i_star as u64,
+            Some(b) => (s.i_star as u64) & ((1u64 << b) - 1),
+        };
+        let t_part: u64 = match self.t_bits {
+            None => s.t_star as u64, // bijective i64→u64 reinterpretation
+            Some(0) => 0,
+            Some(b) if b >= 64 => s.t_star as u64,
+            Some(b) => s.t_star.rem_euclid(1i64 << b) as u64,
+        };
+        ((i_part as u128) << 64) | t_part as u128
+    }
+}
+
+/// Fraction of positions where the two sample streams collide under the
+/// scheme — the estimator K̂_MM plotted in Figures 4–6.
+pub fn collision_fraction(scheme: Scheme, a: &[CwsSample], b: &[CwsSample]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let hits = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| scheme.encode(x) == scheme.encode(y))
+        .count();
+    hits as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::sampler::CwsHasher;
+    use crate::kernels::dense_minmax;
+
+    fn s(i: u32, t: i64) -> CwsSample {
+        CwsSample { i_star: i, t_star: t }
+    }
+
+    #[test]
+    fn full_scheme_is_exact_equality() {
+        let sch = Scheme::FULL;
+        assert_eq!(sch.encode(&s(5, -3)), sch.encode(&s(5, -3)));
+        assert_ne!(sch.encode(&s(5, -3)), sch.encode(&s(5, -2)));
+        assert_ne!(sch.encode(&s(4, -3)), sch.encode(&s(5, -3)));
+    }
+
+    #[test]
+    fn zero_bit_ignores_t() {
+        let sch = Scheme::ZERO_BIT;
+        assert_eq!(sch.encode(&s(5, -3)), sch.encode(&s(5, 999)));
+        assert_ne!(sch.encode(&s(5, 0)), sch.encode(&s(6, 0)));
+    }
+
+    #[test]
+    fn one_bit_keeps_parity() {
+        let sch = Scheme::ONE_BIT;
+        assert_eq!(sch.encode(&s(5, 2)), sch.encode(&s(5, 4)));
+        assert_ne!(sch.encode(&s(5, 2)), sch.encode(&s(5, 3)));
+        // negative t: -1 and 1 are both odd
+        assert_eq!(sch.encode(&s(5, -1)), sch.encode(&s(5, 1)));
+        assert_eq!(sch.encode(&s(5, -2)), sch.encode(&s(5, 0)));
+    }
+
+    #[test]
+    fn i_bit_truncation() {
+        let sch = Scheme::with_i_bits(2);
+        assert_eq!(sch.encode(&s(0b100, 1)), sch.encode(&s(0b000, 7)));
+        assert_ne!(sch.encode(&s(0b101, 1)), sch.encode(&s(0b100, 1)));
+        let sch8 = Scheme::with_i_bits(8);
+        assert_eq!(sch8.encode(&s(256, 0)), sch8.encode(&s(0, 0)));
+        assert_ne!(sch8.encode(&s(255, 0)), sch8.encode(&s(0, 0)));
+    }
+
+    #[test]
+    fn wide_bit_requests_saturate() {
+        let sch = Scheme { i_bits: Some(32), t_bits: Some(64) };
+        assert_eq!(sch.encode(&s(7, -9)), Scheme::FULL.encode(&s(7, -9)));
+    }
+
+    #[test]
+    fn collision_fraction_counts() {
+        let a = vec![s(1, 0), s(2, 5), s(3, 1)];
+        let b = vec![s(1, 0), s(2, 6), s(9, 1)];
+        assert!((collision_fraction(Scheme::FULL, &a, &b) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((collision_fraction(Scheme::ZERO_BIT, &a, &b) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncation_orders_collision_rates() {
+        // Fewer bits kept ⇒ collision fraction can only grow.
+        let u = [1.0f32, 3.0, 0.5, 2.0, 0.0, 1.0, 4.0, 0.25];
+        let v = [2.0f32, 1.0, 0.5, 1.0, 1.0, 0.0, 4.0, 0.25];
+        let h = CwsHasher::new(2024, 2000);
+        let (su, sv) = (h.hash_dense(&u), h.hash_dense(&v));
+        let full = collision_fraction(Scheme::FULL, &su, &sv);
+        let one = collision_fraction(Scheme::ONE_BIT, &su, &sv);
+        let zero = collision_fraction(Scheme::ZERO_BIT, &su, &sv);
+        let i2 = collision_fraction(Scheme::with_i_bits(2), &su, &sv);
+        assert!(full <= one + 1e-12);
+        assert!(one <= zero + 1e-12);
+        assert!(zero <= i2 + 1e-12);
+    }
+
+    #[test]
+    fn zero_bit_estimates_minmax_closely() {
+        // The paper's empirical core: 0-bit ≈ full ≈ K_MM, in a
+        // realistic-dimension regime (D = 96, heavy-tailed, sparse).
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        let d = 96;
+        let u: Vec<f32> = (0..d)
+            .map(|_| if rng.uniform() < 0.3 { 0.0 } else { rng.lognormal(0.0, 1.0) as f32 })
+            .collect();
+        let v: Vec<f32> = u
+            .iter()
+            .map(|&x| {
+                if rng.uniform() < 0.1 {
+                    rng.lognormal(0.0, 1.0) as f32
+                } else {
+                    (x as f64 * rng.lognormal(0.0, 0.5)) as f32
+                }
+            })
+            .collect();
+        let truth = dense_minmax(&u, &v);
+        let h = CwsHasher::new(5150, 8000);
+        let (su, sv) = (h.hash_dense(&u), h.hash_dense(&v));
+        let full = collision_fraction(Scheme::FULL, &su, &sv);
+        let zero = collision_fraction(Scheme::ZERO_BIT, &su, &sv);
+        assert!((full - truth).abs() < 0.025, "full {full} vs {truth}");
+        assert!((zero - truth).abs() < 0.025, "zero {zero} vs {truth}");
+        assert!((zero - full).abs() < 0.02);
+    }
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::FULL.name(), "i:full/t:full");
+        assert_eq!(Scheme::ZERO_BIT.name(), "i:full/t:0b");
+        assert_eq!(Scheme::with_i_bits(8).name(), "i:8b/t:0b");
+    }
+}

@@ -1,0 +1,239 @@
+//! Synthetic word-occurrence corpus calibrated to Table 2 of the paper.
+//!
+//! The paper's 0-bit-CWS validation (Table 2, Figures 4–6) uses vectors
+//! of word occurrences over 2¹⁶ documents for 13 English word pairs —
+//! heavy-tailed data whose (f₁, f₂, R, MM) statistics are printed in
+//! Table 2. We cannot redistribute the original corpus, but the
+//! estimation study depends only on those statistics, so each pair is
+//! regenerated synthetically:
+//!
+//! 1. choose the support overlap `a` from the target resemblance
+//!    `R = a/(f₁+f₂−a)  ⇒  a = R(f₁+f₂)/(1+R)`;
+//! 2. draw heavy-tailed (log-normal) counts; on shared documents the two
+//!    words' counts share a common log-normal factor plus independent
+//!    log-normal disagreement of magnitude σ;
+//! 3. bisect on σ to hit the target min-max similarity `MM` (exactly
+//!    computed by [`crate::kernels::sparse_minmax`]) — MM is strictly
+//!    decreasing in σ on a fixed support, so bisection converges.
+
+use super::sparse::{Csr, CsrBuilder};
+use crate::kernels::{sparse_minmax, sparse_resemblance};
+use crate::util::rng::Pcg64;
+
+/// Number of documents in the corpus (the paper's 2^16).
+pub const N_DOCS: usize = 1 << 16;
+
+/// One row of Table 2.
+#[derive(Debug, Clone)]
+pub struct WordPair {
+    pub word1: &'static str,
+    pub word2: &'static str,
+    pub f1: usize,
+    pub f2: usize,
+    /// Target resemblance (Table 2 "R").
+    pub r: f64,
+    /// Target min-max similarity (Table 2 "MM").
+    pub mm: f64,
+}
+
+/// The 13 pairs of Table 2, verbatim.
+pub fn table2_pairs() -> Vec<WordPair> {
+    let rows: [(&str, &str, usize, usize, f64, f64); 13] = [
+        ("A", "THE", 39063, 42754, 0.6444, 0.3543),
+        ("ADDICT", "PRICELESS", 77, 77, 0.0065, 0.0052),
+        ("AIR", "DOCTOR", 3159, 860, 0.0439, 0.0248),
+        ("CREDIT", "CARD", 2999, 2697, 0.2849, 0.2091),
+        ("GAMBIA", "KIRIBATI", 206, 186, 0.7118, 0.6070),
+        ("HONG", "KONG", 940, 948, 0.9246, 0.8985),
+        ("OF", "AND", 37339, 36289, 0.7711, 0.6084),
+        ("PAPER", "REVIEW", 1944, 3197, 0.0780, 0.0502),
+        ("PIPELINE", "FLUSH", 139, 118, 0.0158, 0.0143),
+        ("SAN", "FRANCISCO", 3194, 1651, 0.4758, 0.2885),
+        ("THIS", "TODAY", 27695, 5775, 0.1518, 0.0658),
+        ("TIME", "JOB", 37339, 36289, 0.1279, 0.0794),
+        ("UNITED", "STATES", 4079, 3981, 0.5913, 0.5017),
+    ];
+    rows.iter()
+        .map(|&(word1, word2, f1, f2, r, mm)| WordPair { word1, word2, f1, f2, r, mm })
+        .collect()
+}
+
+/// A generated pair of word vectors over `N_DOCS` documents, with the
+/// exactly-computed similarities of the realized vectors.
+#[derive(Debug, Clone)]
+pub struct GeneratedPair {
+    pub spec: WordPair,
+    /// 2 × N_DOCS sparse matrix; row 0 = word1, row 1 = word2.
+    pub vectors: Csr,
+    pub realized_r: f64,
+    pub realized_mm: f64,
+}
+
+impl GeneratedPair {
+    pub fn u(&self) -> super::sparse::SparseRow<'_> {
+        self.vectors.row(0)
+    }
+    pub fn v(&self) -> super::sparse::SparseRow<'_> {
+        self.vectors.row(1)
+    }
+}
+
+/// Generate one calibrated pair. `mm_tol` is the acceptable absolute gap
+/// between the realized and target MM (the support — hence R — is matched
+/// by construction up to integer rounding).
+pub fn generate_pair(spec: &WordPair, seed: u64, mm_tol: f64) -> GeneratedPair {
+    let overlap = ((spec.r * (spec.f1 + spec.f2) as f64) / (1.0 + spec.r)).round() as usize;
+    let overlap = overlap.min(spec.f1).min(spec.f2);
+    let mut rng = Pcg64::new_stream(seed ^ fnv(spec.word1) ^ fnv(spec.word2), 77);
+
+    // Document supports: shared docs first, then exclusives. Document ids
+    // are a random sample of [0, N_DOCS).
+    let total_docs = spec.f1 + spec.f2 - overlap;
+    assert!(total_docs <= N_DOCS, "pair does not fit the corpus");
+    let mut docs = rng.sample_indices(N_DOCS, total_docs);
+    docs.sort_unstable();
+    rng.shuffle(&mut docs);
+    let shared: Vec<usize> = docs[..overlap].to_vec();
+    let only1: Vec<usize> = docs[overlap..overlap + (spec.f1 - overlap)].to_vec();
+    let only2: Vec<usize> = docs[overlap + (spec.f1 - overlap)..].to_vec();
+
+    // Base counts (heavy-tailed): shared base + per-word factors.
+    let base: Vec<f64> = (0..overlap).map(|_| rng.lognormal(0.3, 1.0)).collect();
+    let z1: Vec<f64> = (0..overlap).map(|_| rng.normal()).collect();
+    let z2: Vec<f64> = (0..overlap).map(|_| rng.normal()).collect();
+    let x1: Vec<f64> = (0..only1.len()).map(|_| rng.lognormal(0.3, 1.2)).collect();
+    let x2: Vec<f64> = (0..only2.len()).map(|_| rng.lognormal(0.3, 1.2)).collect();
+
+    let realize = |sigma: f64| -> Csr {
+        // Counts are ceil()'d to integers ≥ 1 like real term counts.
+        let mut e1: Vec<(u32, f32)> = Vec::with_capacity(spec.f1);
+        let mut e2: Vec<(u32, f32)> = Vec::with_capacity(spec.f2);
+        for i in 0..overlap {
+            let c1 = (base[i] * (sigma * z1[i]).exp()).ceil().max(1.0) as f32;
+            let c2 = (base[i] * (sigma * z2[i]).exp()).ceil().max(1.0) as f32;
+            e1.push((shared[i] as u32, c1));
+            e2.push((shared[i] as u32, c2));
+        }
+        for (i, &d) in only1.iter().enumerate() {
+            e1.push((d as u32, x1[i].ceil().max(1.0) as f32));
+        }
+        for (i, &d) in only2.iter().enumerate() {
+            e2.push((d as u32, x2[i].ceil().max(1.0) as f32));
+        }
+        let mut b = CsrBuilder::new(N_DOCS);
+        b.push_row(e1);
+        b.push_row(e2);
+        b.finish()
+    };
+
+    // Bisection on the disagreement magnitude σ. At σ=0, shared counts
+    // are identical (MM is maximal); large σ decorrelates them.
+    let (mut lo, mut hi) = (0.0f64, 6.0f64);
+    let mm_of = |m: &Csr| sparse_minmax(m.row(0), m.row(1));
+    let mut best = realize(0.0);
+    let mm_hi_limit = mm_of(&realize(hi));
+    let mm_lo_limit = mm_of(&best);
+    // Clamp the target into the achievable interval (support fixes both
+    // endpoints; targets outside can happen for extreme pairs).
+    let target = spec.mm.clamp(mm_hi_limit.min(mm_lo_limit), mm_hi_limit.max(mm_lo_limit));
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        let m = realize(mid);
+        let mm = mm_of(&m);
+        if (mm - target).abs() <= mm_tol {
+            best = m;
+            break;
+        }
+        if mm > target {
+            lo = mid; // more disagreement needed
+        } else {
+            hi = mid;
+        }
+        best = m;
+    }
+    let realized_mm = mm_of(&best);
+    let realized_r = sparse_resemblance(best.row(0), best.row(1));
+    GeneratedPair { spec: spec.clone(), vectors: best, realized_r, realized_mm }
+}
+
+/// Generate all 13 Table-2 pairs.
+pub fn generate_table2(seed: u64, mm_tol: f64) -> Vec<GeneratedPair> {
+    table2_pairs().iter().map(|p| generate_pair(p, seed, mm_tol)).collect()
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_table_matches_paper_constants() {
+        let pairs = table2_pairs();
+        assert_eq!(pairs.len(), 13);
+        let hk = pairs.iter().find(|p| p.word1 == "HONG").unwrap();
+        assert_eq!(hk.f1, 940);
+        assert!((hk.mm - 0.8985).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generated_pair_hits_support_targets() {
+        let spec = table2_pairs()[5].clone(); // HONG-KONG
+        let g = generate_pair(&spec, 42, 0.003);
+        assert_eq!(g.u().nnz(), spec.f1);
+        assert_eq!(g.v().nnz(), spec.f2);
+        // R is fixed by the support construction (integer rounding only).
+        assert!((g.realized_r - spec.r).abs() < 0.01, "R {} vs {}", g.realized_r, spec.r);
+    }
+
+    #[test]
+    fn calibration_hits_mm_for_selected_pairs() {
+        for idx in [2usize, 3, 5, 9, 12] {
+            let spec = table2_pairs()[idx].clone();
+            let g = generate_pair(&spec, 7, 0.004);
+            assert!(
+                (g.realized_mm - spec.mm).abs() < 0.02,
+                "{}-{}: MM {} vs target {}",
+                spec.word1,
+                spec.word2,
+                g.realized_mm,
+                spec.mm
+            );
+        }
+    }
+
+    #[test]
+    fn counts_are_positive_integers() {
+        let spec = table2_pairs()[4].clone(); // GAMBIA-KIRIBATI (small)
+        let g = generate_pair(&spec, 3, 0.005);
+        for &v in g.u().values.iter().chain(g.v().values) {
+            assert!(v >= 1.0 && v.fract() == 0.0, "count {v}");
+        }
+        g.vectors.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = table2_pairs()[8].clone();
+        let a = generate_pair(&spec, 11, 0.005);
+        let b = generate_pair(&spec, 11, 0.005);
+        assert_eq!(a.vectors, b.vectors);
+    }
+
+    #[test]
+    fn heavy_tail_present() {
+        // Counts must vary dramatically (the paper stresses this regime):
+        // max/min count ratio ≥ 10 for a large pair.
+        let spec = table2_pairs()[0].clone(); // A-THE
+        let g = generate_pair(&spec, 5, 0.01);
+        let max = g.u().values.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max >= 10.0, "max count {max}");
+    }
+}

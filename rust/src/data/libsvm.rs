@@ -1,0 +1,147 @@
+//! LIBSVM text-format IO (`<label> <index>:<value> ...`, 1-based indices)
+//! — the interchange format for every dataset the paper uses, so users
+//! can run the pipeline on the real files when they have them.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::sparse::{Csr, CsrBuilder};
+
+#[derive(Debug)]
+pub struct LibsvmData {
+    pub features: Csr,
+    pub labels: Vec<i32>,
+}
+
+/// Parse LIBSVM text from a reader. `min_cols` lets callers force a
+/// dimensionality (e.g. to align train/test); the result has
+/// `cols = max(max_index, min_cols)`.
+pub fn read_from<R: BufRead>(reader: R, min_cols: usize) -> Result<LibsvmData, String> {
+    let mut rows: Vec<(i32, Vec<(u32, f32)>)> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+        // Accept "1", "+1", "-1", "2.0" style labels.
+        let label = label_tok
+            .trim_start_matches('+')
+            .parse::<f64>()
+            .map_err(|e| format!("line {}: bad label '{label_tok}': {e}", lineno + 1))?
+            as i32;
+        let mut entries = Vec::new();
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|e| format!("line {}: bad index '{idx_s}': {e}", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
+            }
+            let val: f32 = val_s
+                .parse()
+                .map_err(|e| format!("line {}: bad value '{val_s}': {e}", lineno + 1))?;
+            max_col = max_col.max(idx);
+            entries.push(((idx - 1) as u32, val));
+        }
+        rows.push((label, entries));
+    }
+    let cols = max_col.max(min_cols);
+    let mut b = CsrBuilder::new(cols.max(1));
+    let mut labels = Vec::with_capacity(rows.len());
+    for (label, entries) in rows {
+        labels.push(label);
+        b.push_row(entries);
+    }
+    Ok(LibsvmData { features: b.finish(), labels })
+}
+
+pub fn read_file(path: &Path, min_cols: usize) -> Result<LibsvmData, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    read_from(BufReader::new(f), min_cols)
+}
+
+/// Write rows in LIBSVM format (1-based indices, zeros omitted).
+pub fn write_to<W: Write>(mut w: W, data: &Csr, labels: &[i32]) -> std::io::Result<()> {
+    assert_eq!(data.rows(), labels.len());
+    for i in 0..data.rows() {
+        let row = data.row(i);
+        write!(w, "{}", labels[i])?;
+        for (&j, &v) in row.indices.iter().zip(row.values) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+pub fn write_file(path: &Path, data: &Csr, labels: &[i32]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path)?;
+    write_to(BufWriter::new(f), data, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:2\n-1 2:1.5\n# comment\n\n2 1:1 2:1 3:1\n";
+        let d = read_from(text.as_bytes(), 0).unwrap();
+        assert_eq!(d.labels, vec![1, -1, 2]);
+        assert_eq!(d.features.rows(), 3);
+        assert_eq!(d.features.cols(), 3);
+        assert_eq!(d.features.row(0).indices, &[0, 2]);
+        assert_eq!(d.features.row(0).values, &[0.5, 2.0]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.25 5:4\n3 2:1\n";
+        let d = read_from(text.as_bytes(), 0).unwrap();
+        let mut buf = Vec::new();
+        write_to(&mut buf, &d.features, &d.labels).unwrap();
+        let d2 = read_from(buf.as_slice(), d.features.cols()).unwrap();
+        assert_eq!(d2.labels, d.labels);
+        assert_eq!(d2.features, d.features);
+    }
+
+    #[test]
+    fn min_cols_respected() {
+        let d = read_from("1 1:1\n".as_bytes(), 10).unwrap();
+        assert_eq!(d.features.cols(), 10);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(read_from("1 0:1\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_from("abc 1:1\n".as_bytes(), 0).is_err());
+        assert!(read_from("1 nocolon\n".as_bytes(), 0).is_err());
+        assert!(read_from("1 1:xyz\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("minmax_libsvm_test");
+        let path = dir.join("t.svm");
+        let d = read_from("1 1:1 2:2\n-1 3:3\n".as_bytes(), 0).unwrap();
+        write_file(&path, &d.features, &d.labels).unwrap();
+        let d2 = read_file(&path, 0).unwrap();
+        assert_eq!(d2.labels, d.labels);
+        assert_eq!(d2.features, d.features);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,207 @@
+//! Data layer: matrix types, LIBSVM IO, the paper's preprocessing
+//! transforms, and the synthetic dataset suite + word-vector corpus that
+//! stand in for the paper's (non-redistributable, network-gated) data.
+
+pub mod corpus;
+pub mod dense;
+pub mod libsvm;
+pub mod scale;
+pub mod sparse;
+pub mod synth;
+
+pub use dense::Dense;
+pub use sparse::{Csr, CsrBuilder, SparseRow};
+
+/// A feature matrix in either dense or sparse representation. Kernels
+/// and hashers have fast paths for both; conversion is explicit.
+#[derive(Debug, Clone)]
+pub enum Matrix {
+    Dense(Dense),
+    Sparse(Csr),
+}
+
+impl Matrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => d.rows(),
+            Matrix::Sparse(s) => s.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => d.cols(),
+            Matrix::Sparse(s) => s.cols(),
+        }
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        match self {
+            Matrix::Dense(d) => d.clone(),
+            Matrix::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            Matrix::Dense(d) => Csr::from_dense(d),
+            Matrix::Sparse(s) => s.clone(),
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&Dense> {
+        match self {
+            Matrix::Dense(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_csr(&self) -> Option<&Csr> {
+        match self {
+            Matrix::Sparse(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Copy row `i` into a dense buffer of length `cols`.
+    pub fn row_into(&self, i: usize, buf: &mut [f32]) {
+        assert_eq!(buf.len(), self.cols());
+        match self {
+            Matrix::Dense(d) => buf.copy_from_slice(d.row(i)),
+            Matrix::Sparse(s) => {
+                buf.fill(0.0);
+                let r = s.row(i);
+                for (&j, &v) in r.indices.iter().zip(r.values) {
+                    buf[j as usize] = v;
+                }
+            }
+        }
+    }
+}
+
+/// A classification dataset with a fixed train/test partition — the unit
+/// every experiment driver consumes.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub train_x: Matrix,
+    pub train_y: Vec<i32>,
+    pub test_x: Matrix,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn n_classes(&self) -> usize {
+        let m = self
+            .train_y
+            .iter()
+            .chain(self.test_y.iter())
+            .max()
+            .copied()
+            .unwrap_or(0);
+        (m + 1) as usize
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.train_x.cols()
+    }
+
+    /// Structural sanity: shapes agree, labels contiguous from 0,
+    /// features nonnegative (the kernels require it).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.train_x.rows() != self.train_y.len() {
+            return Err("train rows != labels".into());
+        }
+        if self.test_x.rows() != self.test_y.len() {
+            return Err("test rows != labels".into());
+        }
+        if self.train_x.cols() != self.test_x.cols() {
+            return Err("train/test dim mismatch".into());
+        }
+        let k = self.n_classes();
+        let mut seen = vec![false; k];
+        for &y in self.train_y.iter().chain(self.test_y.iter()) {
+            if y < 0 || y as usize >= k {
+                return Err(format!("label {y} out of range"));
+            }
+            seen[y as usize] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("labels not contiguous from 0".into());
+        }
+        let nonneg = |m: &Matrix| -> bool {
+            match m {
+                Matrix::Dense(d) => d.data().iter().all(|&v| v >= 0.0 && v.is_finite()),
+                Matrix::Sparse(s) => (0..s.rows())
+                    .all(|i| s.row(i).values.iter().all(|&v| v >= 0.0 && v.is_finite())),
+            }
+        };
+        if !nonneg(&self.train_x) || !nonneg(&self.test_x) {
+            return Err("negative or non-finite feature".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            train_x: Matrix::Dense(Dense::from_rows(&[&[1., 0.], &[0., 1.]])),
+            train_y: vec![0, 1],
+            test_x: Matrix::Dense(Dense::from_rows(&[&[1., 0.1]])),
+            test_y: vec![0],
+        }
+    }
+
+    #[test]
+    fn dataset_validates() {
+        let d = tiny();
+        d.validate().unwrap();
+        assert_eq!(d.n_classes(), 2);
+        assert_eq!(d.n_train(), 2);
+        assert_eq!(d.n_test(), 1);
+        assert_eq!(d.dim(), 2);
+    }
+
+    #[test]
+    fn validation_catches_negatives() {
+        let mut d = tiny();
+        d.test_x = Matrix::Dense(Dense::from_rows(&[&[-1., 0.]]));
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_label_gap() {
+        let mut d = tiny();
+        d.train_y = vec![0, 2];
+        d.test_y = vec![0];
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn matrix_row_into_matches() {
+        let dense = Dense::from_rows(&[&[0., 1., 2.], &[3., 0., 0.]]);
+        let m1 = Matrix::Dense(dense.clone());
+        let m2 = Matrix::Sparse(Csr::from_dense(&dense));
+        let mut b1 = vec![0.0; 3];
+        let mut b2 = vec![0.0; 3];
+        for i in 0..2 {
+            m1.row_into(i, &mut b1);
+            m2.row_into(i, &mut b2);
+            assert_eq!(b1, b2);
+            assert_eq!(b1, dense.row(i));
+        }
+    }
+}

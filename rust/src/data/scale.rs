@@ -1,0 +1,169 @@
+//! Data transforms from the paper's experimental protocol (§2 notes):
+//!
+//! * `(z+1)/2` shift for datasets scaled to `[-1, 1]` (note ii),
+//! * ℓ₁ (sum-to-one) normalization — definition of the intersection and
+//!   n-min-max kernels (Eqs. 3–4),
+//! * ℓ₂ (unit-length) normalization — definition of the linear kernel
+//!   baseline (Eq. 5),
+//! * binarization — maps to the resemblance regime (Eq. 2).
+//!
+//! All transforms exist for both dense and CSR matrices and preserve
+//! nonnegativity.
+
+use super::dense::Dense;
+use super::sparse::Csr;
+
+/// Map `z ∈ [-1,1]` to `(z+1)/2 ∈ [0,1]` (paper note (ii)).
+pub fn shift_unit(d: &mut Dense) {
+    for v in d.data_mut() {
+        *v = (*v + 1.0) * 0.5;
+    }
+}
+
+/// Row-wise ℓ₁ normalization: each row sums to 1 (rows of all zeros are
+/// left untouched).
+pub fn l1_normalize_dense(d: &mut Dense) {
+    for i in 0..d.rows() {
+        let row = d.row_mut(i);
+        let s: f64 = row.iter().map(|&x| x.abs() as f64).sum();
+        if s > 0.0 {
+            let inv = (1.0 / s) as f32;
+            for v in row {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+/// Row-wise ℓ₂ normalization: each row has unit Euclidean norm.
+pub fn l2_normalize_dense(d: &mut Dense) {
+    for i in 0..d.rows() {
+        let row = d.row_mut(i);
+        let s: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if s > 0.0 {
+            let inv = (1.0 / s.sqrt()) as f32;
+            for v in row {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+pub fn l1_normalize_csr(m: &mut Csr) {
+    let factors: Vec<f32> = (0..m.rows())
+        .map(|i| {
+            let s = m.row(i).l1_norm();
+            if s > 0.0 {
+                (1.0 / s) as f32
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    m.scale_rows(&factors);
+}
+
+pub fn l2_normalize_csr(m: &mut Csr) {
+    let factors: Vec<f32> = (0..m.rows())
+        .map(|i| {
+            let s = m.row(i).l2_norm();
+            if s > 0.0 {
+                (1.0 / s) as f32
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    m.scale_rows(&factors);
+}
+
+/// Replace every nonzero with 1.0 (resemblance-kernel regime).
+pub fn binarize_dense(d: &mut Dense) {
+    for v in d.data_mut() {
+        *v = if *v != 0.0 { 1.0 } else { 0.0 };
+    }
+}
+
+/// Clamp negatives to zero (the kernels require nonnegative input).
+pub fn clamp_nonneg(d: &mut Dense) {
+    for v in d.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// True if every entry is nonnegative and finite.
+pub fn is_nonneg(d: &Dense) -> bool {
+    d.data().iter().all(|&v| v >= 0.0 && v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrBuilder;
+
+    #[test]
+    fn shift_maps_range() {
+        let mut d = Dense::from_vec(1, 3, vec![-1.0, 0.0, 1.0]);
+        shift_unit(&mut d);
+        assert_eq!(d.data(), &[0.0, 0.5, 1.0]);
+        assert!(is_nonneg(&d));
+    }
+
+    #[test]
+    fn l1_rows_sum_to_one() {
+        let mut d = Dense::from_rows(&[&[1., 3.], &[0., 0.], &[2., 2.]]);
+        l1_normalize_dense(&mut d);
+        assert!((d.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(d.row(1), &[0., 0.]); // zero row untouched
+        assert!((d.row(2).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_rows_unit_norm() {
+        let mut d = Dense::from_rows(&[&[3., 4.]]);
+        l2_normalize_dense(&mut d);
+        let n: f32 = d.row(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csr_normalization_matches_dense() {
+        let dense = Dense::from_rows(&[&[0., 2., 6.], &[1., 0., 0.]]);
+        let mut d1 = dense.clone();
+        l1_normalize_dense(&mut d1);
+        let mut s1 = Csr::from_dense(&dense);
+        l1_normalize_csr(&mut s1);
+        assert_eq!(s1.to_dense(), d1);
+
+        let mut d2 = dense.clone();
+        l2_normalize_dense(&mut d2);
+        let mut s2 = Csr::from_dense(&dense);
+        l2_normalize_csr(&mut s2);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((s2.to_dense().get(i, j) - d2.get(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn binarize_and_clamp() {
+        let mut d = Dense::from_vec(1, 4, vec![-2.0, 0.0, 0.5, 3.0]);
+        clamp_nonneg(&mut d);
+        assert_eq!(d.data(), &[0.0, 0.0, 0.5, 3.0]);
+        binarize_dense(&mut d);
+        assert_eq!(d.data(), &[0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn csr_l1_empty_rows_ok() {
+        let mut b = CsrBuilder::new(3);
+        b.push_row(vec![]);
+        b.push_row(vec![(1, 4.0)]);
+        let mut m = b.finish();
+        l1_normalize_csr(&mut m);
+        assert_eq!(m.row(1).values, &[1.0]);
+    }
+}

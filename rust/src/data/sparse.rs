@@ -1,0 +1,292 @@
+//! CSR sparse matrix with sorted column indices per row.
+//!
+//! The paper's data regime (word vectors, tf-idf text) is sparse; all
+//! kernels have merge-based sparse fast paths that only touch nonzeros,
+//! and the hashed one-hot features produced by 0-bit CWS are `k`
+//! nonzeros per row by construction.
+
+use super::dense::Dense;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// One sparse row: parallel (indices, values), indices strictly increasing.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseRow<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseRow<'a> {
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn l1_norm(&self) -> f64 {
+        self.values.iter().map(|&v| v.abs() as f64).sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64).sum()
+    }
+}
+
+pub struct CsrBuilder {
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new(cols: usize) -> Self {
+        Self { cols, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Push a row given (index, value) pairs; they are sorted and
+    /// deduplicated (last wins), zeros dropped.
+    pub fn push_row(&mut self, mut entries: Vec<(u32, f32)>) {
+        entries.sort_by_key(|e| e.0);
+        let mut last: Option<u32> = None;
+        for (i, v) in entries {
+            assert!((i as usize) < self.cols, "column {i} out of bounds (cols={})", self.cols);
+            if v == 0.0 {
+                continue;
+            }
+            if last == Some(i) {
+                *self.values.last_mut().unwrap() = v;
+            } else {
+                self.indices.push(i);
+                self.values.push(v);
+                last = Some(i);
+            }
+        }
+        self.indptr.push(self.indices.len());
+    }
+
+    /// Push a row that is already sorted, strictly increasing, zero-free.
+    pub fn push_sorted_row(&mut self, indices: &[u32], values: &[f32]) {
+        assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted");
+        debug_assert!(indices.iter().all(|&i| (i as usize) < self.cols));
+        self.indices.extend_from_slice(indices);
+        self.values.extend_from_slice(values);
+        self.indptr.push(self.indices.len());
+    }
+
+    pub fn finish(self) -> Csr {
+        Csr { cols: self.cols, indptr: self.indptr, indices: self.indices, values: self.values }
+    }
+}
+
+impl Csr {
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow { indices: &self.indices[s..e], values: &self.values[s..e] }
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = SparseRow<'_>> + '_ {
+        (0..self.rows()).map(move |i| self.row(i))
+    }
+
+    pub fn from_dense(d: &Dense) -> Csr {
+        let mut b = CsrBuilder::new(d.cols());
+        for row in d.iter_rows() {
+            let entries: Vec<(u32, f32)> = row
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(j, &v)| (j as u32, v))
+                .collect();
+            b.push_row(entries);
+        }
+        b.finish()
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows(), self.cols);
+        for i in 0..self.rows() {
+            let r = self.row(i);
+            let out = d.row_mut(i);
+            for (&j, &v) in r.indices.iter().zip(r.values) {
+                out[j as usize] = v;
+            }
+        }
+        d
+    }
+
+    /// Scale each row's values in place (used by normalization).
+    pub fn scale_rows(&mut self, factors: &[f32]) {
+        assert_eq!(factors.len(), self.rows());
+        for i in 0..self.rows() {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            for v in &mut self.values[s..e] {
+                *v *= factors[i];
+            }
+        }
+    }
+
+    pub fn select_rows(&self, idx: &[usize]) -> Csr {
+        let mut b = CsrBuilder::new(self.cols);
+        for &i in idx {
+            let r = self.row(i);
+            b.push_sorted_row(r.indices, r.values);
+        }
+        b.finish()
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.indptr.first() != Some(&0) || self.indptr.last() != Some(&self.indices.len()) {
+            return Err("indptr endpoints".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length".into());
+        }
+        if self.indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("indptr not monotone".into());
+        }
+        for i in 0..self.rows() {
+            let r = self.row(i);
+            if r.indices.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("row {i} indices not strictly increasing"));
+            }
+            if r.indices.iter().any(|&j| j as usize >= self.cols) {
+                return Err(format!("row {i} column out of bounds"));
+            }
+            if r.values.iter().any(|&v| v == 0.0 || !v.is_finite()) {
+                return Err(format!("row {i} has zero/non-finite stored value"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sparse dot product of two sorted rows (merge join).
+#[inline]
+pub fn dot(a: SparseRow<'_>, b: SparseRow<'_>) -> f64 {
+    let mut sum = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.indices.len() && j < b.indices.len() {
+        let (ia, ib) = (a.indices[i], b.indices[j]);
+        if ia == ib {
+            sum += a.values[i] as f64 * b.values[j] as f64;
+            i += 1;
+            j += 1;
+        } else if ia < ib {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        let mut b = CsrBuilder::new(5);
+        b.push_row(vec![(0, 1.0), (3, 2.0)]);
+        b.push_row(vec![]);
+        b.push_row(vec![(4, 5.0), (1, 3.0)]); // unsorted on purpose
+        b.finish()
+    }
+
+    #[test]
+    fn build_and_access() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 5);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0).indices, &[0, 3]);
+        assert_eq!(m.row(1).nnz(), 0);
+        assert_eq!(m.row(2).indices, &[1, 4]); // got sorted
+        assert_eq!(m.row(2).values, &[3.0, 5.0]);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zeros_dropped_dups_last_wins() {
+        let mut b = CsrBuilder::new(4);
+        b.push_row(vec![(1, 0.0), (2, 1.0), (2, 7.0)]);
+        let m = b.finish();
+        assert_eq!(m.row(0).indices, &[2]);
+        assert_eq!(m.row(0).values, &[7.0]);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = Dense::from_rows(&[&[0., 1., 0.], &[2., 0., 3.]]);
+        let s = Csr::from_dense(&d);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.to_dense(), d);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense() {
+        let d = Dense::from_rows(&[&[0., 1., 2., 0.], &[3., 0., 4., 5.]]);
+        let s = Csr::from_dense(&d);
+        let dense_dot: f64 = d
+            .row(0)
+            .iter()
+            .zip(d.row(1))
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((dot(s.row(0), s.row(1)) - dense_dot).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let mut b = CsrBuilder::new(3);
+        b.push_row(vec![(0, 3.0), (1, 4.0)]);
+        let m = b.finish();
+        assert!((m.row(0).l2_norm() - 5.0).abs() < 1e-9);
+        assert!((m.row(0).l1_norm() - 7.0).abs() < 1e-9);
+        assert!((m.row(0).sum() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_and_select() {
+        let mut m = sample();
+        m.scale_rows(&[2.0, 1.0, 0.5]);
+        assert_eq!(m.row(0).values, &[2.0, 4.0]);
+        assert_eq!(m.row(2).values, &[1.5, 2.5]);
+        let sel = m.select_rows(&[2, 0]);
+        assert_eq!(sel.rows(), 2);
+        assert_eq!(sel.row(0).indices, &[1, 4]);
+        sel.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn col_bounds_checked() {
+        let mut b = CsrBuilder::new(2);
+        b.push_row(vec![(2, 1.0)]);
+    }
+}

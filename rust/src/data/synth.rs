@@ -1,0 +1,800 @@
+//! Seeded synthetic dataset generators — the substitution for the paper's
+//! 34 public datasets (no network access in this environment; see
+//! DESIGN.md §2).
+//!
+//! Each generator is an *analog* of one group of the paper's datasets and
+//! controls the specific property that drives the paper's Table-1 effect:
+//!
+//! * multi-modal class structure → nonlinear kernels ≫ linear kernel
+//!   (Letter: 62.4% linear vs 96.2% min-max in the paper);
+//! * heterogeneous feature magnitudes → min-max (scale-aware) vs
+//!   intersection (ℓ₁-normalized, magnitude-blind) gap;
+//! * noise/rotation/background image variants → the M-* difficulty
+//!   ordering (M-Noise1 hardest … M-Noise6 easiest; M-RotImg worst).
+//!
+//! All generators are deterministic in `(name, SynthConfig)`.
+
+use super::dense::Dense;
+use super::sparse::CsrBuilder;
+use super::{Dataset, Matrix};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self { seed: 2015, n_train: 800, n_test: 1200 }
+    }
+}
+
+impl SynthConfig {
+    pub fn with_sizes(seed: u64, n_train: usize, n_test: usize) -> Self {
+        Self { seed, n_train, n_test }
+    }
+}
+
+/// Names of every generator in the suite, in Table-1 (alphabetical-ish)
+/// order. `generate(name, cfg)` accepts exactly these.
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "covertype", "ijcnn", "isolet", "letter", "m-basic", "m-image", "m-noise1", "m-noise3",
+        "m-noise6", "m-rand", "m-rotate", "m-rotimg", "optdigits", "pendigits", "phoneme",
+        "protein", "rcv1", "satimage", "segment", "sensit", "shuttle", "spam", "splice", "usps",
+        "vowel", "webspam", "youtube",
+    ]
+}
+
+/// A compact subset used by the faster drivers/benches.
+pub fn core_names() -> &'static [&'static str] {
+    &["letter", "m-basic", "m-rotate", "covertype", "rcv1", "satimage", "vowel", "splice"]
+}
+
+/// Generate a named dataset.
+pub fn generate(name: &str, cfg: SynthConfig) -> Result<Dataset, String> {
+    // Per-dataset seed derived from the experiment seed so datasets are
+    // independent but the whole suite is reproducible from one number.
+    let seed = cfg.seed ^ fnv(name);
+    let d = match name {
+        "letter" => gaussian_modes(name, cfg, seed, GaussianSpec {
+            dim: 16,
+            classes: 26,
+            modes: 3,
+            scale_spread: 1.0,
+            noise: 0.50,
+            proto_sparsity: 0.25,
+        }),
+        "vowel" => gaussian_modes(name, cfg, seed, GaussianSpec {
+            dim: 10,
+            classes: 11,
+            modes: 2,
+            scale_spread: 0.7,
+            noise: 0.55,
+            proto_sparsity: 0.0,
+        }),
+        "isolet" => gaussian_modes(name, cfg, seed, GaussianSpec {
+            dim: 64,
+            classes: 26,
+            modes: 2,
+            scale_spread: 0.5,
+            noise: 0.55,
+            proto_sparsity: 0.1,
+        }),
+        "youtube" => gaussian_modes(name, cfg, seed, GaussianSpec {
+            dim: 64,
+            classes: 10,
+            modes: 3,
+            scale_spread: 1.2,
+            noise: 0.55,
+            proto_sparsity: 0.45,
+        }),
+        "segment" => gaussian_modes(name, cfg, seed, GaussianSpec {
+            dim: 19,
+            classes: 7,
+            modes: 2,
+            scale_spread: 1.6,
+            noise: 0.40,
+            proto_sparsity: 0.1,
+        }),
+        "m-basic" => digits(name, cfg, seed, DigitSpec::basic()),
+        "m-noise1" => digits(name, cfg, seed, DigitSpec::noise(1)),
+        "m-noise3" => digits(name, cfg, seed, DigitSpec::noise(3)),
+        "m-noise6" => digits(name, cfg, seed, DigitSpec::noise(6)),
+        "m-rotate" => digits(name, cfg, seed, DigitSpec { rotate_full: true, ..DigitSpec::basic() }),
+        "m-image" => digits(name, cfg, seed, DigitSpec { background: Background::Texture, ..DigitSpec::basic() }),
+        "m-rand" => digits(name, cfg, seed, DigitSpec { background: Background::Random, ..DigitSpec::basic() }),
+        "m-rotimg" => digits(name, cfg, seed, DigitSpec {
+            rotate_full: true,
+            background: Background::Texture,
+            ..DigitSpec::basic()
+        }),
+        "usps" => digits(name, cfg, seed, DigitSpec { canvas: 12, ..DigitSpec::basic() }),
+        "optdigits" => digits(name, cfg, seed, DigitSpec { canvas: 8, ..DigitSpec::basic() }),
+        "pendigits" => pendigits(name, cfg, seed),
+        "covertype" => covertype(name, cfg, seed),
+        "shuttle" => shuttle(name, cfg, seed),
+        "ijcnn" => waveform(name, cfg, seed, 2, 24, 0.35),
+        "phoneme" => waveform(name, cfg, seed, 2, 33, 0.55),
+        "sensit" => waveform(name, cfg, seed, 3, 50, 0.75),
+        "satimage" => satimage(name, cfg, seed),
+        "protein" => dirichlet(name, cfg, seed, 3, 60, 2.2),
+        "rcv1" => text(name, cfg, seed, TextSpec { classes: 4, vocab: 2000, topic_words: 60, boost: 1.6, doc_len: 70 }),
+        "webspam" => text(name, cfg, seed, TextSpec { classes: 2, vocab: 1500, topic_words: 40, boost: 2.2, doc_len: 90 }),
+        "spam" => text(name, cfg, seed, TextSpec { classes: 2, vocab: 600, topic_words: 30, boost: 1.8, doc_len: 50 }),
+        "splice" => splice(name, cfg, seed),
+        other => return Err(format!("unknown synthetic dataset '{other}' (see all_names())")),
+    };
+    d.validate().map_err(|e| format!("{name}: generated dataset invalid: {e}"))?;
+    Ok(d)
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn split(name: &str, cfg: SynthConfig, all_x: Dense, all_y: Vec<i32>) -> Dataset {
+    let n = all_y.len();
+    let n_train = cfg.n_train.min(n - 1);
+    let idx_train: Vec<usize> = (0..n_train).collect();
+    let idx_test: Vec<usize> = (n_train..n).collect();
+    Dataset {
+        name: name.to_string(),
+        train_x: Matrix::Dense(all_x.select_rows(&idx_train)),
+        train_y: idx_train.iter().map(|&i| all_y[i]).collect(),
+        test_x: Matrix::Dense(all_x.select_rows(&idx_test)),
+        test_y: idx_test.iter().map(|&i| all_y[i]).collect(),
+    }
+}
+
+/// Draw labels round-robin then shuffle sample order, so both splits see
+/// every class (paired with `split` above).
+fn shuffled_labels(rng: &mut Pcg64, n: usize, classes: usize) -> Vec<i32> {
+    let mut y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+    rng.shuffle(&mut y);
+    y
+}
+
+// ------------------------------------------------------ gaussian modes
+
+struct GaussianSpec {
+    dim: usize,
+    classes: usize,
+    /// Modes per class: >1 makes the classes non-linearly-separable.
+    modes: usize,
+    /// Spread of per-mode overall magnitude (lognormal σ). Nonzero makes
+    /// total mass class-informative — the signal ℓ₁ normalization throws
+    /// away, i.e. the min-max vs intersection gap.
+    scale_spread: f64,
+    /// Relative noise level around the mode prototype.
+    noise: f64,
+    /// Fraction of prototype entries forced to (near) zero.
+    proto_sparsity: f64,
+}
+
+fn gaussian_modes(name: &str, cfg: SynthConfig, seed: u64, spec: GaussianSpec) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 1);
+    let n = cfg.n_train + cfg.n_test;
+    // Prototypes: classes × modes × dim, lognormal entries with a
+    // per-mode magnitude factor.
+    let mut protos = vec![0.0f64; spec.classes * spec.modes * spec.dim];
+    let mut mode_scale = vec![1.0f64; spec.classes * spec.modes];
+    for c in 0..spec.classes {
+        for m in 0..spec.modes {
+            let s = rng.lognormal(0.0, spec.scale_spread);
+            mode_scale[c * spec.modes + m] = s;
+            for d in 0..spec.dim {
+                let v = if rng.uniform() < spec.proto_sparsity {
+                    0.02 * rng.uniform()
+                } else {
+                    rng.lognormal(0.0, 0.9)
+                };
+                protos[(c * spec.modes + m) * spec.dim + d] = v * s;
+            }
+        }
+    }
+    let y = shuffled_labels(&mut rng, n, spec.classes);
+    let mut x = Dense::zeros(n, spec.dim);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let m = rng.below(spec.modes as u64) as usize;
+        let base = (c * spec.modes + m) * spec.dim;
+        let row = x.row_mut(i);
+        for d in 0..spec.dim {
+            let p = protos[base + d];
+            // Multiplicative lognormal jitter + small additive floor noise.
+            let v = p * rng.lognormal(0.0, spec.noise) + 0.05 * rng.exp1() * spec.noise;
+            row[d] = v.max(0.0) as f32;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+// --------------------------------------------------------------- digits
+
+/// 8×8 glyph templates for digits 0–9 ('#' = ink).
+const GLYPHS: [&str; 10] = [
+    ".####...#..#...#..#...#..#...#..#...#..#...#..#...####..", // 0 (7 rows x 8? see note)
+    "...#.....##.....#.....#.....#.....#.....#....###...",     // 1
+    ".####...#..#......#.....#.....#.....#....#.....####.",    // 2
+    ".####..#...#.....#...###......#.#...#..#...#..####..",    // 3
+    "..#.#...#.#...#..#..#..#..#####.....#.....#.....#...",    // 4
+    ".#####..#.....#.....####......#......#.#...#..###...",    // 5
+    "..###...#.....#.....####...#..#..#..#..#..#...##....",    // 6
+    ".#####......#.....#....#....#....#.....#.....#......",    // 7
+    "..###...#..#..#..#...##...#..#..#..#..#..#....##....",    // 8
+    "..###...#..#..#..#...###......#.....#....#...##.....", // 9
+];
+
+/// Parse a glyph into an 8×8 intensity grid. The string art above is
+/// free-form; we lay it out row-major over 8 columns and pad/truncate —
+/// exact artistic fidelity is irrelevant, distinctness of the 10 classes
+/// is what matters (verified by a test on pairwise template distance).
+fn glyph_grid(digit: usize) -> [[f32; 8]; 8] {
+    let mut g = [[0.0f32; 8]; 8];
+    let chars: Vec<char> = GLYPHS[digit].chars().collect();
+    for r in 0..8 {
+        for c in 0..8 {
+            let idx = r * 8 + c;
+            if idx < chars.len() && chars[idx] == '#' {
+                g[r][c] = 1.0;
+            }
+        }
+    }
+    g
+}
+
+#[derive(Clone, Copy)]
+enum Background {
+    None,
+    /// Smooth low-frequency texture (M-Image analog).
+    Texture,
+    /// Per-pixel uniform noise (M-Rand analog).
+    Random,
+}
+
+#[derive(Clone, Copy)]
+struct DigitSpec {
+    canvas: usize,
+    rotate_full: bool,
+    /// Additive pixel-noise amplitude.
+    noise_amp: f32,
+    background: Background,
+}
+
+impl DigitSpec {
+    fn basic() -> Self {
+        Self { canvas: 12, rotate_full: false, noise_amp: 0.22, background: Background::None }
+    }
+
+    /// M-NoiseX analog: the paper's level 1 is the *hardest* (most
+    /// noise), level 6 the easiest.
+    fn noise(level: usize) -> Self {
+        let amp = 0.65 - 0.09 * (level as f32 - 1.0);
+        Self { noise_amp: amp, ..Self::basic() }
+    }
+}
+
+/// Render one digit sample with random affine jitter (+ optional full
+/// rotation and background), bilinear-sampling the 8×8 glyph.
+fn render_digit(rng: &mut Pcg64, digit: usize, spec: &DigitSpec) -> Vec<f32> {
+    let g = glyph_grid(digit);
+    let n = spec.canvas;
+    let angle = if spec.rotate_full {
+        rng.uniform() * std::f64::consts::TAU
+    } else {
+        (rng.uniform() - 0.5) * 0.55 // ±16 deg
+    };
+    let scale = 0.72 + 0.56 * rng.uniform();
+    let dx = (rng.uniform() - 0.5) * 3.4;
+    let dy = (rng.uniform() - 0.5) * 3.4;
+    let (sin, cos) = angle.sin_cos();
+    let cn = (n as f64 - 1.0) / 2.0;
+    let cg = 3.5; // center of the 8x8 glyph
+    let mut out = vec![0.0f32; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            // Output pixel -> centered coords -> inverse transform ->
+            // glyph coords.
+            let xo = c as f64 - cn - dx;
+            let yo = r as f64 - cn - dy;
+            let xi = (cos * xo + sin * yo) / scale * (8.0 / n as f64) + cg;
+            let yi = (-sin * xo + cos * yo) / scale * (8.0 / n as f64) + cg;
+            out[r * n + c] = bilinear(&g, xi, yi);
+        }
+    }
+    // Background + noise, clamped to [0, 1].
+    match spec.background {
+        Background::None => {}
+        Background::Random => {
+            for v in &mut out {
+                let b = rng.uniform_f32();
+                *v = v.max(b * 0.9);
+            }
+        }
+        Background::Texture => {
+            // Sum of two random low-frequency plane waves.
+            let (f1, f2) = (0.3 + rng.uniform(), 0.3 + rng.uniform());
+            let (p1, p2) = (rng.uniform() * 6.28, rng.uniform() * 6.28);
+            let (a1, a2) = (rng.uniform(), rng.uniform());
+            for r in 0..n {
+                for c in 0..n {
+                    let t = 0.4
+                        * ((f1 * r as f64 + p1).sin() * a1 + (f2 * c as f64 + p2).sin() * a2)
+                            .abs() as f32;
+                    let v = &mut out[r * n + c];
+                    *v = v.max(t.min(0.95));
+                }
+            }
+        }
+    }
+    if spec.noise_amp > 0.0 {
+        for v in &mut out {
+            *v = (*v + spec.noise_amp * rng.uniform_f32()).clamp(0.0, 1.0);
+        }
+    }
+    out
+}
+
+#[inline]
+fn bilinear(g: &[[f32; 8]; 8], x: f64, y: f64) -> f32 {
+    if !(-1.0..8.0).contains(&x) || !(-1.0..8.0).contains(&y) {
+        return 0.0;
+    }
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = (x - x0) as f32;
+    let fy = (y - y0) as f32;
+    let sample = |xx: i64, yy: i64| -> f32 {
+        if (0..8).contains(&xx) && (0..8).contains(&yy) {
+            g[yy as usize][xx as usize]
+        } else {
+            0.0
+        }
+    };
+    let (x0, y0) = (x0 as i64, y0 as i64);
+    sample(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + sample(x0 + 1, y0) * fx * (1.0 - fy)
+        + sample(x0, y0 + 1) * (1.0 - fx) * fy
+        + sample(x0 + 1, y0 + 1) * fx * fy
+}
+
+fn digits(name: &str, cfg: SynthConfig, seed: u64, spec: DigitSpec) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 2);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, 10);
+    let dim = spec.canvas * spec.canvas;
+    let mut x = Dense::zeros(n, dim);
+    for i in 0..n {
+        let img = render_digit(&mut rng, y[i] as usize, &spec);
+        x.row_mut(i).copy_from_slice(&img);
+    }
+    split(name, cfg, x, y)
+}
+
+/// Pendigits analog: pen trajectories — 8 (x, y) resampled points along a
+/// noisy parametric curve per class.
+fn pendigits(name: &str, cfg: SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 3);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, 10);
+    let mut x = Dense::zeros(n, 16);
+    for i in 0..n {
+        let c = y[i] as usize as f64;
+        let row = x.row_mut(i);
+        let phase = rng.uniform() * 0.4;
+        let wob = 0.25 + 0.1 * rng.uniform();
+        for p in 0..8 {
+            let t = p as f64 / 7.0;
+            // Class-specific Lissajous-ish stroke in [0,1]^2.
+            let fx = (1.0 + (c % 5.0)) * 0.9;
+            let fy = (1.0 + (c / 2.0).floor() % 4.0) * 1.1;
+            let px = 0.5 + 0.45 * (fx * t * 3.14 + phase + 0.7 * c).sin();
+            let py = 0.5 + 0.45 * (fy * t * 3.14 + 1.3 * c).cos();
+            row[2 * p] = ((px + wob * (rng.uniform() - 0.5) * 0.3).clamp(0.0, 1.0) * 100.0) as f32;
+            row[2 * p + 1] =
+                ((py + wob * (rng.uniform() - 0.5) * 0.3).clamp(0.0, 1.0) * 100.0) as f32;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+// ------------------------------------------------------------ covertype
+
+/// Covertype analog: 10 heavy-tailed quantitative features with very
+/// different natural scales + 8 one-hot-ish binary indicators; 7 classes
+/// with overlapping multi-modal structure.
+fn covertype(name: &str, cfg: SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 4);
+    let classes = 7;
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, classes);
+    let dim = 18;
+    // Per-class, per-mode parameters for the quantitative block.
+    let modes = 2;
+    let scales = [2600.0, 150.0, 20.0, 300.0, 60.0, 2300.0, 220.0, 230.0, 150.0, 6200.0];
+    let mut centers = vec![0.0f64; classes * modes * 10];
+    for v in centers.iter_mut() {
+        *v = 0.3 + rng.uniform();
+    }
+    let mut x = Dense::zeros(n, dim);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let m = rng.below(modes as u64) as usize;
+        let row = x.row_mut(i);
+        for d in 0..10 {
+            let center = centers[(c * modes + m) * 10 + d];
+            let v = scales[d] * center * rng.lognormal(0.0, 0.25);
+            row[d] = v.max(0.0) as f32;
+        }
+        // Binary block: indicator pattern correlated with (class, mode).
+        for d in 0..8 {
+            let p = if (c + m + d) % 8 < 3 { 0.8 } else { 0.1 };
+            row[10 + d] = if rng.uniform() < p { 1.0 } else { 0.0 };
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+/// Shuttle analog: 9 dims, 7 classes, heavy class imbalance (~78% class 0).
+fn shuttle(name: &str, cfg: SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 5);
+    let classes = 7;
+    let n = cfg.n_train + cfg.n_test;
+    // Imbalanced label draw, then force the first `classes` positions to
+    // cover all labels so validate() sees contiguous classes in train.
+    let weights = [0.78, 0.08, 0.05, 0.04, 0.02, 0.02, 0.01];
+    let cdf: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    let mut y: Vec<i32> = (0..n).map(|_| rng.discrete_cdf(&cdf) as i32).collect();
+    rng.shuffle(&mut y);
+    // Force every class into both splits (rare classes could otherwise
+    // miss one side entirely under this imbalance).
+    let n_train = cfg.n_train.min(n - 1);
+    for c in 0..classes {
+        y[c] = c as i32;
+        y[(n_train + c).min(n - 1)] = c as i32;
+    }
+    let mut protos = vec![0.0f64; classes * 9];
+    for v in protos.iter_mut() {
+        *v = rng.lognormal(1.0, 0.8);
+    }
+    let mut x = Dense::zeros(n, 9);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let row = x.row_mut(i);
+        for d in 0..9 {
+            row[d] = (protos[c * 9 + d] * rng.lognormal(0.0, 0.2)).max(0.0) as f32;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+/// Waveform analog (IJCNN / Phoneme / SensIT): class-specific harmonic
+/// stacks + noise, shifted nonnegative.
+fn waveform(name: &str, cfg: SynthConfig, seed: u64, classes: usize, dim: usize, noise: f64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 6);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, classes);
+    // Each class: 2 modes of (freq, phase, amplitude) triples.
+    let modes = 2;
+    let mut params = Vec::new();
+    for _ in 0..classes * modes {
+        params.push((
+            0.8 + 2.0 * rng.uniform(),
+            rng.uniform() * 6.28,
+            0.6 + 0.8 * rng.uniform(),
+            1.8 + 3.0 * rng.uniform(), // second harmonic freq
+            rng.uniform() * 6.28,
+        ));
+    }
+    let mut x = Dense::zeros(n, dim);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let m = rng.below(modes as u64) as usize;
+        let (f1, p1, a1, f2, p2) = params[c * modes + m];
+        let jitter = rng.uniform() * 0.5;
+        let row = x.row_mut(i);
+        for d in 0..dim {
+            let t = d as f64 / dim as f64 * 6.28;
+            let v = 1.2
+                + a1 * (f1 * t + p1 + jitter).sin()
+                + 0.5 * (f2 * t + p2).sin()
+                + noise * rng.normal();
+            row[d] = v.max(0.0) as f32;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+/// Satimage analog: 4 spectral bands × 9 pixels; class = land type with
+/// band signature; neighboring pixels correlated.
+fn satimage(name: &str, cfg: SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 7);
+    let classes = 6;
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, classes);
+    // Two modes (sub-land-types) per class: the nonlinearity that gives
+    // nonlinear kernels their satimage edge in the paper.
+    let modes = 2;
+    let mut sig = vec![0.0f64; classes * modes * 4];
+    for v in sig.iter_mut() {
+        *v = 40.0 + 85.0 * rng.uniform();
+    }
+    let mut x = Dense::zeros(n, 36);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let m = rng.below(modes as u64) as usize;
+        let row = x.row_mut(i);
+        // Patch-level lighting factor (correlates all 36 dims).
+        let light = rng.lognormal(0.0, 0.30);
+        for band in 0..4 {
+            let mu = sig[(c * modes + m) * 4 + band] * light;
+            let mut px = mu + 14.0 * rng.normal();
+            for pix in 0..9 {
+                // AR(1) across the 3x3 patch.
+                px = 0.7 * px + 0.3 * (mu + 14.0 * rng.normal());
+                row[band * 9 + pix] = px.max(0.0) as f32;
+            }
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+/// Protein analog: composition histograms from per-class Dirichlet
+/// (sampled as normalized Gammas), heavily overlapping → low accuracy.
+fn dirichlet(name: &str, cfg: SynthConfig, seed: u64, classes: usize, dim: usize, conc: f64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 8);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, classes);
+    // Class base measures.
+    let mut alpha = vec![0.0f64; classes * dim];
+    for v in alpha.iter_mut() {
+        *v = 0.2 + rng.exp1();
+    }
+    let mut x = Dense::zeros(n, dim);
+    for i in 0..n {
+        let c = y[i] as usize;
+        let row = x.row_mut(i);
+        let mut total = 0.0f64;
+        for d in 0..dim {
+            let g = rng.gamma(conc * alpha[c * dim + d] / dim as f64 * 8.0 + 0.05);
+            row[d] = g as f32;
+            total += g;
+        }
+        // Scale to a heavy-tailed "sequence length" so magnitudes carry
+        // information (min-max vs intersection separation).
+        let len = rng.lognormal(4.0, 0.5);
+        let f = (len / total.max(1e-9)) as f32;
+        for v in row {
+            *v *= f;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+// ----------------------------------------------------------------- text
+
+struct TextSpec {
+    classes: usize,
+    vocab: usize,
+    topic_words: usize,
+    boost: f64,
+    doc_len: usize,
+}
+
+/// Sparse bag-of-words: Zipfian background + boosted class topic words.
+/// Produces a sparse dataset (the RCV1/Webspam/Spam analog).
+fn text(name: &str, cfg: SynthConfig, seed: u64, spec: TextSpec) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 9);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, spec.classes);
+    // Topic words per class: distinct ranges plus shared noise words.
+    let mut topic: Vec<Vec<u32>> = Vec::new();
+    for c in 0..spec.classes {
+        let mut words = Vec::with_capacity(spec.topic_words);
+        for t in 0..spec.topic_words {
+            // Spread topics over the vocabulary, deterministic per class.
+            words.push(((c * 131 + t * 17 + 7) % spec.vocab) as u32);
+        }
+        topic.push(words);
+    }
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    for yi in y.iter().take(n) {
+        let c = *yi as usize;
+        let len = (spec.doc_len as f64 * (0.5 + rng.uniform())) as usize + 5;
+        let mut counts: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
+        for _ in 0..len {
+            let w = if rng.uniform() < spec.boost / (spec.boost + 10.0) {
+                // topic word
+                *topic[c].as_slice().get(rng.below(spec.topic_words as u64) as usize).unwrap()
+            } else {
+                (rng.zipf(spec.vocab as u64, 1.15) - 1) as u32
+            };
+            *counts.entry(w).or_insert(0.0) += 1.0;
+        }
+        rows.push(counts.into_iter().collect());
+    }
+    let mut b = CsrBuilder::new(spec.vocab);
+    for r in rows {
+        b.push_row(r);
+    }
+    let all = b.finish();
+    let n_train = cfg.n_train.min(n - 1);
+    let idx_train: Vec<usize> = (0..n_train).collect();
+    let idx_test: Vec<usize> = (n_train..n).collect();
+    Dataset {
+        name: name.to_string(),
+        train_x: Matrix::Sparse(all.select_rows(&idx_train)),
+        train_y: idx_train.iter().map(|&i| y[i]).collect(),
+        test_x: Matrix::Sparse(all.select_rows(&idx_test)),
+        test_y: idx_test.iter().map(|&i| y[i]).collect(),
+    }
+}
+
+/// Splice analog: 60 DNA positions one-hot over {A,C,G,T} (240 binary
+/// dims); 2 classes distinguished by noisy motifs around the center —
+/// binary data, where min-max reduces to resemblance.
+fn splice(name: &str, cfg: SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new_stream(seed, 10);
+    let n = cfg.n_train + cfg.n_test;
+    let y = shuffled_labels(&mut rng, n, 2);
+    let positions = 60;
+    let mut x = Dense::zeros(n, positions * 4);
+    // Class motifs: preferred base per position with per-position fidelity.
+    let mut motif = vec![0u8; 2 * positions];
+    let mut fidelity = vec![0.25f64; 2 * positions];
+    for c in 0..2 {
+        for p in 0..positions {
+            motif[c * positions + p] = rng.below(4) as u8;
+            // Strong signal only near the "splice site" (center).
+            let dist = (p as i64 - 30).unsigned_abs() as f64;
+            fidelity[c * positions + p] = 0.22 + 0.34 * (-dist / 4.5).exp();
+        }
+    }
+    for i in 0..n {
+        let c = y[i] as usize;
+        let row = x.row_mut(i);
+        for p in 0..positions {
+            let base = if rng.uniform() < fidelity[c * positions + p] {
+                motif[c * positions + p]
+            } else {
+                rng.below(4) as u8
+            };
+            row[p * 4 + base as usize] = 1.0;
+        }
+    }
+    split(name, cfg, x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_named_dataset_generates_and_validates() {
+        let cfg = SynthConfig { seed: 1, n_train: 60, n_test: 90 };
+        for name in all_names() {
+            let d = generate(name, cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(d.name, *name);
+            assert!(d.n_train() > 0 && d.n_test() > 0, "{name} sizes");
+            assert!(d.n_classes() >= 2, "{name} classes");
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(generate("not-a-dataset", SynthConfig::default()).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SynthConfig { seed: 9, n_train: 40, n_test: 40 };
+        let a = generate("letter", cfg).unwrap();
+        let b = generate("letter", cfg).unwrap();
+        assert_eq!(a.train_y, b.train_y);
+        assert_eq!(a.train_x.to_dense(), b.train_x.to_dense());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate("letter", SynthConfig { seed: 1, n_train: 40, n_test: 40 }).unwrap();
+        let b = generate("letter", SynthConfig { seed: 2, n_train: 40, n_test: 40 }).unwrap();
+        assert_ne!(a.train_x.to_dense(), b.train_x.to_dense());
+    }
+
+    #[test]
+    fn glyph_templates_are_distinct() {
+        // Pairwise L1 distance between digit templates must be well away
+        // from zero, otherwise the digit datasets are degenerate.
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let ga = glyph_grid(a);
+                let gb = glyph_grid(b);
+                let dist: f32 = (0..8)
+                    .flat_map(|r| (0..8).map(move |c| (r, c)))
+                    .map(|(r, c)| (ga[r][c] - gb[r][c]).abs())
+                    .sum();
+                assert!(dist >= 4.0, "glyphs {a} and {b} too similar ({dist})");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_variant_scrambles_pixels() {
+        let cfg = SynthConfig { seed: 3, n_train: 30, n_test: 30 };
+        let basic = generate("m-basic", cfg).unwrap();
+        let rot = generate("m-rotate", cfg).unwrap();
+        // Same shapes, different content.
+        assert_eq!(basic.dim(), rot.dim());
+        assert_ne!(basic.train_x.to_dense(), rot.train_x.to_dense());
+    }
+
+    #[test]
+    fn noise_levels_order_by_amplitude() {
+        // Hardest (noise1) must have strictly more background energy than
+        // easiest (noise6).
+        let cfg = SynthConfig { seed: 4, n_train: 50, n_test: 10 };
+        let energy = |name: &str| -> f64 {
+            let d = generate(name, cfg).unwrap();
+            let m = d.train_x.to_dense();
+            m.data().iter().map(|&v| v as f64).sum::<f64>() / m.data().len() as f64
+        };
+        assert!(energy("m-noise1") > energy("m-noise6"));
+    }
+
+    #[test]
+    fn text_is_sparse() {
+        let d = generate("rcv1", SynthConfig { seed: 5, n_train: 50, n_test: 50 }).unwrap();
+        let csr = d.train_x.as_csr().expect("text should be CSR");
+        let density = csr.nnz() as f64 / (csr.rows() * csr.cols()) as f64;
+        assert!(density < 0.1, "density {density}");
+        csr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shuttle_is_imbalanced() {
+        let d = generate("shuttle", SynthConfig { seed: 6, n_train: 400, n_test: 400 }).unwrap();
+        let frac0 = d.train_y.iter().filter(|&&y| y == 0).count() as f64 / d.n_train() as f64;
+        assert!(frac0 > 0.5, "class 0 fraction {frac0}");
+    }
+
+    #[test]
+    fn splice_is_binary() {
+        let d = generate("splice", SynthConfig { seed: 7, n_train: 30, n_test: 30 }).unwrap();
+        let m = d.train_x.to_dense();
+        assert!(m.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        // Exactly one base set per position.
+        for row in m.iter_rows() {
+            let ones: f32 = row.iter().sum();
+            assert_eq!(ones, 60.0);
+        }
+    }
+
+    #[test]
+    fn all_classes_in_train_split() {
+        let cfg = SynthConfig { seed: 8, n_train: 120, n_test: 120 };
+        for name in ["letter", "vowel", "covertype", "shuttle"] {
+            let d = generate(name, cfg).unwrap();
+            let k = d.n_classes();
+            let mut seen = vec![false; k];
+            for &y in &d.train_y {
+                seen[y as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{name}: train split missing a class");
+        }
+    }
+}

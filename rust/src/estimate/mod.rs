@@ -1,0 +1,242 @@
+//! The estimator-quality simulation harness behind Figures 4–6.
+//!
+//! For a pair of vectors with known `K_MM`, repeatedly CWS-hash both with
+//! fresh randomness and measure the empirical **bias** and **MSE** of the
+//! collision-fraction estimator K̂ under each bit-budget [`Scheme`], as a
+//! function of the number of samples k. The paper overlays the binomial
+//! variance `K(1−K)/k` (the theoretical MSE of the unbiased full scheme);
+//! we report it alongside.
+//!
+//! Implementation notes:
+//! * one simulation draws `k_max` samples once; every smaller k is a
+//!   prefix (exactly how the paper's plots nest), so cost is
+//!   `sims × k_max × nnz` — the dominant term for the big word pairs;
+//! * all schemes are evaluated on the *same* draws, making the
+//!   full-vs-0-bit bias differences paired (lower variance), again like
+//!   the paper's overlapping curves.
+
+use crate::cws::{CwsHasher, Scheme};
+use crate::data::sparse::SparseRow;
+use crate::util::stats::EstimatorError;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Sample counts to evaluate (ascending); `k_max = last`.
+    pub ks: Vec<usize>,
+    /// Number of Monte Carlo repetitions (the paper uses 10,000).
+    pub sims: usize,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Log-spaced k grid 1..=k_max (the paper sweeps k = 1..1000).
+    pub fn log_ks(k_max: usize) -> Vec<usize> {
+        let mut ks = vec![1usize];
+        let mut k = 2;
+        while k <= k_max {
+            ks.push(k);
+            k *= 2;
+        }
+        if *ks.last().unwrap() != k_max {
+            ks.push(k_max);
+        }
+        ks
+    }
+}
+
+/// One (scheme, k) cell of the Figure 4–6 result grid.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scheme: Scheme,
+    pub k: usize,
+    pub bias: f64,
+    pub mse: f64,
+    /// Binomial reference: `K(1−K)/k`.
+    pub theory_var: f64,
+    pub sims: usize,
+}
+
+/// Simulate all (scheme, k) cells for one vector pair with ground truth
+/// `truth` (the exact K_MM, computed by the caller).
+pub fn simulate_pair(
+    u: SparseRow<'_>,
+    v: SparseRow<'_>,
+    truth: f64,
+    schemes: &[Scheme],
+    cfg: &SimConfig,
+) -> Vec<CellResult> {
+    assert!(!cfg.ks.is_empty());
+    let k_max = *cfg.ks.last().unwrap();
+    assert!(cfg.ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
+    let mut acc: Vec<Vec<EstimatorError>> = schemes
+        .iter()
+        .map(|_| cfg.ks.iter().map(|_| EstimatorError::new(truth)).collect())
+        .collect();
+    let mut hits = vec![0u32; k_max];
+    for sim in 0..cfg.sims {
+        // Fresh randomness per simulation: distinct hasher seed.
+        let sim_seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(1 + sim as u64));
+        let hasher = CwsHasher::new(sim_seed, k_max);
+        let su = hasher.hash_sparse(u);
+        let sv = hasher.hash_sparse(v);
+        for (si, scheme) in schemes.iter().enumerate() {
+            // Prefix collision counts.
+            for j in 0..k_max {
+                hits[j] = (scheme.encode(&su[j]) == scheme.encode(&sv[j])) as u32;
+            }
+            let mut running = 0u32;
+            let mut ki = 0usize;
+            for (j, &h) in hits.iter().enumerate() {
+                running += h;
+                if ki < cfg.ks.len() && j + 1 == cfg.ks[ki] {
+                    acc[si][ki].push(running as f64 / (j + 1) as f64);
+                    ki += 1;
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (si, scheme) in schemes.iter().enumerate() {
+        for (ki, &k) in cfg.ks.iter().enumerate() {
+            out.push(CellResult {
+                scheme: *scheme,
+                k,
+                bias: acc[si][ki].bias(),
+                mse: acc[si][ki].mse(),
+                theory_var: truth * (1.0 - truth) / k as f64,
+                sims: cfg.sims,
+            });
+        }
+    }
+    out
+}
+
+/// The scheme set of Figures 4–5: full, 0-bit, 1-bit.
+pub fn fig45_schemes() -> Vec<Scheme> {
+    vec![Scheme::FULL, Scheme::ZERO_BIT, Scheme::ONE_BIT]
+}
+
+/// The scheme set of Figure 6: all bits of t*, only 0/1/2/4 bits of i*.
+pub fn fig6_schemes() -> Vec<Scheme> {
+    [0u8, 1, 2, 4]
+        .iter()
+        .map(|&b| Scheme { i_bits: Some(b), t_bits: None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrBuilder;
+    use crate::kernels::sparse_minmax;
+
+    fn pair() -> crate::data::Csr {
+        let mut b = CsrBuilder::new(64);
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        let u: Vec<(u32, f32)> =
+            (0..48u32).map(|i| (i, rng.lognormal(0.0, 1.0) as f32)).collect();
+        let v: Vec<(u32, f32)> = u
+            .iter()
+            .map(|&(i, x)| {
+                (
+                    i + ((i % 5 == 0) as u32) * 10,
+                    (x as f64 * rng.lognormal(0.0, 0.4)) as f32,
+                )
+            })
+            .map(|(i, x)| (i.min(63), x))
+            .collect();
+        b.push_row(u);
+        b.push_row(v);
+        b.finish()
+    }
+
+    #[test]
+    fn full_scheme_is_unbiased_and_matches_binomial_mse() {
+        let m = pair();
+        let truth = sparse_minmax(m.row(0), m.row(1));
+        let cfg = SimConfig { ks: vec![1, 4, 16, 64], sims: 1500, seed: 1 };
+        let res = simulate_pair(m.row(0), m.row(1), truth, &[Scheme::FULL], &cfg);
+        for cell in &res {
+            // Bias within ~4 standard errors of the mean estimator.
+            let se = (cell.theory_var / cfg.sims as f64).sqrt();
+            assert!(
+                cell.bias.abs() < 4.0 * se + 5e-3,
+                "k={}: bias {} (se {se})",
+                cell.k,
+                cell.bias
+            );
+            // Empirical MSE within 25% of K(1-K)/k.
+            assert!(
+                (cell.mse - cell.theory_var).abs() < 0.25 * cell.theory_var + 1e-4,
+                "k={}: mse {} vs theory {}",
+                cell.k,
+                cell.mse,
+                cell.theory_var
+            );
+        }
+    }
+
+    #[test]
+    fn zero_bit_curve_overlaps_full_curve() {
+        // The paper's core claim (Figures 4–5): MSE(0-bit) ≈ MSE(full).
+        let m = pair();
+        let truth = sparse_minmax(m.row(0), m.row(1));
+        let cfg = SimConfig { ks: vec![16, 64], sims: 1200, seed: 2 };
+        let res = simulate_pair(m.row(0), m.row(1), truth, &fig45_schemes(), &cfg);
+        let find = |s: Scheme, k: usize| {
+            res.iter().find(|c| c.scheme == s && c.k == k).unwrap().mse
+        };
+        for &k in &[16usize, 64] {
+            let full = find(Scheme::FULL, k);
+            let zero = find(Scheme::ZERO_BIT, k);
+            assert!(
+                (zero - full).abs() < 0.35 * full + 1e-4,
+                "k={k}: zero {zero} vs full {full}"
+            );
+        }
+    }
+
+    #[test]
+    fn mse_decreases_with_k() {
+        let m = pair();
+        let truth = sparse_minmax(m.row(0), m.row(1));
+        let cfg = SimConfig { ks: vec![1, 8, 64], sims: 800, seed: 3 };
+        let res = simulate_pair(m.row(0), m.row(1), truth, &[Scheme::ZERO_BIT], &cfg);
+        assert!(res[0].mse > res[1].mse);
+        assert!(res[1].mse > res[2].mse);
+    }
+
+    #[test]
+    fn fig6_schemes_with_few_i_bits_are_badly_biased() {
+        // Figure 6: keeping t* but few bits of i* does NOT estimate K_MM.
+        let m = pair();
+        let truth = sparse_minmax(m.row(0), m.row(1));
+        let cfg = SimConfig { ks: vec![64], sims: 500, seed: 4 };
+        let res = simulate_pair(m.row(0), m.row(1), truth, &fig6_schemes(), &cfg);
+        // i_bits=0 (t* only): collisions vastly over-count -> big positive bias.
+        let b0 = res.iter().find(|c| c.scheme.i_bits == Some(0)).unwrap().bias;
+        assert!(b0 > 0.05, "t*-only bias {b0}");
+        // More i* bits -> bias shrinks (allowing noise).
+        let b4 = res.iter().find(|c| c.scheme.i_bits == Some(4)).unwrap().bias;
+        assert!(b4 < b0, "bias must shrink with i* bits: {b4} vs {b0}");
+    }
+
+    #[test]
+    fn log_ks_grid() {
+        let ks = SimConfig::log_ks(1000);
+        assert_eq!(ks[0], 1);
+        assert_eq!(*ks.last().unwrap(), 1000);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = pair();
+        let truth = sparse_minmax(m.row(0), m.row(1));
+        let cfg = SimConfig { ks: vec![8], sims: 50, seed: 9 };
+        let a = simulate_pair(m.row(0), m.row(1), truth, &[Scheme::FULL], &cfg);
+        let b = simulate_pair(m.row(0), m.row(1), truth, &[Scheme::FULL], &cfg);
+        assert_eq!(a[0].bias, b[0].bias);
+        assert_eq!(a[0].mse, b[0].mse);
+    }
+}

@@ -1,0 +1,266 @@
+//! Drivers for Figures 4–5 (bias + MSE of full/0-bit/1-bit CWS) and
+//! Figure 6 (all of t*, few bits of i*).
+//!
+//! The paper runs 10,000 simulations with k up to 1000 on 13 word pairs.
+//! The dominant cost is `sims × k_max × (f1 + f2)` ICWS cell
+//! evaluations, so the default configuration adapts `sims` per pair to a
+//! fixed evaluation budget (`--full` restores paper scale).
+
+use crate::cws::Scheme;
+use crate::data::corpus::{generate_pair, table2_pairs, WordPair};
+use crate::estimate::{fig45_schemes, fig6_schemes, simulate_pair, CellResult, SimConfig};
+use crate::util::json::Json;
+use crate::util::table::{fnum, fsci, Table};
+
+use super::save_result;
+
+#[derive(Debug, Clone)]
+pub struct EstimationConfig {
+    pub seed: u64,
+    pub k_max: usize,
+    pub sims: usize,
+    /// Per-pair cap on `sims × k_max × (f1 + f2)`; sims is reduced to
+    /// fit. 0 = no cap.
+    pub cell_budget: u64,
+    /// Restrict to pairs with f1 + f2 at most this (0 = all 13).
+    pub max_pair_size: usize,
+}
+
+impl Default for EstimationConfig {
+    fn default() -> Self {
+        Self {
+            seed: 2015,
+            k_max: 256,
+            sims: 2000,
+            cell_budget: 2_000_000_000,
+            max_pair_size: 12_000,
+        }
+    }
+}
+
+impl EstimationConfig {
+    /// Paper-scale settings (hours of CPU on the large pairs).
+    pub fn full() -> Self {
+        Self {
+            k_max: 1024,
+            sims: 10_000,
+            cell_budget: 0,
+            max_pair_size: 0,
+            ..Default::default()
+        }
+    }
+
+    fn pairs(&self) -> Vec<WordPair> {
+        table2_pairs()
+            .into_iter()
+            .filter(|p| self.max_pair_size == 0 || p.f1 + p.f2 <= self.max_pair_size)
+            .collect()
+    }
+
+    fn sims_for(&self, p: &WordPair) -> usize {
+        if self.cell_budget == 0 {
+            return self.sims;
+        }
+        let per_sim = (self.k_max as u64) * ((p.f1 + p.f2) as u64);
+        let floor = 200usize.min(self.sims);
+        ((self.cell_budget / per_sim.max(1)) as usize).clamp(floor, self.sims)
+    }
+}
+
+pub struct PairCells {
+    pub pair: WordPair,
+    pub realized_mm: f64,
+    pub cells: Vec<CellResult>,
+}
+
+fn run_schemes(cfg: &EstimationConfig, schemes: &[Scheme]) -> Vec<PairCells> {
+    let ks = SimConfig::log_ks(cfg.k_max);
+    let mut out = Vec::new();
+    for spec in cfg.pairs() {
+        let g = generate_pair(&spec, cfg.seed, 0.004);
+        let sims = cfg.sims_for(&spec);
+        let sim_cfg = SimConfig { ks: ks.clone(), sims, seed: cfg.seed ^ 0xFEED };
+        let cells = simulate_pair(g.u(), g.v(), g.realized_mm, schemes, &sim_cfg);
+        crate::info!(
+            "{}-{}: {} sims, K_MM={:.4}",
+            spec.word1,
+            spec.word2,
+            sims,
+            g.realized_mm
+        );
+        out.push(PairCells { pair: spec, realized_mm: g.realized_mm, cells });
+    }
+    out
+}
+
+fn cells_to_json(all: &[PairCells]) -> Json {
+    Json::Arr(
+        all.iter()
+            .map(|p| {
+                let mut j = Json::obj();
+                j.set("word1", p.pair.word1).set("word2", p.pair.word2).set(
+                    "k_mm",
+                    p.realized_mm,
+                );
+                j.set(
+                    "cells",
+                    Json::Arr(
+                        p.cells
+                            .iter()
+                            .map(|c| {
+                                let mut cj = Json::obj();
+                                cj.set("scheme", c.scheme.name())
+                                    .set("k", c.k)
+                                    .set("bias", c.bias)
+                                    .set("mse", c.mse)
+                                    .set("theory_var", c.theory_var)
+                                    .set("sims", c.sims);
+                                cj
+                            })
+                            .collect(),
+                    ),
+                );
+                j
+            })
+            .collect(),
+    )
+}
+
+/// Figures 4–5: bias + MSE per pair at a few representative k.
+pub fn run_fig4_5(cfg: &EstimationConfig) -> Table {
+    let all = run_schemes(cfg, &fig45_schemes());
+    let mut t = Table::new(
+        "Figures 4-5: estimation of K_MM — empirical bias / MSE (vs K(1-K)/k) at k = k_max",
+    )
+    .header(["Pair", "K_MM", "scheme", "bias", "MSE", "K(1-K)/k"]);
+    for p in &all {
+        let k_max = p.cells.iter().map(|c| c.k).max().unwrap();
+        for c in p.cells.iter().filter(|c| c.k == k_max) {
+            t.row([
+                format!("{}-{}", p.pair.word1, p.pair.word2),
+                fnum(p.realized_mm, 4),
+                c.scheme.name(),
+                fsci(c.bias),
+                fsci(c.mse),
+                fsci(c.theory_var),
+            ]);
+        }
+    }
+    save_result("fig4_5", &cells_to_json(&all));
+    t
+}
+
+/// Figure 6: bias when keeping all of t* but only 0/1/2/4 bits of i*.
+pub fn run_fig6(cfg: &EstimationConfig) -> Table {
+    let all = run_schemes(cfg, &fig6_schemes());
+    let mut t =
+        Table::new("Figure 6: bias keeping ALL bits of t* and only 0/1/2/4 bits of i* (k = k_max)")
+            .header(["Pair", "K_MM", "i* bits", "bias"]);
+    for p in &all {
+        let k_max = p.cells.iter().map(|c| c.k).max().unwrap();
+        for c in p.cells.iter().filter(|c| c.k == k_max) {
+            t.row([
+                format!("{}-{}", p.pair.word1, p.pair.word2),
+                fnum(p.realized_mm, 4),
+                format!("{}", c.scheme.i_bits.unwrap()),
+                fsci(c.bias),
+            ]);
+        }
+    }
+    save_result("fig6", &cells_to_json(&all));
+    t
+}
+
+/// Shape assertions shared by the driver test and EXPERIMENTS.md: the
+/// paper's qualitative claims about Figures 4–6.
+pub fn check_fig45_shape(all: &[PairCells]) -> Result<(), String> {
+    for p in all {
+        let k_max = p.cells.iter().map(|c| c.k).max().unwrap();
+        let get = |s: Scheme| p.cells.iter().find(|c| c.scheme == s && c.k == k_max).unwrap();
+        let full = get(Scheme::FULL);
+        let zero = get(Scheme::ZERO_BIT);
+        // MSE(0-bit) ≈ MSE(full) ≈ K(1-K)/k (within 40% at k_max).
+        for (name, c) in [("full", full), ("0-bit", zero)] {
+            if (c.mse - c.theory_var).abs() > 0.4 * c.theory_var + 2e-4 {
+                return Err(format!(
+                    "{}-{} {name}: MSE {} vs theory {}",
+                    p.pair.word1, p.pair.word2, c.mse, c.theory_var
+                ));
+            }
+        }
+        // |bias(0-bit)| stays small in the stabilized zone.
+        if zero.bias.abs() > 0.02 {
+            return Err(format!(
+                "{}-{}: 0-bit bias {}",
+                p.pair.word1, p.pair.word2, zero.bias
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> EstimationConfig {
+        EstimationConfig {
+            seed: 3,
+            k_max: 64,
+            sims: 400,
+            cell_budget: 60_000_000,
+            max_pair_size: 500,
+        }
+    }
+
+    #[test]
+    fn fig45_runs_on_small_pairs_and_shape_holds() {
+        std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_f45"));
+        let cfg = tiny();
+        let all = run_schemes(&cfg, &fig45_schemes());
+        assert!(!all.is_empty());
+        check_fig45_shape(&all).unwrap();
+    }
+
+    #[test]
+    fn fig6_bias_orders_with_i_bits() {
+        std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_f6"));
+        let cfg = tiny();
+        let all = run_schemes(&cfg, &fig6_schemes());
+        for p in &all {
+            let k_max = p.cells.iter().map(|c| c.k).max().unwrap();
+            let bias = |b: u8| {
+                p.cells
+                    .iter()
+                    .find(|c| c.k == k_max && c.scheme.i_bits == Some(b))
+                    .unwrap()
+                    .bias
+            };
+            // 0 bits of i* → heavily biased up; 4 bits → much closer.
+            assert!(bias(0) > bias(4) - 1e-9, "{}-{}", p.pair.word1, p.pair.word2);
+        }
+    }
+
+    #[test]
+    fn budget_caps_sims() {
+        let cfg = EstimationConfig {
+            cell_budget: 1_000_000,
+            k_max: 100,
+            sims: 10_000,
+            ..Default::default()
+        };
+        let p = &table2_pairs()[4]; // GAMBIA-KIRIBATI: f1+f2=392
+        let sims = cfg.sims_for(p);
+        assert!(sims < 10_000);
+        assert!(sims >= 200);
+    }
+
+    #[test]
+    fn tables_render() {
+        std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_f45b"));
+        let t = run_fig4_5(&EstimationConfig { k_max: 16, sims: 100, ..tiny() });
+        assert!(t.n_rows() > 0);
+        let t6 = run_fig6(&EstimationConfig { k_max: 16, sims: 100, ..tiny() });
+        assert!(t6.n_rows() > 0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §5).
+//!
+//! Every driver prints the same rows/series the paper reports and writes
+//! machine-readable JSON under `results/` so curves can be replotted
+//! without rerunning. All drivers accept `--seed`, dataset/size knobs,
+//! and a `--full` flag that switches from the fast default configuration
+//! to the paper-scale one.
+//!
+//! | CLI            | Paper artifact                         |
+//! |----------------|----------------------------------------|
+//! | `table1`       | Table 1 (best accuracy per kernel)     |
+//! | `fig1-3`       | Figures 1–3 (accuracy-vs-C curves)     |
+//! | `table2`       | Table 2 (word pairs: f1, f2, R, MM)    |
+//! | `fig4-5`       | Figures 4–5 (bias/MSE, full/0/1-bit)   |
+//! | `fig6`         | Figure 6 (t* with 0/1/2/4 bits of i*)  |
+//! | `fig7`         | Figure 7 (0-bit CWS + linear SVM)      |
+//! | `fig8`         | Figure 8 (0-bit vs 2-bit t*)           |
+//! | `perf`         | EXPERIMENTS.md §Perf measurements      |
+
+pub mod estimation;
+pub mod perf;
+pub mod svm_tables;
+pub mod table2;
+
+use crate::util::json::{write_json, Json};
+use std::path::PathBuf;
+
+/// Where drivers drop their JSON results.
+pub fn results_dir() -> PathBuf {
+    std::env::var("MINMAX_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Save a driver's JSON output as `results/<id>.json`.
+pub fn save_result(id: &str, json: &Json) {
+    let path = results_dir().join(format!("{id}.json"));
+    match write_json(&path, json) {
+        Ok(()) => println!("saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_dir_honors_env() {
+        // (Env-var tests mutate global state; keep them serial & restore.)
+        let old = std::env::var("MINMAX_RESULTS").ok();
+        std::env::set_var("MINMAX_RESULTS", "/tmp/minmax_results_test");
+        assert_eq!(results_dir(), PathBuf::from("/tmp/minmax_results_test"));
+        match old {
+            Some(v) => std::env::set_var("MINMAX_RESULTS", v),
+            None => std::env::remove_var("MINMAX_RESULTS"),
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! §Perf driver: the whole-stack performance measurements recorded in
+//! EXPERIMENTS.md §Perf (L3 native hot paths, the PJRT execute path, and
+//! the online service). Complements `rust/benches/*` (which use the
+//! criterion-style harness) with a one-shot snapshot.
+
+use std::time::Instant;
+
+use crate::coordinator::{Backend, HashService, ServiceConfig};
+use crate::cws::CwsHasher;
+use crate::data::dense::Dense;
+use crate::data::Matrix;
+use crate::kernels::matrix::kernel_matrix;
+use crate::kernels::Kernel;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fnum, Table};
+
+use super::save_result;
+
+fn random_dense(rows: usize, cols: usize, seed: u64) -> Dense {
+    let mut rng = Pcg64::new(seed);
+    Dense::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| rng.lognormal(0.0, 1.0) as f32).collect(),
+    )
+}
+
+/// Time `f` for at least `min_time` seconds, returning seconds/iteration.
+fn time_it<F: FnMut()>(min_time: f64, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed().as_secs_f64() < min_time {
+        f();
+        iters += 1;
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+pub struct PerfReport {
+    pub table: Table,
+    pub json: Json,
+}
+
+pub fn run_perf(with_pjrt: bool) -> PerfReport {
+    let mut t = Table::new("Perf snapshot (single run; see benches/ for distributions)")
+        .header(["metric", "value", "unit"]);
+    let mut j = Json::obj();
+
+    // --- L3 native CWS hashing throughput (the paper's core cost).
+    let d = 256;
+    let k = 128;
+    let x = random_dense(64, d, 1);
+    let hasher = CwsHasher::new(7, k);
+    let per_batch = time_it(1.0, || {
+        for i in 0..x.rows() {
+            std::hint::black_box(hasher.hash_dense(x.row(i)));
+        }
+    });
+    let vectors_per_s = x.rows() as f64 / per_batch;
+    let cells_per_s = vectors_per_s * (d * k) as f64;
+    t.row(["native CWS hash (D=256,k=128)".into(), fnum(vectors_per_s, 1), "vec/s".to_string()]);
+    t.row(["native CWS cell rate".into(), fnum(cells_per_s / 1e6, 1), "Mcell/s".to_string()]);
+    j.set("native_cws_vec_per_s", vectors_per_s).set("native_cws_mcell_per_s", cells_per_s / 1e6);
+
+    // --- L3 kernel-matrix throughput.
+    let a = random_dense(256, 64, 2);
+    let b = random_dense(256, 64, 3);
+    let ma = Matrix::Dense(a);
+    let mb = Matrix::Dense(b);
+    let per = time_it(1.0, || {
+        std::hint::black_box(kernel_matrix(Kernel::MinMax, &ma, &mb));
+    });
+    let cells = (256 * 256) as f64 / per;
+    t.row(["min-max kernel matrix (256x256,D=64)".into(), fnum(cells / 1e6, 2), "Mpair/s".into()]);
+    j.set("minmax_matrix_mpair_per_s", cells / 1e6);
+
+    // --- Online service (native backend): latency under closed-loop load.
+    let cfg = ServiceConfig {
+        seed: 1,
+        k: 64,
+        dim: 64,
+        max_batch: 32,
+        max_wait: std::time::Duration::from_micros(500),
+        queue_cap: 4096,
+    };
+    let svc = HashService::start(cfg, Backend::Native);
+    let v: Vec<f32> = (1..=64).map(|i| i as f32 / 7.0).collect();
+    let n = 2000;
+    let start = Instant::now();
+    for i in 0..n {
+        let _ = svc.hash_blocking(i, v.clone()).unwrap();
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let snap = svc.metrics().snapshot();
+    t.row(["service closed-loop throughput".into(), fnum(n as f64 / elapsed, 1), "req/s".into()]);
+    t.row(["service p50 latency".into(), fnum(snap.latency_p50_ms, 3), "ms".into()]);
+    t.row(["service p99 latency".into(), fnum(snap.latency_p99_ms, 3), "ms".into()]);
+    j.set("service_rps", n as f64 / elapsed)
+        .set("service_p50_ms", snap.latency_p50_ms)
+        .set("service_p99_ms", snap.latency_p99_ms);
+    svc.shutdown();
+
+    // --- PJRT execute path (when artifacts exist).
+    if with_pjrt {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            use crate::cws::materialize_params;
+            use crate::runtime::{literal_f32, Engine};
+            let engine = Engine::load_subset(&dir, &["cws_hash"]).expect("engine");
+            let spec = engine.spec("cws_hash").unwrap().clone();
+            let (b, dd) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+            let kk = spec.inputs[1].shape[0];
+            let xb = random_dense(b, dd, 4);
+            let (r, c, beta) = materialize_params(3, dd, kk);
+            let xl = literal_f32(xb.data(), &[b, dd]).unwrap();
+            let rl = literal_f32(&r, &[kk, dd]).unwrap();
+            let cl = literal_f32(&c, &[kk, dd]).unwrap();
+            let bl = literal_f32(&beta, &[kk, dd]).unwrap();
+            let per = time_it(2.0, || {
+                std::hint::black_box(
+                    engine.run("cws_hash", &[xl.clone(), rl.clone(), cl.clone(), bl.clone()]).unwrap(),
+                );
+            });
+            let vec_per_s = b as f64 / per;
+            t.row([
+                format!("PJRT cws_hash execute (B={b},D={dd},K={kk})"),
+                fnum(per * 1e3, 2),
+                "ms/batch".into(),
+            ]);
+            t.row(["PJRT cws_hash throughput".into(), fnum(vec_per_s, 1), "vec/s".into()]);
+            j.set("pjrt_cws_ms_per_batch", per * 1e3).set("pjrt_cws_vec_per_s", vec_per_s);
+        } else {
+            t.row(["PJRT".to_string(), "skipped (no artifacts)".to_string(), String::new()]);
+        }
+    }
+
+    save_result("perf", &j);
+    PerfReport { table: t, json: j.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_positive() {
+        let mut x = 0u64;
+        let s = time_it(0.01, || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Table 2 driver: regenerate the 13 word pairs (calibrated synthetic
+//! corpus) and report target-vs-realized (f1, f2, R, MM).
+
+use crate::data::corpus::{generate_table2, GeneratedPair};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::save_result;
+
+pub fn run_table2(seed: u64, mm_tol: f64) -> (Table, Vec<GeneratedPair>) {
+    let pairs = generate_table2(seed, mm_tol);
+    let mut t = Table::new("Table 2: word pairs — paper targets vs calibrated synthetic corpus")
+        .header([
+            "Word 1", "Word 2", "f1", "f2", "R(paper)", "R(ours)", "MM(paper)", "MM(ours)",
+        ]);
+    let mut json_rows = Vec::new();
+    for g in &pairs {
+        t.row([
+            g.spec.word1.to_string(),
+            g.spec.word2.to_string(),
+            g.u().nnz().to_string(),
+            g.v().nnz().to_string(),
+            fnum(g.spec.r, 4),
+            fnum(g.realized_r, 4),
+            fnum(g.spec.mm, 4),
+            fnum(g.realized_mm, 4),
+        ]);
+        let mut j = Json::obj();
+        j.set("word1", g.spec.word1)
+            .set("word2", g.spec.word2)
+            .set("f1", g.u().nnz())
+            .set("f2", g.v().nnz())
+            .set("r_paper", g.spec.r)
+            .set("r_ours", g.realized_r)
+            .set("mm_paper", g.spec.mm)
+            .set("mm_ours", g.realized_mm);
+        json_rows.push(j);
+    }
+    save_result("table2", &Json::Arr(json_rows));
+    (t, pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_regenerates_13_rows_with_close_stats() {
+        std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_t2"));
+        let (t, pairs) = run_table2(42, 0.004);
+        assert_eq!(t.n_rows(), 13);
+        for g in &pairs {
+            assert_eq!(g.u().nnz(), g.spec.f1, "{}", g.spec.word1);
+            assert_eq!(g.v().nnz(), g.spec.f2, "{}", g.spec.word2);
+            assert!(
+                (g.realized_r - g.spec.r).abs() < 0.02,
+                "{}-{}: R {} vs {}",
+                g.spec.word1,
+                g.spec.word2,
+                g.realized_r,
+                g.spec.r
+            );
+            assert!(
+                (g.realized_mm - g.spec.mm).abs() < 0.03,
+                "{}-{}: MM {} vs {}",
+                g.spec.word1,
+                g.spec.word2,
+                g.realized_mm,
+                g.spec.mm
+            );
+        }
+    }
+}

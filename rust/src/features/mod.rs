@@ -1,0 +1,173 @@
+//! Hashed-feature expansion (§4 of the paper): turn 0-bit CWS samples
+//! into the sparse one-hot matrix a linear learner consumes.
+//!
+//! For `b_i` bits of `i*` and `k` samples, sample `j`'s code
+//! `c_j = i*_j mod 2^{b_i}` becomes a 1 at column `j · 2^{b_i} + c_j`.
+//! The result is a `2^{b_i} × k`-dimensional binary matrix with exactly
+//! `k` ones per row, so `⟨φ(u), φ(v)⟩ / k` is precisely the b-bit
+//! collision estimator of `K_MM(u, v)` — a linear kernel approximating
+//! the min-max kernel, which is the whole point of the pipeline.
+
+use crate::cws::sampler::CwsSample;
+use crate::cws::schemes::Scheme;
+use crate::data::sparse::{Csr, CsrBuilder};
+
+/// Configuration of the expansion: bits of `i*` and (rarely) of `t*`.
+/// With `t_bits > 0` the code space per sample is `2^{b_i + b_t}`
+/// (Figure 8's 2-bit-t* variant).
+#[derive(Debug, Clone, Copy)]
+pub struct Expansion {
+    pub k: usize,
+    pub i_bits: u8,
+    pub t_bits: u8,
+}
+
+impl Expansion {
+    pub fn new(k: usize, i_bits: u8) -> Self {
+        assert!(i_bits >= 1 && i_bits <= 16, "i_bits in [1,16]");
+        Self { k, i_bits, t_bits: 0 }
+    }
+
+    pub fn with_t_bits(mut self, t_bits: u8) -> Self {
+        assert!(self.i_bits as usize + t_bits as usize <= 24, "code space too large");
+        self.t_bits = t_bits;
+        self
+    }
+
+    /// Codes per sample.
+    pub fn code_space(&self) -> usize {
+        1usize << (self.i_bits + self.t_bits)
+    }
+
+    /// Total output dimensionality `k · 2^{b_i + b_t}`.
+    pub fn dim(&self) -> usize {
+        self.k * self.code_space()
+    }
+
+    /// The scheme whose collision event this expansion's inner product
+    /// counts (used by tests to cross-validate).
+    pub fn scheme(&self) -> Scheme {
+        Scheme { i_bits: Some(self.i_bits), t_bits: Some(self.t_bits) }
+    }
+
+    /// Column index for sample `j`.
+    #[inline]
+    pub fn column(&self, j: usize, s: &CwsSample) -> u32 {
+        let i_part = (s.i_star as u64) & ((1u64 << self.i_bits) - 1);
+        let code = if self.t_bits == 0 {
+            i_part
+        } else {
+            let t_part = s.t_star.rem_euclid(1i64 << self.t_bits) as u64;
+            (t_part << self.i_bits) | i_part
+        };
+        (j * self.code_space()) as u32 + code as u32
+    }
+
+    /// Expand one vector's samples into a sorted sparse row (indices,
+    /// values) with exactly `k` ones.
+    pub fn expand_row(&self, samples: &[CwsSample]) -> (Vec<u32>, Vec<f32>) {
+        assert_eq!(samples.len(), self.k);
+        let idx: Vec<u32> =
+            samples.iter().enumerate().map(|(j, s)| self.column(j, s)).collect();
+        // One column per sample block ⇒ already strictly increasing.
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        (idx, vec![1.0; self.k])
+    }
+
+    /// Expand a batch of per-row samples (rows with `None` — empty input
+    /// vectors — become empty feature rows).
+    pub fn expand(&self, samples: &[Option<Vec<CwsSample>>]) -> Csr {
+        let mut b = CsrBuilder::new(self.dim());
+        for row in samples {
+            match row {
+                Some(s) => {
+                    let (idx, vals) = self.expand_row(s);
+                    b.push_sorted_row(&idx, &vals);
+                }
+                None => b.push_sorted_row(&[], &[]),
+            }
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::sampler::CwsHasher;
+    use crate::cws::schemes::collision_fraction;
+    use crate::data::sparse::dot;
+
+    fn samples_for(u: &[f32], k: usize, seed: u64) -> Vec<CwsSample> {
+        CwsHasher::new(seed, k).hash_dense(u)
+    }
+
+    #[test]
+    fn row_has_exactly_k_ones() {
+        let u = [1.0f32, 0.5, 2.0, 0.0];
+        let e = Expansion::new(64, 4);
+        let (idx, vals) = e.expand_row(&samples_for(&u, 64, 1));
+        assert_eq!(idx.len(), 64);
+        assert!(vals.iter().all(|&v| v == 1.0));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        // Sample j's column lands in block j.
+        for (j, &c) in idx.iter().enumerate() {
+            assert!((c as usize) / e.code_space() == j);
+        }
+    }
+
+    #[test]
+    fn inner_product_equals_collision_count() {
+        let u = [1.0f32, 3.0, 0.5, 2.0, 0.0, 1.0];
+        let v = [2.0f32, 1.0, 0.5, 1.0, 1.0, 0.0];
+        for i_bits in [1u8, 2, 4, 8] {
+            let k = 512;
+            let e = Expansion::new(k, i_bits);
+            let su = samples_for(&u, k, 9);
+            let sv = samples_for(&v, k, 9);
+            let m = e.expand(&[Some(su.clone()), Some(sv.clone())]);
+            let ip = dot(m.row(0), m.row(1));
+            let coll = collision_fraction(e.scheme(), &su, &sv) * k as f64;
+            assert!((ip - coll).abs() < 1e-9, "b_i={i_bits}: {ip} vs {coll}");
+        }
+    }
+
+    #[test]
+    fn t_bits_variant_matches_its_scheme() {
+        let u = [1.0f32, 3.0, 0.5, 2.0];
+        let v = [2.0f32, 1.0, 0.5, 1.0];
+        let k = 512;
+        let e = Expansion::new(k, 4).with_t_bits(2);
+        let su = samples_for(&u, k, 17);
+        let sv = samples_for(&v, k, 17);
+        let m = e.expand(&[Some(su.clone()), Some(sv.clone())]);
+        let ip = dot(m.row(0), m.row(1));
+        let coll = collision_fraction(e.scheme(), &su, &sv) * k as f64;
+        assert!((ip - coll).abs() < 1e-9);
+        assert_eq!(e.dim(), k * 64);
+    }
+
+    #[test]
+    fn dims_and_bounds() {
+        let e = Expansion::new(128, 8);
+        assert_eq!(e.dim(), 128 * 256);
+        let u = [0.1f32, 5.0, 0.2];
+        let m = e.expand(&[Some(samples_for(&u, 128, 3))]);
+        assert_eq!(m.cols(), e.dim());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_rows_expand_empty() {
+        let e = Expansion::new(8, 2);
+        let m = e.expand(&[None, Some(samples_for(&[1.0f32, 2.0], 8, 5))]);
+        assert_eq!(m.row(0).nnz(), 0);
+        assert_eq!(m.row(1).nnz(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "i_bits")]
+    fn zero_i_bits_rejected() {
+        Expansion::new(4, 0);
+    }
+}

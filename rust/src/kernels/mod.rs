@@ -1,0 +1,434 @@
+//! The paper's kernels (Eqs. 1–5) plus the extensions it references, with
+//! dense and sparse (merge-join) fast paths, and the blocked, parallel
+//! kernel-matrix computation used by the kernel-SVM experiments.
+//!
+//! * [`Kernel::MinMax`] — Eq. (1), the paper's subject.
+//! * [`Kernel::NMinMax`] — Eq. (4): min-max after ℓ₁ normalization.
+//! * [`Kernel::Intersection`] — Eq. (3): Σ min after ℓ₁ normalization.
+//! * [`Kernel::Linear`] — Eq. (5): inner product after ℓ₂ normalization.
+//! * [`Kernel::Resemblance`] — Eq. (2): binary Jaccard (for Table 2's "R"
+//!   column and the b-bit-minwise baseline).
+//! * [`Kernel::Chi2`] — the chi-square kernel `Σ 2uᵢvᵢ/(uᵢ+vᵢ)` referenced
+//!   in §2 (hashable by sign Cauchy projections), used in the CoRE-style
+//!   product-kernel ablation.
+//!
+//! Normalization is **the caller's job** (see [`crate::data::scale`]);
+//! these functions compute the raw functional forms. The paper applies
+//! normalization before hashing too, so kernels and CWS see identical
+//! inputs.
+
+pub mod matrix;
+
+use crate::data::sparse::SparseRow;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    Linear,
+    MinMax,
+    /// Min-max evaluated on ℓ₁-normalized inputs (caller normalizes).
+    NMinMax,
+    /// Σ min on ℓ₁-normalized inputs (caller normalizes).
+    Intersection,
+    Resemblance,
+    Chi2,
+    /// CoRE-style product: MinMax × Chi2 (§2's "combine kernels" remark).
+    MinMaxChi2,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Linear => "linear",
+            Kernel::MinMax => "min-max",
+            Kernel::NMinMax => "n-min-max",
+            Kernel::Intersection => "intersection",
+            Kernel::Resemblance => "resemblance",
+            Kernel::Chi2 => "chi2",
+            Kernel::MinMaxChi2 => "minmax*chi2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        Some(match s {
+            "linear" => Kernel::Linear,
+            "min-max" | "minmax" => Kernel::MinMax,
+            "n-min-max" | "nminmax" => Kernel::NMinMax,
+            "intersection" => Kernel::Intersection,
+            "resemblance" => Kernel::Resemblance,
+            "chi2" => Kernel::Chi2,
+            "minmax*chi2" | "core" => Kernel::MinMaxChi2,
+            _ => return None,
+        })
+    }
+
+    /// Which row normalization the paper's protocol applies before this
+    /// kernel: Eq. (3)/(4) require ℓ₁ (sum-to-one), Eq. (5) requires ℓ₂.
+    pub fn required_normalization(&self) -> Normalization {
+        match self {
+            Kernel::Linear => Normalization::L2,
+            Kernel::NMinMax | Kernel::Intersection => Normalization::L1,
+            Kernel::MinMax | Kernel::Resemblance | Kernel::Chi2 | Kernel::MinMaxChi2 => {
+                Normalization::None
+            }
+        }
+    }
+
+    /// Evaluate on dense rows (same length, nonnegative).
+    pub fn eval_dense(&self, u: &[f32], v: &[f32]) -> f64 {
+        match self {
+            Kernel::Linear => dense_dot(u, v),
+            Kernel::MinMax | Kernel::NMinMax => dense_minmax(u, v),
+            Kernel::Intersection => dense_intersection(u, v),
+            Kernel::Resemblance => dense_resemblance(u, v),
+            Kernel::Chi2 => dense_chi2(u, v),
+            Kernel::MinMaxChi2 => dense_minmax(u, v) * dense_chi2(u, v),
+        }
+    }
+
+    /// Evaluate on sorted sparse rows.
+    pub fn eval_sparse(&self, u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+        match self {
+            Kernel::Linear => crate::data::sparse::dot(u, v),
+            Kernel::MinMax | Kernel::NMinMax => sparse_minmax(u, v),
+            Kernel::Intersection => sparse_intersection(u, v),
+            Kernel::Resemblance => sparse_resemblance(u, v),
+            Kernel::Chi2 => sparse_chi2(u, v),
+            Kernel::MinMaxChi2 => sparse_minmax(u, v) * sparse_chi2(u, v),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Normalization {
+    None,
+    L1,
+    L2,
+}
+
+// ---------------------------------------------------------------- dense
+
+#[inline]
+pub fn dense_dot(u: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut s = 0.0f64;
+    for (&a, &b) in u.iter().zip(v) {
+        s += a as f64 * b as f64;
+    }
+    s
+}
+
+/// Eq. (1): Σ min / Σ max. Returns 1.0 when both vectors are all-zero
+/// (identical inputs — consistent with the hashing convention).
+#[inline]
+pub fn dense_minmax(u: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut smin = 0.0f64;
+    let mut smax = 0.0f64;
+    for (&a, &b) in u.iter().zip(v) {
+        // branchless min/max
+        let mn = a.min(b);
+        let mx = a.max(b);
+        smin += mn as f64;
+        smax += mx as f64;
+    }
+    if smax == 0.0 {
+        1.0
+    } else {
+        smin / smax
+    }
+}
+
+/// Eq. (3): Σ min (the caller ℓ₁-normalizes per the definition).
+#[inline]
+pub fn dense_intersection(u: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut s = 0.0f64;
+    for (&a, &b) in u.iter().zip(v) {
+        s += a.min(b) as f64;
+    }
+    s
+}
+
+/// Eq. (2): |{u>0 ∧ v>0}| / |{u>0 ∨ v>0}| (1.0 for two empty vectors).
+#[inline]
+pub fn dense_resemblance(u: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut inter = 0u64;
+    let mut union = 0u64;
+    for (&a, &b) in u.iter().zip(v) {
+        let pa = a > 0.0;
+        let pb = b > 0.0;
+        inter += (pa && pb) as u64;
+        union += (pa || pb) as u64;
+    }
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+/// Additive chi-square kernel: Σ 2uv/(u+v) over entries where u+v > 0.
+#[inline]
+pub fn dense_chi2(u: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), v.len());
+    let mut s = 0.0f64;
+    for (&a, &b) in u.iter().zip(v) {
+        let d = a as f64 + b as f64;
+        if d > 0.0 {
+            s += 2.0 * a as f64 * b as f64 / d;
+        }
+    }
+    s
+}
+
+// --------------------------------------------------------------- sparse
+// Merge joins over sorted index lists; only nonzeros are touched. For
+// min-max, indices present in exactly one vector contribute to Σmax only.
+
+#[inline]
+pub fn sparse_minmax(u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+    let mut smin = 0.0f64;
+    let mut smax = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < u.indices.len() && j < v.indices.len() {
+        let (iu, iv) = (u.indices[i], v.indices[j]);
+        if iu == iv {
+            let (a, b) = (u.values[i], v.values[j]);
+            smin += a.min(b) as f64;
+            smax += a.max(b) as f64;
+            i += 1;
+            j += 1;
+        } else if iu < iv {
+            smax += u.values[i] as f64;
+            i += 1;
+        } else {
+            smax += v.values[j] as f64;
+            j += 1;
+        }
+    }
+    for &a in &u.values[i..] {
+        smax += a as f64;
+    }
+    for &b in &v.values[j..] {
+        smax += b as f64;
+    }
+    if smax == 0.0 {
+        1.0
+    } else {
+        smin / smax
+    }
+}
+
+#[inline]
+pub fn sparse_intersection(u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+    let mut s = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < u.indices.len() && j < v.indices.len() {
+        let (iu, iv) = (u.indices[i], v.indices[j]);
+        if iu == iv {
+            s += u.values[i].min(v.values[j]) as f64;
+            i += 1;
+            j += 1;
+        } else if iu < iv {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    s
+}
+
+#[inline]
+pub fn sparse_resemblance(u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+    let mut inter = 0u64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < u.indices.len() && j < v.indices.len() {
+        let (iu, iv) = (u.indices[i], v.indices[j]);
+        if iu == iv {
+            inter += 1;
+            i += 1;
+            j += 1;
+        } else if iu < iv {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    let union = u.indices.len() as u64 + v.indices.len() as u64 - inter;
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+#[inline]
+pub fn sparse_chi2(u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+    let mut s = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < u.indices.len() && j < v.indices.len() {
+        let (iu, iv) = (u.indices[i], v.indices[j]);
+        if iu == iv {
+            let (a, b) = (u.values[i] as f64, v.values[j] as f64);
+            let d = a + b;
+            if d > 0.0 {
+                s += 2.0 * a * b / d;
+            }
+            i += 1;
+            j += 1;
+        } else if iu < iv {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::Dense;
+    use crate::data::sparse::Csr;
+
+    fn pair() -> (Vec<f32>, Vec<f32>) {
+        (vec![0.0, 1.0, 3.0, 0.0, 2.0], vec![1.0, 2.0, 1.0, 0.0, 2.0])
+    }
+
+    #[test]
+    fn minmax_hand_computed() {
+        let (u, v) = pair();
+        // min: 0+1+1+0+2=4 ; max: 1+2+3+0+2=8
+        assert!((dense_minmax(&u, &v) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intersection_hand_computed() {
+        let (u, v) = pair();
+        assert!((dense_intersection(&u, &v) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resemblance_hand_computed() {
+        let (u, v) = pair();
+        // supports: u {1,2,4}, v {0,1,2,4} → inter 3, union 4
+        assert!((dense_resemblance(&u, &v) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_hand_computed() {
+        let u = [1.0f32, 0.0, 2.0];
+        let v = [1.0f32, 3.0, 0.0];
+        // 2*1*1/2 + 0 + 0 = 1
+        assert!((dense_chi2(&u, &v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernels_are_symmetric() {
+        let (u, v) = pair();
+        for k in [
+            Kernel::Linear,
+            Kernel::MinMax,
+            Kernel::Intersection,
+            Kernel::Resemblance,
+            Kernel::Chi2,
+            Kernel::MinMaxChi2,
+        ] {
+            assert!(
+                (k.eval_dense(&u, &v) - k.eval_dense(&v, &u)).abs() < 1e-12,
+                "{} not symmetric",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn self_similarity_is_one_for_normalized_kernels() {
+        let (u, _) = pair();
+        assert!((dense_minmax(&u, &u) - 1.0).abs() < 1e-12);
+        assert!((dense_resemblance(&u, &u) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn minmax_bounded_01() {
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        for _ in 0..200 {
+            let u: Vec<f32> = (0..16).map(|_| rng.lognormal(0.0, 1.0) as f32).collect();
+            let v: Vec<f32> = (0..16).map(|_| rng.lognormal(0.0, 1.0) as f32).collect();
+            let k = dense_minmax(&u, &v);
+            assert!((0.0..=1.0).contains(&k));
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_all_kernels() {
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        for _ in 0..100 {
+            let dim = 1 + rng.below(40) as usize;
+            let gen_row = |rng: &mut crate::util::rng::Pcg64| -> Vec<f32> {
+                (0..dim)
+                    .map(|_| {
+                        if rng.uniform() < 0.5 {
+                            0.0
+                        } else {
+                            rng.lognormal(0.0, 1.0) as f32
+                        }
+                    })
+                    .collect()
+            };
+            let u = gen_row(&mut rng);
+            let v = gen_row(&mut rng);
+            let d = Dense::from_rows(&[&u, &v]);
+            let s = Csr::from_dense(&d);
+            for k in [
+                Kernel::Linear,
+                Kernel::MinMax,
+                Kernel::Intersection,
+                Kernel::Resemblance,
+                Kernel::Chi2,
+                Kernel::MinMaxChi2,
+            ] {
+                let kd = k.eval_dense(&u, &v);
+                let ks = k.eval_sparse(s.row(0), s.row(1));
+                assert!(
+                    (kd - ks).abs() < 1e-9 * (1.0 + kd.abs()),
+                    "{}: dense {kd} vs sparse {ks}",
+                    k.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_vs_empty_conventions() {
+        let z = [0.0f32; 4];
+        assert_eq!(dense_minmax(&z, &z), 1.0);
+        assert_eq!(dense_resemblance(&z, &z), 1.0);
+        assert_eq!(dense_intersection(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn binary_data_collapses_minmax_to_resemblance() {
+        // On 0/1 vectors, Eq. (1) == Eq. (2) — the generalization claim.
+        let u = [1.0f32, 0.0, 1.0, 1.0, 0.0];
+        let v = [1.0f32, 1.0, 0.0, 1.0, 0.0];
+        assert!((dense_minmax(&u, &v) - dense_resemblance(&u, &v)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for k in [
+            Kernel::Linear,
+            Kernel::MinMax,
+            Kernel::NMinMax,
+            Kernel::Intersection,
+            Kernel::Resemblance,
+            Kernel::Chi2,
+            Kernel::MinMaxChi2,
+        ] {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("nope"), None);
+    }
+}

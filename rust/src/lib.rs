@@ -1,0 +1,45 @@
+//! # minmax-kernels
+//!
+//! Production-quality reproduction of **"Min-Max Kernels" (Ping Li,
+//! stat.ML 2015)**: min-max kernel machines, consistent weighted sampling
+//! (CWS) with the paper's 0-bit scheme, and a three-layer
+//! Rust + JAX + Pallas hashing/serving stack (AOT via XLA/PJRT).
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`util`], [`bench`] — from-scratch substrates (RNG, pool, CLI, JSON,
+//!   stats, property testing, measurement harness).
+//! * [`data`] — matrices, LIBSVM IO, scaling, synthetic dataset suite and
+//!   word-vector corpus.
+//! * [`kernels`] — min-max / n-min-max / intersection / linear /
+//!   resemblance / chi² kernels + blocked kernel-matrix computation.
+//! * [`cws`] — ICWS sampler (Alg. 1 of the paper) and the 0-bit/1-bit/
+//!   b-bit schemes; [`features`] — one-hot hashed-feature expansion.
+//! * [`svm`] — linear dual-CD SVM, logistic regression, precomputed-kernel
+//!   SVM, multiclass wrappers, C-grid evaluation.
+//! * [`estimate`] — the Figures 4–6 estimator-quality simulation harness.
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT).
+//! * [`coordinator`] — the deployable hashing/serving pipeline.
+//! * [`experiments`] — drivers regenerating every paper table and figure.
+
+pub mod bench;
+pub mod util;
+
+
+
+pub mod coordinator;
+pub mod cws;
+pub mod data;
+pub mod estimate;
+pub mod experiments;
+pub mod features;
+
+
+
+pub mod kernels;
+pub mod runtime;
+pub mod svm;
+
+

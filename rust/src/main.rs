@@ -1,0 +1,218 @@
+//! `minmax` — CLI for the Min-Max Kernels reproduction.
+//!
+//! Experiment drivers (one per paper table/figure), dataset tooling, and
+//! the serving demo. Run `minmax help` for usage.
+
+use minmax::experiments::estimation::{run_fig4_5, run_fig6, EstimationConfig};
+use minmax::experiments::perf::run_perf;
+use minmax::experiments::svm_tables::{
+    run_fig1_3, run_fig7_8, run_table1, HashedSvmConfig, SvmExperimentConfig,
+};
+use minmax::experiments::table2::run_table2;
+use minmax::util::cli::Args;
+
+const USAGE: &str = "\
+minmax — reproduction of 'Min-Max Kernels' (Ping Li, 2015)
+
+USAGE: minmax <command> [flags]
+
+EXPERIMENTS (one per paper table/figure; JSON saved under results/):
+  table1    kernel SVM: linear vs min-max vs n-min-max vs intersection
+            [--datasets a,b,..] [--n-train N] [--n-test N] [--c-points N]
+            [--seed S] [--ablations]
+  fig1-3    accuracy-vs-C curves for the four kernels (finer C grid)
+            [same flags; default --c-points 17]
+  table2    the 13 calibrated word pairs (f1, f2, R, MM)
+            [--seed S]
+  fig4-5    bias/MSE of full vs 0-bit vs 1-bit CWS  [--k-max N] [--sims N]
+            [--full] (paper scale: all pairs, 10k sims)
+  fig6      bias keeping t* and only 0/1/2/4 bits of i*  [same flags]
+  fig7      linear SVM on 0-bit CWS features, b_i x k grid
+            [--datasets ..] [--ks 32,64,..] [--i-bits 1,2,4,8]
+  fig8      0-bit vs 2-bit t* schemes  [--ks 128,512,2048]
+  perf      whole-stack performance snapshot  [--no-pjrt]
+
+TOOLS:
+  gen       generate a synthetic dataset to LIBSVM files
+            --name letter --out dir/ [--n-train N] [--n-test N] [--seed S]
+  hash      hash a LIBSVM file with 0-bit CWS to expanded features
+            --in f.svm --out f.hashed.svm --k 256 --i-bits 8 [--seed S]
+  info      list datasets, kernels, artifacts
+  help      this message
+
+Datasets are seeded synthetic analogs of the paper's public datasets
+(no network in this environment); see DESIGN.md §2 for the mapping.
+";
+
+fn main() {
+    minmax::util::log::init_from_env();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn svm_cfg(args: &Args) -> Result<SvmExperimentConfig, Box<dyn std::error::Error>> {
+    let mut cfg = SvmExperimentConfig::default();
+    if let Some(ds) = args.get("datasets") {
+        cfg.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.n_train = args.usize_or("n-train", cfg.n_train)?;
+    cfg.n_test = args.usize_or("n-test", cfg.n_test)?;
+    cfg.c_points = args.usize_or("c-points", cfg.c_points)?;
+    if args.flag("ablations") {
+        use minmax::kernels::Kernel;
+        cfg.extra_kernels = vec![Kernel::Resemblance, Kernel::Chi2, Kernel::MinMaxChi2];
+    }
+    Ok(cfg)
+}
+
+fn est_cfg(args: &Args) -> Result<EstimationConfig, Box<dyn std::error::Error>> {
+    let mut cfg =
+        if args.flag("full") { EstimationConfig::full() } else { EstimationConfig::default() };
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.k_max = args.usize_or("k-max", cfg.k_max)?;
+    cfg.sims = args.usize_or("sims", cfg.sims)?;
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    match args.command.as_deref() {
+        Some("table1") => {
+            let cfg = svm_cfg(args)?;
+            args.finish()?;
+            run_table1(&cfg).print();
+        }
+        Some("fig1-3") | Some("fig1_3") => {
+            let mut cfg = svm_cfg(args)?;
+            if args.get("c-points").is_none() {
+                cfg.c_points = 17;
+            }
+            args.finish()?;
+            run_fig1_3(&cfg).print();
+        }
+        Some("table2") => {
+            let seed = args.u64_or("seed", 2015)?;
+            args.finish()?;
+            run_table2(seed, 0.004).0.print();
+        }
+        Some("fig4-5") | Some("fig4_5") => {
+            let cfg = est_cfg(args)?;
+            args.finish()?;
+            run_fig4_5(&cfg).print();
+        }
+        Some("fig6") => {
+            let cfg = est_cfg(args)?;
+            args.finish()?;
+            run_fig6(&cfg).print();
+        }
+        Some("fig7") | Some("fig8") => {
+            let is8 = args.command.as_deref() == Some("fig8");
+            let mut cfg = HashedSvmConfig::default();
+            if let Some(ds) = args.get("datasets") {
+                cfg.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            cfg.seed = args.u64_or("seed", cfg.seed)?;
+            cfg.n_train = args.usize_or("n-train", cfg.n_train)?;
+            cfg.n_test = args.usize_or("n-test", cfg.n_test)?;
+            cfg.i_bits = args.list_or("i-bits", &cfg.i_bits.clone())?;
+            if is8 {
+                cfg.t_bits = vec![0, 2];
+                cfg.ks = vec![128, 512, 2048];
+            }
+            cfg.ks = args.list_or("ks", &cfg.ks.clone())?;
+            args.finish()?;
+            run_fig7_8(&cfg, if is8 { "fig8" } else { "fig7" }).print();
+        }
+        Some("perf") => {
+            let with_pjrt = !args.flag("no-pjrt");
+            args.finish()?;
+            run_perf(with_pjrt).table.print();
+        }
+        Some("gen") => {
+            use minmax::data::libsvm;
+            use minmax::data::synth::{generate, SynthConfig};
+            let name = args.str_or("name", "letter");
+            let out = args.str_or("out", "data");
+            let cfg = SynthConfig {
+                seed: args.u64_or("seed", 2015)?,
+                n_train: args.usize_or("n-train", 800)?,
+                n_test: args.usize_or("n-test", 1200)?,
+            };
+            args.finish()?;
+            let ds = generate(&name, cfg)?;
+            let dir = std::path::Path::new(&out);
+            libsvm::write_file(
+                &dir.join(format!("{name}.train.svm")),
+                &ds.train_x.to_csr(),
+                &ds.train_y,
+            )?;
+            libsvm::write_file(
+                &dir.join(format!("{name}.test.svm")),
+                &ds.test_x.to_csr(),
+                &ds.test_y,
+            )?;
+            println!(
+                "wrote {}/{name}.{{train,test}}.svm  ({} train, {} test, dim {}, {} classes)",
+                out,
+                ds.n_train(),
+                ds.n_test(),
+                ds.dim(),
+                ds.n_classes()
+            );
+        }
+        Some("hash") => {
+            use minmax::coordinator::{hash_dataset, PipelineConfig};
+            use minmax::data::{libsvm, Dataset, Matrix};
+            let input = args.get("in").ok_or("missing --in")?.to_string();
+            let output = args.str_or("out", &format!("{input}.hashed"));
+            let k = args.usize_or("k", 256)?;
+            let i_bits = args.usize_or("i-bits", 8)? as u8;
+            let seed = args.u64_or("seed", 2015)?;
+            args.finish()?;
+            let data = libsvm::read_file(std::path::Path::new(&input), 0)?;
+            let n = data.labels.len();
+            let ds = Dataset {
+                name: input.clone(),
+                train_x: Matrix::Sparse(data.features),
+                train_y: data.labels,
+                test_x: Matrix::Sparse(minmax::data::CsrBuilder::new(1).finish()),
+                test_y: vec![],
+            };
+            let hashed = hash_dataset(&ds, &PipelineConfig::new(seed, k, i_bits));
+            libsvm::write_file(std::path::Path::new(&output), &hashed.train, &ds.train_y)?;
+            println!("hashed {n} rows -> {output} (dim {})", hashed.train.cols());
+        }
+        Some("info") => {
+            args.finish()?;
+            println!("datasets: {}", minmax::data::synth::all_names().join(", "));
+            println!(
+                "kernels:  linear, min-max, n-min-max, intersection, resemblance, chi2, minmax*chi2"
+            );
+            let dir = minmax::runtime::default_artifacts_dir();
+            match minmax::runtime::Manifest::load(&dir) {
+                Ok(m) => println!("artifacts ({}): {}", dir.display(), m.names().join(", ")),
+                Err(e) => println!("artifacts: {e}"),
+            }
+        }
+        Some("help") | None => print!("{USAGE}"),
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

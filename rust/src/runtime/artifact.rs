@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json` + `*.hlo.txt`) and the rust
+//! runtime that loads them.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "s32" — all the AOT graphs use.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>, String> {
+    let arr = j.as_arr().ok_or_else(|| format!("{what}: not an array"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{what}: missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("{what}/{name}: missing shape"))?
+                .iter()
+                .map(|d| d.as_f64().map(|x| x as usize).ok_or_else(|| "bad dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{what}/{name}: missing dtype"))?
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| format!("manifest.json: {e}"))?;
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != "hlo-text" {
+            return Err(format!("unsupported artifact format '{format}'"));
+        }
+        let entries_obj = match j.get("entries") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err("manifest.json: missing entries".into()),
+        };
+        let mut entries = Vec::new();
+        for (name, e) in entries_obj {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{name}: missing file"))?;
+            entries.push(ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: tensor_specs(e.get("inputs").unwrap_or(&Json::Null), "inputs")?,
+                outputs: tensor_specs(e.get("outputs").unwrap_or(&Json::Null), "outputs")?,
+            });
+        }
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": {
+        "cws_hash": {
+          "file": "cws_hash.hlo.txt",
+          "spec": {"b": 64, "d": 256, "k": 128},
+          "inputs": [
+            {"name": "x", "shape": [64, 256], "dtype": "f32"},
+            {"name": "r", "shape": [128, 256], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"name": "i_star", "shape": [64, 128], "dtype": "s32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/artifacts"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("cws_hash").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![64, 256]);
+        assert_eq!(e.inputs[0].elements(), 64 * 256);
+        assert_eq!(e.outputs[0].dtype, "s32");
+        assert!(e.file.ends_with("cws_hash.hlo.txt"));
+        assert_eq!(m.names(), vec!["cws_hash"]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_entries() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"format":"hlo-text"}"#).is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_built() {
+        // Integration hook: when `make artifacts` has run, the real
+        // manifest must parse and reference existing files.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        for e in &m.entries {
+            assert!(e.file.exists(), "{} missing", e.file.display());
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! The PJRT engine: loads AOT HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the coordinator's hot
+//! path. Python is never involved at runtime.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// A loaded, compiled artifact set bound to one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over `artifacts_dir`, compiling every
+    /// manifest entry eagerly (compile once, execute many).
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        Self::load_subset_inner(manifest, None)
+    }
+
+    /// Load only the named entries (faster startup for focused tools).
+    pub fn load_subset(artifacts_dir: &Path, names: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        Self::load_subset_inner(manifest, Some(names))
+    }
+
+    fn load_subset_inner(manifest: Manifest, names: Option<&[&str]>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            if let Some(ns) = names {
+                if !ns.contains(&entry.name.as_str()) {
+                    continue;
+                }
+            }
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parsing {}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(Engine { client, manifest, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the tuple
+    /// elements as literals. Input count and element counts are checked
+    /// against the manifest before dispatch.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (lit, ts) in inputs.iter().zip(&spec.inputs) {
+            let n = lit.element_count();
+            if n != ts.elements() {
+                return Err(anyhow!(
+                    "{name}: input '{}' has {n} elements, expected {}",
+                    ts.name,
+                    ts.elements()
+                ));
+            }
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True — always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: run and decode every output as the manifest dtype.
+    pub fn run_decoded(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let outs = self.run(name, inputs)?;
+        let spec = self.spec(name)?;
+        outs.iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ts)| Tensor::from_literal(lit, ts))
+            .collect()
+    }
+}
+
+/// A decoded output tensor.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    fn from_literal(lit: &xla::Literal, ts: &super::artifact::TensorSpec) -> Result<Tensor> {
+        match ts.dtype.as_str() {
+            "f32" => Ok(Tensor::F32 { shape: ts.shape.clone(), data: lit.to_vec::<f32>()? }),
+            "s32" => Ok(Tensor::I32 { shape: ts.shape.clone(), data: lit.to_vec::<i32>()? }),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } => shape,
+            Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal_f32: {} elements for shape {shape:?}", data.len()));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Default artifacts directory: `$MINMAX_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MINMAX_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_f32_shape_mismatch() {
+        assert!(literal_f32(&[1.0], &[2, 3]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime bridge to the AOT layer: manifest-described HLO-text
+//! artifacts (produced once by `make artifacts`) are compiled on the PJRT
+//! CPU client and executed from rust. See DESIGN.md §3.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::{default_artifacts_dir, literal_f32, Engine, Tensor};

@@ -1,0 +1,322 @@
+//! L2-regularized linear SVM by dual coordinate descent — the LIBLINEAR
+//! algorithm (Hsieh et al., ICML 2008) the paper uses for the hashed-CWS
+//! experiments (§4: "we then use the popular LIBLINEAR package").
+//!
+//! Solves, for binary labels `y ∈ {−1,+1}` over sparse rows `xᵢ`:
+//!
+//! ```text
+//! min_w  ½‖w‖² + C Σᵢ loss(yᵢ wᵀxᵢ)
+//! ```
+//!
+//! with `loss` the hinge (L1-SVM) or squared hinge (L2-SVM), via its dual
+//!
+//! ```text
+//! min_α  ½ αᵀQ̄α − eᵀα ,  0 ≤ αᵢ ≤ U,   Q̄ = Q + D
+//! ```
+//!
+//! (`U = C, D = 0` for L1; `U = ∞, Dᵢᵢ = 1/(2C)` for L2). One coordinate
+//! update is O(nnz(xᵢ)); `w` is maintained incrementally. A bias term is
+//! handled the LIBLINEAR `-B 1` way: an implicit constant-1 feature.
+
+use crate::data::sparse::{Csr, SparseRow};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    /// Hinge loss (LIBLINEAR -s 3).
+    L1,
+    /// Squared hinge (LIBLINEAR -s 1, its default dual solver).
+    L2,
+}
+
+#[derive(Debug, Clone)]
+pub struct LinearSvmParams {
+    pub c: f64,
+    pub loss: Loss,
+    pub max_epochs: usize,
+    /// Stop when the maximal projected-gradient violation over an epoch
+    /// falls below this.
+    pub eps: f64,
+    /// Train with an implicit constant-1 bias feature.
+    pub bias: bool,
+    pub seed: u64,
+}
+
+impl Default for LinearSvmParams {
+    fn default() -> Self {
+        Self { c: 1.0, loss: Loss::L2, max_epochs: 200, eps: 1e-3, bias: true, seed: 1 }
+    }
+}
+
+/// A trained binary linear model: `f(x) = wᵀx + b`.
+#[derive(Debug, Clone)]
+pub struct LinearModel {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub epochs_run: usize,
+}
+
+impl LinearModel {
+    #[inline]
+    pub fn decision(&self, x: SparseRow<'_>) -> f64 {
+        let mut s = self.b;
+        for (&j, &v) in x.indices.iter().zip(x.values) {
+            s += self.w[j as usize] * v as f64;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn decision_dense(&self, x: &[f32]) -> f64 {
+        let mut s = self.b;
+        for (wj, &v) in self.w.iter().zip(x) {
+            s += wj * v as f64;
+        }
+        s
+    }
+
+    pub fn predict(&self, x: SparseRow<'_>) -> i32 {
+        if self.decision(x) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Train a binary linear SVM. `y` must be ±1 and contain both classes.
+pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
+    let n = x.rows();
+    assert_eq!(n, y.len());
+    assert!(y.iter().all(|&v| v == 1 || v == -1), "labels must be ±1");
+    assert!(p.c > 0.0);
+    let d = x.cols();
+    let (upper, diag) = match p.loss {
+        Loss::L1 => (p.c, 0.0),
+        Loss::L2 => (f64::INFINITY, 1.0 / (2.0 * p.c)),
+    };
+    // Q̄ᵢᵢ = xᵢᵀxᵢ (+ bias 1) + Dᵢᵢ
+    let qii: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            let mut s: f64 = r.values.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            if p.bias {
+                s += 1.0;
+            }
+            s + diag
+        })
+        .collect();
+
+    let mut w = vec![0.0f64; d];
+    let mut b = 0.0f64;
+    let mut alpha = vec![0.0f64; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(p.seed);
+    let mut epochs_run = 0;
+
+    for epoch in 0..p.max_epochs {
+        rng.shuffle(&mut order);
+        let mut max_pg: f64 = 0.0;
+        for &i in &order {
+            if qii[i] <= diag {
+                continue; // empty row: only the bias/diag — skip degenerate
+            }
+            let yi = y[i] as f64;
+            let xi = x.row(i);
+            // G = yᵢ f(xᵢ) − 1 + Dᵢᵢ αᵢ
+            let mut fx = b;
+            for (&j, &v) in xi.indices.iter().zip(xi.values) {
+                fx += w[j as usize] * v as f64;
+            }
+            let g = yi * fx - 1.0 + diag * alpha[i];
+            // Projected gradient for the box [0, U].
+            let pg = if alpha[i] <= 0.0 {
+                g.min(0.0)
+            } else if alpha[i] >= upper {
+                g.max(0.0)
+            } else {
+                g
+            };
+            max_pg = max_pg.max(pg.abs());
+            if pg.abs() > 1e-14 {
+                let old = alpha[i];
+                alpha[i] = (old - g / qii[i]).clamp(0.0, upper);
+                let delta = (alpha[i] - old) * yi;
+                if delta != 0.0 {
+                    for (&j, &v) in xi.indices.iter().zip(xi.values) {
+                        w[j as usize] += delta * v as f64;
+                    }
+                    if p.bias {
+                        b += delta;
+                    }
+                }
+            }
+        }
+        epochs_run = epoch + 1;
+        if max_pg < p.eps {
+            break;
+        }
+    }
+    LinearModel { w, b, epochs_run }
+}
+
+/// Dual objective value (for convergence tests): ½‖w‖² + ½b² − Σα + ½DΣα².
+pub fn dual_objective(model: &LinearModel, alpha_sum: f64) -> f64 {
+    // Only used in tests through `train_binary_with_alpha`; kept simple.
+    let wnorm: f64 = model.w.iter().map(|v| v * v).sum::<f64>() + model.b * model.b;
+    0.5 * wnorm - alpha_sum
+}
+
+/// Primal objective ½‖w‖² + C Σ loss — exposed for convergence tests.
+pub fn primal_objective(x: &Csr, y: &[i32], m: &LinearModel, p: &LinearSvmParams) -> f64 {
+    let mut obj: f64 =
+        0.5 * (m.w.iter().map(|v| v * v).sum::<f64>() + if p.bias { m.b * m.b } else { 0.0 });
+    for i in 0..x.rows() {
+        let margin = 1.0 - y[i] as f64 * m.decision(x.row(i));
+        if margin > 0.0 {
+            obj += p.c
+                * match p.loss {
+                    Loss::L1 => margin,
+                    Loss::L2 => margin * margin,
+                };
+        }
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrBuilder;
+
+    fn separable() -> (Csr, Vec<i32>) {
+        // Two clusters on the x-axis.
+        let rows: Vec<Vec<(u32, f32)>> = vec![
+            vec![(0, 2.0), (1, 0.1)],
+            vec![(0, 2.5), (1, 0.3)],
+            vec![(0, 3.0)],
+            vec![(0, 0.2), (1, 0.2)],
+            vec![(0, 0.1), (1, 0.4)],
+            vec![(1, 0.3)],
+        ];
+        let mut b = CsrBuilder::new(2);
+        for r in rows {
+            b.push_row(r);
+        }
+        (b.finish(), vec![1, 1, 1, -1, -1, -1])
+    }
+
+    #[test]
+    fn separates_separable_data() {
+        let (x, y) = separable();
+        for loss in [Loss::L1, Loss::L2] {
+            let m = train_binary(&x, &y, &LinearSvmParams { loss, c: 10.0, ..Default::default() });
+            for i in 0..x.rows() {
+                assert_eq!(m.predict(x.row(i)), y[i], "{loss:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decision_dense_matches_sparse() {
+        let (x, y) = separable();
+        let m = train_binary(&x, &y, &LinearSvmParams::default());
+        let d = x.to_dense();
+        for i in 0..x.rows() {
+            assert!((m.decision(x.row(i)) - m.decision_dense(d.row(i))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn converges_before_max_epochs_on_easy_data() {
+        let (x, y) = separable();
+        let m = train_binary(&x, &y, &LinearSvmParams::default());
+        assert!(m.epochs_run < 200, "ran {} epochs", m.epochs_run);
+    }
+
+    #[test]
+    fn more_regularization_shrinks_weights() {
+        let (x, y) = separable();
+        let m_small_c =
+            train_binary(&x, &y, &LinearSvmParams { c: 1e-3, ..Default::default() });
+        let m_big_c = train_binary(&x, &y, &LinearSvmParams { c: 100.0, ..Default::default() });
+        let n = |m: &LinearModel| m.w.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(n(&m_small_c) < n(&m_big_c));
+    }
+
+    #[test]
+    fn primal_objective_decreases_with_epochs() {
+        // Train 1 epoch vs 50 epochs: the longer run cannot be worse.
+        let mut rng = Pcg64::new(3);
+        let n = 60;
+        let mut b = CsrBuilder::new(8);
+        let mut y = Vec::new();
+        for i in 0..n {
+            let label = if i % 2 == 0 { 1 } else { -1 };
+            let center = if label == 1 { 1.2 } else { 0.4 };
+            let row: Vec<(u32, f32)> =
+                (0..8).map(|j| (j, (center * rng.lognormal(0.0, 0.4)) as f32)).collect();
+            b.push_row(row);
+            y.push(label);
+        }
+        let x = b.finish();
+        let p1 = LinearSvmParams { max_epochs: 1, ..Default::default() };
+        let p50 = LinearSvmParams { max_epochs: 50, ..Default::default() };
+        let m1 = train_binary(&x, &y, &p1);
+        let m50 = train_binary(&x, &y, &p50);
+        assert!(
+            primal_objective(&x, &y, &m50, &p50) <= primal_objective(&x, &y, &m1, &p1) + 1e-9
+        );
+    }
+
+    #[test]
+    fn handles_empty_rows() {
+        let mut b = CsrBuilder::new(2);
+        b.push_row(vec![(0, 1.0)]);
+        b.push_row(vec![]);
+        b.push_row(vec![(1, 1.0)]);
+        b.push_row(vec![]);
+        let x = b.finish();
+        let y = vec![1, 1, -1, -1];
+        // Must not panic; empty rows are decided by the bias.
+        let m = train_binary(&x, &y, &LinearSvmParams::default());
+        assert_eq!(m.predict(x.row(0)), 1);
+    }
+
+    #[test]
+    fn dense_one_hot_cws_features_learnable() {
+        // End-to-end-ish: two distinct base vectors hashed with 0-bit CWS;
+        // a linear SVM on the expanded features must tell them apart.
+        use crate::cws::CwsHasher;
+        use crate::features::Expansion;
+        let mut rng = Pcg64::new(7);
+        let proto_a: Vec<f32> = (0..32).map(|_| rng.lognormal(0.0, 1.0) as f32).collect();
+        let proto_b: Vec<f32> = (0..32).map(|_| rng.lognormal(0.0, 1.0) as f32).collect();
+        let k = 64;
+        let e = Expansion::new(k, 8);
+        let h = CwsHasher::new(11, k);
+        let mut samples = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..40 {
+            let proto = if i % 2 == 0 { &proto_a } else { &proto_b };
+            let v: Vec<f32> =
+                proto.iter().map(|&x| (x as f64 * rng.lognormal(0.0, 0.2)) as f32).collect();
+            samples.push(Some(h.hash_dense(&v)));
+            y.push(if i % 2 == 0 { 1 } else { -1 });
+        }
+        let feat = e.expand(&samples);
+        let m = train_binary(&feat, &y, &LinearSvmParams { c: 1.0, ..Default::default() });
+        let acc = (0..feat.rows())
+            .filter(|&i| m.predict(feat.row(i)) == y[i])
+            .count() as f64
+            / feat.rows() as f64;
+        assert!(acc > 0.95, "train accuracy {acc}");
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        let (x, _) = separable();
+        train_binary(&x, &[0, 1, 1, -1, -1, -1], &LinearSvmParams::default());
+    }
+}

@@ -1,0 +1,20 @@
+//! SVM / linear-learner substrates: the LIBLINEAR-style dual coordinate
+//! descent linear SVM, ℓ₂-regularized logistic regression, the
+//! LIBSVM-style precomputed-kernel SVM, multiclass wrappers (OvO for
+//! kernel machines, OvR for linear), and the paper's C-grid evaluation
+//! protocol.
+
+pub mod eval;
+pub mod kernel;
+pub mod linear;
+pub mod logistic;
+pub mod model_io;
+pub mod multiclass;
+pub mod online;
+
+pub use eval::{c_grid, kernel_svm_sweep, linear_svm_accuracy, linear_svm_sweep, SweepResult};
+pub use kernel::{KernelModel, KernelSvmParams};
+pub use linear::{LinearModel, LinearSvmParams, Loss};
+pub use logistic::{LogisticModel, LogisticParams};
+pub use multiclass::{KernelOvO, LinearOvR};
+pub use online::{AveragedPerceptron, OnlineLearner, OnlineOvR, PassiveAggressive, SgdLogistic};

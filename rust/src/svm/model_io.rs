@@ -1,0 +1,199 @@
+//! Model persistence: save/load trained models as JSON so a hashed
+//! linear classifier trained by one process can be served by another
+//! (the offline-train / online-serve split of the coordinator).
+
+use std::path::Path;
+
+use crate::util::json::{write_json, Json};
+
+use super::linear::LinearModel;
+use super::multiclass::LinearOvR;
+
+/// Everything needed to re-create the serving configuration: the model
+/// weights plus the hashing parameters they were trained under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SavedModel {
+    pub seed: u64,
+    pub k: usize,
+    pub i_bits: u8,
+    pub t_bits: u8,
+    pub n_classes: usize,
+    /// Per-class (weights, bias).
+    pub classes: Vec<(Vec<f64>, f64)>,
+}
+
+impl SavedModel {
+    pub fn from_ovr(
+        ovr: &LinearOvR,
+        seed: u64,
+        k: usize,
+        i_bits: u8,
+        t_bits: u8,
+    ) -> SavedModel {
+        SavedModel {
+            seed,
+            k,
+            i_bits,
+            t_bits,
+            n_classes: ovr.n_classes,
+            classes: ovr.models().iter().map(|m| (m.w.clone(), m.b)).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format", "minmax-linear-ovr-v1")
+            .set("seed", self.seed)
+            .set("k", self.k)
+            .set("i_bits", self.i_bits as i64)
+            .set("t_bits", self.t_bits as i64)
+            .set("n_classes", self.n_classes);
+        j.set(
+            "classes",
+            Json::Arr(
+                self.classes
+                    .iter()
+                    .map(|(w, b)| {
+                        let mut c = Json::obj();
+                        c.set("bias", *b)
+                            .set("w", Json::Arr(w.iter().map(|&x| Json::Num(x)).collect()));
+                        c
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<SavedModel, String> {
+        if j.get("format").and_then(Json::as_str) != Some("minmax-linear-ovr-v1") {
+            return Err("unknown model format".into());
+        }
+        let get_n = |k: &str| -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing {k}"))
+        };
+        let classes_json =
+            j.get("classes").and_then(Json::as_arr).ok_or("missing classes")?;
+        let mut classes = Vec::new();
+        for c in classes_json {
+            let b = c.get("bias").and_then(Json::as_f64).ok_or("missing bias")?;
+            let w = c
+                .get("w")
+                .and_then(Json::as_arr)
+                .ok_or("missing w")?
+                .iter()
+                .map(|x| x.as_f64().ok_or("bad weight".to_string()))
+                .collect::<Result<Vec<f64>, _>>()?;
+            classes.push((w, b));
+        }
+        Ok(SavedModel {
+            seed: get_n("seed")? as u64,
+            k: get_n("k")? as usize,
+            i_bits: get_n("i_bits")? as u8,
+            t_bits: get_n("t_bits")? as u8,
+            n_classes: get_n("n_classes")? as usize,
+            classes,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        write_json(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<SavedModel, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Rebuild the in-memory predictor.
+    pub fn to_models(&self) -> Vec<LinearModel> {
+        self.classes
+            .iter()
+            .map(|(w, b)| LinearModel { w: w.clone(), b: *b, epochs_run: 0 })
+            .collect()
+    }
+
+    /// Predict with the reconstructed models.
+    pub fn predict(&self, x: crate::data::sparse::SparseRow<'_>) -> i32 {
+        let mut best = 0usize;
+        let mut best_d = f64::NEG_INFINITY;
+        for (c, (w, b)) in self.classes.iter().enumerate() {
+            let mut d = *b;
+            for (&j, &v) in x.indices.iter().zip(x.values) {
+                d += w[j as usize] * v as f64;
+            }
+            if d > best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{hash_dataset, PipelineConfig};
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::svm::LinearSvmParams;
+
+    fn trained() -> (SavedModel, crate::data::Csr, Vec<i32>) {
+        let ds = generate("vowel", SynthConfig { seed: 3, n_train: 120, n_test: 120 }).unwrap();
+        let cfg = PipelineConfig::new(9, 32, 4);
+        let hashed = hash_dataset(&ds, &cfg);
+        let ovr = LinearOvR::train(
+            &hashed.train,
+            &ds.train_y,
+            ds.n_classes(),
+            &LinearSvmParams::default(),
+        );
+        let saved = SavedModel::from_ovr(&ovr, cfg.seed, cfg.k, cfg.i_bits, cfg.t_bits);
+        (saved, hashed.test, ds.test_y)
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_model() {
+        let (m, _, _) = trained();
+        let j = m.to_json();
+        let back = SavedModel::from_json(&j).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn file_roundtrip_and_identical_predictions() {
+        let (m, test, _y) = trained();
+        let dir = std::env::temp_dir().join("minmax_model_io");
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = SavedModel::load(&path).unwrap();
+        for i in 0..test.rows() {
+            assert_eq!(m.predict(test.row(i)), back.predict(test.row(i)), "row {i}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::parse(r#"{"format":"other"}"#).unwrap();
+        assert!(SavedModel::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn reconstructed_models_match_predict() {
+        let (m, test, _) = trained();
+        let models = m.to_models();
+        for i in 0..test.rows().min(20) {
+            let row = test.row(i);
+            let via_models = models
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1.decision(row).partial_cmp(&b.1.decision(row)).unwrap()
+                })
+                .unwrap()
+                .0 as i32;
+            assert_eq!(via_models, m.predict(row));
+        }
+    }
+}

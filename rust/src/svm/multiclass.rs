@@ -1,0 +1,216 @@
+//! Multiclass wrappers: one-vs-one for kernel machines (LIBSVM's
+//! strategy) and one-vs-rest for linear models (LIBLINEAR's strategy) —
+//! matching the tools the paper used for each half of its experiments.
+
+use crate::data::dense::Dense;
+use crate::data::sparse::{Csr, SparseRow};
+
+use super::kernel::{train_binary as train_kernel_binary, KernelModel, KernelSvmParams};
+use super::linear::{train_binary as train_linear_binary, LinearModel, LinearSvmParams};
+
+// ------------------------------------------------------------- kernel OvO
+
+/// One-vs-one kernel SVM over a precomputed train kernel.
+#[derive(Debug)]
+pub struct KernelOvO {
+    pub n_classes: usize,
+    /// For each pair (a < b): the training-subset indices and the model.
+    pairs: Vec<(i32, i32, Vec<usize>, KernelModel)>,
+}
+
+impl KernelOvO {
+    /// `k_train` is the full n×n precomputed kernel; `y` holds labels in
+    /// `0..n_classes`.
+    pub fn train(k_train: &Dense, y: &[i32], n_classes: usize, p: &KernelSvmParams) -> Self {
+        assert_eq!(k_train.rows(), y.len());
+        let mut pairs = Vec::new();
+        for a in 0..n_classes as i32 {
+            for b in (a + 1)..n_classes as i32 {
+                let idx: Vec<usize> =
+                    (0..y.len()).filter(|&i| y[i] == a || y[i] == b).collect();
+                if idx.is_empty() {
+                    continue;
+                }
+                let yy: Vec<i32> = idx.iter().map(|&i| if y[i] == a { 1 } else { -1 }).collect();
+                if yy.iter().all(|&v| v == 1) || yy.iter().all(|&v| v == -1) {
+                    continue; // one of the classes absent — skip pair
+                }
+                // Extract the subset kernel.
+                let m = idx.len();
+                let mut sub = Dense::zeros(m, m);
+                for (r, &i) in idx.iter().enumerate() {
+                    let krow = k_train.row(i);
+                    let srow = sub.row_mut(r);
+                    for (c, &j) in idx.iter().enumerate() {
+                        srow[c] = krow[j];
+                    }
+                }
+                let model = train_kernel_binary(&sub, &yy, p);
+                pairs.push((a, b, idx, model));
+            }
+        }
+        Self { n_classes, pairs }
+    }
+
+    /// Predict from the test point's kernel row against the full training
+    /// set (length n_train). Majority vote; ties broken by summed margins.
+    pub fn predict(&self, k_row: &[f32]) -> i32 {
+        let mut votes = vec![0u32; self.n_classes];
+        let mut margins = vec![0.0f64; self.n_classes];
+        let mut sub_row: Vec<f32> = Vec::new();
+        for (a, b, idx, model) in &self.pairs {
+            sub_row.clear();
+            sub_row.extend(idx.iter().map(|&i| k_row[i]));
+            let dec = model.decision(&sub_row);
+            if dec >= 0.0 {
+                votes[*a as usize] += 1;
+                margins[*a as usize] += dec;
+            } else {
+                votes[*b as usize] += 1;
+                margins[*b as usize] -= dec;
+            }
+        }
+        let mut best = 0usize;
+        for c in 1..self.n_classes {
+            if votes[c] > votes[best]
+                || (votes[c] == votes[best] && margins[c] > margins[best])
+            {
+                best = c;
+            }
+        }
+        best as i32
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.pairs.len()
+    }
+}
+
+// ------------------------------------------------------------- linear OvR
+
+/// One-vs-rest linear SVM over sparse features.
+#[derive(Debug)]
+pub struct LinearOvR {
+    pub n_classes: usize,
+    models: Vec<LinearModel>,
+}
+
+impl LinearOvR {
+    pub fn train(x: &Csr, y: &[i32], n_classes: usize, p: &LinearSvmParams) -> Self {
+        assert_eq!(x.rows(), y.len());
+        let models = (0..n_classes as i32)
+            .map(|c| {
+                let yy: Vec<i32> = y.iter().map(|&v| if v == c { 1 } else { -1 }).collect();
+                train_linear_binary(x, &yy, p)
+            })
+            .collect();
+        Self { n_classes, models }
+    }
+
+    pub fn predict(&self, x: SparseRow<'_>) -> i32 {
+        let mut best = 0usize;
+        let mut best_dec = f64::NEG_INFINITY;
+        for (c, m) in self.models.iter().enumerate() {
+            let d = m.decision(x);
+            if d > best_dec {
+                best_dec = d;
+                best = c;
+            }
+        }
+        best as i32
+    }
+
+    pub fn decisions(&self, x: SparseRow<'_>) -> Vec<f64> {
+        self.models.iter().map(|m| m.decision(x)).collect()
+    }
+
+    /// Binary shortcut: with 2 classes train a single model.
+    pub fn models(&self) -> &[LinearModel] {
+        &self.models
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrBuilder;
+    use crate::data::Matrix;
+    use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
+    use crate::kernels::Kernel;
+    use crate::util::rng::Pcg64;
+
+    fn three_class_dense(n: usize, seed: u64) -> (Dense, Vec<i32>) {
+        let mut rng = Pcg64::new(seed);
+        let protos = [[3.0, 0.5, 0.5], [0.5, 3.0, 0.5], [0.5, 0.5, 3.0]];
+        let mut x = Dense::zeros(n, 3);
+        let mut y = Vec::new();
+        for i in 0..n {
+            let c = i % 3;
+            for j in 0..3 {
+                x.set(i, j, (protos[c][j] * rng.lognormal(0.0, 0.2)) as f32);
+            }
+            y.push(c as i32);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn kernel_ovo_classifies_three_classes() {
+        let (xtr, ytr) = three_class_dense(90, 1);
+        let (xte, yte) = three_class_dense(45, 2);
+        let mtr = Matrix::Dense(xtr);
+        let ktr = kernel_matrix_sym(Kernel::MinMax, &mtr);
+        let ovo = KernelOvO::train(&ktr, &ytr, 3, &KernelSvmParams::default());
+        assert_eq!(ovo.n_models(), 3);
+        let kte = kernel_matrix(Kernel::MinMax, &Matrix::Dense(xte), &mtr);
+        let acc = (0..yte.len())
+            .filter(|&i| ovo.predict(kte.row(i)) == yte[i])
+            .count() as f64
+            / yte.len() as f64;
+        assert!(acc > 0.9, "OvO accuracy {acc}");
+    }
+
+    #[test]
+    fn linear_ovr_classifies_three_classes() {
+        let (xtr, ytr) = three_class_dense(90, 3);
+        let (xte, yte) = three_class_dense(45, 4);
+        let str_ = Csr::from_dense(&xtr);
+        let ste = Csr::from_dense(&xte);
+        let ovr = LinearOvR::train(&str_, &ytr, 3, &LinearSvmParams::default());
+        let acc = (0..yte.len())
+            .filter(|&i| ovr.predict(ste.row(i)) == yte[i])
+            .count() as f64
+            / yte.len() as f64;
+        assert!(acc > 0.9, "OvR accuracy {acc}");
+        assert_eq!(ovr.decisions(ste.row(0)).len(), 3);
+    }
+
+    #[test]
+    fn ovo_handles_missing_pair_gracefully() {
+        // Class 2 absent from training: pairs with it are skipped.
+        let (xtr, mut ytr) = three_class_dense(60, 5);
+        for y in ytr.iter_mut() {
+            if *y == 2 {
+                *y = 0;
+            }
+        }
+        let ktr = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(xtr));
+        let ovo = KernelOvO::train(&ktr, &ytr, 3, &KernelSvmParams::default());
+        assert_eq!(ovo.n_models(), 1); // only (0,1) trainable
+        let _ = ovo.predict(ktr.row(0)); // must not panic
+    }
+
+    #[test]
+    fn binary_ovr_matches_single_binary_model() {
+        let mut b = CsrBuilder::new(2);
+        for i in 0..20 {
+            b.push_row(vec![(0, 1.0 + (i % 2) as f32), (1, 2.0 - (i % 2) as f32)]);
+        }
+        let x = b.finish();
+        let y: Vec<i32> = (0..20).map(|i| (i % 2) as i32).collect();
+        let ovr = LinearOvR::train(&x, &y, 2, &LinearSvmParams::default());
+        for i in 0..20 {
+            assert_eq!(ovr.predict(x.row(i)), y[i]);
+        }
+    }
+}

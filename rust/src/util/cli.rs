@@ -1,0 +1,241 @@
+//! Tiny CLI argument parser (the vendor set has no clap).
+//!
+//! Supports the shapes the `minmax` binary needs:
+//!
+//! ```text
+//! minmax <subcommand> [--flag] [--key value] [--key=value] [positional...]
+//! ```
+//!
+//! Typed accessors parse on demand and report readable errors. Unknown
+//! flags are rejected by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// Keys that have been read by an accessor (for `finish`).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an iterator of tokens.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, CliError> {
+        let mut command = None;
+        let mut opts = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` ends option parsing.
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, val) = if let Some(eq) = stripped.find('=') {
+                    (stripped[..eq].to_string(), Some(stripped[eq + 1..].to_string()))
+                } else {
+                    (stripped.to_string(), None)
+                };
+                if key.is_empty() {
+                    return Err(CliError(format!("malformed flag: {tok}")));
+                }
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // Take the next token as the value unless it looks
+                        // like another flag; then it's a boolean switch.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                if opts.insert(key.clone(), val).is_some() {
+                    return Err(CliError(format!("duplicate flag --{key}")));
+                }
+            } else if command.is_none() && positional.is_empty() {
+                command = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Self { command, opts, positional, seen: Default::default() })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).map(|s| s.to_string()).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch: `--foo`, `--foo=true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{key}={v}: {e}"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.parse_as::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.parse_as::<u64>(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.parse_as::<f64>(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list of T, e.g. `--k 32,64,128`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<T>().map_err(|e| CliError(format!("--{key}: '{s}': {e}"))))
+                .collect(),
+        }
+    }
+
+    /// Error out on any flag that no accessor ever looked at.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self.opts.keys().filter(|k| !seen.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError(format!(
+                "unknown flag(s): {}",
+                unknown.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table1", "--seed", "42", "--datasets=letters,digits", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert_eq!(a.str_or("datasets", ""), "letters,digits");
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let a = parse(&["x", "--k=7"]);
+        let b = parse(&["x", "--k", "7"]);
+        assert_eq!(a.usize_or("k", 0).unwrap(), 7);
+        assert_eq!(b.usize_or("k", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn boolean_switch_before_flag() {
+        let a = parse(&["x", "--fast", "--k", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("k", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize_or("k", 128).unwrap(), 128);
+        assert_eq!(a.f64_or("c", 1.0).unwrap(), 1.0);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--ks", "32,64, 128"]);
+        assert_eq!(a.list_or::<usize>("ks", &[]).unwrap(), vec![32, 64, 128]);
+        let b = parse(&["x"]);
+        assert_eq!(b.list_or::<usize>("ks", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["x", "--k", "notanum"]);
+        assert!(a.usize_or("k", 0).is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_is_error() {
+        assert!(Args::parse(["x", "--k", "1", "--k", "2"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected_by_finish() {
+        let a = parse(&["x", "--typo", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positional_after_double_dash() {
+        let a = parse(&["run", "--k", "1", "--", "--not-a-flag", "pos2"]);
+        assert_eq!(a.positional(), &["--not-a-flag".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse(&[]);
+        assert!(a.command.is_none());
+    }
+}

@@ -1,0 +1,116 @@
+//! Leveled stderr logging + wall-clock timers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+/// Set global log level (also honors `MINMAX_LOG={debug,info,warn,error}`
+/// via [`init_from_env`]).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn init_from_env() {
+    if let Ok(s) = std::env::var("MINMAX_LOG") {
+        let lvl = match s.to_ascii_lowercase().as_str() {
+            "debug" => Level::Debug,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            _ => Level::Info,
+        };
+        set_level(lvl);
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{tag} {:>9.3}s] {args}", elapsed_secs());
+}
+
+fn start_instant() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Seconds since process start (first logging call).
+pub fn elapsed_secs() -> f64 {
+    start_instant().elapsed().as_secs_f64()
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+
+/// RAII scope timer: logs at Info on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        log(Level::Info, format_args!("{}: {:.3}s", self.label, self.start.elapsed().as_secs_f64()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_filter() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn timer_measures_positive() {
+        let t = Timer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed().as_secs_f64() > 0.0);
+    }
+}

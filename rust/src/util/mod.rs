@@ -1,0 +1,13 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! RNG + samplers, thread pool, CLI parsing, JSON, statistics, logging,
+//! text tables, and a mini property-testing harness.
+
+pub mod cli;
+pub mod fastmath;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,152 @@
+//! Mini property-based testing harness (the vendor set has no proptest).
+//!
+//! Design: a [`Gen`] wraps the seeded RNG; properties are closures from
+//! `&mut Gen` to `Result<(), String>`. [`check`] runs N seeded cases and,
+//! on failure, reruns the failing seed with shrink hints disabled and
+//! reports the seed so the case is reproducible with
+//! `MINMAX_PROP_SEED=<seed> cargo test <name>`.
+//!
+//! There is no structural shrinking (inputs are regenerated from seeds),
+//! but generators take size hints that `check` ramps up from small to
+//! large, so the first failure found tends to be near-minimal anyway —
+//! the property-testing behaviour that matters in practice.
+
+use super::rng::Pcg64;
+
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Current size hint in [0,1]; generators should scale dimensions
+    /// with it so early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] scaled by the size hint (at least lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Nonnegative f32 vector with a sparsity knob (fraction of zeros)
+    /// and heavy-tailed magnitudes — the paper's data regime.
+    pub fn nonneg_vec(&mut self, dim: usize, zero_frac: f64) -> Vec<f32> {
+        (0..dim)
+            .map(|_| {
+                if self.rng.uniform() < zero_frac {
+                    0.0
+                } else {
+                    self.rng.lognormal(0.0, 1.0) as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Boolean with probability p.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` seeded cases of `prop`. Panics with the failing seed and
+/// message on first failure. Honors `MINMAX_PROP_SEED` to replay one case.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u64, mut prop: F) {
+    if let Ok(seed_s) = std::env::var("MINMAX_PROP_SEED") {
+        let seed: u64 = seed_s.parse().expect("MINMAX_PROP_SEED must be u64");
+        let mut g = Gen { rng: Pcg64::new_stream(seed, 0xA11CE), size: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            panic!("[{name}] replay seed {seed} failed: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Deterministic per-test-name seeding so the suite is stable.
+        let seed = fnv1a(name) ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Ramp the size hint: first 20% of cases are small.
+        let size = ((case + 1) as f64 / cases as f64).min(1.0).max(0.05);
+        let mut g = Gen { rng: Pcg64::new_stream(seed, 0xA11CE), size };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "[{name}] case {case}/{cases} failed (replay: MINMAX_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for properties: approximate equality with context.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Assert helper: plain condition.
+pub fn ensure(cond: bool, what: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            close(a + b, b + a, 1e-12, "a+b == b+a")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: MINMAX_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn size_ramp_is_monotone_nondecreasing_envelope() {
+        // Generators with small size hints must produce small dims.
+        check("size-hint", 20, |g| {
+            let n = g.usize_in(1, 1000);
+            ensure(n <= 1 + (999.0 * g.size) as usize + 1, "scaled dim")
+        });
+    }
+
+    #[test]
+    fn nonneg_vec_is_nonneg() {
+        check("nonneg-vec", 20, |g| {
+            let dim = g.usize_in(1, 64);
+            let v = g.nonneg_vec(dim, 0.5);
+            ensure(v.len() == dim && v.iter().all(|&x| x >= 0.0), "nonneg + len")
+        });
+    }
+}

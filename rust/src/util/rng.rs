@@ -1,0 +1,444 @@
+//! Deterministic pseudo-random number generation and the samplers the
+//! paper's algorithms need.
+//!
+//! The offline vendor set has no `rand` crate, so this module implements
+//! the full stack from scratch:
+//!
+//! * [`SplitMix64`] — seed expander (Steele et al., used to key PCG).
+//! * [`Pcg64`] — PCG-XSL-RR 128/64, the main generator. Small state,
+//!   excellent statistical quality, trivially seedable per-stream which is
+//!   what CWS needs (one independent stream per hash sample column).
+//! * Distributions: uniform, exponential, normal (Box–Muller),
+//!   `Gamma(2,1)` (the CWS-specific fast path: sum of two exponentials),
+//!   general `Gamma(shape,1)` (Marsaglia–Tsang), Zipf, log-normal.
+//!
+//! Everything is deterministic given a seed: the experiment drivers and
+//! the rust↔python cross-checks depend on that.
+
+/// SplitMix64: a tiny, high-quality 64-bit seed expander.
+///
+/// Used to derive independent sub-seeds (e.g. one per CWS column or per
+/// worker thread) from a single user-facing experiment seed.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state with a 64-bit xorshift-low,
+/// random-rotate output function. Period 2^128 per stream; distinct odd
+/// increments select statistically independent streams.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // must be odd
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed from a single u64 (stream 0). Sub-seeds are expanded through
+    /// SplitMix64 so nearby seeds give unrelated states.
+    pub fn new(seed: u64) -> Self {
+        Self::new_stream(seed, 0)
+    }
+
+    /// Seed with an explicit stream id; different streams from the same
+    /// seed are independent generators.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64();
+        let s1 = sm.next_u64();
+        let mut smi = SplitMix64::new(stream ^ 0xDA3E_39CB_94B9_5BDB);
+        let i0 = smi.next_u64();
+        let i1 = smi.next_u64();
+        let state = ((s0 as u128) << 64) | s1 as u128;
+        let inc = (((i0 as u128) << 64) | i1 as u128) | 1;
+        let mut rng = Self { state, inc };
+        // Advance once so the first output depends on the whole state.
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a `ln` argument.
+    #[inline]
+    pub fn uniform_pos(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0,1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as u64;
+            }
+            // Rejection zone: only when lo < n do we need the threshold.
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Exponential(1) via inverse CDF.
+    #[inline]
+    pub fn exp1(&mut self) -> f64 {
+        -self.uniform_pos().ln()
+    }
+
+    /// Standard normal via Box–Muller (uses both outputs lazily is not
+    /// worth the state here; we just draw two uniforms per call's pair).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform_pos();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(2, 1) — the exact distribution Algorithm 1 of the paper
+    /// draws `r_i` and `c_i` from. Shape-2 gamma is the sum of two unit
+    /// exponentials: `-ln(U1 * U2)`.
+    #[inline]
+    pub fn gamma2(&mut self) -> f64 {
+        -(self.uniform_pos() * self.uniform_pos()).ln()
+    }
+
+    /// General Gamma(shape, 1) for shape > 0 via Marsaglia–Tsang, with
+    /// the shape<1 boost. Used by the synthetic data generators.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            // Boost: G(a) = G(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            return g * self.uniform_pos().powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform_pos();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Log-normal with parameters of the underlying normal.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Zipf-distributed integer in [1, n] with exponent `s` (s > 0),
+    /// via rejection-inversion (Hörmann–Derflinger; the commons-math
+    /// `RejectionInversionZipfSampler` formulation). O(1) per draw.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        if n == 1 {
+            return 1;
+        }
+        // For s == 1 the integral has a removable singularity; nudge.
+        let s = if (s - 1.0).abs() < 1e-9 { 1.0 + 1e-9 } else { s };
+        // h(x) = x^{-s};  H(x) = (x^{1-s} - 1) / (1 - s)  (antiderivative,
+        // shifted so H(1) = 0);  Hinv(y) = (1 + (1-s) y)^{1/(1-s)}.
+        let h = |x: f64| x.powf(-s);
+        let hi = |x: f64| (x.powf(1.0 - s) - 1.0) / (1.0 - s);
+        let hinv = |y: f64| (1.0 + (1.0 - s) * y).powf(1.0 / (1.0 - s));
+        let h_half = hi(1.5) - 1.0; // H(1.5) - h(1)
+        let h_n = hi(n as f64 + 0.5);
+        // Acceptance shortcut threshold (commons-math `s` constant).
+        let thresh = 2.0 - hinv(hi(2.5) - h(2.0));
+        loop {
+            let u = h_n + self.uniform() * (h_half - h_n);
+            let x = hinv(u);
+            let k = x.round().clamp(1.0, n as f64);
+            if k - x <= thresh || u >= hi(k + 0.5) - h(k) {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (m <= n), order unspecified.
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        if m * 3 > n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(m);
+            return idx;
+        }
+        // Sparse Floyd's algorithm.
+        let mut chosen = std::collections::HashSet::with_capacity(m);
+        let mut out = Vec::with_capacity(m);
+        for j in (n - m)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Draw from a discrete distribution given cumulative weights
+    /// (last element == total). Binary search, O(log n).
+    pub fn discrete_cdf(&mut self, cdf: &[f64]) -> usize {
+        let total = *cdf.last().expect("empty cdf");
+        let x = self.uniform() * total;
+        match cdf.binary_search_by(|p| p.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cdf.len() - 1),
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg64::new_stream(7, 0);
+        let mut b = Pcg64::new_stream(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn pcg_reproducible() {
+        let mut a = Pcg64::new(123);
+        let mut b = Pcg64::new(123);
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Pcg64::new(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.uniform()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 5e-3, "mean {m}");
+        assert!((v - 1.0 / 12.0).abs() < 5e-3, "var {v}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut r = Pcg64::new(2);
+        let n = 7u64;
+        let mut counts = [0usize; 7];
+        let trials = 140_000;
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 0.05 * expect,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp1_moments() {
+        let mut r = Pcg64::new(3);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.exp1()).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 1.0).abs() < 2e-2, "mean {m}");
+        assert!((v - 1.0).abs() < 5e-2, "var {v}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(4);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 1e-2, "mean {m}");
+        assert!((v - 1.0).abs() < 3e-2, "var {v}");
+    }
+
+    #[test]
+    fn gamma2_moments_match_shape2() {
+        // Gamma(2,1): mean 2, var 2.
+        let mut r = Pcg64::new(5);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma2()).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 2.0).abs() < 2e-2, "mean {m}");
+        assert!((v - 2.0).abs() < 1e-1, "var {v}");
+    }
+
+    #[test]
+    fn gamma_general_matches_gamma2_fast_path() {
+        let mut r = Pcg64::new(6);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(2.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 2.0).abs() < 2e-2, "mean {m}");
+        assert!((v - 2.0).abs() < 1e-1, "var {v}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        // Gamma(0.5,1): mean 0.5, var 0.5.
+        let mut r = Pcg64::new(7);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(0.5)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 1e-2, "mean {m}");
+        assert!((v - 0.5).abs() < 5e-2, "var {v}");
+    }
+
+    #[test]
+    fn zipf_bounds_and_monotone_mass() {
+        let mut r = Pcg64::new(8);
+        let n = 1000u64;
+        let mut counts = vec![0usize; n as usize + 1];
+        for _ in 0..100_000 {
+            let k = r.zipf(n, 1.2);
+            assert!((1..=n).contains(&k));
+            counts[k as usize] += 1;
+        }
+        // Rank-1 must dominate rank-10 which must dominate rank-100.
+        assert!(counts[1] > counts[10]);
+        assert!(counts[10] > counts[100]);
+        // Rough Zipf check: p(1)/p(2) ≈ 2^1.2 ≈ 2.3.
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((1.8..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::new(10);
+        for &(n, m) in &[(100usize, 5usize), (100, 80), (10, 10), (1, 1)] {
+            let idx = r.sample_indices(n, m);
+            assert_eq!(idx.len(), m);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), m);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn discrete_cdf_respects_weights() {
+        let mut r = Pcg64::new(11);
+        let cdf = [1.0, 3.0, 6.0]; // weights 1,2,3
+        let mut counts = [0usize; 3];
+        for _ in 0..60_000 {
+            counts[r.discrete_cdf(&cdf)] += 1;
+        }
+        assert!((counts[0] as f64 / 10_000.0 - 1.0).abs() < 0.1);
+        assert!((counts[1] as f64 / 10_000.0 - 2.0).abs() < 0.15);
+        assert!((counts[2] as f64 / 10_000.0 - 3.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Pcg64::new(12);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 1.5) > 0.0);
+        }
+    }
+}

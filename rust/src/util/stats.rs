@@ -1,0 +1,291 @@
+//! Streaming statistics used across the estimation study, the bench
+//! harness, and coordinator metrics.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    /// Sample variance (n-1).
+    pub fn sample_var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Accumulator for estimator quality vs a known truth: tracks empirical
+/// bias and MSE, exactly what Figures 4–6 of the paper plot.
+#[derive(Debug, Clone)]
+pub struct EstimatorError {
+    truth: f64,
+    err: Online,
+    sq: Online,
+}
+
+impl EstimatorError {
+    pub fn new(truth: f64) -> Self {
+        Self { truth, err: Online::new(), sq: Online::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, estimate: f64) {
+        let e = estimate - self.truth;
+        self.err.push(e);
+        self.sq.push(e * e);
+    }
+
+    pub fn truth(&self) -> f64 {
+        self.truth
+    }
+    /// Empirical bias: mean(est) - truth.
+    pub fn bias(&self) -> f64 {
+        self.err.mean()
+    }
+    /// Empirical mean squared error.
+    pub fn mse(&self) -> f64 {
+        self.sq.mean()
+    }
+    pub fn count(&self) -> u64 {
+        self.err.count()
+    }
+}
+
+/// Exact percentile over a recorded sample (used by coordinator metrics:
+/// p50/p95/p99 latency). Stores all values; fine at service scale here.
+#[derive(Debug, Clone, Default)]
+pub struct Reservoir {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Reservoir {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Percentile in [0,100] by linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi.min(n - 1)] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            f64::NAN
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+}
+
+/// Binary/multiclass accuracy counter.
+#[derive(Debug, Clone, Default)]
+pub struct Accuracy {
+    correct: u64,
+    total: u64,
+}
+
+impl Accuracy {
+    pub fn push(&mut self, predicted: i32, actual: i32) {
+        if predicted == actual {
+            self.correct += 1;
+        }
+        self.total += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    pub fn percent(&self) -> f64 {
+        self.value() * 100.0
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((o.mean() - mean).abs() < 1e-12);
+        assert!((o.var() - var).abs() < 1e-12);
+        assert_eq!(o.min(), -3.0);
+        assert_eq!(o.max(), 16.5);
+        assert_eq!(o.count(), 6);
+    }
+
+    #[test]
+    fn online_merge_equals_single_pass() {
+        let xs: Vec<f64> = (0..101).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Online::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Online::new();
+        let mut b = Online::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn estimator_error_bias_mse() {
+        let mut e = EstimatorError::new(0.5);
+        for est in [0.4, 0.6, 0.5, 0.7, 0.3] {
+            e.push(est);
+        }
+        assert!((e.bias() - 0.0).abs() < 1e-12);
+        let mse = (0.01 + 0.01 + 0.0 + 0.04 + 0.04) / 5.0;
+        assert!((e.mse() - mse).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut r = Reservoir::new();
+        for i in 1..=100 {
+            r.push(i as f64);
+        }
+        assert!((r.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((r.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((r.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        let mut r = Reservoir::new();
+        assert!(r.percentile(50.0).is_nan());
+        r.push(7.0);
+        assert_eq!(r.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let mut a = Accuracy::default();
+        a.push(1, 1);
+        a.push(2, 1);
+        a.push(0, 0);
+        a.push(3, 3);
+        assert!((a.value() - 0.75).abs() < 1e-12);
+        assert_eq!(a.total(), 4);
+    }
+}

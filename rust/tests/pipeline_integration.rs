@@ -1,0 +1,197 @@
+//! End-to-end coordinator integration: the PJRT-backed hashing service
+//! must agree with the native backend (up to rare f32/f64 argmin flips),
+//! and offline-trained weights must serve identically through the fused
+//! `hash_score` artifact.
+//!
+//! Skips when `make artifacts` has not run.
+
+use std::time::Duration;
+
+use minmax::coordinator::{Backend, HashService, ServiceConfig};
+use minmax::runtime::default_artifacts_dir;
+use minmax::util::rng::Pcg64;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_service_agrees_with_native_service() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    // cws_hash_small artifact: B=16, D=64, K=64 (see aot.py VARIANTS).
+    let cfg = ServiceConfig {
+        seed: 99,
+        k: 64,
+        dim: 64,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 1024,
+    };
+    let pjrt = HashService::start(
+        cfg.clone(),
+        Backend::Pjrt { artifacts_dir: dir, artifact: "cws_hash_small".into() },
+    );
+    let native = HashService::start(cfg, Backend::Native);
+
+    let mut rng = Pcg64::new(4242);
+    let n = 48;
+    let vectors: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..64)
+                .map(|_| {
+                    if rng.uniform() < 0.4 {
+                        0.0
+                    } else {
+                        rng.lognormal(0.0, 1.0) as f32
+                    }
+                })
+                .collect();
+            if !v.iter().any(|&x| x > 0.0) {
+                v[0] = 1.0;
+            }
+            v
+        })
+        .collect();
+
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (i, v) in vectors.iter().enumerate() {
+        let a = pjrt.hash_blocking(i as u64, v.clone()).unwrap();
+        let b = native.hash_blocking(i as u64, v.clone()).unwrap();
+        assert_eq!(a.samples.len(), 64);
+        assert_eq!(b.samples.len(), 64);
+        for (sa, sb) in a.samples.iter().zip(&b.samples) {
+            total += 1;
+            if sa.i_star == sb.i_star {
+                agree += 1;
+            }
+        }
+    }
+    assert!(
+        agree as f64 >= 0.99 * total as f64,
+        "PJRT vs native agreement {agree}/{total}"
+    );
+
+    let snap = pjrt.metrics().snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert!(snap.batches >= 1);
+    pjrt.shutdown();
+    native.shutdown();
+}
+
+#[test]
+fn pjrt_service_batches_under_load() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg = ServiceConfig {
+        seed: 7,
+        k: 64,
+        dim: 64,
+        max_batch: 16,
+        max_wait: Duration::from_millis(10),
+        queue_cap: 4096,
+    };
+    let svc = HashService::start(
+        cfg,
+        Backend::Pjrt { artifacts_dir: dir, artifact: "cws_hash_small".into() },
+    );
+    // Fire a burst, then collect: the dynamic batcher should aggregate.
+    let v: Vec<f32> = (1..=64).map(|i| i as f32 / 8.0).collect();
+    let rxs: Vec<_> = (0..64).map(|i| svc.submit(i, v.clone()).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.samples.len(), 64);
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.requests, 64);
+    assert!(
+        snap.batches < 64,
+        "expected batching, got {} batches for 64 requests",
+        snap.batches
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn offline_weights_serve_identically_via_hash_score_artifact() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    use minmax::coordinator::{export_scorer_weights, hash_dataset, PipelineConfig};
+    use minmax::data::synth::{generate, SynthConfig};
+    use minmax::runtime::{literal_f32, Engine};
+    use minmax::svm::{LinearOvR, LinearSvmParams};
+
+    // hash_score artifact: B=64, D=256, K=128, bits=8, classes=16.
+    let engine = Engine::load_subset(&dir, &["hash_score"]).unwrap();
+    let spec = engine.spec("hash_score").unwrap().clone();
+    let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.inputs[1].shape[0];
+    let codes = spec.inputs[4].shape[1];
+    let classes_cap = spec.inputs[4].shape[2];
+
+    // Build a dataset matching the artifact's D by zero-padding youtube (10 classes)
+    // (64-dim) into D=256.
+    let mut ds =
+        generate("youtube", SynthConfig { seed: 31, n_train: 150, n_test: b }).unwrap();
+    let pad = |m: &minmax::data::Matrix| -> minmax::data::Matrix {
+        let dense = m.to_dense();
+        let mut out = minmax::data::Dense::zeros(dense.rows(), d);
+        for i in 0..dense.rows() {
+            out.row_mut(i)[..dense.cols()].copy_from_slice(dense.row(i));
+        }
+        minmax::data::Matrix::Dense(out)
+    };
+    ds.train_x = pad(&ds.train_x);
+    ds.test_x = pad(&ds.test_x);
+    assert!(ds.n_classes() <= classes_cap);
+
+    let seed = 555u64;
+    let cfg = PipelineConfig { seed, k, i_bits: 8, t_bits: 0 };
+    let hashed = hash_dataset(&ds, &cfg);
+    let c = 1.0;
+    let w = export_scorer_weights(&hashed.train, &ds.train_y, classes_cap, &hashed.expansion, c);
+
+    // Native predictions (OvR argmax on expanded features).
+    let p = LinearSvmParams { c, ..Default::default() };
+    let model = LinearOvR::train(&hashed.train, &ds.train_y, classes_cap, &p);
+    let native_preds: Vec<i32> =
+        (0..hashed.test.rows()).map(|i| model.predict(hashed.test.row(i))).collect();
+
+    // PJRT serving: one fused hash+score execute on the raw test batch.
+    let (r, cc, beta) = minmax::cws::materialize_params(seed, d, k);
+    let test_dense = ds.test_x.to_dense();
+    let outs = engine
+        .run_decoded(
+            "hash_score",
+            &[
+                literal_f32(test_dense.data(), &[b, d]).unwrap(),
+                literal_f32(&r, &[k, d]).unwrap(),
+                literal_f32(&cc, &[k, d]).unwrap(),
+                literal_f32(&beta, &[k, d]).unwrap(),
+                literal_f32(&w, &[k, codes, classes_cap]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let scores = outs[0].as_f32().unwrap();
+    let mut agree = 0usize;
+    for i in 0..b {
+        let row = &scores[i * classes_cap..(i + 1) * classes_cap];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        if pred == native_preds[i] {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree * 100 >= b * 95,
+        "serving path agrees on {agree}/{b} predictions"
+    );
+}

@@ -1,0 +1,233 @@
+//! Integration tests across the AOT boundary: the PJRT executables
+//! (python-lowered Pallas kernels) must agree with the rust-native
+//! implementations on identical inputs and randomness.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts directory is absent so `cargo test` works standalone.
+
+use minmax::cws::{materialize_params, CwsHasher};
+use minmax::data::dense::Dense;
+use minmax::data::Matrix;
+use minmax::kernels::matrix::kernel_matrix;
+use minmax::kernels::Kernel;
+use minmax::runtime::{default_artifacts_dir, literal_f32, Engine};
+use minmax::util::rng::Pcg64;
+
+fn engine_or_skip(names: &[&str]) -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load_subset_hack(&dir, names))
+}
+
+// Small helper trait hack so tests read naturally without re-exporting
+// internals: Engine::load_subset returns Result; unwrap here.
+trait LoadHack {
+    fn load_subset_hack(dir: &std::path::Path, names: &[&str]) -> Engine;
+}
+impl LoadHack for Engine {
+    fn load_subset_hack(dir: &std::path::Path, names: &[&str]) -> Engine {
+        Engine::load_subset(dir, names).expect("engine load")
+    }
+}
+
+fn random_batch(rng: &mut Pcg64, b: usize, d: usize, zero_frac: f64) -> Vec<f32> {
+    let mut x: Vec<f32> = (0..b * d)
+        .map(|_| {
+            if rng.uniform() < zero_frac {
+                0.0
+            } else {
+                rng.lognormal(0.0, 1.0) as f32
+            }
+        })
+        .collect();
+    // no all-zero rows
+    for row in 0..b {
+        if x[row * d..(row + 1) * d].iter().all(|&v| v == 0.0) {
+            x[row * d] = 1.0;
+        }
+    }
+    x
+}
+
+#[test]
+fn pjrt_cws_matches_rust_native() {
+    let Some(engine) = engine_or_skip(&["cws_hash_small"]) else { return };
+    let spec = engine.spec("cws_hash_small").unwrap().clone();
+    let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.inputs[1].shape[0];
+
+    let seed = 20150704u64;
+    let mut rng = Pcg64::new(9);
+    let x = random_batch(&mut rng, b, d, 0.4);
+    let (r, c, beta) = materialize_params(seed, d, k);
+
+    let outs = engine
+        .run_decoded(
+            "cws_hash_small",
+            &[
+                literal_f32(&x, &[b, d]).unwrap(),
+                literal_f32(&r, &[k, d]).unwrap(),
+                literal_f32(&c, &[k, d]).unwrap(),
+                literal_f32(&beta, &[k, d]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let i_star = outs[0].as_i32().unwrap();
+    let t_star = outs[1].as_i32().unwrap();
+    assert_eq!(i_star.len(), b * k);
+
+    // Rust-native hashing with the same counter-based randomness. The
+    // native path computes in f64, the AOT path in f32 — argmin flips
+    // from rounding are possible but must be rare (<1%).
+    let hasher = CwsHasher::new(seed, k);
+    let mut mismatches = 0usize;
+    let mut t_mismatches = 0usize;
+    for row in 0..b {
+        let samples = hasher.hash_dense(&x[row * d..(row + 1) * d]);
+        for (j, s) in samples.iter().enumerate() {
+            if i_star[row * k + j] != s.i_star as i32 {
+                mismatches += 1;
+            } else if t_star[row * k + j] as i64 != s.t_star {
+                t_mismatches += 1;
+            }
+        }
+    }
+    let total = b * k;
+    assert!(
+        (mismatches as f64) < 0.01 * total as f64,
+        "i* mismatch rate {mismatches}/{total}"
+    );
+    assert!(
+        (t_mismatches as f64) < 0.01 * total as f64,
+        "t* mismatch rate {t_mismatches}/{total}"
+    );
+}
+
+#[test]
+fn pjrt_minmax_block_matches_rust_kernels() {
+    let Some(engine) = engine_or_skip(&["minmax_block"]) else { return };
+    let spec = engine.spec("minmax_block").unwrap().clone();
+    let (m, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[0];
+
+    let mut rng = Pcg64::new(11);
+    let x = random_batch(&mut rng, m, d, 0.3);
+    let y = random_batch(&mut rng, n, d, 0.3);
+
+    let outs = engine
+        .run_decoded(
+            "minmax_block",
+            &[literal_f32(&x, &[m, d]).unwrap(), literal_f32(&y, &[n, d]).unwrap()],
+        )
+        .unwrap();
+    let k_pjrt = outs[0].as_f32().unwrap();
+
+    let xm = Matrix::Dense(Dense::from_vec(m, d, x));
+    let ym = Matrix::Dense(Dense::from_vec(n, d, y));
+    let k_native = kernel_matrix(Kernel::MinMax, &xm, &ym);
+    for i in 0..m {
+        for j in 0..n {
+            let a = k_pjrt[i * n + j];
+            let b_ = k_native.get(i, j);
+            assert!((a - b_).abs() < 1e-5, "({i},{j}): pjrt {a} vs native {b_}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_linear_block_matches_dot() {
+    let Some(engine) = engine_or_skip(&["linear_block"]) else { return };
+    let spec = engine.spec("linear_block").unwrap().clone();
+    let (m, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[0];
+    let mut rng = Pcg64::new(13);
+    let x = random_batch(&mut rng, m, d, 0.0);
+    let y = random_batch(&mut rng, n, d, 0.0);
+    let outs = engine
+        .run_decoded(
+            "linear_block",
+            &[literal_f32(&x, &[m, d]).unwrap(), literal_f32(&y, &[n, d]).unwrap()],
+        )
+        .unwrap();
+    let k = outs[0].as_f32().unwrap();
+    for i in 0..m {
+        for j in 0..n {
+            let want: f64 = (0..d).map(|t| x[i * d + t] as f64 * y[j * d + t] as f64).sum();
+            let got = k[i * n + j] as f64;
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "({i},{j}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_hash_score_matches_native_scoring() {
+    let Some(engine) = engine_or_skip(&["hash_score"]) else { return };
+    let spec = engine.spec("hash_score").unwrap().clone();
+    let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.inputs[1].shape[0];
+    let codes = spec.inputs[4].shape[1];
+    let classes = spec.inputs[4].shape[2];
+
+    let seed = 77u64;
+    let mut rng = Pcg64::new(15);
+    let x = random_batch(&mut rng, b, d, 0.2);
+    let (r, c, beta) = materialize_params(seed, d, k);
+    let w: Vec<f32> = (0..k * codes * classes).map(|_| rng.normal() as f32).collect();
+
+    let outs = engine
+        .run_decoded(
+            "hash_score",
+            &[
+                literal_f32(&x, &[b, d]).unwrap(),
+                literal_f32(&r, &[k, d]).unwrap(),
+                literal_f32(&c, &[k, d]).unwrap(),
+                literal_f32(&beta, &[k, d]).unwrap(),
+                literal_f32(&w, &[k, codes, classes]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let scores = outs[0].as_f32().unwrap();
+    assert_eq!(scores.len(), b * classes);
+
+    // Native: hash, code, gather-sum. Tolerate rare argmin flips by
+    // checking that the vast majority of rows agree closely.
+    let hasher = CwsHasher::new(seed, k);
+    let mut rows_ok = 0usize;
+    for row in 0..b {
+        let samples = hasher.hash_dense(&x[row * d..(row + 1) * d]);
+        let mut want = vec![0.0f64; classes];
+        for (j, s) in samples.iter().enumerate() {
+            let code = (s.i_star as usize) % codes;
+            for cl in 0..classes {
+                want[cl] += w[(j * codes + code) * classes + cl] as f64;
+            }
+        }
+        let ok = (0..classes).all(|cl| {
+            (scores[row * classes + cl] as f64 - want[cl]).abs() < 1e-3 * (1.0 + want[cl].abs())
+        });
+        if ok {
+            rows_ok += 1;
+        }
+    }
+    assert!(rows_ok * 100 >= b * 95, "only {rows_ok}/{b} rows agree");
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(engine) = engine_or_skip(&["minmax_block"]) else { return };
+    // Wrong arity.
+    let x = literal_f32(&[1.0; 4], &[2, 2]).unwrap();
+    assert!(engine.run("minmax_block", &[x]).is_err());
+    // Wrong element count.
+    let bad1 = literal_f32(&[1.0; 4], &[2, 2]).unwrap();
+    let bad2 = literal_f32(&[1.0; 4], &[2, 2]).unwrap();
+    assert!(engine.run("minmax_block", &[bad1, bad2]).is_err());
+    // Unknown name.
+    assert!(engine.run("nope", &[]).is_err());
+}
