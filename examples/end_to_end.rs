@@ -20,12 +20,12 @@
 
 use std::time::Duration;
 
-use minmax::coordinator::{Backend, HashService, PipelineConfig, ServiceConfig};
+use minmax::coordinator::{HashService, NativeBackend, PjrtBackend, ServiceConfig, SketcherBackend};
 use minmax::cws::CwsSample;
 use minmax::data::synth::{generate, SynthConfig};
 use minmax::data::{Dataset, Matrix};
 use minmax::features::Expansion;
-use minmax::kernels::Kernel;
+use minmax::kernels::KernelKind;
 use minmax::svm::{c_grid, kernel_svm_sweep, linear_svm_accuracy};
 use minmax::util::table::{fnum, Table};
 
@@ -109,18 +109,19 @@ fn main() {
 
     // --- Baselines: exact kernel SVMs (the paper's dashed curves).
     let cs = c_grid(5);
-    let mm = kernel_svm_sweep(&ds, Kernel::MinMax, &cs).best_accuracy();
-    let lin = kernel_svm_sweep(&ds, Kernel::Linear, &cs).best_accuracy();
+    let mm = kernel_svm_sweep(&ds, KernelKind::MinMax, &cs).best_accuracy();
+    let lin = kernel_svm_sweep(&ds, KernelKind::Linear, &cs).best_accuracy();
     println!("baselines: min-max kernel SVM {:.1}%   linear SVM {:.1}%", 100.0 * mm, 100.0 * lin);
 
     // --- The coordinator service (PJRT if artifacts exist).
     let artifacts = minmax::runtime::default_artifacts_dir();
-    let backend = if artifacts.join("manifest.json").exists() {
+    let use_pjrt = minmax::runtime::pjrt_enabled() && artifacts.join("manifest.json").exists();
+    let backend: Box<dyn SketcherBackend> = if use_pjrt {
         println!("backend: PJRT (artifact cws_hash)");
-        Backend::Pjrt { artifacts_dir: artifacts, artifact: "cws_hash".into() }
+        Box::new(PjrtBackend::new(artifacts, "cws_hash"))
     } else {
-        println!("backend: native (run `make artifacts` for the PJRT path)");
-        Backend::Native
+        println!("backend: native (build with --features pjrt and run `make artifacts` for the PJRT path)");
+        Box::new(NativeBackend)
     };
     let svc = HashService::start(
         ServiceConfig {
@@ -132,7 +133,8 @@ fn main() {
             queue_cap: 512,
         },
         backend,
-    );
+    )
+    .expect("start hashing service");
 
     let train_samples = hash_via_service(&svc, &ds.train_x, 0);
     let test_samples = hash_via_service(&svc, &ds.test_x, 1_000_000);

@@ -1,47 +1,66 @@
-//! Quickstart: the library in ~60 lines.
+//! Quickstart: the library in ~70 lines, via `minmax::prelude`.
 //!
-//! 1. Compute min-max similarities exactly (Eq. 1).
-//! 2. Hash vectors with 0-bit CWS and see the collision fraction
-//!    estimate the kernel (Eqs. 7–8).
-//! 3. Train a min-max kernel SVM vs a linear SVM on a small nonlinear
-//!    dataset and compare accuracy (the Table-1 effect).
+//! 1. Compute min-max similarities exactly (Eq. 1) with the `Kernel`
+//!    trait.
+//! 2. Hash vectors with the kernel's own `Sketcher` linearization and
+//!    see the collision fraction estimate the kernel (Eqs. 7–8).
+//! 3. Compose the full §4 recipe with the `Pipeline` builder —
+//!    scale → sketch → expand → linear SVM — and compare it against the
+//!    exact min-max kernel SVM and the linear SVM (the Table-1 effect).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use minmax::cws::{collision_fraction, CwsHasher, Scheme};
-use minmax::data::synth::{generate, SynthConfig};
-use minmax::kernels::{dense_minmax, Kernel};
-use minmax::svm::{c_grid, kernel_svm_sweep};
+use minmax::prelude::*;
 
 fn main() {
-    // --- 1. Exact kernel values.
+    // --- 1. Exact kernel values, via the trait surface.
     let u = [1.0f32, 0.5, 0.0, 2.0, 0.25];
     let v = [0.5f32, 0.5, 1.0, 2.0, 0.25];
-    let kmm = dense_minmax(&u, &v);
+    let minmax_kernel = KernelKind::MinMax;
+    let kmm = Kernel::eval_dense(&minmax_kernel, &u, &v);
     println!("K_MM(u, v) = {kmm:.4}");
 
-    // --- 2. 0-bit CWS estimates it from hashes alone.
+    // --- 2. The kernel's hashed linearization estimates it from
+    //        samples alone: any `Sketcher` produces (i*, t*) streams.
     let k = 2048;
-    let hasher = CwsHasher::new(2015, k);
-    let (su, sv) = (hasher.hash_dense(&u), hasher.hash_dense(&v));
+    let sketcher = Kernel::sketcher(&minmax_kernel, 2015, k).expect("min-max is linearizable");
+    let (su, sv) = (sketcher.sketch_dense(&u), sketcher.sketch_dense(&v));
     let full = collision_fraction(Scheme::FULL, &su, &sv);
     let zero = collision_fraction(Scheme::ZERO_BIT, &su, &sv);
     println!("collision estimates with k={k}:  full-scheme {full:.4}   0-bit {zero:.4}");
     assert!((zero - kmm).abs() < 0.05);
 
-    // --- 3. Min-max kernel SVM beats linear SVM on nonlinear data.
+    // --- 3. The composable pipeline on nonlinear data.
     let ds = generate("letter", SynthConfig { seed: 7, n_train: 200, n_test: 300 })
         .expect("generate dataset");
     let cs = c_grid(5);
-    let mm = kernel_svm_sweep(&ds, Kernel::MinMax, &cs);
-    let lin = kernel_svm_sweep(&ds, Kernel::Linear, &cs);
+
+    // Baselines: exact kernel SVMs (the paper's dashed curves).
+    let mm = kernel_svm_sweep(&ds, KernelKind::MinMax, &cs);
+    let lin = kernel_svm_sweep(&ds, KernelKind::Linear, &cs);
+
+    // The hashed pipeline: fit/predict in one object.
+    let mut pipe = Pipeline::builder()
+        .seed(7)
+        .samples(512)
+        .i_bits(8)
+        .scaling(Scaling::None)
+        .cost(1.0)
+        .build()
+        .expect("valid pipeline config");
+    pipe.fit(&ds.train_x, &ds.train_y).expect("fit");
+    let hashed_acc = pipe.accuracy(&ds.test_x, &ds.test_y).expect("predict");
+
     println!(
-        "letter analog ({} train / {} test): min-max SVM {:.1}%  vs  linear SVM {:.1}%",
+        "letter analog ({} train / {} test): min-max SVM {:.1}%  vs  linear SVM {:.1}%  vs  \
+         hashed pipeline (k=512, b=8) {:.1}%",
         ds.n_train(),
         ds.n_test(),
         100.0 * mm.best_accuracy(),
-        100.0 * lin.best_accuracy()
+        100.0 * lin.best_accuracy(),
+        100.0 * hashed_acc
     );
     assert!(mm.best_accuracy() > lin.best_accuracy());
+    assert!(hashed_acc > lin.best_accuracy());
     println!("quickstart OK");
 }

@@ -27,7 +27,11 @@ fn pad_cols(m: &Matrix, d: usize) -> Matrix {
     Matrix::Dense(out)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    if !minmax::runtime::pjrt_enabled() {
+        eprintln!("built without the `pjrt` feature — rebuild with `--features pjrt`");
+        std::process::exit(1);
+    }
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts not built — run `make artifacts` first");
@@ -43,8 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Offline: train on the youtube analog, export weights.
     let seed = 4242u64;
-    let raw = generate("youtube", SynthConfig { seed, n_train: 400, n_test: 1024 })
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let raw = generate("youtube", SynthConfig { seed, n_train: 400, n_test: 1024 })?;
     let ds = Dataset {
         name: raw.name.clone(),
         train_x: pad_cols(&raw.train_x, d),
@@ -54,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     };
     let pcfg = PipelineConfig { seed, k, i_bits: 8, t_bits: 0 };
     let t0 = Instant::now();
-    let hashed = hash_dataset(&ds, &pcfg);
+    let hashed = hash_dataset(&ds, &pcfg)?;
     let w = export_scorer_weights(&hashed.train, &ds.train_y, classes, &hashed.expansion, 1.0);
     println!("offline train: {:.2}s ({} train rows)", t0.elapsed().as_secs_f64(), ds.n_train());
 

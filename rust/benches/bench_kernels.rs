@@ -8,7 +8,7 @@ use minmax::data::dense::Dense;
 use minmax::data::sparse::Csr;
 use minmax::data::Matrix;
 use minmax::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
-use minmax::kernels::Kernel;
+use minmax::kernels::KernelKind;
 use minmax::util::rng::Pcg64;
 
 fn random_dense(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Dense {
@@ -34,7 +34,7 @@ fn main() {
     // Pairwise kernel evaluation (per-element costs).
     let a = random_dense(1, 1024, 0.0, 1);
     let b = random_dense(1, 1024, 0.0, 2);
-    for kern in [Kernel::Linear, Kernel::MinMax, Kernel::Intersection, Kernel::Chi2] {
+    for kern in [KernelKind::Linear, KernelKind::MinMax, KernelKind::Intersection, KernelKind::Chi2] {
         r.bench_with_throughput(
             &format!("pairwise/{}/d1024", kern.name()),
             Some((1024.0, "elem")),
@@ -47,7 +47,7 @@ fn main() {
     // Sparse merge-join path at 10% density.
     let sa = Csr::from_dense(&random_dense(1, 4096, 0.9, 3));
     let sb = Csr::from_dense(&random_dense(1, 4096, 0.9, 4));
-    for kern in [Kernel::Linear, Kernel::MinMax, Kernel::Resemblance] {
+    for kern in [KernelKind::Linear, KernelKind::MinMax, KernelKind::Resemblance] {
         r.bench_with_throughput(
             &format!("pairwise-sparse/{}/d4096@10%", kern.name()),
             Some(((sa.nnz() + sb.nnz()) as f64, "nnz")),
@@ -62,7 +62,7 @@ fn main() {
     let y = random_dense(128, 64, 0.0, 6);
     let mx = Matrix::Dense(x);
     let my = Matrix::Dense(y);
-    for kern in [Kernel::Linear, Kernel::MinMax] {
+    for kern in [KernelKind::Linear, KernelKind::MinMax] {
         r.bench_with_throughput(
             &format!("matrix/{}/128x128xD64", kern.name()),
             Some(((128 * 128) as f64, "pair")),
@@ -77,7 +77,7 @@ fn main() {
         "matrix-sym/min-max/128x128xD64",
         Some(((128 * 129 / 2) as f64, "pair")),
         || {
-            black_box(kernel_matrix_sym(Kernel::MinMax, &mx));
+            black_box(kernel_matrix_sym(KernelKind::MinMax, &mx));
         },
     );
 

@@ -9,7 +9,7 @@
 use std::time::Duration;
 
 use minmax::bench::{black_box, Runner};
-use minmax::coordinator::{Backend, HashService, ServiceConfig};
+use minmax::coordinator::{HashService, NativeBackend, PjrtBackend, ServiceConfig};
 use minmax::runtime::default_artifacts_dir;
 use minmax::util::rng::Pcg64;
 
@@ -33,8 +33,9 @@ fn main() {
             max_wait: Duration::from_micros(200),
             queue_cap: 4096,
         },
-        Backend::Native,
-    );
+        NativeBackend,
+    )
+    .expect("start native service");
     let v = random_vec(dim, 2);
     let mut id = 0u64;
     r.bench_with_throughput("service-native/hash_blocking/D256k128", Some((1.0, "req")), || {
@@ -59,7 +60,7 @@ fn main() {
 
     // PJRT-backed service (skipped without artifacts).
     let dir = default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    if minmax::runtime::pjrt_enabled() && dir.join("manifest.json").exists() {
         let svc = HashService::start(
             ServiceConfig {
                 seed: 1,
@@ -69,8 +70,9 @@ fn main() {
                 max_wait: Duration::from_micros(200),
                 queue_cap: 4096,
             },
-            Backend::Pjrt { artifacts_dir: dir.clone(), artifact: "cws_hash".into() },
-        );
+            PjrtBackend::new(dir.clone(), "cws_hash"),
+        )
+        .expect("start pjrt service");
         r.bench_with_throughput("service-pjrt/burst64/D256k128", Some((64.0, "req")), || {
             let rxs: Vec<_> = (0..64)
                 .map(|i| loop {
@@ -110,7 +112,7 @@ fn main() {
             },
         );
     } else {
-        eprintln!("skipping PJRT benches: run `make artifacts` first");
+        eprintln!("skipping PJRT benches: build with --features pjrt and run `make artifacts`");
     }
 
     r.save("bench_pipeline");

@@ -8,7 +8,7 @@ use minmax::coordinator::{hash_dataset, PipelineConfig};
 use minmax::data::synth::{generate, SynthConfig};
 use minmax::data::Matrix;
 use minmax::kernels::matrix::kernel_matrix_sym;
-use minmax::kernels::Kernel;
+use minmax::kernels::KernelKind;
 use minmax::svm::{KernelSvmParams, LinearSvmParams};
 
 fn main() {
@@ -16,7 +16,7 @@ fn main() {
 
     // Binary kernel-SVM training on a precomputed Gram (n=256).
     let ds = generate("ijcnn", SynthConfig { seed: 1, n_train: 256, n_test: 10 }).unwrap();
-    let gram = kernel_matrix_sym(Kernel::MinMax, &ds.train_x);
+    let gram = kernel_matrix_sym(KernelKind::MinMax, &ds.train_x);
     let y: Vec<i32> = ds.train_y.iter().map(|&c| if c == 0 { 1 } else { -1 }).collect();
     r.bench_with_throughput("kernel-svm/train/n256", Some((256.0, "row")), || {
         black_box(minmax::svm::kernel::train_binary(
@@ -31,13 +31,13 @@ fn main() {
         "kernel-svm/gram/minmax/n256xD24",
         Some(((256 * 257 / 2) as f64, "pair")),
         || {
-            black_box(kernel_matrix_sym(Kernel::MinMax, &ds.train_x));
+            black_box(kernel_matrix_sym(KernelKind::MinMax, &ds.train_x));
         },
     );
 
     // Linear SVM on hashed CWS features (Figure 7's inner loop).
     let ds2 = generate("letter", SynthConfig { seed: 2, n_train: 300, n_test: 10 }).unwrap();
-    let hashed = hash_dataset(&ds2, &PipelineConfig::new(3, 128, 8));
+    let hashed = hash_dataset(&ds2, &PipelineConfig::new(3, 128, 8)).unwrap();
     let y2: Vec<i32> = ds2.train_y.iter().map(|&c| if c == 0 { 1 } else { -1 }).collect();
     r.bench_with_throughput(
         "linear-svm/train/n300/k128b8",

@@ -1,0 +1,257 @@
+//! Service backends: how a [`super::service::HashService`] obtains the
+//! [`Sketcher`] its worker thread runs.
+//!
+//! The old design was a closed `Backend` enum the worker matched on;
+//! this is the open replacement. A [`SketcherBackend`] is a **factory**
+//! shipped into the worker thread (factories are `Send`; the sketchers
+//! they build need not be — the PJRT client is thread-bound, and the
+//! worker exclusively owns whatever it constructs). Third-party
+//! backends plug in without touching the coordinator: implement the
+//! trait, or just pass a closure
+//! `|cfg: &ServiceConfig| -> Result<Box<dyn Sketcher>, String>`.
+//!
+//! The two built-in impls mirror the old enum variants:
+//!
+//! * [`NativeBackend`] — rust-native ICWS with the `(r, c, β)` grid
+//!   materialized once per service (any D, any k);
+//! * [`PjrtBackend`] — the AOT `cws_hash*` artifact on the PJRT CPU
+//!   client, wrapped as [`PjrtSketcher`] (fixed B, D, K; same
+//!   counter-based randomness as the native path).
+
+use std::path::PathBuf;
+
+use crate::cws::{materialize_params, CwsHasher, CwsSample};
+use crate::runtime::{literal_f32, Engine, Literal};
+use crate::sketch::Sketcher;
+
+use super::service::ServiceConfig;
+
+/// Factory for the sketcher a service worker thread will own. `build`
+/// runs ON the worker thread, so non-`Send` sketchers (PJRT) are fine.
+pub trait SketcherBackend: Send + 'static {
+    /// Label for logs/metrics.
+    fn label(&self) -> &'static str;
+
+    /// Construct the sketcher for this service configuration.
+    fn build(self: Box<Self>, cfg: &ServiceConfig) -> Result<Box<dyn Sketcher>, String>;
+}
+
+/// Boxed trait objects are backends too, so callers can pick one at
+/// runtime: `let b: Box<dyn SketcherBackend> = …; HashService::start(cfg, b)`.
+impl SketcherBackend for Box<dyn SketcherBackend> {
+    fn label(&self) -> &'static str {
+        (**self).label()
+    }
+
+    fn build(self: Box<Self>, cfg: &ServiceConfig) -> Result<Box<dyn Sketcher>, String> {
+        (*self).build(cfg)
+    }
+}
+
+/// Closures are backends: `HashService::start(cfg, |cfg| … )`.
+impl<F> SketcherBackend for F
+where
+    F: FnOnce(&ServiceConfig) -> Result<Box<dyn Sketcher>, String> + Send + 'static,
+{
+    fn label(&self) -> &'static str {
+        "custom"
+    }
+
+    fn build(self: Box<Self>, cfg: &ServiceConfig) -> Result<Box<dyn Sketcher>, String> {
+        (*self)(cfg)
+    }
+}
+
+/// Rust-native ICWS: amortizes `(r, c, β)` materialization across the
+/// whole service lifetime (identical output to per-row hashing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl SketcherBackend for NativeBackend {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn build(self: Box<Self>, cfg: &ServiceConfig) -> Result<Box<dyn Sketcher>, String> {
+        Ok(Box::new(CwsHasher::new(cfg.seed, cfg.k).dense_batch(cfg.dim)))
+    }
+}
+
+/// PJRT engine over `artifacts_dir`, running `artifact` (which fixes
+/// B, D, K at AOT time; D and K must match the service config).
+#[derive(Debug, Clone)]
+pub struct PjrtBackend {
+    pub artifacts_dir: PathBuf,
+    pub artifact: String,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, artifact: impl Into<String>) -> Self {
+        Self { artifacts_dir: artifacts_dir.into(), artifact: artifact.into() }
+    }
+}
+
+impl SketcherBackend for PjrtBackend {
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn build(self: Box<Self>, cfg: &ServiceConfig) -> Result<Box<dyn Sketcher>, String> {
+        let s = PjrtSketcher::load(&self.artifacts_dir, &self.artifact, cfg.seed)?;
+        if s.dim() != cfg.dim {
+            return Err(format!("artifact D {} != service dim {}", s.dim(), cfg.dim));
+        }
+        if Sketcher::k(&s) != cfg.k {
+            return Err(format!("artifact K {} != service k {}", Sketcher::k(&s), cfg.k));
+        }
+        Ok(Box::new(s))
+    }
+}
+
+/// The AOT `cws_hash` executable behind the [`Sketcher`] interface:
+/// fixed-shape batches, parameters pre-materialized as device literals
+/// from the SAME counter-based randomness as [`CwsHasher`] — so which
+/// backend a deployment uses is a pure throughput/operational choice
+/// (validated by `rust/tests/pipeline_integration.rs`).
+///
+/// NOT `Send` (the PJRT client is thread-bound); construct it on the
+/// thread that will run it, normally via [`PjrtBackend`].
+pub struct PjrtSketcher {
+    engine: Engine,
+    artifact: String,
+    seed: u64,
+    batch: usize,
+    dim: usize,
+    k: usize,
+    params: (Literal, Literal, Literal),
+}
+
+impl PjrtSketcher {
+    /// Compile (once) and bind `artifact` from `artifacts_dir`. Fails
+    /// when artifacts are missing or the build lacks the `pjrt` feature.
+    pub fn load(artifacts_dir: &std::path::Path, artifact: &str, seed: u64) -> Result<Self, String> {
+        let engine = Engine::load_subset(artifacts_dir, &[artifact])
+            .map_err(|e| format!("loading PJRT engine: {e}"))?;
+        let spec = engine.spec(artifact)?.clone();
+        let (batch, dim) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let k = spec.inputs[1].shape[0];
+        let (r, c, beta) = materialize_params(seed, dim, k);
+        let params = (
+            literal_f32(&r, &[k, dim])?,
+            literal_f32(&c, &[k, dim])?,
+            literal_f32(&beta, &[k, dim])?,
+        );
+        Ok(Self { engine, artifact: artifact.to_string(), seed, batch, dim, k, params })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The artifact's fixed batch size B (inputs are padded up to it).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// One padded fixed-B execution over at most `batch_size()` rows.
+    fn run_chunk(&self, chunk: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        assert!(chunk.len() <= self.batch);
+        let (b, d, k) = (self.batch, self.dim, self.k);
+        // Pad the batch to the artifact's fixed B with a safe dummy row
+        // (all ones).
+        let mut x = vec![1.0f32; b * d];
+        for (row, vec) in chunk.iter().enumerate() {
+            assert_eq!(vec.len(), d, "dimension mismatch");
+            x[row * d..(row + 1) * d].copy_from_slice(vec);
+        }
+        let xl = literal_f32(&x, &[b, d]).expect("input literal");
+        let (rl, cl, bl) = &self.params;
+        let outs = self
+            .engine
+            .run_decoded(&self.artifact, &[xl, rl.clone(), cl.clone(), bl.clone()])
+            .expect("pjrt execute");
+        let i_star = outs[0].as_i32().unwrap();
+        let t_star = outs[1].as_i32().unwrap();
+        chunk
+            .iter()
+            .enumerate()
+            .map(|(row, _)| {
+                (0..k)
+                    .map(|j| CwsSample {
+                        i_star: i_star[row * k + j] as u32,
+                        t_star: t_star[row * k + j] as i64,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl Sketcher for PjrtSketcher {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn name(&self) -> &'static str {
+        "icws-pjrt"
+    }
+
+    fn sketch_sparse(&self, row: crate::data::sparse::SparseRow<'_>) -> Vec<CwsSample> {
+        assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
+        let mut dense = vec![0.0f32; self.dim];
+        for (&i, &v) in row.indices.iter().zip(row.values) {
+            dense[i as usize] = v;
+        }
+        self.sketch_dense(&dense)
+    }
+
+    fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+        self.run_chunk(&[u]).pop().expect("one row in, one sample stream out")
+    }
+
+    fn sketch_dense_batch(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch.max(1)) {
+            out.extend(self.run_chunk(chunk));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::Sketcher;
+
+    #[test]
+    fn native_backend_builds_a_parity_sketcher() {
+        let cfg = ServiceConfig { seed: 5, k: 12, dim: 9, ..Default::default() };
+        let s = Box::new(NativeBackend).build(&cfg).unwrap();
+        assert_eq!(s.k(), 12);
+        assert_eq!(s.seed(), 5);
+        let v: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        assert_eq!(s.sketch_dense(&v), CwsHasher::new(5, 12).hash_dense(&v));
+    }
+
+    #[test]
+    fn closure_backend_works() {
+        let cfg = ServiceConfig::default();
+        let backend = |cfg: &ServiceConfig| -> Result<Box<dyn Sketcher>, String> {
+            Ok(Box::new(CwsHasher::new(cfg.seed, cfg.k)))
+        };
+        let s = Box::new(backend).build(&cfg).unwrap();
+        assert_eq!(s.name(), "icws");
+        assert_eq!(s.k(), cfg.k);
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_artifacts() {
+        let b = PjrtBackend::new("/nonexistent/artifacts", "cws_hash");
+        let err = Box::new(b).build(&ServiceConfig::default()).unwrap_err();
+        assert!(err.contains("PJRT") || err.contains("manifest") || err.contains("pjrt"), "{err}");
+    }
+}

@@ -1,24 +1,31 @@
 //! Layer 3: the coordinator — the deployable system around the paper's
 //! algorithm.
 //!
+//! * [`backend`] — the open [`SketcherBackend`] factory trait that
+//!   replaced the closed `Backend` enum: [`NativeBackend`],
+//!   [`PjrtBackend`], or any closure/custom impl building a
+//!   `Box<dyn Sketcher>` on the worker thread.
 //! * [`service`] — the online hashing service: bounded-queue submission
-//!   (backpressure), dynamic batching (size/deadline), native or PJRT
+//!   (backpressure), dynamic batching (size/deadline), backend-agnostic
 //!   execution, per-request latency metrics.
+//! * [`router`] — least-loaded routing over replicated services.
 //! * [`pipeline`] — the offline batch pipeline: hash a dataset, expand
 //!   0-bit CWS one-hot features, train/evaluate the linear model, and
 //!   export weights in the layout the `hash_score` AOT serving artifact
-//!   consumes.
+//!   consumes. (The composable object API is [`crate::pipeline`].)
 //! * [`metrics`] — shared observability.
 
+pub mod backend;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
 pub mod service;
 
+pub use backend::{NativeBackend, PjrtBackend, PjrtSketcher, SketcherBackend};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{
-    export_scorer_weights, hash_dataset, hashed_linear_accuracy, hashed_linear_sweep,
-    HashedDataset, PipelineConfig,
+    export_scorer_weights, hash_dataset, hash_matrix_native, hashed_linear_accuracy,
+    hashed_linear_sweep, sketch_matrix, HashedDataset, PipelineConfig,
 };
 pub use router::{RoutedResponse, Router};
-pub use service::{Backend, HashResponse, HashService, ServiceConfig, SubmitError};
+pub use service::{HashResponse, HashService, ServiceConfig, SubmitError};

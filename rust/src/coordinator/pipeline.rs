@@ -1,15 +1,17 @@
-//! Offline pipeline orchestration: the "hash a whole dataset, train a
-//! linear model in min-max space, evaluate" flow of §4 — the batch
-//! counterpart of the online [`super::service::HashService`].
+//! Offline batch-pipeline helpers: hash a whole dataset, train a linear
+//! model in min-max space, evaluate — the batch counterpart of the
+//! online [`super::service::HashService`], and the substrate the
+//! experiment drivers (Figures 7–8) run on.
 //!
-//! This is what the experiment drivers (Figures 7–8) and the end-to-end
-//! example call. It owns the bookkeeping the paper glosses over:
-//! skipping empty rows, aligning train/test hashing under one seed, and
-//! choosing native vs PJRT execution.
+//! The composable, object-shaped API over the same flow is
+//! [`crate::pipeline::Pipeline`] (fit/transform/predict); these free
+//! functions remain for drivers that sweep configurations and for the
+//! offline→serving weight export.
 
 use crate::cws::{CwsHasher, CwsSample};
 use crate::data::{Csr, Dataset, Matrix};
-use crate::features::Expansion;
+use crate::features::{Expansion, ExpansionError};
+use crate::sketch::Sketcher;
 use crate::svm::{linear_svm_accuracy, LinearSvmParams};
 
 #[derive(Debug, Clone)]
@@ -25,27 +27,28 @@ impl PipelineConfig {
     pub fn new(seed: u64, k: usize, i_bits: u8) -> Self {
         Self { seed, k, i_bits, t_bits: 0 }
     }
+
+    /// The validated feature expansion this configuration describes.
+    pub fn expansion(&self) -> Result<Expansion, ExpansionError> {
+        Expansion::checked(self.k, self.i_bits, self.t_bits)
+    }
 }
 
-/// Hash every row of a matrix (native backend); empty rows yield `None`.
+/// Hash every row of a matrix with any [`Sketcher`]; empty rows yield
+/// `None`. (Kept as a free function for drivers; identical to calling
+/// `sketcher.sketch_matrix(m)`.)
+pub fn sketch_matrix(sketcher: &dyn Sketcher, m: &Matrix) -> Vec<Option<Vec<CwsSample>>> {
+    sketcher.sketch_matrix(m)
+}
+
+/// Backward-compatible native hashing: ICWS with the `(r, c, β)` grid
+/// amortized across dense rows.
 pub fn hash_matrix_native(m: &Matrix, seed: u64, k: usize) -> Vec<Option<Vec<CwsSample>>> {
     let hasher = CwsHasher::new(seed, k);
     match m {
-        Matrix::Sparse(s) => hasher.hash_matrix(s),
-        Matrix::Dense(d) => {
-            // Amortize (r, c, β) materialization across all rows.
-            let batch = hasher.dense_batch(d.cols());
-            (0..d.rows())
-                .map(|i| {
-                    let row = d.row(i);
-                    if row.iter().any(|&v| v > 0.0) {
-                        Some(batch.hash(row))
-                    } else {
-                        None
-                    }
-                })
-                .collect()
-        }
+        Matrix::Sparse(_) => hasher.sketch_matrix(m),
+        // Amortize (r, c, β) materialization across all rows.
+        Matrix::Dense(d) => hasher.dense_batch(d.cols()).sketch_matrix(m),
     }
 }
 
@@ -57,24 +60,23 @@ pub struct HashedDataset {
 }
 
 /// Hash train and test under one seed and expand to one-hot features.
-pub fn hash_dataset(ds: &Dataset, cfg: &PipelineConfig) -> HashedDataset {
-    let expansion = if cfg.t_bits > 0 {
-        Expansion::new(cfg.k, cfg.i_bits).with_t_bits(cfg.t_bits)
-    } else {
-        Expansion::new(cfg.k, cfg.i_bits)
-    };
+/// Invalid bit budgets surface as an error instead of a panic.
+pub fn hash_dataset(ds: &Dataset, cfg: &PipelineConfig) -> Result<HashedDataset, ExpansionError> {
+    let expansion = cfg.expansion()?;
     let train_samples = hash_matrix_native(&ds.train_x, cfg.seed, cfg.k);
     let test_samples = hash_matrix_native(&ds.test_x, cfg.seed, cfg.k);
-    HashedDataset {
+    Ok(HashedDataset {
         train: expansion.expand(&train_samples),
         test: expansion.expand(&test_samples),
         expansion,
-    }
+    })
 }
 
 /// Full §4 pipeline at one C: hash → expand → linear SVM → test accuracy.
+/// Panics on an invalid bit budget — experiment drivers construct their
+/// configs statically; request paths go through [`crate::pipeline`].
 pub fn hashed_linear_accuracy(ds: &Dataset, cfg: &PipelineConfig, c: f64) -> f64 {
-    let hashed = hash_dataset(ds, cfg);
+    let hashed = hash_dataset(ds, cfg).expect("invalid expansion config");
     linear_svm_accuracy(
         &hashed.train,
         &ds.train_y,
@@ -87,7 +89,7 @@ pub fn hashed_linear_accuracy(ds: &Dataset, cfg: &PipelineConfig, c: f64) -> f64
 
 /// Sweep C on pre-hashed features (hashing dominates cost; reuse it).
 pub fn hashed_linear_sweep(ds: &Dataset, cfg: &PipelineConfig, cs: &[f64]) -> Vec<(f64, f64)> {
-    let hashed = hash_dataset(ds, cfg);
+    let hashed = hash_dataset(ds, cfg).expect("invalid expansion config");
     cs.iter()
         .map(|&c| {
             (
@@ -106,8 +108,8 @@ pub fn hashed_linear_sweep(ds: &Dataset, cfg: &PipelineConfig, cs: &[f64]) -> Ve
 }
 
 /// Train the final hashed linear model and export its weights in the
-/// `[K, 2^bits, C]` layout the `hash_score` AOT artifact consumes — the
-/// bridge from offline training to PJRT serving.
+/// `[K, 2^bits, C]` layout the `hash_score` AOT serving artifact
+/// consumes — the bridge from offline training to PJRT serving.
 pub fn export_scorer_weights(
     train: &Csr,
     train_y: &[i32],
@@ -152,18 +154,25 @@ mod tests {
     fn hashing_is_deterministic_across_calls() {
         let ds = small("letter");
         let cfg = PipelineConfig::new(1, 32, 8);
-        let a = hash_dataset(&ds, &cfg);
-        let b = hash_dataset(&ds, &cfg);
+        let a = hash_dataset(&ds, &cfg).unwrap();
+        let b = hash_dataset(&ds, &cfg).unwrap();
         assert_eq!(a.train, b.train);
         assert_eq!(a.test, b.test);
         a.train.check_invariants().unwrap();
     }
 
     #[test]
+    fn invalid_bit_budget_is_an_error_not_a_panic() {
+        let ds = small("letter");
+        let cfg = PipelineConfig { seed: 1, k: 8, i_bits: 16, t_bits: 16 };
+        assert!(hash_dataset(&ds, &cfg).is_err());
+    }
+
+    #[test]
     fn hashed_rows_have_k_ones() {
         let ds = small("letter");
         let cfg = PipelineConfig::new(2, 16, 4);
-        let h = hash_dataset(&ds, &cfg);
+        let h = hash_dataset(&ds, &cfg).unwrap();
         for i in 0..h.train.rows() {
             assert_eq!(h.train.row(i).nnz(), 16);
         }
@@ -191,11 +200,20 @@ mod tests {
     }
 
     #[test]
+    fn sketch_matrix_free_fn_matches_trait_call() {
+        let ds = small("vowel");
+        let h = CwsHasher::new(4, 8);
+        let a = sketch_matrix(&h, &ds.train_x);
+        let b = h.sketch_matrix(&ds.train_x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn exported_weights_reproduce_ovr_decisions() {
         use crate::svm::LinearOvR;
         let ds = small("vowel");
         let cfg = PipelineConfig::new(9, 16, 4);
-        let h = hash_dataset(&ds, &cfg);
+        let h = hash_dataset(&ds, &cfg).unwrap();
         let c = 1.0;
         let w = export_scorer_weights(&h.train, &ds.train_y, ds.n_classes(), &h.expansion, c);
         // Reference decisions from the OvR model directly.

@@ -12,8 +12,9 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use super::backend::SketcherBackend;
 use super::metrics::Snapshot;
-use super::service::{Backend, HashResponse, HashService, ServiceConfig, SubmitError};
+use super::service::{HashResponse, HashService, ServiceConfig, SubmitError};
 
 pub struct Router {
     replicas: Vec<HashService>,
@@ -22,14 +23,25 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn `n` replicas of the same service configuration. Replica i
-    /// uses the SAME hashing seed (they must be interchangeable).
-    pub fn start(n: usize, cfg: ServiceConfig, backend: impl Fn(usize) -> Backend) -> Router {
+    /// Spawn `n` replicas of the same service configuration; the factory
+    /// is called with each replica index (heterogeneous fleets — e.g.
+    /// one PJRT replica per device plus native spill — are one closure
+    /// away). Replica i uses the SAME hashing seed: replicas must be
+    /// interchangeable.
+    pub fn start<B: SketcherBackend>(
+        n: usize,
+        cfg: ServiceConfig,
+        backend: impl Fn(usize) -> B,
+    ) -> Result<Router, String> {
         assert!(n > 0);
-        let replicas: Vec<HashService> =
-            (0..n).map(|i| HashService::start(cfg.clone(), backend(i))).collect();
+        let replicas: Vec<HashService> = (0..n)
+            .map(|i| {
+                HashService::start(cfg.clone(), backend(i))
+                    .map_err(|e| format!("replica {i}: {e}"))
+            })
+            .collect::<Result<_, String>>()?;
         let outstanding = (0..n).map(|_| AtomicUsize::new(0)).collect();
-        Router { replicas, outstanding, rr: AtomicU64::new(0) }
+        Ok(Router { replicas, outstanding, rr: AtomicU64::new(0) })
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -121,6 +133,7 @@ impl<'r> RoutedResponse<'r> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::NativeBackend;
     use crate::cws::CwsHasher;
     use std::time::Duration;
 
@@ -137,7 +150,7 @@ mod tests {
 
     #[test]
     fn replicas_are_interchangeable() {
-        let router = Router::start(3, cfg(), |_| Backend::Native);
+        let router = Router::start(3, cfg(), |_| NativeBackend).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         let want = CwsHasher::new(11, 8).hash_dense(&v);
         for i in 0..30 {
@@ -150,7 +163,7 @@ mod tests {
 
     #[test]
     fn load_spreads_across_replicas() {
-        let router = Router::start(4, cfg(), |_| Backend::Native);
+        let router = Router::start(4, cfg(), |_| NativeBackend).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         // Submit a burst without waiting, then collect.
         let mut handles = Vec::new();
@@ -172,7 +185,7 @@ mod tests {
         // Tiny queues: the router must keep accepting while ANY replica
         // has room, and fail fast only when all are full.
         let small = ServiceConfig { queue_cap: 1, max_batch: 1, ..cfg() };
-        let router = Router::start(2, small, |_| Backend::Native);
+        let router = Router::start(2, small, |_| NativeBackend).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         let mut accepted = 0;
         let mut rejected = 0;
@@ -199,7 +212,7 @@ mod tests {
 
     #[test]
     fn snapshot_aggregates() {
-        let router = Router::start(2, cfg(), |_| Backend::Native);
+        let router = Router::start(2, cfg(), |_| NativeBackend).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         for i in 0..10 {
             router.hash_blocking(i, v.clone()).unwrap();

@@ -7,39 +7,27 @@
 //!
 //! ```text
 //! submit() ─► bounded queue (backpressure) ─► dynamic batcher
-//!             (max batch size OR deadline) ─► backend
-//!                 backend = PJRT engine (AOT cws_hash artifact, padded
-//!                           fixed-shape batches)  or  native CwsHasher
+//!             (max batch size OR deadline) ─► Box<dyn Sketcher>
+//!                 built on the worker thread by the SketcherBackend
+//!                 factory (NativeBackend, PjrtBackend, or any custom
+//!                 impl — the coordinator never enumerates backends)
 //!             ─► per-request responses (mpsc)
 //! ```
 //!
-//! Both backends draw the same counter-based randomness, so which one a
-//! deployment uses is a pure throughput/operational choice (validated by
-//! `rust/tests/pipeline_integration.rs`).
+//! The built-in backends draw the same counter-based randomness, so
+//! which one a deployment uses is a pure throughput/operational choice
+//! (validated by `rust/tests/pipeline_integration.rs`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cws::{materialize_params, CwsHasher, CwsSample};
-use crate::runtime::{literal_f32, Engine};
+use crate::cws::CwsSample;
+use crate::sketch::Sketcher;
 
+use super::backend::SketcherBackend;
 use super::metrics::Metrics;
-
-/// Which compute backend executes the hash batches.
-///
-/// The PJRT client is not `Send`, so the variant carries the artifact
-/// *location*; the worker thread constructs (and exclusively owns) the
-/// engine.
-#[derive(Debug, Clone)]
-pub enum Backend {
-    /// Rust-native ICWS (any D, any k).
-    Native,
-    /// PJRT engine over `artifacts_dir`, running `artifact` (which fixes
-    /// B, D, K at AOT time).
-    Pjrt { artifacts_dir: std::path::PathBuf, artifact: String },
-}
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -118,17 +106,48 @@ impl std::fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 impl HashService {
-    pub fn start(cfg: ServiceConfig, backend: Backend) -> HashService {
+    /// Start the service over any [`SketcherBackend`]. The factory runs
+    /// on the worker thread (PJRT clients are thread-bound); `start`
+    /// blocks until it reports readiness, so backend misconfiguration
+    /// (missing artifacts, D/K mismatch, `pjrt` feature absent) surfaces
+    /// here instead of hanging every submit.
+    pub fn start(cfg: ServiceConfig, backend: impl SketcherBackend) -> Result<HashService, String> {
+        let label = backend.label();
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let metrics = Arc::new(Metrics::new());
         let stopping = Arc::new(AtomicBool::new(false));
         let m2 = Arc::clone(&metrics);
         let cfg2 = cfg.clone();
+        let boxed: Box<dyn SketcherBackend> = Box::new(backend);
         let worker = std::thread::Builder::new()
             .name("minmax-hash-service".into())
-            .spawn(move || run_worker(cfg2, backend, rx, m2))
-            .expect("spawn service worker");
-        HashService { tx, worker: Some(worker), metrics, stopping, cfg }
+            .spawn(move || {
+                let sketcher = match boxed.build(&cfg2) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run_worker(cfg2, sketcher, rx, m2);
+            })
+            .map_err(|e| format!("spawn service worker: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(format!("{label} backend failed to start: {e}"));
+            }
+            Err(_) => {
+                let _ = worker.join();
+                return Err(format!("{label} backend worker died during startup"));
+            }
+        }
+        Ok(HashService { tx, worker: Some(worker), metrics, stopping, cfg })
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -205,37 +224,17 @@ impl Drop for HashService {
     }
 }
 
-fn run_worker(cfg: ServiceConfig, backend: Backend, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>) {
+/// The batching loop. Backend-agnostic: whatever the factory built, the
+/// worker only sees `dyn Sketcher` — batched backends override
+/// `sketch_dense_batch` (the PJRT impl pads/chunks to its fixed B
+/// internally).
+fn run_worker(
+    cfg: ServiceConfig,
+    sketcher: Box<dyn Sketcher>,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
-    // PJRT backend state: the engine is created HERE (the PJRT client is
-    // not Send; this thread owns it exclusively), with pre-materialized
-    // parameter literals.
-    let pjrt: Option<(Engine, String, usize, usize, (xla::Literal, xla::Literal, xla::Literal))> =
-        match &backend {
-            Backend::Pjrt { artifacts_dir, artifact } => {
-                let engine = Engine::load_subset(artifacts_dir, &[artifact.as_str()])
-                    .expect("loading PJRT engine in service worker");
-                let spec = engine.spec(artifact).expect("artifact in manifest").clone();
-                let (b, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
-                let k = spec.inputs[1].shape[0];
-                assert_eq!(d, cfg.dim, "artifact D != service dim");
-                assert_eq!(k, cfg.k, "artifact K != service k");
-                let (r, c, beta) = materialize_params(cfg.seed, d, k);
-                let lits = (
-                    literal_f32(&r, &[k, d]).unwrap(),
-                    literal_f32(&c, &[k, d]).unwrap(),
-                    literal_f32(&beta, &[k, d]).unwrap(),
-                );
-                Some((engine, artifact.clone(), b, d, lits))
-            }
-            Backend::Native => None,
-        };
-    // Native backend: amortize parameter materialization across the whole
-    // service lifetime (identical output to per-row hashing).
-    let hasher = CwsHasher::new(cfg.seed, cfg.k);
-    let batch_hasher =
-        if pjrt.is_none() { Some(hasher.dense_batch(cfg.dim)) } else { None };
-
     loop {
         // Wait for the first request (or control message)…
         let first_deadline = if pending.is_empty() {
@@ -276,43 +275,22 @@ fn run_worker(cfg: ServiceConfig, backend: Backend, rx: mpsc::Receiver<Msg>, met
             let batch: Vec<Request> = pending.drain(..).collect();
             metrics.record_batch(batch.len(), cfg.max_batch);
             for r in &batch {
-                metrics
-                    .record_queue_wait_ms(r.submitted.elapsed().as_secs_f64() * 1e3);
+                metrics.record_queue_wait_ms(r.submitted.elapsed().as_secs_f64() * 1e3);
             }
-            match &pjrt {
-                Some((engine, artifact, b, d, (rl, cl, bl))) => {
-                    // Pad the batch to the artifact's fixed B with a safe
-                    // dummy row (all ones).
-                    for chunk in batch.chunks(*b) {
-                        let mut x = vec![1.0f32; b * d];
-                        for (row, req) in chunk.iter().enumerate() {
-                            x[row * d..(row + 1) * d].copy_from_slice(&req.vector);
-                        }
-                        let xl = literal_f32(&x, &[*b, *d]).unwrap();
-                        let outs = engine
-                            .run_decoded(artifact, &[xl, rl.clone(), cl.clone(), bl.clone()])
-                            .expect("pjrt execute");
-                        let i_star = outs[0].as_i32().unwrap();
-                        let t_star = outs[1].as_i32().unwrap();
-                        let k = cfg.k;
-                        for (row, req) in chunk.iter().enumerate() {
-                            let samples: Vec<CwsSample> = (0..k)
-                                .map(|j| CwsSample {
-                                    i_star: i_star[row * k + j] as u32,
-                                    t_star: t_star[row * k + j] as i64,
-                                })
-                                .collect();
-                            respond(req, samples, &metrics);
-                        }
-                    }
-                }
-                None => {
-                    let bh = batch_hasher.as_ref().unwrap();
-                    for req in &batch {
-                        let samples = bh.hash(&req.vector);
-                        respond(req, samples, &metrics);
-                    }
-                }
+            let rows: Vec<&[f32]> = batch.iter().map(|r| r.vector.as_slice()).collect();
+            let sketched = sketcher.sketch_dense_batch(&rows);
+            // Hard contract on third-party backends: one output per
+            // request. A silent zip truncation would drop responses.
+            assert_eq!(
+                sketched.len(),
+                batch.len(),
+                "sketcher '{}' returned {} sample streams for {} requests",
+                sketcher.name(),
+                sketched.len(),
+                batch.len()
+            );
+            for (req, samples) in batch.iter().zip(sketched) {
+                respond(req, samples, &metrics);
             }
         }
         if shutdown {
@@ -330,6 +308,8 @@ fn respond(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::cws::CwsHasher;
 
     fn cfg(k: usize, dim: usize) -> ServiceConfig {
         ServiceConfig { k, dim, max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() }
@@ -346,7 +326,7 @@ mod tests {
     fn native_service_matches_direct_hasher() {
         let c = cfg(16, 24);
         let seed = c.seed;
-        let svc = HashService::start(c, Backend::Native);
+        let svc = HashService::start(c, NativeBackend).unwrap();
         let inputs = vecs(20, 24, 3);
         let mut rxs = Vec::new();
         for (i, v) in inputs.iter().enumerate() {
@@ -365,8 +345,37 @@ mod tests {
     }
 
     #[test]
+    fn custom_backend_serves_through_the_trait() {
+        // A third-party Sketcher (minwise) behind the same service, via
+        // the closure impl of SketcherBackend — no coordinator changes.
+        let c = cfg(8, 16);
+        let seed = c.seed;
+        let factory = |cfg: &ServiceConfig| -> Result<Box<dyn crate::sketch::Sketcher>, String> {
+            Ok(Box::new(crate::sketch::MinwiseSketcher::new(cfg.seed, cfg.k)))
+        };
+        let svc = HashService::start(c, factory).unwrap();
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let resp = svc.hash_blocking(1, v.clone()).unwrap();
+        let want = crate::sketch::Sketcher::sketch_dense(
+            &crate::sketch::MinwiseSketcher::new(seed, 8),
+            &v,
+        );
+        assert_eq!(resp.samples, want);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn failing_backend_surfaces_at_start() {
+        let factory = |_cfg: &ServiceConfig| -> Result<Box<dyn crate::sketch::Sketcher>, String> {
+            Err("boom".into())
+        };
+        let err = HashService::start(cfg(4, 8), factory).unwrap_err();
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
     fn rejects_bad_vectors() {
-        let svc = HashService::start(cfg(4, 8), Backend::Native);
+        let svc = HashService::start(cfg(4, 8), NativeBackend).unwrap();
         assert!(matches!(
             svc.submit(0, vec![0.0; 8]),
             Err(SubmitError::BadInput(_))
@@ -393,7 +402,7 @@ mod tests {
             queue_cap: 2,
             ..Default::default()
         };
-        let svc = HashService::start(c, Backend::Native);
+        let svc = HashService::start(c, NativeBackend).unwrap();
         let v: Vec<f32> = (0..512).map(|i| (i + 1) as f32).collect();
         let mut full = 0;
         let mut rxs = Vec::new();
@@ -414,7 +423,7 @@ mod tests {
 
     #[test]
     fn hash_blocking_roundtrip() {
-        let svc = HashService::start(cfg(8, 8), Backend::Native);
+        let svc = HashService::start(cfg(8, 8), NativeBackend).unwrap();
         let resp = svc.hash_blocking(7, vec![1.0; 8]).unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.samples.len(), 8);
@@ -424,10 +433,10 @@ mod tests {
 
     #[test]
     fn concurrent_submitters() {
-        let svc = std::sync::Arc::new(HashService::start(
-            ServiceConfig { queue_cap: 4096, ..cfg(8, 16) },
-            Backend::Native,
-        ));
+        let svc = std::sync::Arc::new(
+            HashService::start(ServiceConfig { queue_cap: 4096, ..cfg(8, 16) }, NativeBackend)
+                .unwrap(),
+        );
         let mut handles = Vec::new();
         for t in 0..4u64 {
             let svc = std::sync::Arc::clone(&svc);

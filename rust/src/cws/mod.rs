@@ -28,6 +28,11 @@
 //! min-max generalizes resemblance, and it is how the b-bit-minwise
 //! baseline is obtained here (binarize, then hash).
 
+//! Both hashers implement [`crate::sketch::Sketcher`], the crate-wide
+//! hashing abstraction the coordinator and [`crate::pipeline`] consume;
+//! construct them directly (as here) or via
+//! [`crate::kernels::Kernel::sketcher`].
+
 pub mod lsh;
 pub mod minwise;
 pub mod sampler;

@@ -172,7 +172,7 @@ impl CwsHasher {
                 beta.push(bb);
             }
         }
-        DenseBatchHasher { k: self.k, dim, r, c, beta }
+        DenseBatchHasher { seed: self.seed, k: self.k, dim, r, c, beta }
     }
 }
 
@@ -180,6 +180,7 @@ impl CwsHasher {
 /// ~24 bytes/cell of memory (6.3 MB at D=1024, k=256) traded for a
 /// large per-row speedup when many rows share one (seed, k, D).
 pub struct DenseBatchHasher {
+    seed: u64,
     k: usize,
     dim: usize,
     r: Vec<f64>,
@@ -190,6 +191,10 @@ pub struct DenseBatchHasher {
 impl DenseBatchHasher {
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     pub fn dim(&self) -> usize {
@@ -214,6 +219,32 @@ impl DenseBatchHasher {
             let mut best_a = f64::INFINITY;
             let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
             for (&i, &lnu) in indices.iter().zip(&ln_u) {
+                let idx = base + i as usize;
+                let (r, c, beta) = (self.r[idx], self.c[idx], self.beta[idx]);
+                let t = (lnu / r + beta).floor();
+                let a = c * (-(r * (t - beta)) - r).exp();
+                if a < best_a {
+                    best_a = a;
+                    best = CwsSample { i_star: i, t_star: t as i64 };
+                }
+            }
+            out.push(best);
+        }
+        out
+    }
+
+    /// Hash a sparse row against the materialized grid — identical
+    /// output to `CwsHasher::hash_sparse` for indices below `dim`.
+    pub fn hash_sparse(&self, row: crate::data::sparse::SparseRow<'_>) -> Vec<CwsSample> {
+        assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
+        let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let base = j * self.dim;
+            let mut best_a = f64::INFINITY;
+            let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
+            for (&i, &lnu) in row.indices.iter().zip(&ln_u) {
+                assert!((i as usize) < self.dim, "index {i} out of range for dim {}", self.dim);
                 let idx = base + i as usize;
                 let (r, c, beta) = (self.r[idx], self.c[idx], self.beta[idx]);
                 let t = (lnu / r + beta).floor();

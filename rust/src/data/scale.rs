@@ -84,6 +84,12 @@ pub fn binarize_dense(d: &mut Dense) {
     }
 }
 
+/// Sparse binarization: stored values become 1.0 in place — the
+/// structure (and memory) is untouched, no densification.
+pub fn binarize_csr(m: &mut Csr) {
+    m.map_values(|v| if v != 0.0 { 1.0 } else { 0.0 });
+}
+
 /// Clamp negatives to zero (the kernels require nonnegative input).
 pub fn clamp_nonneg(d: &mut Dense) {
     for v in d.data_mut() {
@@ -155,6 +161,19 @@ mod tests {
         assert_eq!(d.data(), &[0.0, 0.0, 0.5, 3.0]);
         binarize_dense(&mut d);
         assert_eq!(d.data(), &[0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn csr_binarize_matches_dense_and_keeps_structure() {
+        let dense = Dense::from_rows(&[&[0., 2.5, 0.25], &[7., 0., 0.]]);
+        let mut d = dense.clone();
+        binarize_dense(&mut d);
+        let mut s = Csr::from_dense(&dense);
+        let nnz_before = s.nnz();
+        binarize_csr(&mut s);
+        assert_eq!(s.to_dense(), d);
+        assert_eq!(s.nnz(), nnz_before);
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -137,6 +137,14 @@ impl Csr {
         d
     }
 
+    /// Apply `f` to every stored value in place (sparsity structure is
+    /// unchanged — indices and indptr stay as they are).
+    pub fn map_values(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.values {
+            *v = f(*v);
+        }
+    }
+
     /// Scale each row's values in place (used by normalization).
     pub fn scale_rows(&mut self, factors: &[f32]) {
         assert_eq!(factors.len(), self.rows());

@@ -5,12 +5,12 @@
 
 use std::time::Instant;
 
-use crate::coordinator::{Backend, HashService, ServiceConfig};
+use crate::coordinator::{HashService, NativeBackend, ServiceConfig};
 use crate::cws::CwsHasher;
 use crate::data::dense::Dense;
 use crate::data::Matrix;
 use crate::kernels::matrix::kernel_matrix;
-use crate::kernels::Kernel;
+use crate::kernels::KernelKind;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::table::{fnum, Table};
@@ -71,7 +71,7 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
     let ma = Matrix::Dense(a);
     let mb = Matrix::Dense(b);
     let per = time_it(1.0, || {
-        std::hint::black_box(kernel_matrix(Kernel::MinMax, &ma, &mb));
+        std::hint::black_box(kernel_matrix(KernelKind::MinMax, &ma, &mb));
     });
     let cells = (256 * 256) as f64 / per;
     t.row(["min-max kernel matrix (256x256,D=64)".into(), fnum(cells / 1e6, 2), "Mpair/s".into()]);
@@ -86,7 +86,7 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
         max_wait: std::time::Duration::from_micros(500),
         queue_cap: 4096,
     };
-    let svc = HashService::start(cfg, Backend::Native);
+    let svc = HashService::start(cfg, NativeBackend).expect("start native service");
     let v: Vec<f32> = (1..=64).map(|i| i as f32 / 7.0).collect();
     let n = 2000;
     let start = Instant::now();
@@ -106,7 +106,7 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
     // --- PJRT execute path (when artifacts exist).
     if with_pjrt {
         let dir = crate::runtime::default_artifacts_dir();
-        if dir.join("manifest.json").exists() {
+        if dir.join("manifest.json").exists() && crate::runtime::pjrt_enabled() {
             use crate::cws::materialize_params;
             use crate::runtime::{literal_f32, Engine};
             let engine = Engine::load_subset(&dir, &["cws_hash"]).expect("engine");

@@ -4,7 +4,7 @@
 use crate::coordinator::{hashed_linear_sweep, PipelineConfig};
 use crate::data::synth::{generate, SynthConfig};
 
-use crate::kernels::Kernel;
+use crate::kernels::KernelKind;
 use crate::svm::{c_grid, kernel_svm_sweep, SweepResult};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
@@ -12,8 +12,8 @@ use crate::util::table::{fnum, Table};
 use super::save_result;
 
 /// The four kernels of Table 1, in the paper's column order.
-pub fn table1_kernels() -> [Kernel; 4] {
-    [Kernel::Linear, Kernel::MinMax, Kernel::NMinMax, Kernel::Intersection]
+pub fn table1_kernels() -> [KernelKind; 4] {
+    [KernelKind::Linear, KernelKind::MinMax, KernelKind::NMinMax, KernelKind::Intersection]
 }
 
 #[derive(Debug, Clone)]
@@ -25,7 +25,7 @@ pub struct SvmExperimentConfig {
     pub c_points: usize,
     /// Extra kernels beyond the paper's four (ablations: resemblance,
     /// chi2, CoRE-style product).
-    pub extra_kernels: Vec<Kernel>,
+    pub extra_kernels: Vec<KernelKind>,
 }
 
 impl Default for SvmExperimentConfig {
@@ -58,7 +58,7 @@ pub fn run_kernel_sweeps(cfg: &SvmExperimentConfig) -> Vec<DatasetSweeps> {
             SynthConfig { seed: cfg.seed, n_train: cfg.n_train, n_test: cfg.n_test },
         )
         .unwrap_or_else(|e| panic!("{e}"));
-        let mut kernels: Vec<Kernel> = table1_kernels().to_vec();
+        let mut kernels: Vec<KernelKind> = table1_kernels().to_vec();
         kernels.extend(cfg.extra_kernels.iter().copied());
         let sweeps: Vec<SweepResult> =
             kernels.iter().map(|&k| kernel_svm_sweep(&ds, k, &cs)).collect();
@@ -84,7 +84,7 @@ pub fn run_kernel_sweeps(cfg: &SvmExperimentConfig) -> Vec<DatasetSweeps> {
 pub fn run_table1(cfg: &SvmExperimentConfig) -> Table {
     let all = run_kernel_sweeps(cfg);
     let mut header = vec!["Dataset".to_string(), "#train".into(), "#test".into()];
-    let mut kernels: Vec<Kernel> = table1_kernels().to_vec();
+    let mut kernels: Vec<KernelKind> = table1_kernels().to_vec();
     kernels.extend(cfg.extra_kernels.iter().copied());
     header.extend(kernels.iter().map(|k| k.name().to_string()));
     let mut t = Table::new("Table 1 (synthetic analogs): best test accuracy (%) over C grid")
@@ -195,8 +195,8 @@ pub fn run_fig7_8(cfg: &HashedSvmConfig, id: &str) -> Table {
         )
         .unwrap_or_else(|e| panic!("{e}"));
         // Dashed baselines (top: min-max kernel; bottom: linear kernel).
-        let mm = kernel_svm_sweep(&ds, Kernel::MinMax, &cs).best_accuracy();
-        let lin = kernel_svm_sweep(&ds, Kernel::Linear, &cs).best_accuracy();
+        let mm = kernel_svm_sweep(&ds, KernelKind::MinMax, &cs).best_accuracy();
+        let lin = kernel_svm_sweep(&ds, KernelKind::Linear, &cs).best_accuracy();
         for &bt in &cfg.t_bits {
             for &bi in &cfg.i_bits {
                 for &k in &cfg.ks {
@@ -257,15 +257,15 @@ mod tests {
         std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_t1"));
         let all = run_kernel_sweeps(&tiny_cfg());
         for d in &all {
-            let best = |k: Kernel| {
+            let best = |k: KernelKind| {
                 d.sweeps.iter().find(|s| s.kernel == k).unwrap().best_accuracy()
             };
             assert!(
-                best(Kernel::MinMax) >= best(Kernel::Linear) - 0.02,
+                best(KernelKind::MinMax) >= best(KernelKind::Linear) - 0.02,
                 "{}: min-max {} vs linear {}",
                 d.dataset,
-                best(Kernel::MinMax),
-                best(Kernel::Linear)
+                best(KernelKind::MinMax),
+                best(KernelKind::Linear)
             );
         }
     }

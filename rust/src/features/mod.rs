@@ -12,6 +12,49 @@ use crate::cws::sampler::CwsSample;
 use crate::cws::schemes::Scheme;
 use crate::data::sparse::{Csr, CsrBuilder};
 
+/// Total bit budget per sample: `2^{i_bits + t_bits}` columns per hash
+/// slot must stay addressable (and sane) — beyond this the expansion
+/// would allocate gigabytes per k.
+pub const MAX_CODE_BITS: usize = 24;
+
+/// Invalid [`Expansion`] configurations. Returned (not panicked) so
+/// serving paths can reject bad requests gracefully.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpansionError {
+    /// `i_bits` must be in `[1, 16]`.
+    IBitsOutOfRange(u8),
+    /// `i_bits + t_bits` exceeds [`MAX_CODE_BITS`] — the `u8` shift in
+    /// [`Expansion::code_space`] would overflow / the one-hot dimension
+    /// would explode.
+    CodeSpaceTooLarge { i_bits: u8, t_bits: u8 },
+    /// `k · 2^(i_bits + t_bits)` does not fit the `u32` column index
+    /// space — columns would silently wrap and features collide.
+    DimensionOverflow { k: usize, code_bits: u8 },
+    /// `k` must be positive.
+    ZeroSamples,
+}
+
+impl std::fmt::Display for ExpansionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExpansionError::IBitsOutOfRange(b) => {
+                write!(f, "i_bits must be in [1, 16], got {b}")
+            }
+            ExpansionError::CodeSpaceTooLarge { i_bits, t_bits } => write!(
+                f,
+                "i_bits ({i_bits}) + t_bits ({t_bits}) exceeds {MAX_CODE_BITS} code bits"
+            ),
+            ExpansionError::DimensionOverflow { k, code_bits } => write!(
+                f,
+                "k ({k}) x 2^{code_bits} columns overflows the u32 feature-index space"
+            ),
+            ExpansionError::ZeroSamples => write!(f, "k must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for ExpansionError {}
+
 /// Configuration of the expansion: bits of `i*` and (rarely) of `t*`.
 /// With `t_bits > 0` the code space per sample is `2^{b_i + b_t}`
 /// (Figure 8's 2-bit-t* variant).
@@ -23,15 +66,38 @@ pub struct Expansion {
 }
 
 impl Expansion {
-    pub fn new(k: usize, i_bits: u8) -> Self {
-        assert!(i_bits >= 1 && i_bits <= 16, "i_bits in [1,16]");
-        Self { k, i_bits, t_bits: 0 }
+    /// Validating constructor — the serving-path entry point.
+    pub fn checked(k: usize, i_bits: u8, t_bits: u8) -> Result<Self, ExpansionError> {
+        if k == 0 {
+            return Err(ExpansionError::ZeroSamples);
+        }
+        if !(1..=16).contains(&i_bits) {
+            return Err(ExpansionError::IBitsOutOfRange(i_bits));
+        }
+        if i_bits as usize + t_bits as usize > MAX_CODE_BITS {
+            return Err(ExpansionError::CodeSpaceTooLarge { i_bits, t_bits });
+        }
+        // Columns are u32 (`column()` casts); the full k·2^bits space
+        // must fit or sample blocks silently alias after wrapping.
+        let code_bits = i_bits + t_bits;
+        match k.checked_mul(1usize << code_bits) {
+            Some(dim) if dim <= u32::MAX as usize => {}
+            _ => return Err(ExpansionError::DimensionOverflow { k, code_bits }),
+        }
+        Ok(Self { k, i_bits, t_bits })
     }
 
-    pub fn with_t_bits(mut self, t_bits: u8) -> Self {
-        assert!(self.i_bits as usize + t_bits as usize <= 24, "code space too large");
-        self.t_bits = t_bits;
-        self
+    /// Convenience constructor for static configurations; panics on an
+    /// invalid `i_bits` (use [`Expansion::checked`] on request paths).
+    pub fn new(k: usize, i_bits: u8) -> Self {
+        Self::checked(k, i_bits, 0).expect("invalid Expansion configuration")
+    }
+
+    /// Add `t_bits` of `t*` to the per-sample code. Validates that the
+    /// combined code space fits (previously this was an assert that
+    /// could panic deep in a serving path).
+    pub fn with_t_bits(self, t_bits: u8) -> Result<Self, ExpansionError> {
+        Self::checked(self.k, self.i_bits, t_bits)
     }
 
     /// Codes per sample.
@@ -137,7 +203,7 @@ mod tests {
         let u = [1.0f32, 3.0, 0.5, 2.0];
         let v = [2.0f32, 1.0, 0.5, 1.0];
         let k = 512;
-        let e = Expansion::new(k, 4).with_t_bits(2);
+        let e = Expansion::new(k, 4).with_t_bits(2).unwrap();
         let su = samples_for(&u, k, 17);
         let sv = samples_for(&v, k, 17);
         let m = e.expand(&[Some(su.clone()), Some(sv.clone())]);
@@ -166,8 +232,44 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "i_bits")]
+    #[should_panic(expected = "IBitsOutOfRange")]
     fn zero_i_bits_rejected() {
         Expansion::new(4, 0);
+    }
+
+    #[test]
+    fn checked_rejects_bad_configs() {
+        assert_eq!(Expansion::checked(0, 8, 0), Err(ExpansionError::ZeroSamples));
+        assert_eq!(Expansion::checked(4, 0, 0), Err(ExpansionError::IBitsOutOfRange(0)));
+        assert_eq!(Expansion::checked(4, 17, 0), Err(ExpansionError::IBitsOutOfRange(17)));
+        assert!(Expansion::checked(4, 16, 8).is_ok());
+        assert_eq!(
+            Expansion::checked(4, 16, 9),
+            Err(ExpansionError::CodeSpaceTooLarge { i_bits: 16, t_bits: 9 })
+        );
+    }
+
+    #[test]
+    fn checked_rejects_u32_column_overflow() {
+        // 512 · 2^24 > u32::MAX: sample blocks would alias after the
+        // `as u32` cast in `column()`.
+        assert_eq!(
+            Expansion::checked(512, 16, 8),
+            Err(ExpansionError::DimensionOverflow { k: 512, code_bits: 24 })
+        );
+        // 255 · 2^24 < 2^32: fine.
+        assert!(Expansion::checked(255, 16, 8).is_ok());
+    }
+
+    #[test]
+    fn with_t_bits_no_longer_panics_on_overflow() {
+        // The old API asserted; this must now be a recoverable error
+        // even for t_bits values that would overflow the u8 shift.
+        let e = Expansion::new(8, 16);
+        assert!(e.with_t_bits(200).is_err());
+        let ok = e.with_t_bits(4).unwrap();
+        assert_eq!(ok.code_space(), 1 << 20);
+        let err = Expansion::new(8, 12).with_t_bits(13).unwrap_err();
+        assert!(err.to_string().contains("exceeds"));
     }
 }

@@ -14,8 +14,10 @@ use crate::util::pool::par_rows;
 
 use super::Kernel;
 
-/// Rectangular Gram block between `a`'s rows and `b`'s rows.
-pub fn kernel_matrix(kern: Kernel, a: &Matrix, b: &Matrix) -> Dense {
+/// Rectangular Gram block between `a`'s rows and `b`'s rows. Generic
+/// over the [`Kernel`] trait (`Sync` because rows are evaluated in
+/// parallel); pass a [`super::KernelKind`] or any custom kernel.
+pub fn kernel_matrix<K: Kernel + Sync>(kern: K, a: &Matrix, b: &Matrix) -> Dense {
     assert_eq!(a.cols(), b.cols(), "dimension mismatch");
     let (m, n) = (a.rows(), b.rows());
     let mut out = Dense::zeros(m, n);
@@ -48,7 +50,7 @@ pub fn kernel_matrix(kern: Kernel, a: &Matrix, b: &Matrix) -> Dense {
 
 /// Symmetric Gram matrix of one row set: computes the upper triangle and
 /// mirrors, roughly halving work for the train-kernel case.
-pub fn kernel_matrix_sym(kern: Kernel, a: &Matrix) -> Dense {
+pub fn kernel_matrix_sym<K: Kernel + Sync>(kern: K, a: &Matrix) -> Dense {
     let n = a.rows();
     let mut out = Dense::zeros(n, n);
     match a {
@@ -142,10 +144,10 @@ mod tests {
     fn rect_matches_pointwise() {
         let a = random_dense(7, 12, 0.3, 1);
         let b = random_dense(5, 12, 0.3, 2);
-        let k = kernel_matrix(Kernel::MinMax, &Matrix::Dense(a.clone()), &Matrix::Dense(b.clone()));
+        let k = kernel_matrix(KernelKind::MinMax, &Matrix::Dense(a.clone()), &Matrix::Dense(b.clone()));
         for i in 0..7 {
             for j in 0..5 {
-                let want = Kernel::MinMax.eval_dense(a.row(i), b.row(j)) as f32;
+                let want = KernelKind::MinMax.eval_dense(a.row(i), b.row(j)) as f32;
                 assert!((k.get(i, j) - want).abs() < 1e-6);
             }
         }
@@ -155,7 +157,7 @@ mod tests {
     fn sym_matches_rect() {
         let a = random_dense(9, 8, 0.4, 3);
         let m = Matrix::Dense(a);
-        for kern in [Kernel::MinMax, Kernel::Linear, Kernel::Chi2] {
+        for kern in [KernelKind::MinMax, KernelKind::Linear, KernelKind::Chi2] {
             let full = kernel_matrix(kern, &m, &m);
             let sym = kernel_matrix_sym(kern, &m);
             for i in 0..9 {
@@ -175,12 +177,12 @@ mod tests {
         let a = random_dense(6, 20, 0.6, 4);
         let b = random_dense(4, 20, 0.6, 5);
         let ka = kernel_matrix(
-            Kernel::MinMax,
+            KernelKind::MinMax,
             &Matrix::Dense(a.clone()),
             &Matrix::Dense(b.clone()),
         );
         let kb = kernel_matrix(
-            Kernel::MinMax,
+            KernelKind::MinMax,
             &Matrix::Sparse(Csr::from_dense(&a)),
             &Matrix::Sparse(Csr::from_dense(&b)),
         );
@@ -194,7 +196,7 @@ mod tests {
     #[test]
     fn diagonal_is_one_for_minmax() {
         let a = random_dense(8, 10, 0.2, 6);
-        let k = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(a));
+        let k = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(a));
         for i in 0..8 {
             assert!((k.get(i, i) - 1.0).abs() < 1e-6);
         }
@@ -205,7 +207,7 @@ mod tests {
         // The paper argues K_MM is PD (expectation of inner products);
         // verify λ_min ≥ -1e-4 on random nonnegative data.
         let a = random_dense(24, 16, 0.3, 7);
-        let k = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(a));
+        let k = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(a));
         let lam_min = min_eigenvalue_estimate(&k, 300, 8);
         assert!(lam_min > -1e-4, "λ_min estimate {lam_min}");
     }
@@ -215,11 +217,11 @@ mod tests {
         let a = random_dense(3, 6, 0.5, 9);
         let b = random_dense(2, 6, 0.5, 10);
         let k1 = kernel_matrix(
-            Kernel::Linear,
+            KernelKind::Linear,
             &Matrix::Dense(a.clone()),
             &Matrix::Sparse(Csr::from_dense(&b)),
         );
-        let k2 = kernel_matrix(Kernel::Linear, &Matrix::Dense(a), &Matrix::Dense(b));
+        let k2 = kernel_matrix(KernelKind::Linear, &Matrix::Dense(a), &Matrix::Dense(b));
         assert_eq!(k1, k2);
     }
 }

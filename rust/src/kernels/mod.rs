@@ -2,27 +2,97 @@
 //! dense and sparse (merge-join) fast paths, and the blocked, parallel
 //! kernel-matrix computation used by the kernel-SVM experiments.
 //!
-//! * [`Kernel::MinMax`] — Eq. (1), the paper's subject.
-//! * [`Kernel::NMinMax`] — Eq. (4): min-max after ℓ₁ normalization.
-//! * [`Kernel::Intersection`] — Eq. (3): Σ min after ℓ₁ normalization.
-//! * [`Kernel::Linear`] — Eq. (5): inner product after ℓ₂ normalization.
-//! * [`Kernel::Resemblance`] — Eq. (2): binary Jaccard (for Table 2's "R"
-//!   column and the b-bit-minwise baseline).
-//! * [`Kernel::Chi2`] — the chi-square kernel `Σ 2uᵢvᵢ/(uᵢ+vᵢ)` referenced
-//!   in §2 (hashable by sign Cauchy projections), used in the CoRE-style
-//!   product-kernel ablation.
+//! Two layers live here:
 //!
-//! Normalization is **the caller's job** (see [`crate::data::scale`]);
-//! these functions compute the raw functional forms. The paper applies
-//! normalization before hashing too, so kernels and CWS see identical
-//! inputs.
+//! * the open [`Kernel`] **trait** — the public abstraction: an exact
+//!   pairwise similarity (dense + sparse fast paths) together with its
+//!   **hashed linearization** ([`KernelKind::sketcher`]), i.e. the
+//!   [`crate::sketch::Sketcher`] family whose collision probability
+//!   equals the kernel (Eq. 7 for min-max, Eq. 2 for resemblance);
+//! * the closed [`KernelKind`] **enum** — the paper's concrete kernel
+//!   set, implementing the trait, used by the experiment drivers and
+//!   anywhere a `Copy + Eq` kernel id is convenient.
+//!
+//! The concrete forms:
+//!
+//! * [`KernelKind::MinMax`] — Eq. (1), the paper's subject.
+//! * [`KernelKind::NMinMax`] — Eq. (4): min-max after ℓ₁ normalization.
+//! * [`KernelKind::Intersection`] — Eq. (3): Σ min after ℓ₁ normalization.
+//! * [`KernelKind::Linear`] — Eq. (5): inner product after ℓ₂
+//!   normalization.
+//! * [`KernelKind::Resemblance`] — Eq. (2): binary Jaccard (Table 2's
+//!   "R" column and the b-bit-minwise baseline).
+//! * [`KernelKind::Chi2`] — the chi-square kernel `Σ 2uᵢvᵢ/(uᵢ+vᵢ)`
+//!   referenced in §2, used in the CoRE-style product-kernel ablation.
+//!
+//! Normalization is **the caller's job** (see [`crate::data::scale`] and
+//! [`crate::pipeline::Scaling`]); these functions compute the raw
+//! functional forms. The paper applies normalization before hashing too,
+//! so kernels and sketchers see identical inputs.
 
 pub mod matrix;
 
 use crate::data::sparse::SparseRow;
+use crate::sketch::{MinwiseSketcher, Sketcher};
 
+/// An exact pairwise similarity plus (when one exists) its hashed
+/// linearization. Implement this to plug a new kernel into the kernel
+/// matrices, the SVM sweep protocol, and the [`crate::pipeline`] stack;
+/// [`KernelKind`] provides the paper's concrete set.
+pub trait Kernel {
+    /// Short display name.
+    fn name(&self) -> &'static str;
+
+    /// Which row normalization the evaluation protocol applies before
+    /// this kernel (the kernels themselves are raw functional forms).
+    fn required_normalization(&self) -> Normalization {
+        Normalization::None
+    }
+
+    /// Evaluate on dense rows (same length, nonnegative).
+    fn eval_dense(&self, u: &[f32], v: &[f32]) -> f64;
+
+    /// Evaluate on sorted sparse rows.
+    fn eval_sparse(&self, u: SparseRow<'_>, v: SparseRow<'_>) -> f64;
+
+    /// The kernel's hashed linearization: a [`Sketcher`] whose collision
+    /// probability (full or 0-bit scheme; see [`crate::cws::Scheme`])
+    /// equals this kernel on the normalized inputs, or `None` when no
+    /// such sampler is known (linear, chi², intersection).
+    fn sketcher(&self, seed: u64, k: usize) -> Option<Box<dyn Sketcher>> {
+        let _ = (seed, k);
+        None
+    }
+}
+
+// References to kernels are kernels, so `kernel_matrix(&k, …)` and
+// `&dyn Kernel` arguments both work.
+impl<K: Kernel + ?Sized> Kernel for &K {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn required_normalization(&self) -> Normalization {
+        (**self).required_normalization()
+    }
+
+    fn eval_dense(&self, u: &[f32], v: &[f32]) -> f64 {
+        (**self).eval_dense(u, v)
+    }
+
+    fn eval_sparse(&self, u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+        (**self).eval_sparse(u, v)
+    }
+
+    fn sketcher(&self, seed: u64, k: usize) -> Option<Box<dyn Sketcher>> {
+        (**self).sketcher(seed, k)
+    }
+}
+
+/// The paper's kernel set (closed enum; see the [`Kernel`] trait for the
+/// open extension point).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Kernel {
+pub enum KernelKind {
     Linear,
     MinMax,
     /// Min-max evaluated on ℓ₁-normalized inputs (caller normalizes).
@@ -35,28 +105,28 @@ pub enum Kernel {
     MinMaxChi2,
 }
 
-impl Kernel {
+impl KernelKind {
     pub fn name(&self) -> &'static str {
         match self {
-            Kernel::Linear => "linear",
-            Kernel::MinMax => "min-max",
-            Kernel::NMinMax => "n-min-max",
-            Kernel::Intersection => "intersection",
-            Kernel::Resemblance => "resemblance",
-            Kernel::Chi2 => "chi2",
-            Kernel::MinMaxChi2 => "minmax*chi2",
+            KernelKind::Linear => "linear",
+            KernelKind::MinMax => "min-max",
+            KernelKind::NMinMax => "n-min-max",
+            KernelKind::Intersection => "intersection",
+            KernelKind::Resemblance => "resemblance",
+            KernelKind::Chi2 => "chi2",
+            KernelKind::MinMaxChi2 => "minmax*chi2",
         }
     }
 
-    pub fn from_name(s: &str) -> Option<Kernel> {
+    pub fn from_name(s: &str) -> Option<KernelKind> {
         Some(match s {
-            "linear" => Kernel::Linear,
-            "min-max" | "minmax" => Kernel::MinMax,
-            "n-min-max" | "nminmax" => Kernel::NMinMax,
-            "intersection" => Kernel::Intersection,
-            "resemblance" => Kernel::Resemblance,
-            "chi2" => Kernel::Chi2,
-            "minmax*chi2" | "core" => Kernel::MinMaxChi2,
+            "linear" => KernelKind::Linear,
+            "min-max" | "minmax" => KernelKind::MinMax,
+            "n-min-max" | "nminmax" => KernelKind::NMinMax,
+            "intersection" => KernelKind::Intersection,
+            "resemblance" => KernelKind::Resemblance,
+            "chi2" => KernelKind::Chi2,
+            "minmax*chi2" | "core" => KernelKind::MinMaxChi2,
             _ => return None,
         })
     }
@@ -65,35 +135,71 @@ impl Kernel {
     /// kernel: Eq. (3)/(4) require ℓ₁ (sum-to-one), Eq. (5) requires ℓ₂.
     pub fn required_normalization(&self) -> Normalization {
         match self {
-            Kernel::Linear => Normalization::L2,
-            Kernel::NMinMax | Kernel::Intersection => Normalization::L1,
-            Kernel::MinMax | Kernel::Resemblance | Kernel::Chi2 | Kernel::MinMaxChi2 => {
-                Normalization::None
-            }
+            KernelKind::Linear => Normalization::L2,
+            KernelKind::NMinMax | KernelKind::Intersection => Normalization::L1,
+            KernelKind::MinMax
+            | KernelKind::Resemblance
+            | KernelKind::Chi2
+            | KernelKind::MinMaxChi2 => Normalization::None,
         }
     }
 
     /// Evaluate on dense rows (same length, nonnegative).
     pub fn eval_dense(&self, u: &[f32], v: &[f32]) -> f64 {
         match self {
-            Kernel::Linear => dense_dot(u, v),
-            Kernel::MinMax | Kernel::NMinMax => dense_minmax(u, v),
-            Kernel::Intersection => dense_intersection(u, v),
-            Kernel::Resemblance => dense_resemblance(u, v),
-            Kernel::Chi2 => dense_chi2(u, v),
-            Kernel::MinMaxChi2 => dense_minmax(u, v) * dense_chi2(u, v),
+            KernelKind::Linear => dense_dot(u, v),
+            KernelKind::MinMax | KernelKind::NMinMax => dense_minmax(u, v),
+            KernelKind::Intersection => dense_intersection(u, v),
+            KernelKind::Resemblance => dense_resemblance(u, v),
+            KernelKind::Chi2 => dense_chi2(u, v),
+            KernelKind::MinMaxChi2 => dense_minmax(u, v) * dense_chi2(u, v),
         }
     }
 
     /// Evaluate on sorted sparse rows.
     pub fn eval_sparse(&self, u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
         match self {
-            Kernel::Linear => crate::data::sparse::dot(u, v),
-            Kernel::MinMax | Kernel::NMinMax => sparse_minmax(u, v),
-            Kernel::Intersection => sparse_intersection(u, v),
-            Kernel::Resemblance => sparse_resemblance(u, v),
-            Kernel::Chi2 => sparse_chi2(u, v),
-            Kernel::MinMaxChi2 => sparse_minmax(u, v) * sparse_chi2(u, v),
+            KernelKind::Linear => crate::data::sparse::dot(u, v),
+            KernelKind::MinMax | KernelKind::NMinMax => sparse_minmax(u, v),
+            KernelKind::Intersection => sparse_intersection(u, v),
+            KernelKind::Resemblance => sparse_resemblance(u, v),
+            KernelKind::Chi2 => sparse_chi2(u, v),
+            KernelKind::MinMaxChi2 => sparse_minmax(u, v) * sparse_chi2(u, v),
+        }
+    }
+}
+
+impl Kernel for KernelKind {
+    fn name(&self) -> &'static str {
+        KernelKind::name(self)
+    }
+
+    fn required_normalization(&self) -> Normalization {
+        KernelKind::required_normalization(self)
+    }
+
+    fn eval_dense(&self, u: &[f32], v: &[f32]) -> f64 {
+        KernelKind::eval_dense(self, u, v)
+    }
+
+    fn eval_sparse(&self, u: SparseRow<'_>, v: SparseRow<'_>) -> f64 {
+        KernelKind::eval_sparse(self, u, v)
+    }
+
+    fn sketcher(&self, seed: u64, k: usize) -> Option<Box<dyn Sketcher>> {
+        match self {
+            // ICWS collisions estimate K_MM (Eq. 7); n-min-max is the
+            // same sampler on ℓ₁-normalized input (the pipeline's
+            // Scaling stage applies it).
+            KernelKind::MinMax | KernelKind::NMinMax => {
+                Some(Box::new(crate::cws::CwsHasher::new(seed, k)))
+            }
+            // Minwise over the support estimates the resemblance.
+            KernelKind::Resemblance => Some(Box::new(MinwiseSketcher::new(seed, k))),
+            KernelKind::Linear
+            | KernelKind::Intersection
+            | KernelKind::Chi2
+            | KernelKind::MinMaxChi2 => None,
         }
     }
 }
@@ -328,12 +434,12 @@ mod tests {
     fn kernels_are_symmetric() {
         let (u, v) = pair();
         for k in [
-            Kernel::Linear,
-            Kernel::MinMax,
-            Kernel::Intersection,
-            Kernel::Resemblance,
-            Kernel::Chi2,
-            Kernel::MinMaxChi2,
+            KernelKind::Linear,
+            KernelKind::MinMax,
+            KernelKind::Intersection,
+            KernelKind::Resemblance,
+            KernelKind::Chi2,
+            KernelKind::MinMaxChi2,
         ] {
             assert!(
                 (k.eval_dense(&u, &v) - k.eval_dense(&v, &u)).abs() < 1e-12,
@@ -382,12 +488,12 @@ mod tests {
             let d = Dense::from_rows(&[&u, &v]);
             let s = Csr::from_dense(&d);
             for k in [
-                Kernel::Linear,
-                Kernel::MinMax,
-                Kernel::Intersection,
-                Kernel::Resemblance,
-                Kernel::Chi2,
-                Kernel::MinMaxChi2,
+                KernelKind::Linear,
+                KernelKind::MinMax,
+                KernelKind::Intersection,
+                KernelKind::Resemblance,
+                KernelKind::Chi2,
+                KernelKind::MinMaxChi2,
             ] {
                 let kd = k.eval_dense(&u, &v);
                 let ks = k.eval_sparse(s.row(0), s.row(1));
@@ -419,16 +525,16 @@ mod tests {
     #[test]
     fn name_roundtrip() {
         for k in [
-            Kernel::Linear,
-            Kernel::MinMax,
-            Kernel::NMinMax,
-            Kernel::Intersection,
-            Kernel::Resemblance,
-            Kernel::Chi2,
-            Kernel::MinMaxChi2,
+            KernelKind::Linear,
+            KernelKind::MinMax,
+            KernelKind::NMinMax,
+            KernelKind::Intersection,
+            KernelKind::Resemblance,
+            KernelKind::Chi2,
+            KernelKind::MinMaxChi2,
         ] {
-            assert_eq!(Kernel::from_name(k.name()), Some(k));
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
         }
-        assert_eq!(Kernel::from_name("nope"), None);
+        assert_eq!(KernelKind::from_name("nope"), None);
     }
 }

@@ -3,31 +3,46 @@
 //! Production-quality reproduction of **"Min-Max Kernels" (Ping Li,
 //! stat.ML 2015)**: min-max kernel machines, consistent weighted sampling
 //! (CWS) with the paper's 0-bit scheme, and a three-layer
-//! Rust + JAX + Pallas hashing/serving stack (AOT via XLA/PJRT).
+//! Rust + JAX + Pallas hashing/serving stack (AOT via XLA/PJRT, behind
+//! the `pjrt` cargo feature).
 //!
-//! See `DESIGN.md` for the architecture and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! Start from [`prelude`]; the public API is organized around three
+//! abstractions (see `DESIGN.md` for the architecture and migration
+//! notes, and `EXPERIMENTS.md` for paper-vs-measured results):
+//!
+//! * [`sketch::Sketcher`] — anything that hashes a vector into
+//!   `(i*, t*)` samples (ICWS, minwise, PJRT-backed, future GCWS);
+//! * [`kernels::Kernel`] — an exact pairwise similarity plus its hashed
+//!   linearization ([`kernels::KernelKind`] is the paper's concrete set);
+//! * [`pipeline::Pipeline`] — `Scaling → Sketcher → Expansion → linear
+//!   model` as one fit/transform/predict object.
 //!
 //! Layer map:
 //! * [`util`], [`bench`] — from-scratch substrates (RNG, pool, CLI, JSON,
 //!   stats, property testing, measurement harness).
 //! * [`data`] — matrices, LIBSVM IO, scaling, synthetic dataset suite and
 //!   word-vector corpus.
-//! * [`kernels`] — min-max / n-min-max / intersection / linear /
-//!   resemblance / chi² kernels + blocked kernel-matrix computation.
+//! * [`kernels`] — the [`kernels::Kernel`] trait, min-max / n-min-max /
+//!   intersection / linear / resemblance / chi² forms + blocked
+//!   kernel-matrix computation.
 //! * [`cws`] — ICWS sampler (Alg. 1 of the paper) and the 0-bit/1-bit/
-//!   b-bit schemes; [`features`] — one-hot hashed-feature expansion.
+//!   b-bit schemes; [`sketch`] — the [`sketch::Sketcher`] trait over
+//!   every hash family; [`features`] — one-hot hashed-feature expansion.
 //! * [`svm`] — linear dual-CD SVM, logistic regression, precomputed-kernel
 //!   SVM, multiclass wrappers, C-grid evaluation.
+//! * [`pipeline`] — the composable fit/transform/predict pipeline.
 //! * [`estimate`] — the Figures 4–6 estimator-quality simulation harness.
-//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT).
-//! * [`coordinator`] — the deployable hashing/serving pipeline.
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT;
+//!   stubbed without the `pjrt` feature).
+//! * [`coordinator`] — the deployable hashing/serving stack: open
+//!   [`coordinator::SketcherBackend`] factories, the batching service,
+//!   the replica router, and the offline batch pipeline.
 //! * [`experiments`] — drivers regenerating every paper table and figure.
 
 pub mod bench;
 pub mod util;
 
-
+pub mod sketch;
 
 pub mod coordinator;
 pub mod cws;
@@ -36,10 +51,9 @@ pub mod estimate;
 pub mod experiments;
 pub mod features;
 
-
+pub mod pipeline;
+pub mod prelude;
 
 pub mod kernels;
 pub mod runtime;
 pub mod svm;
-
-

@@ -73,8 +73,8 @@ fn svm_cfg(args: &Args) -> Result<SvmExperimentConfig, Box<dyn std::error::Error
     cfg.n_test = args.usize_or("n-test", cfg.n_test)?;
     cfg.c_points = args.usize_or("c-points", cfg.c_points)?;
     if args.flag("ablations") {
-        use minmax::kernels::Kernel;
-        cfg.extra_kernels = vec![Kernel::Resemblance, Kernel::Chi2, Kernel::MinMaxChi2];
+        use minmax::kernels::KernelKind;
+        cfg.extra_kernels = vec![KernelKind::Resemblance, KernelKind::Chi2, KernelKind::MinMaxChi2];
     }
     Ok(cfg)
 }
@@ -191,7 +191,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 test_x: Matrix::Sparse(minmax::data::CsrBuilder::new(1).finish()),
                 test_y: vec![],
             };
-            let hashed = hash_dataset(&ds, &PipelineConfig::new(seed, k, i_bits));
+            let hashed = hash_dataset(&ds, &PipelineConfig::new(seed, k, i_bits))?;
             libsvm::write_file(std::path::Path::new(&output), &hashed.train, &ds.train_y)?;
             println!("hashed {n} rows -> {output} (dim {})", hashed.train.cols());
         }

@@ -1,0 +1,582 @@
+//! The composable [`Pipeline`]: `Scaling → Sketcher → Expansion →
+//! linear model` as one fit/transform/predict object — the §4 recipe
+//! ("hash, expand, train a linear SVM, serve") packaged behind the
+//! crate's trait surface.
+//!
+//! ```no_run
+//! use minmax::prelude::*;
+//!
+//! # fn demo(train_x: Matrix, train_y: Vec<i32>, test_x: Matrix, test_y: Vec<i32>)
+//! #     -> Result<(), PipelineError> {
+//! let mut pipe = Pipeline::builder()
+//!     .seed(2015)
+//!     .samples(256)       // k hash samples per vector
+//!     .i_bits(8)          // 0-bit CWS, 8 bits of i* per sample
+//!     .scaling(Scaling::None)
+//!     .cost(1.0)          // linear-SVM C
+//!     .build()?;
+//! pipe.fit(&train_x, &train_y)?;
+//! let acc = pipe.accuracy(&test_x, &test_y)?;
+//! # let _ = acc; Ok(())
+//! # }
+//! ```
+//!
+//! Every stage is swappable: [`PipelineBuilder::sketcher`] accepts any
+//! [`Sketcher`] (ICWS, minwise, PJRT-backed, future GCWS families), and
+//! [`PipelineBuilder::for_kernel`] wires the stage stack from a
+//! [`Kernel`]'s own linearization + required normalization.
+
+use crate::data::{scale, Csr, Matrix};
+use crate::features::{Expansion, ExpansionError};
+use crate::kernels::{Kernel, Normalization};
+use crate::sketch::Sketcher;
+use crate::svm::{LinearOvR, LinearSvmParams};
+
+/// Row preprocessing applied before sketching — the paper's §2 protocol
+/// transforms as an explicit pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scaling {
+    /// Use features as-is (min-max kernel regime).
+    #[default]
+    None,
+    /// Row-wise ℓ₁ normalization (n-min-max / intersection regime).
+    L1,
+    /// Row-wise ℓ₂ normalization (linear-kernel regime).
+    L2,
+    /// Replace nonzeros with 1.0 (resemblance regime).
+    Binarize,
+}
+
+impl Scaling {
+    /// The scaling a kernel's evaluation protocol requires.
+    pub fn for_normalization(n: Normalization) -> Scaling {
+        match n {
+            Normalization::None => Scaling::None,
+            Normalization::L1 => Scaling::L1,
+            Normalization::L2 => Scaling::L2,
+        }
+    }
+
+    /// Apply to a matrix, preserving the representation.
+    pub fn apply(&self, m: &Matrix) -> Matrix {
+        match (self, m) {
+            (Scaling::None, m) => m.clone(),
+            (Scaling::L1, Matrix::Dense(d)) => {
+                let mut d = d.clone();
+                scale::l1_normalize_dense(&mut d);
+                Matrix::Dense(d)
+            }
+            (Scaling::L1, Matrix::Sparse(s)) => {
+                let mut s = s.clone();
+                scale::l1_normalize_csr(&mut s);
+                Matrix::Sparse(s)
+            }
+            (Scaling::L2, Matrix::Dense(d)) => {
+                let mut d = d.clone();
+                scale::l2_normalize_dense(&mut d);
+                Matrix::Dense(d)
+            }
+            (Scaling::L2, Matrix::Sparse(s)) => {
+                let mut s = s.clone();
+                scale::l2_normalize_csr(&mut s);
+                Matrix::Sparse(s)
+            }
+            (Scaling::Binarize, Matrix::Dense(d)) => {
+                let mut d = d.clone();
+                scale::binarize_dense(&mut d);
+                Matrix::Dense(d)
+            }
+            // Sparse stays sparse: values become 1.0 in place.
+            (Scaling::Binarize, Matrix::Sparse(s)) => {
+                let mut s = s.clone();
+                scale::binarize_csr(&mut s);
+                Matrix::Sparse(s)
+            }
+        }
+    }
+}
+
+/// Errors from pipeline construction and use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineError {
+    /// The feature-expansion bit budget is invalid.
+    Expansion(ExpansionError),
+    /// An explicit sketcher's `k()` disagrees with an explicit
+    /// [`PipelineBuilder::samples`] request.
+    SketcherMismatch { sketcher_k: usize, expansion_k: usize },
+    /// The chosen kernel has no known hashed linearization.
+    NotLinearizable(&'static str),
+    /// `predict`/`accuracy` before `fit`.
+    NotFitted,
+    /// Label/row count disagreement in `fit`.
+    ShapeMismatch { rows: usize, labels: usize },
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::Expansion(e) => write!(f, "expansion: {e}"),
+            PipelineError::SketcherMismatch { sketcher_k, expansion_k } => write!(
+                f,
+                "sketcher produces k={sketcher_k} samples but samples({expansion_k}) was requested"
+            ),
+            PipelineError::NotLinearizable(name) => {
+                write!(f, "kernel '{name}' has no hashed linearization")
+            }
+            PipelineError::NotFitted => write!(f, "pipeline used before fit()"),
+            PipelineError::ShapeMismatch { rows, labels } => {
+                write!(f, "{rows} feature rows vs {labels} labels")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+impl From<ExpansionError> for PipelineError {
+    fn from(e: ExpansionError) -> Self {
+        PipelineError::Expansion(e)
+    }
+}
+
+/// Builder for [`Pipeline`]. Defaults: seed 2015, k = 128, 8 bits of
+/// i*, 0 bits of t*, no scaling, C = 1.0, ICWS sketcher.
+pub struct PipelineBuilder {
+    seed: u64,
+    /// `None` until [`PipelineBuilder::samples`] is called; the default
+    /// k only applies when no explicit sketcher fixes it.
+    samples: Option<usize>,
+    i_bits: u8,
+    t_bits: u8,
+    scaling: Scaling,
+    c: f64,
+    sketcher: Option<Box<dyn Sketcher>>,
+    /// Deferred kernel linearization: (kernel name, factory). Resolved
+    /// at `build()` with the FINAL seed/k so `.for_kernel(..).seed(..)`
+    /// composes in any order.
+    from_kernel: Option<(&'static str, KernelSketcherFactory)>,
+}
+
+type KernelSketcherFactory = Box<dyn FnOnce(u64, usize) -> Option<Box<dyn Sketcher>>>;
+
+/// Default hash samples per vector when neither [`PipelineBuilder::samples`]
+/// nor an explicit sketcher specifies k.
+pub const DEFAULT_SAMPLES: usize = 128;
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self {
+            seed: 2015,
+            samples: None,
+            i_bits: 8,
+            t_bits: 0,
+            scaling: Scaling::None,
+            c: 1.0,
+            sketcher: None,
+            from_kernel: None,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed for the sketcher's counter-based randomness. Ignored when an
+    /// explicit [`PipelineBuilder::sketcher`] is supplied.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Hash samples per vector (k). When combined with an explicit
+    /// [`PipelineBuilder::sketcher`] whose own k disagrees, `build`
+    /// fails with [`PipelineError::SketcherMismatch`].
+    pub fn samples(mut self, k: usize) -> Self {
+        self.samples = Some(k);
+        self
+    }
+
+    fn effective_k(&self) -> usize {
+        self.samples.unwrap_or(DEFAULT_SAMPLES)
+    }
+
+    /// Bits of `i*` kept per sample (the b-bit expansion of §4).
+    pub fn i_bits(mut self, b: u8) -> Self {
+        self.i_bits = b;
+        self
+    }
+
+    /// Bits of `t*` kept per sample (Figure 8's variant; 0 = the
+    /// paper's 0-bit scheme).
+    pub fn t_bits(mut self, b: u8) -> Self {
+        self.t_bits = b;
+        self
+    }
+
+    /// Row preprocessing before sketching.
+    pub fn scaling(mut self, s: Scaling) -> Self {
+        self.scaling = s;
+        self
+    }
+
+    /// Linear-SVM regularization parameter C.
+    pub fn cost(mut self, c: f64) -> Self {
+        self.c = c;
+        self
+    }
+
+    /// Use an explicit sketcher (any [`Sketcher`] impl) instead of the
+    /// default ICWS family. Overrides a previous `for_kernel` choice.
+    pub fn sketcher(mut self, s: Box<dyn Sketcher>) -> Self {
+        self.sketcher = Some(s);
+        self.from_kernel = None;
+        self
+    }
+
+    /// Wire scaling + sketcher from a [`Kernel`]'s own linearization:
+    /// the pipeline then trains a linear model approximating that
+    /// kernel's SVM. Errors for kernels with no known linearization.
+    /// The sketcher itself is constructed at `build()` with the final
+    /// seed/k, so `.for_kernel(..).seed(..).samples(..)` composes in
+    /// any order.
+    pub fn for_kernel<K: Kernel + 'static>(mut self, kernel: K) -> Result<Self, PipelineError> {
+        // Probe linearizability eagerly so the error points at this call.
+        if kernel.sketcher(0, 1).is_none() {
+            return Err(PipelineError::NotLinearizable(kernel.name()));
+        }
+        self.scaling = Scaling::for_normalization(kernel.required_normalization());
+        let name = kernel.name();
+        self.from_kernel = Some((name, Box::new(move |seed, k| kernel.sketcher(seed, k))));
+        self.sketcher = None;
+        Ok(self)
+    }
+
+    /// Validate and assemble the pipeline.
+    pub fn build(self) -> Result<Pipeline, PipelineError> {
+        let k = self.effective_k();
+        let sketcher: Box<dyn Sketcher> = match (self.sketcher, self.from_kernel) {
+            (Some(s), _) => s,
+            (None, Some((name, factory))) => {
+                factory(self.seed, k).ok_or(PipelineError::NotLinearizable(name))?
+            }
+            (None, None) => Box::new(crate::cws::CwsHasher::new(self.seed, k)),
+        };
+        // An explicit sketcher AND an explicit samples() that disagree
+        // is a configuration bug, not something to silently resolve.
+        if let Some(k) = self.samples {
+            if sketcher.k() != k {
+                return Err(PipelineError::SketcherMismatch {
+                    sketcher_k: sketcher.k(),
+                    expansion_k: k,
+                });
+            }
+        }
+        let expansion = Expansion::checked(sketcher.k(), self.i_bits, self.t_bits)?;
+        Ok(Pipeline {
+            scaling: self.scaling,
+            sketcher,
+            expansion,
+            c: self.c,
+            model: None,
+            n_classes: 0,
+        })
+    }
+}
+
+/// The fitted (or fittable) hashing pipeline:
+/// `Scaling → Sketcher → Expansion → LinearOvR`.
+pub struct Pipeline {
+    scaling: Scaling,
+    sketcher: Box<dyn Sketcher>,
+    expansion: Expansion,
+    c: f64,
+    model: Option<LinearOvR>,
+    n_classes: usize,
+}
+
+impl Pipeline {
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::new()
+    }
+
+    /// The feature map alone: scale, sketch, expand. Rows with no
+    /// positive entry become all-zero feature rows. Deterministic per
+    /// (sketcher, expansion) — train/test/serving all agree.
+    pub fn transform(&self, x: &Matrix) -> Csr {
+        // Scaling::None borrows the input directly — no matrix copy on
+        // the default (min-max regime) path.
+        let samples = match self.scaling {
+            Scaling::None => self.sketcher.sketch_matrix(x),
+            _ => self.sketcher.sketch_matrix(&self.scaling.apply(x)),
+        };
+        self.expansion.expand(&samples)
+    }
+
+    /// Fit the linear model on hashed features.
+    pub fn fit(&mut self, x: &Matrix, y: &[i32]) -> Result<&mut Self, PipelineError> {
+        if x.rows() != y.len() {
+            return Err(PipelineError::ShapeMismatch { rows: x.rows(), labels: y.len() });
+        }
+        let n_classes = y.iter().copied().max().unwrap_or(0).max(0) as usize + 1;
+        let features = self.transform(x);
+        let params = LinearSvmParams { c: self.c, ..Default::default() };
+        self.model = Some(LinearOvR::train(&features, y, n_classes, &params));
+        self.n_classes = n_classes;
+        Ok(self)
+    }
+
+    /// Predict class labels for a feature matrix.
+    pub fn predict(&self, x: &Matrix) -> Result<Vec<i32>, PipelineError> {
+        let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
+        let features = self.transform(x);
+        Ok((0..features.rows()).map(|i| model.predict(features.row(i))).collect())
+    }
+
+    /// Per-class decision values for one already-transformed row set.
+    pub fn decisions(&self, features: &Csr, row: usize) -> Result<Vec<f64>, PipelineError> {
+        let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
+        Ok(model.decisions(features.row(row)))
+    }
+
+    /// Test accuracy against ground-truth labels.
+    pub fn accuracy(&self, x: &Matrix, y: &[i32]) -> Result<f64, PipelineError> {
+        if x.rows() != y.len() {
+            return Err(PipelineError::ShapeMismatch { rows: x.rows(), labels: y.len() });
+        }
+        let preds = self.predict(x)?;
+        let hits = preds.iter().zip(y).filter(|(p, t)| p == t).count();
+        Ok(hits as f64 / y.len().max(1) as f64)
+    }
+
+    /// Export the fitted model's weights in the `[K, 2^bits, C]` serving
+    /// layout (see `coordinator::export_scorer_weights`); `None` before
+    /// `fit`.
+    pub fn export_weights(&self) -> Option<Vec<f32>> {
+        let model = self.model.as_ref()?;
+        let codes = self.expansion.code_space();
+        let k = self.expansion.k;
+        let n_classes = self.n_classes;
+        let mut w = vec![0.0f32; k * codes * n_classes];
+        for (cls, m) in model.models().iter().enumerate() {
+            for j in 0..k {
+                for code in 0..codes {
+                    let bias_share = if j == 0 { m.b } else { 0.0 };
+                    w[(j * codes + code) * n_classes + cls] =
+                        (m.w[j * codes + code] + bias_share) as f32;
+                }
+            }
+        }
+        Some(w)
+    }
+
+    pub fn expansion(&self) -> &Expansion {
+        &self.expansion
+    }
+
+    pub fn scaling(&self) -> Scaling {
+        self.scaling
+    }
+
+    pub fn sketcher(&self) -> &dyn Sketcher {
+        self.sketcher.as_ref()
+    }
+
+    pub fn model(&self) -> Option<&LinearOvR> {
+        self.model.as_ref()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.model.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::kernels::KernelKind;
+    use crate::sketch::MinwiseSketcher;
+
+    fn letter() -> crate::data::Dataset {
+        generate("letter", SynthConfig { seed: 3, n_train: 150, n_test: 150 }).unwrap()
+    }
+
+    #[test]
+    fn builder_validates_bit_budget() {
+        assert!(matches!(
+            Pipeline::builder().i_bits(0).build(),
+            Err(PipelineError::Expansion(_))
+        ));
+        assert!(matches!(
+            Pipeline::builder().i_bits(16).t_bits(16).build(),
+            Err(PipelineError::Expansion(_))
+        ));
+        assert!(Pipeline::builder().i_bits(8).t_bits(2).build().is_ok());
+    }
+
+    #[test]
+    fn unfitted_pipeline_errors_cleanly() {
+        let ds = letter();
+        let pipe = Pipeline::builder().build().unwrap();
+        assert!(!pipe.is_fitted());
+        assert_eq!(pipe.predict(&ds.test_x), Err(PipelineError::NotFitted));
+        assert!(pipe.export_weights().is_none());
+    }
+
+    #[test]
+    fn fit_predict_beats_chance_and_matches_free_functions() {
+        let ds = letter();
+        let mut pipe =
+            Pipeline::builder().seed(5).samples(128).i_bits(8).cost(1.0).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let acc = pipe.accuracy(&ds.test_x, &ds.test_y).unwrap();
+        assert!(acc > 2.0 / ds.n_classes() as f64, "accuracy {acc}");
+
+        // The object API reproduces the manual transform + train + eval
+        // composition exactly (same class count, same solver seed).
+        let tr = pipe.transform(&ds.train_x);
+        let te = pipe.transform(&ds.test_x);
+        let want = crate::svm::linear_svm_accuracy(
+            &tr,
+            &ds.train_y,
+            &te,
+            &ds.test_y,
+            pipe.n_classes(),
+            1.0,
+        );
+        assert!((acc - want).abs() < 1e-12, "pipeline {acc} vs free fn {want}");
+    }
+
+    #[test]
+    fn transform_is_deterministic_and_k_hot() {
+        let ds = letter();
+        let pipe = Pipeline::builder().seed(9).samples(32).i_bits(4).build().unwrap();
+        let a = pipe.transform(&ds.train_x);
+        let b = pipe.transform(&ds.train_x);
+        assert_eq!(a, b);
+        assert_eq!(a.cols(), pipe.expansion().dim());
+        for i in 0..a.rows() {
+            assert_eq!(a.row(i).nnz(), 32);
+        }
+    }
+
+    #[test]
+    fn for_kernel_wires_scaling_and_sketcher() {
+        let p = Pipeline::builder().for_kernel(KernelKind::NMinMax).unwrap().build().unwrap();
+        assert_eq!(p.scaling(), Scaling::L1);
+        assert_eq!(p.sketcher().name(), "icws");
+
+        let p = Pipeline::builder().for_kernel(KernelKind::Resemblance).unwrap().build().unwrap();
+        assert_eq!(p.sketcher().name(), "minwise");
+
+        assert!(matches!(
+            Pipeline::builder().for_kernel(KernelKind::Linear),
+            Err(PipelineError::NotLinearizable("linear"))
+        ));
+    }
+
+    #[test]
+    fn for_kernel_composes_with_later_seed_and_samples() {
+        // The linearization is constructed at build() with the FINAL
+        // configuration, whichever order the builder calls come in.
+        let p = Pipeline::builder()
+            .for_kernel(KernelKind::MinMax)
+            .unwrap()
+            .seed(42)
+            .samples(16)
+            .build()
+            .unwrap();
+        assert_eq!(p.sketcher().seed(), 42);
+        assert_eq!(p.sketcher().k(), 16);
+        let q = Pipeline::builder().seed(42).samples(16).build().unwrap();
+        let ds = letter();
+        assert_eq!(p.transform(&ds.train_x), q.transform(&ds.train_x));
+    }
+
+    #[test]
+    fn conflicting_samples_and_sketcher_is_an_error() {
+        let err = Pipeline::builder()
+            .sketcher(Box::new(MinwiseSketcher::new(1, 64)))
+            .samples(128)
+            .build()
+            .err()
+            .expect("mismatch must error");
+        assert_eq!(err, PipelineError::SketcherMismatch { sketcher_k: 64, expansion_k: 128 });
+        // Agreeing values are fine.
+        assert!(Pipeline::builder()
+            .sketcher(Box::new(MinwiseSketcher::new(1, 64)))
+            .samples(64)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn custom_sketcher_slots_in() {
+        let ds = letter();
+        let mut pipe = Pipeline::builder()
+            .sketcher(Box::new(MinwiseSketcher::new(7, 64)))
+            .i_bits(8)
+            .build()
+            .unwrap();
+        assert_eq!(pipe.sketcher().k(), 64);
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        // Minwise only sees the support, which is nearly constant on this
+        // dense dataset — this checks the plumbing, not model quality.
+        let acc = pipe.accuracy(&ds.test_x, &ds.test_y).unwrap();
+        assert!(acc >= 0.5 / ds.n_classes() as f64, "accuracy {acc}");
+    }
+
+    #[test]
+    fn fit_shape_mismatch_is_an_error() {
+        let ds = letter();
+        let mut pipe = Pipeline::builder().build().unwrap();
+        let short = vec![0i32; 3];
+        assert!(matches!(
+            pipe.fit(&ds.train_x, &short),
+            Err(PipelineError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn export_weights_match_coordinator_export() {
+        let ds = letter();
+        let mut pipe = Pipeline::builder().seed(5).samples(16).i_bits(4).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let w = pipe.export_weights().unwrap();
+        let features = pipe.transform(&ds.train_x);
+        let want = crate::coordinator::export_scorer_weights(
+            &features,
+            &ds.train_y,
+            pipe.n_classes(),
+            pipe.expansion(),
+            1.0,
+        );
+        assert_eq!(w.len(), want.len());
+        for (a, b) in w.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scaling_binarize_collapses_weights() {
+        // Binarized input: ICWS degenerates to minwise statistics, so
+        // two scaling-binarize transforms of weight-jittered copies of
+        // the same support are identical.
+        let d = crate::data::Dense::from_rows(&[&[0.5f32, 0.0, 2.0], &[3.0f32, 0.0, 0.1]]);
+        let m = Matrix::Dense(d);
+        let pipe = Pipeline::builder()
+            .scaling(Scaling::Binarize)
+            .samples(16)
+            .i_bits(4)
+            .build()
+            .unwrap();
+        let t = pipe.transform(&m);
+        assert_eq!(t.row(0).indices, t.row(1).indices);
+    }
+}

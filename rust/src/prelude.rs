@@ -1,0 +1,48 @@
+//! One-import surface for the common workflow:
+//!
+//! ```no_run
+//! use minmax::prelude::*;
+//! ```
+//!
+//! Pulls in the trait layer ([`Sketcher`], [`Kernel`]), the concrete
+//! hash families and kernel set, the [`Pipeline`] builder, the data
+//! types, the serving stack, and the evaluation protocol helpers.
+
+// Trait layer.
+pub use crate::kernels::{Kernel, KernelKind, Normalization};
+pub use crate::sketch::{MinwiseSketcher, Sketcher};
+
+// Hashing: sampler, schemes, feature expansion.
+pub use crate::cws::{
+    collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
+    LshIndex, MinwiseHasher, Scheme,
+};
+pub use crate::features::{Expansion, ExpansionError};
+
+// Kernel helpers.
+pub use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
+pub use crate::kernels::{
+    dense_chi2, dense_dot, dense_intersection, dense_minmax, dense_resemblance, sparse_minmax,
+    sparse_resemblance,
+};
+
+// The composable pipeline.
+pub use crate::pipeline::{Pipeline, PipelineBuilder, PipelineError, Scaling};
+
+// Data layer.
+pub use crate::data::synth::{generate, SynthConfig};
+pub use crate::data::{Csr, CsrBuilder, Dataset, Dense, Matrix, SparseRow};
+
+// Learning + the §2 evaluation protocol.
+pub use crate::svm::{
+    c_grid, kernel_svm_sweep, linear_svm_accuracy, LinearOvR, LinearSvmParams, SweepResult,
+};
+
+// Serving stack.
+pub use crate::coordinator::{
+    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, Router, ServiceConfig,
+    SketcherBackend, SubmitError,
+};
+
+// Runtime bridge (stubbed without the `pjrt` feature).
+pub use crate::runtime::{default_artifacts_dir, pjrt_enabled, Engine};

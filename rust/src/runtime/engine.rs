@@ -2,118 +2,38 @@
 //! the CPU PJRT client, and executes them from the coordinator's hot
 //! path. Python is never involved at runtime.
 //!
-//! Pattern follows /opt/xla-example/load_hlo.rs:
+//! The XLA bindings (`xla` crate) are only present on hosts with the
+//! XLA toolchain, so the whole bridge is gated behind the **`pjrt`
+//! cargo feature**. Without it this module compiles a same-API stub
+//! whose `Engine::load*` / [`literal_f32`] fail with a clear error —
+//! callers are Result-based either way, and everything downstream
+//! (service backends, examples, benches) probes [`pjrt_enabled`] or the
+//! artifacts manifest before relying on it.
+//!
+//! Pattern (real build) follows /opt/xla-example/load_hlo.rs:
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`.
 
-use std::collections::HashMap;
 use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
 
 use super::artifact::{ArtifactSpec, Manifest};
 
-/// A loaded, compiled artifact set bound to one PJRT client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+/// Whether this build carries the real PJRT/XLA runtime.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
 
-impl Engine {
-    /// Create a CPU engine over `artifacts_dir`, compiling every
-    /// manifest entry eagerly (compile once, execute many).
-    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        Self::load_subset_inner(manifest, None)
-    }
+/// Error type for the runtime bridge: plain strings (the vendor set has
+/// no error-handling crates), convertible into `Box<dyn Error>`.
+pub type RuntimeError = String;
 
-    /// Load only the named entries (faster startup for focused tools).
-    pub fn load_subset(artifacts_dir: &Path, names: &[&str]) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        Self::load_subset_inner(manifest, Some(names))
-    }
+#[cfg(feature = "pjrt")]
+pub use real::{literal_f32, Engine, Literal};
 
-    fn load_subset_inner(manifest: Manifest, names: Option<&[&str]>) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = HashMap::new();
-        for entry in &manifest.entries {
-            if let Some(ns) = names {
-                if !ns.contains(&entry.name.as_str()) {
-                    continue;
-                }
-            }
-            let proto = xla::HloModuleProto::from_text_file(&entry.file)
-                .with_context(|| format!("parsing {}", entry.file.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", entry.name))?;
-            executables.insert(entry.name.clone(), exe);
-        }
-        Ok(Engine { client, manifest, executables })
-    }
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{literal_f32, Engine, Literal};
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
-
-    /// Execute artifact `name` with the given inputs; returns the tuple
-    /// elements as literals. Input count and element counts are checked
-    /// against the manifest before dispatch.
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let spec = self.spec(name)?;
-        if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        for (lit, ts) in inputs.iter().zip(&spec.inputs) {
-            let n = lit.element_count();
-            if n != ts.elements() {
-                return Err(anyhow!(
-                    "{name}: input '{}' has {n} elements, expected {}",
-                    ts.name,
-                    ts.elements()
-                ));
-            }
-        }
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-        let result = exe.execute::<xla::Literal>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True — always a tuple.
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Convenience: run and decode every output as the manifest dtype.
-    pub fn run_decoded(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        let outs = self.run(name, inputs)?;
-        let spec = self.spec(name)?;
-        outs.iter()
-            .zip(&spec.outputs)
-            .map(|(lit, ts)| Tensor::from_literal(lit, ts))
-            .collect()
-    }
-}
-
-/// A decoded output tensor.
+/// A decoded output tensor (shared by real and stub builds).
 #[derive(Debug, Clone)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -121,14 +41,6 @@ pub enum Tensor {
 }
 
 impl Tensor {
-    fn from_literal(lit: &xla::Literal, ts: &super::artifact::TensorSpec) -> Result<Tensor> {
-        match ts.dtype.as_str() {
-            "f32" => Ok(Tensor::F32 { shape: ts.shape.clone(), data: lit.to_vec::<f32>()? }),
-            "s32" => Ok(Tensor::I32 { shape: ts.shape.clone(), data: lit.to_vec::<i32>()? }),
-            other => Err(anyhow!("unsupported dtype {other}")),
-        }
-    }
-
     pub fn shape(&self) -> &[usize] {
         match self {
             Tensor::F32 { shape, .. } => shape,
@@ -151,16 +63,6 @@ impl Tensor {
     }
 }
 
-/// Build an f32 literal of the given shape from a flat row-major slice.
-pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        return Err(anyhow!("literal_f32: {} elements for shape {shape:?}", data.len()));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
 /// Default artifacts directory: `$MINMAX_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
     std::env::var("MINMAX_ARTIFACTS")
@@ -168,7 +70,220 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::*;
+    use std::collections::HashMap;
+
+    pub use xla::Literal;
+
+    /// A loaded, compiled artifact set bound to one PJRT client.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Engine {
+        /// Create a CPU engine over `artifacts_dir`, compiling every
+        /// manifest entry eagerly (compile once, execute many).
+        pub fn load(artifacts_dir: &Path) -> Result<Engine, RuntimeError> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            Self::load_subset_inner(manifest, None)
+        }
+
+        /// Load only the named entries (faster startup for focused tools).
+        pub fn load_subset(artifacts_dir: &Path, names: &[&str]) -> Result<Engine, RuntimeError> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            Self::load_subset_inner(manifest, Some(names))
+        }
+
+        fn load_subset_inner(
+            manifest: Manifest,
+            names: Option<&[&str]>,
+        ) -> Result<Engine, RuntimeError> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("creating PJRT CPU client: {e}"))?;
+            let mut executables = HashMap::new();
+            for entry in &manifest.entries {
+                if let Some(ns) = names {
+                    if !ns.contains(&entry.name.as_str()) {
+                        continue;
+                    }
+                }
+                let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                    .map_err(|e| format!("parsing {}: {e}", entry.file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| format!("compiling {}: {e}", entry.name))?;
+                executables.insert(entry.name.clone(), exe);
+            }
+            Ok(Engine { client, manifest, executables })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn spec(&self, name: &str) -> Result<&ArtifactSpec, RuntimeError> {
+            self.manifest.get(name).ok_or_else(|| format!("unknown artifact '{name}'"))
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.executables.contains_key(name)
+        }
+
+        /// Execute artifact `name` with the given inputs; returns the
+        /// tuple elements as literals. Input count and element counts
+        /// are checked against the manifest before dispatch.
+        pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>, RuntimeError> {
+            let spec = self.spec(name)?;
+            if inputs.len() != spec.inputs.len() {
+                return Err(format!(
+                    "{name}: expected {} inputs, got {}",
+                    spec.inputs.len(),
+                    inputs.len()
+                ));
+            }
+            for (lit, ts) in inputs.iter().zip(&spec.inputs) {
+                let n = lit.element_count();
+                if n != ts.elements() {
+                    return Err(format!(
+                        "{name}: input '{}' has {n} elements, expected {}",
+                        ts.name,
+                        ts.elements()
+                    ));
+                }
+            }
+            let exe = self
+                .executables
+                .get(name)
+                .ok_or_else(|| format!("artifact '{name}' not loaded"))?;
+            let result =
+                exe.execute::<Literal>(inputs).map_err(|e| format!("{name}: execute: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("{name}: device transfer: {e}"))?;
+            // aot.py lowers with return_tuple=True — always a tuple.
+            lit.to_tuple().map_err(|e| format!("{name}: untuple: {e}"))
+        }
+
+        /// Convenience: run and decode every output as the manifest dtype.
+        pub fn run_decoded(
+            &self,
+            name: &str,
+            inputs: &[Literal],
+        ) -> Result<Vec<Tensor>, RuntimeError> {
+            let outs = self.run(name, inputs)?;
+            let spec = self.spec(name)?;
+            outs.iter()
+                .zip(&spec.outputs)
+                .map(|(lit, ts)| tensor_from_literal(lit, ts))
+                .collect()
+        }
+    }
+
+    fn tensor_from_literal(
+        lit: &Literal,
+        ts: &crate::runtime::artifact::TensorSpec,
+    ) -> Result<Tensor, RuntimeError> {
+        match ts.dtype.as_str() {
+            "f32" => Ok(Tensor::F32 {
+                shape: ts.shape.clone(),
+                data: lit.to_vec::<f32>().map_err(|e| format!("decode f32: {e}"))?,
+            }),
+            "s32" => Ok(Tensor::I32 {
+                shape: ts.shape.clone(),
+                data: lit.to_vec::<i32>().map_err(|e| format!("decode s32: {e}"))?,
+            }),
+            other => Err(format!("unsupported dtype {other}")),
+        }
+    }
+
+    /// Build an f32 literal of the given shape from a flat row-major
+    /// slice.
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal, RuntimeError> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(format!("literal_f32: {} elements for shape {shape:?}", data.len()));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(data).reshape(&dims).map_err(|e| format!("literal_f32 reshape: {e}"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+
+    const DISABLED: &str =
+        "built without the `pjrt` feature: on a host with the XLA toolchain, add the `xla` \
+         dependency to rust/Cargo.toml (see its [features] note) and rebuild with \
+         `--features pjrt` to use AOT artifacts";
+
+    /// Placeholder literal so PJRT-consuming code type-checks in stub
+    /// builds; no value of it can be constructed through this module's
+    /// API (every constructor fails first).
+    #[derive(Debug, Clone)]
+    pub struct Literal(#[allow(dead_code)] ());
+
+    /// Stub engine: same API as the real one, fails at load time.
+    pub struct Engine {
+        manifest: Manifest,
+        never: std::convert::Infallible,
+    }
+
+    impl Engine {
+        pub fn load(artifacts_dir: &Path) -> Result<Engine, RuntimeError> {
+            let _ = Manifest::load(artifacts_dir)?;
+            Err(DISABLED.to_string())
+        }
+
+        pub fn load_subset(artifacts_dir: &Path, names: &[&str]) -> Result<Engine, RuntimeError> {
+            let _ = names;
+            Self::load(artifacts_dir)
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn spec(&self, _name: &str) -> Result<&ArtifactSpec, RuntimeError> {
+            match self.never {}
+        }
+
+        pub fn has(&self, _name: &str) -> bool {
+            match self.never {}
+        }
+
+        pub fn run(&self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>, RuntimeError> {
+            match self.never {}
+        }
+
+        pub fn run_decoded(
+            &self,
+            _name: &str,
+            _inputs: &[Literal],
+        ) -> Result<Vec<Tensor>, RuntimeError> {
+            match self.never {}
+        }
+    }
+
+    pub fn literal_f32(_data: &[f32], _shape: &[usize]) -> Result<Literal, RuntimeError> {
+        Err(DISABLED.to_string())
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -182,5 +297,17 @@ mod tests {
     #[test]
     fn literal_f32_shape_mismatch() {
         assert!(literal_f32(&[1.0], &[2, 3]).is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_cleanly() {
+        assert!(!pjrt_enabled());
+        let err = literal_f32(&[1.0], &[1]).unwrap_err();
+        assert!(err.contains("pjrt"));
     }
 }

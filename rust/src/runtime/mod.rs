@@ -1,9 +1,15 @@
 //! Runtime bridge to the AOT layer: manifest-described HLO-text
 //! artifacts (produced once by `make artifacts`) are compiled on the PJRT
 //! CPU client and executed from rust. See DESIGN.md §3.
+//!
+//! The XLA bindings are gated behind the `pjrt` cargo feature; probe
+//! [`pjrt_enabled`] (or just handle the `Result` from `Engine::load`)
+//! before relying on artifact execution.
 
 pub mod artifact;
 pub mod engine;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
-pub use engine::{default_artifacts_dir, literal_f32, Engine, Tensor};
+pub use engine::{
+    default_artifacts_dir, literal_f32, pjrt_enabled, Engine, Literal, RuntimeError, Tensor,
+};

@@ -1,0 +1,309 @@
+//! The [`Sketcher`] trait — the crate's unified hashing abstraction.
+//!
+//! A `Sketcher` is anything that turns a nonnegative vector (sparse row
+//! or dense slice) into a fixed-length stream of [`CwsSample`]s whose
+//! collision statistics estimate some kernel:
+//!
+//! * [`CwsHasher`] — ICWS (Algorithm 1), collisions estimate the min-max
+//!   kernel (Eq. 7); the paper's subject.
+//! * [`DenseBatchHasher`] — the same sampler with `(r, c, β)`
+//!   materialized once per `(seed, k, D)`; byte-identical output, used
+//!   on the service hot path.
+//! * [`MinwiseSketcher`] — classical minwise hashing over the support
+//!   (binarized view); collisions estimate the resemblance (Eq. 2).
+//! * `coordinator::PjrtSketcher` — the AOT/PJRT executable behind the
+//!   same interface (same counter-based randomness as [`CwsHasher`]).
+//! * Future GCWS / generalized-min-max families (arXiv:1605.05721) slot
+//!   in as new impls without touching the coordinator or the pipeline.
+//!
+//! The trait is deliberately NOT `Send + Sync`: backends like PJRT own
+//! thread-bound clients. The coordinator constructs each sketcher on the
+//! worker thread that will own it (see `coordinator::SketcherBackend`).
+//!
+//! Downstream composition is uniform: `Sketcher → cws::Scheme /
+//! features::Expansion → linear model`, packaged by [`crate::pipeline`].
+
+use crate::cws::minwise::MinwiseHasher;
+use crate::cws::sampler::{CwsHasher, CwsSample, DenseBatchHasher};
+use crate::data::sparse::SparseRow;
+use crate::data::Matrix;
+
+/// Uniform interface over hash families producing `(i*, t*)` samples.
+///
+/// Implementations must be deterministic per `(seed, k)`: two sketchers
+/// of the same family and configuration produce identical samples for
+/// identical input, which is what makes train/test hashing, replicated
+/// services, and native-vs-AOT backends interchangeable.
+pub trait Sketcher {
+    /// Samples per vector.
+    fn k(&self) -> usize;
+
+    /// The seed all randomness derives from.
+    fn seed(&self) -> u64;
+
+    /// Short family name (diagnostics, metrics labels).
+    fn name(&self) -> &'static str;
+
+    /// Sketch a sparse nonnegative row. Panics if the row is empty
+    /// (CWS-style samplers are undefined on the zero vector; callers
+    /// filter empty rows — see [`Sketcher::sketch_matrix`]).
+    fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample>;
+
+    /// Sketch a dense nonnegative vector (zeros skipped). Panics if the
+    /// vector has no positive entry.
+    fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample>;
+
+    /// Batch hook: sketch many dense rows at once. The default maps
+    /// [`Sketcher::sketch_dense`]; batched backends (PJRT) override it
+    /// to amortize dispatch over fixed-shape executions.
+    fn sketch_dense_batch(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        rows.iter().map(|r| self.sketch_dense(r)).collect()
+    }
+
+    /// Sketch every row of a matrix; rows with no positive entry yield
+    /// `None` (hashing is undefined there, and the feature expansion
+    /// maps `None` to an all-zero feature row).
+    fn sketch_matrix(&self, m: &Matrix) -> Vec<Option<Vec<CwsSample>>> {
+        match m {
+            Matrix::Sparse(s) => (0..s.rows())
+                .map(|i| {
+                    let row = s.row(i);
+                    if row.nnz() == 0 {
+                        None
+                    } else {
+                        Some(self.sketch_sparse(row))
+                    }
+                })
+                .collect(),
+            Matrix::Dense(d) => {
+                let live: Vec<usize> =
+                    (0..d.rows()).filter(|&i| d.row(i).iter().any(|&v| v > 0.0)).collect();
+                let rows: Vec<&[f32]> = live.iter().map(|&i| d.row(i)).collect();
+                let mut sketched = self.sketch_dense_batch(&rows).into_iter();
+                let mut out: Vec<Option<Vec<CwsSample>>> = vec![None; d.rows()];
+                for &i in &live {
+                    out[i] = Some(sketched.next().expect("batch length"));
+                }
+                out
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ ICWS
+
+impl Sketcher for CwsHasher {
+    fn k(&self) -> usize {
+        CwsHasher::k(self)
+    }
+
+    fn seed(&self) -> u64 {
+        CwsHasher::seed(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "icws"
+    }
+
+    fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
+        self.hash_sparse(row)
+    }
+
+    fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+        self.hash_dense(u)
+    }
+
+    /// Multi-row batches of one dimension materialize the `(r, c, β)`
+    /// grid once via [`CwsHasher::dense_batch`] — the same amortization
+    /// the service hot path uses (identical output, large speedup).
+    fn sketch_dense_batch(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        match rows.first() {
+            Some(first) if rows.len() > 1 && rows.iter().all(|r| r.len() == first.len()) => {
+                let batch = self.dense_batch(first.len());
+                rows.iter().map(|r| batch.hash(r)).collect()
+            }
+            _ => rows.iter().map(|r| self.hash_dense(r)).collect(),
+        }
+    }
+}
+
+impl Sketcher for DenseBatchHasher {
+    fn k(&self) -> usize {
+        DenseBatchHasher::k(self)
+    }
+
+    fn seed(&self) -> u64 {
+        DenseBatchHasher::seed(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "icws-materialized"
+    }
+
+    fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
+        self.hash_sparse(row)
+    }
+
+    fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+        self.hash(u)
+    }
+}
+
+// --------------------------------------------------------------- minwise
+
+/// Minwise hashing behind the [`Sketcher`] interface: the vector's
+/// SUPPORT is hashed (values are ignored — the binarized view), and the
+/// 64-bit min-hash of sample `j` is packed as
+/// `i* = high 32 bits`, `t* = low 32 bits`.
+///
+/// Full-sample collisions therefore occur iff the min-hashes collide,
+/// so `collision_fraction(Scheme::FULL, …)` estimates the resemblance
+/// (Eq. 2). The 0-bit scheme keeps the top 32 bits — accidental
+/// collisions have probability ~2⁻³², negligible — so it estimates the
+/// resemblance too. This is the b-bit-minwise baseline of §1/[20] as a
+/// drop-in `Sketcher`.
+#[derive(Debug, Clone)]
+pub struct MinwiseSketcher {
+    inner: MinwiseHasher,
+    seed: u64,
+}
+
+impl MinwiseSketcher {
+    pub fn new(seed: u64, k: usize) -> Self {
+        Self { inner: MinwiseHasher::new(seed, k), seed }
+    }
+
+    fn pack(hashes: Vec<u64>) -> Vec<CwsSample> {
+        hashes
+            .into_iter()
+            .map(|h| CwsSample { i_star: (h >> 32) as u32, t_star: (h & 0xffff_ffff) as i64 })
+            .collect()
+    }
+}
+
+impl Sketcher for MinwiseSketcher {
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn name(&self) -> &'static str {
+        "minwise"
+    }
+
+    fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
+        Self::pack(self.inner.hash(row))
+    }
+
+    fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+        let indices: Vec<u32> =
+            u.iter().enumerate().filter(|(_, &v)| v > 0.0).map(|(i, _)| i as u32).collect();
+        assert!(!indices.is_empty(), "minwise hashing is undefined on the empty set");
+        let values = vec![1.0f32; indices.len()];
+        Self::pack(self.inner.hash(SparseRow { indices: &indices, values: &values }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::schemes::{collision_fraction, Scheme};
+    use crate::data::dense::Dense;
+    use crate::data::sparse::Csr;
+    use crate::kernels::dense_resemblance;
+    use crate::util::rng::Pcg64;
+
+    fn random_vec(rng: &mut Pcg64, dim: usize, zero_frac: f64) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim)
+            .map(|_| if rng.uniform() < zero_frac { 0.0 } else { rng.lognormal(0.0, 1.0) as f32 })
+            .collect();
+        if !v.iter().any(|&x| x > 0.0) {
+            v[0] = 1.0;
+        }
+        v
+    }
+
+    #[test]
+    fn trait_and_inherent_paths_agree() {
+        let mut rng = Pcg64::new(3);
+        let h = CwsHasher::new(42, 16);
+        let s: &dyn Sketcher = &h;
+        for _ in 0..10 {
+            let v = random_vec(&mut rng, 32, 0.4);
+            assert_eq!(s.sketch_dense(&v), h.hash_dense(&v));
+        }
+        assert_eq!(s.k(), 16);
+        assert_eq!(s.seed(), 42);
+    }
+
+    #[test]
+    fn dense_batch_hasher_is_a_parity_sketcher() {
+        let mut rng = Pcg64::new(7);
+        let lazy = CwsHasher::new(9, 24);
+        let mat = lazy.dense_batch(40);
+        let a: &dyn Sketcher = &lazy;
+        let b: &dyn Sketcher = &mat;
+        for _ in 0..15 {
+            let v = random_vec(&mut rng, 40, 0.5);
+            assert_eq!(a.sketch_dense(&v), b.sketch_dense(&v));
+            let d = Dense::from_rows(&[&v]);
+            let s = Csr::from_dense(&d);
+            assert_eq!(a.sketch_sparse(s.row(0)), b.sketch_sparse(s.row(0)));
+        }
+    }
+
+    #[test]
+    fn sketch_matrix_marks_empty_rows() {
+        let d = Dense::from_rows(&[&[1.0, 0.0], &[0.0, 0.0], &[0.5, 2.0]]);
+        for m in [Matrix::Dense(d.clone()), Matrix::Sparse(Csr::from_dense(&d))] {
+            let h = CwsHasher::new(1, 8);
+            let out = Sketcher::sketch_matrix(&h, &m);
+            assert!(out[0].is_some());
+            assert!(out[1].is_none());
+            assert_eq!(out[2].as_ref().unwrap().len(), 8);
+            assert_eq!(out[0], Some(h.hash_dense(&[1.0, 0.0])));
+        }
+    }
+
+    #[test]
+    fn minwise_sketcher_estimates_resemblance() {
+        let mut rng = Pcg64::new(11);
+        let d = 4000usize;
+        let u: Vec<f32> =
+            (0..d).map(|_| if rng.uniform() < 0.9 { 0.0 } else { 1.0 }).collect();
+        let v: Vec<f32> = u
+            .iter()
+            .map(|&x| {
+                if rng.uniform() < 0.15 {
+                    1.0 - x
+                } else {
+                    x
+                }
+            })
+            .collect();
+        let truth = dense_resemblance(&u, &v);
+        let k = 3000;
+        let s = MinwiseSketcher::new(5, k);
+        let (su, sv) = (s.sketch_dense(&u), s.sketch_dense(&v));
+        let full = collision_fraction(Scheme::FULL, &su, &sv);
+        let zero = collision_fraction(Scheme::ZERO_BIT, &su, &sv);
+        let tol = 4.0 * (truth * (1.0 - truth) / k as f64).sqrt() + 0.01;
+        assert!((full - truth).abs() < tol, "full {full} vs R {truth}");
+        assert!((zero - truth).abs() < tol, "0-bit {zero} vs R {truth}");
+    }
+
+    #[test]
+    fn minwise_dense_matches_sparse() {
+        let u = [0.0f32, 2.5, 0.0, 1.0, 3.0, 0.0];
+        let d = Dense::from_rows(&[&u]);
+        let c = Csr::from_dense(&d);
+        let s = MinwiseSketcher::new(8, 32);
+        assert_eq!(s.sketch_dense(&u), s.sketch_sparse(c.row(0)));
+        assert_eq!(s.name(), "minwise");
+        assert_eq!(s.k(), 32);
+        assert_eq!(s.seed(), 8);
+    }
+}

@@ -4,10 +4,10 @@
 //! report test accuracy per C (Figures 1–3) and the per-kernel best
 //! (Table 1).
 
-use crate::data::scale;
 use crate::data::{Dataset, Matrix};
 use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
-use crate::kernels::{Kernel, Normalization};
+use crate::kernels::KernelKind;
+use crate::pipeline::Scaling;
 use crate::svm::kernel::KernelSvmParams;
 use crate::svm::multiclass::KernelOvO;
 
@@ -21,36 +21,16 @@ pub fn c_grid(points: usize) -> Vec<f64> {
 }
 
 /// Apply `kern`'s required row normalization, returning new matrices.
-pub fn normalize_for(kern: Kernel, m: &Matrix) -> Matrix {
-    match (kern.required_normalization(), m) {
-        (Normalization::None, m) => m.clone(),
-        (Normalization::L1, Matrix::Dense(d)) => {
-            let mut d = d.clone();
-            scale::l1_normalize_dense(&mut d);
-            Matrix::Dense(d)
-        }
-        (Normalization::L1, Matrix::Sparse(s)) => {
-            let mut s = s.clone();
-            scale::l1_normalize_csr(&mut s);
-            Matrix::Sparse(s)
-        }
-        (Normalization::L2, Matrix::Dense(d)) => {
-            let mut d = d.clone();
-            scale::l2_normalize_dense(&mut d);
-            Matrix::Dense(d)
-        }
-        (Normalization::L2, Matrix::Sparse(s)) => {
-            let mut s = s.clone();
-            scale::l2_normalize_csr(&mut s);
-            Matrix::Sparse(s)
-        }
-    }
+/// (One implementation for the whole crate: delegates to the pipeline's
+/// [`Scaling`] stage.)
+pub fn normalize_for(kern: KernelKind, m: &Matrix) -> Matrix {
+    Scaling::for_normalization(kern.required_normalization()).apply(m)
 }
 
 /// Accuracy-vs-C curve for one (dataset, kernel) pair.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
-    pub kernel: Kernel,
+    pub kernel: KernelKind,
     pub dataset: String,
     /// (C, test accuracy in [0,1]) per grid point.
     pub curve: Vec<(f64, f64)>,
@@ -74,7 +54,7 @@ impl SweepResult {
 ///
 /// The kernel matrices are computed once; each C reuses them. Multiclass
 /// is one-vs-one (LIBSVM's strategy).
-pub fn kernel_svm_sweep(ds: &Dataset, kern: Kernel, cs: &[f64]) -> SweepResult {
+pub fn kernel_svm_sweep(ds: &Dataset, kern: KernelKind, cs: &[f64]) -> SweepResult {
     let train = normalize_for(kern, &ds.train_x);
     let test = normalize_for(kern, &ds.test_x);
     let k_train = kernel_matrix_sym(kern, &train);
@@ -145,18 +125,18 @@ mod tests {
     #[test]
     fn normalization_is_applied_per_kernel() {
         let ds = generate("letter", SynthConfig { seed: 1, n_train: 30, n_test: 30 }).unwrap();
-        let l1 = normalize_for(Kernel::Intersection, &ds.train_x).to_dense();
+        let l1 = normalize_for(KernelKind::Intersection, &ds.train_x).to_dense();
         for row in l1.iter_rows() {
             let s: f32 = row.iter().sum();
             assert!((s - 1.0).abs() < 1e-4);
         }
-        let l2 = normalize_for(Kernel::Linear, &ds.train_x).to_dense();
+        let l2 = normalize_for(KernelKind::Linear, &ds.train_x).to_dense();
         for row in l2.iter_rows() {
             let s: f32 = row.iter().map(|v| v * v).sum();
             assert!((s - 1.0).abs() < 1e-4);
         }
         // MinMax: untouched.
-        let raw = normalize_for(Kernel::MinMax, &ds.train_x).to_dense();
+        let raw = normalize_for(KernelKind::MinMax, &ds.train_x).to_dense();
         assert_eq!(raw, ds.train_x.to_dense());
     }
 
@@ -165,8 +145,8 @@ mod tests {
         // The paper's headline Table-1 effect, on a small instance.
         let ds = generate("letter", SynthConfig { seed: 5, n_train: 150, n_test: 150 }).unwrap();
         let cs = c_grid(5);
-        let mm = kernel_svm_sweep(&ds, Kernel::MinMax, &cs);
-        let lin = kernel_svm_sweep(&ds, Kernel::Linear, &cs);
+        let mm = kernel_svm_sweep(&ds, KernelKind::MinMax, &cs);
+        let lin = kernel_svm_sweep(&ds, KernelKind::Linear, &cs);
         assert!(
             mm.best_accuracy() > lin.best_accuracy(),
             "min-max {} vs linear {}",
@@ -180,7 +160,7 @@ mod tests {
     #[test]
     fn best_c_is_argmax() {
         let r = SweepResult {
-            kernel: Kernel::Linear,
+            kernel: KernelKind::Linear,
             dataset: "x".into(),
             curve: vec![(0.1, 0.5), (1.0, 0.9), (10.0, 0.7)],
         };

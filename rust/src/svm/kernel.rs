@@ -140,7 +140,7 @@ mod tests {
     use super::*;
     use crate::data::Matrix;
     use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
-    use crate::kernels::Kernel;
+    use crate::kernels::KernelKind;
 
     /// XOR-ish dataset: linearly inseparable, min-max kernel separable.
     fn ring_data(n: usize, seed: u64) -> (Dense, Vec<i32>) {
@@ -165,9 +165,9 @@ mod tests {
         let (xtr, ytr) = ring_data(120, 1);
         let (xte, yte) = ring_data(80, 2);
         let mtr = Matrix::Dense(xtr);
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &mtr);
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &mtr);
         let m = train_binary(&ktr, &ytr, &KernelSvmParams { c: 32.0, ..Default::default() });
-        let kte = kernel_matrix(Kernel::MinMax, &Matrix::Dense(xte), &mtr);
+        let kte = kernel_matrix(KernelKind::MinMax, &Matrix::Dense(xte), &mtr);
         let acc = (0..yte.len())
             .filter(|&i| {
                 let pred = if m.decision(kte.row(i)) >= 0.0 { 1 } else { -1 };
@@ -182,7 +182,7 @@ mod tests {
     fn alphas_respect_box() {
         let (xtr, ytr) = ring_data(60, 3);
         let c = 2.0;
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(xtr));
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(xtr));
         let m = train_binary(&ktr, &ytr, &KernelSvmParams { c, ..Default::default() });
         for (i, (&coef, &yy)) in m.coef.iter().zip(&ytr).enumerate() {
             let a = coef * yy as f64;
@@ -194,7 +194,7 @@ mod tests {
     #[test]
     fn longer_training_does_not_worsen_dual() {
         let (xtr, ytr) = ring_data(60, 4);
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(xtr));
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(xtr));
         let m1 = train_binary(&ktr, &ytr, &KernelSvmParams { max_epochs: 1, ..Default::default() });
         let m2 =
             train_binary(&ktr, &ytr, &KernelSvmParams { max_epochs: 80, ..Default::default() });
@@ -206,7 +206,7 @@ mod tests {
         // Extremely small C: all alphas pinned at C; decision is sum of
         // class-weighted kernels — must not panic or produce NaN.
         let (xtr, ytr) = ring_data(30, 5);
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(xtr));
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(xtr));
         let m = train_binary(&ktr, &ytr, &KernelSvmParams { c: 1e-6, ..Default::default() });
         for i in 0..30 {
             assert!(m.decision(ktr.row(i)).is_finite());
@@ -229,7 +229,7 @@ mod tests {
                 x2.set(i, 0, v);
             }
         }
-        let ktr = kernel_matrix_sym(Kernel::Linear, &Matrix::Dense(x2.clone()));
+        let ktr = kernel_matrix_sym(KernelKind::Linear, &Matrix::Dense(x2.clone()));
         let mk = train_binary(&ktr, &ytr, &KernelSvmParams { c: 1.0, ..Default::default() });
         let ml = train_lin(
             &Csr::from_dense(&x2),

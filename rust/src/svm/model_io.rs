@@ -141,7 +141,7 @@ mod tests {
     fn trained() -> (SavedModel, crate::data::Csr, Vec<i32>) {
         let ds = generate("vowel", SynthConfig { seed: 3, n_train: 120, n_test: 120 }).unwrap();
         let cfg = PipelineConfig::new(9, 32, 4);
-        let hashed = hash_dataset(&ds, &cfg);
+        let hashed = hash_dataset(&ds, &cfg).unwrap();
         let ovr = LinearOvR::train(
             &hashed.train,
             &ds.train_y,

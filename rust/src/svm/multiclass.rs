@@ -136,7 +136,7 @@ mod tests {
     use crate::data::sparse::CsrBuilder;
     use crate::data::Matrix;
     use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
-    use crate::kernels::Kernel;
+    use crate::kernels::KernelKind;
     use crate::util::rng::Pcg64;
 
     fn three_class_dense(n: usize, seed: u64) -> (Dense, Vec<i32>) {
@@ -159,10 +159,10 @@ mod tests {
         let (xtr, ytr) = three_class_dense(90, 1);
         let (xte, yte) = three_class_dense(45, 2);
         let mtr = Matrix::Dense(xtr);
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &mtr);
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &mtr);
         let ovo = KernelOvO::train(&ktr, &ytr, 3, &KernelSvmParams::default());
         assert_eq!(ovo.n_models(), 3);
-        let kte = kernel_matrix(Kernel::MinMax, &Matrix::Dense(xte), &mtr);
+        let kte = kernel_matrix(KernelKind::MinMax, &Matrix::Dense(xte), &mtr);
         let acc = (0..yte.len())
             .filter(|&i| ovo.predict(kte.row(i)) == yte[i])
             .count() as f64
@@ -194,7 +194,7 @@ mod tests {
                 *y = 0;
             }
         }
-        let ktr = kernel_matrix_sym(Kernel::MinMax, &Matrix::Dense(xtr));
+        let ktr = kernel_matrix_sym(KernelKind::MinMax, &Matrix::Dense(xtr));
         let ovo = KernelOvO::train(&ktr, &ytr, 3, &KernelSvmParams::default());
         assert_eq!(ovo.n_models(), 1); // only (0,1) trainable
         let _ = ovo.predict(ktr.row(0)); // must not panic

@@ -307,7 +307,7 @@ mod tests {
         use crate::coordinator::{hash_dataset, PipelineConfig};
         use crate::data::synth::{generate, SynthConfig};
         let ds = generate("vowel", SynthConfig { seed: 5, n_train: 250, n_test: 250 }).unwrap();
-        let hashed = hash_dataset(&ds, &PipelineConfig::new(6, 64, 6));
+        let hashed = hash_dataset(&ds, &PipelineConfig::new(6, 64, 6)).unwrap();
         let dim = hashed.train.cols();
         let mut ovr =
             OnlineOvR::new(|| PassiveAggressive::new(dim, 1.0), ds.n_classes());

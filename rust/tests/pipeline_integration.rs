@@ -7,11 +7,15 @@
 
 use std::time::Duration;
 
-use minmax::coordinator::{Backend, HashService, ServiceConfig};
-use minmax::runtime::default_artifacts_dir;
+use minmax::coordinator::{HashService, NativeBackend, PjrtBackend, ServiceConfig};
+use minmax::runtime::{default_artifacts_dir, pjrt_enabled};
 use minmax::util::rng::Pcg64;
 
 fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    if !pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)
@@ -33,11 +37,9 @@ fn pjrt_service_agrees_with_native_service() {
         max_wait: Duration::from_millis(2),
         queue_cap: 1024,
     };
-    let pjrt = HashService::start(
-        cfg.clone(),
-        Backend::Pjrt { artifacts_dir: dir, artifact: "cws_hash_small".into() },
-    );
-    let native = HashService::start(cfg, Backend::Native);
+    let pjrt = HashService::start(cfg.clone(), PjrtBackend::new(dir, "cws_hash_small"))
+        .expect("start pjrt service");
+    let native = HashService::start(cfg, NativeBackend).expect("start native service");
 
     let mut rng = Pcg64::new(4242);
     let n = 48;
@@ -96,10 +98,8 @@ fn pjrt_service_batches_under_load() {
         max_wait: Duration::from_millis(10),
         queue_cap: 4096,
     };
-    let svc = HashService::start(
-        cfg,
-        Backend::Pjrt { artifacts_dir: dir, artifact: "cws_hash_small".into() },
-    );
+    let svc = HashService::start(cfg, PjrtBackend::new(dir, "cws_hash_small"))
+        .expect("start pjrt service");
     // Fire a burst, then collect: the dynamic batcher should aggregate.
     let v: Vec<f32> = (1..=64).map(|i| i as f32 / 8.0).collect();
     let rxs: Vec<_> = (0..64).map(|i| svc.submit(i, v.clone()).unwrap()).collect();
@@ -151,7 +151,7 @@ fn offline_weights_serve_identically_via_hash_score_artifact() {
 
     let seed = 555u64;
     let cfg = PipelineConfig { seed, k, i_bits: 8, t_bits: 0 };
-    let hashed = hash_dataset(&ds, &cfg);
+    let hashed = hash_dataset(&ds, &cfg).expect("valid expansion");
     let c = 1.0;
     let w = export_scorer_weights(&hashed.train, &ds.train_y, classes_cap, &hashed.expansion, c);
 

@@ -6,7 +6,7 @@ use minmax::cws::{collision_fraction, CwsHasher, Scheme};
 use minmax::data::dense::Dense;
 use minmax::data::sparse::{dot, Csr, CsrBuilder};
 use minmax::features::Expansion;
-use minmax::kernels::{dense_minmax, Kernel};
+use minmax::kernels::{dense_minmax, KernelKind};
 use minmax::util::json::Json;
 use minmax::util::prop::{check, close, ensure, Gen};
 
@@ -28,11 +28,11 @@ fn prop_kernels_symmetric_and_bounded() {
         let u = g.nonneg_vec(dim, 0.4);
         let v = g.nonneg_vec(dim, 0.4);
         for k in [
-            Kernel::Linear,
-            Kernel::MinMax,
-            Kernel::Intersection,
-            Kernel::Resemblance,
-            Kernel::Chi2,
+            KernelKind::Linear,
+            KernelKind::MinMax,
+            KernelKind::Intersection,
+            KernelKind::Resemblance,
+            KernelKind::Chi2,
         ] {
             let a = k.eval_dense(&u, &v);
             let b = k.eval_dense(&v, &u);
@@ -42,7 +42,7 @@ fn prop_kernels_symmetric_and_bounded() {
         let mm = dense_minmax(&u, &v);
         ensure((0.0..=1.0).contains(&mm), "minmax in [0,1]")?;
         // Cauchy-like bound: intersection <= min(l1 norms).
-        let inter = Kernel::Intersection.eval_dense(&u, &v);
+        let inter = KernelKind::Intersection.eval_dense(&u, &v);
         let l1u: f64 = u.iter().map(|&x| x as f64).sum();
         let l1v: f64 = v.iter().map(|&x| x as f64).sum();
         ensure(inter <= l1u.min(l1v) + 1e-6, "intersection bound")
@@ -57,7 +57,7 @@ fn prop_sparse_dense_kernel_agreement() {
         let v = g.nonneg_vec(dim, 0.6);
         let d = Dense::from_rows(&[&u, &v]);
         let s = Csr::from_dense(&d);
-        for k in [Kernel::Linear, Kernel::MinMax, Kernel::Chi2, Kernel::Resemblance] {
+        for k in [KernelKind::Linear, KernelKind::MinMax, KernelKind::Chi2, KernelKind::Resemblance] {
             close(
                 k.eval_dense(&u, &v),
                 k.eval_sparse(s.row(0), s.row(1)),
@@ -271,7 +271,7 @@ fn prop_kernel_matrix_sym_equals_rect() {
             d.row_mut(i).copy_from_slice(&v);
         }
         let m = minmax::data::Matrix::Dense(d);
-        let kern = *g.choose(&[Kernel::MinMax, Kernel::Linear, Kernel::Chi2]);
+        let kern = *g.choose(&[KernelKind::MinMax, KernelKind::Linear, KernelKind::Chi2]);
         let full = minmax::kernels::matrix::kernel_matrix(kern, &m, &m);
         let sym = minmax::kernels::matrix::kernel_matrix_sym(kern, &m);
         for i in 0..n {
@@ -297,8 +297,9 @@ fn prop_service_responds_to_every_request() {
                 max_wait: std::time::Duration::from_micros(g.usize_in(10, 2000) as u64),
                 queue_cap: 64,
             },
-            minmax::coordinator::Backend::Native,
-        );
+            minmax::coordinator::NativeBackend,
+        )
+        .map_err(|e| format!("service start: {e}"))?;
         let n = g.usize_in(1, 40);
         let mut pending = Vec::new();
         for i in 0..n {

@@ -9,11 +9,15 @@ use minmax::cws::{materialize_params, CwsHasher};
 use minmax::data::dense::Dense;
 use minmax::data::Matrix;
 use minmax::kernels::matrix::kernel_matrix;
-use minmax::kernels::Kernel;
+use minmax::kernels::KernelKind;
 use minmax::runtime::{default_artifacts_dir, literal_f32, Engine};
 use minmax::util::rng::Pcg64;
 
 fn engine_or_skip(names: &[&str]) -> Option<Engine> {
+    if !minmax::runtime::pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
@@ -127,7 +131,7 @@ fn pjrt_minmax_block_matches_rust_kernels() {
 
     let xm = Matrix::Dense(Dense::from_vec(m, d, x));
     let ym = Matrix::Dense(Dense::from_vec(n, d, y));
-    let k_native = kernel_matrix(Kernel::MinMax, &xm, &ym);
+    let k_native = kernel_matrix(KernelKind::MinMax, &xm, &ym);
     for i in 0..m {
         for j in 0..n {
             let a = k_pjrt[i * n + j];

@@ -1,0 +1,145 @@
+//! Property tests for the trait surface introduced by the API redesign:
+//!
+//! * **Sketcher parity** — every ICWS-family `Sketcher` impl (lazy
+//!   `CwsHasher`, materialized `DenseBatchHasher`) produces identical
+//!   samples for the same seed, through trait objects, on random input.
+//! * **Kernel ↔ sketcher consistency** — the empirical 0-bit collision
+//!   fraction of `Kernel::sketcher(..)`'s samples converges to
+//!   `Kernel::eval_dense` within 3σ binomial tolerance (Eq. 7/8 for
+//!   min-max, Eq. 2 for resemblance).
+//! * **Pipeline consistency** — the `Pipeline` object reproduces the
+//!   manual scale→sketch→expand composition exactly.
+
+use minmax::prelude::*;
+use minmax::util::prop::{check, ensure, Gen};
+
+fn nonzero_vec(g: &mut Gen, dim: usize, zero_frac: f64) -> Vec<f32> {
+    let mut v = g.nonneg_vec(dim, zero_frac);
+    if !v.iter().any(|&x| x > 0.0) {
+        v[0] = 1.0;
+    }
+    v
+}
+
+#[test]
+fn prop_sketcher_impls_agree_for_same_seed() {
+    check("sketcher-impl-parity", 40, |g| {
+        let dim = g.usize_in(1, 80);
+        let k = g.usize_in(1, 48);
+        let seed = g.rng.next_u64();
+        let lazy = CwsHasher::new(seed, k);
+        let materialized = lazy.dense_batch(dim);
+        // Through trait objects, as the coordinator consumes them.
+        let a: &dyn Sketcher = &lazy;
+        let b: &dyn Sketcher = &materialized;
+        ensure(a.k() == b.k() && a.seed() == b.seed(), "config parity")?;
+        for _ in 0..4 {
+            let v = nonzero_vec(g, dim, 0.5);
+            let sa = a.sketch_dense(&v);
+            let sb = b.sketch_dense(&v);
+            ensure(sa == sb, "dense samples identical across impls")?;
+            let d = Dense::from_rows(&[&v[..]]);
+            let s = Csr::from_dense(&d);
+            ensure(a.sketch_sparse(s.row(0)) == sa, "lazy sparse == dense")?;
+            ensure(b.sketch_sparse(s.row(0)) == sa, "materialized sparse == dense")?;
+            let batched = b.sketch_dense_batch(&[&v[..], &v[..]]);
+            ensure(batched[0] == sa && batched[1] == sa, "batch hook parity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_bit_collisions_converge_to_kernel_eval() {
+    // Kernel::sketcher is the kernel's linearization: collision
+    // fraction ≈ Kernel::eval within 3σ (+ the small 0-bit bias bound).
+    check("kernel-sketcher-consistency", 12, |g| {
+        let dim = g.usize_in(32, 96);
+        let u = nonzero_vec(g, dim, 0.3);
+        // Correlated partner so the kernel value spreads over (0, 1).
+        let v: Vec<f32> = {
+            let mut v: Vec<f32> = u
+                .iter()
+                .map(|&x| {
+                    if g.bool_p(0.15) {
+                        g.rng.lognormal(0.0, 1.0) as f32
+                    } else {
+                        (x as f64 * g.rng.lognormal(0.0, 0.4)) as f32
+                    }
+                })
+                .collect();
+            if !v.iter().any(|&x| x > 0.0) {
+                v[0] = 1.0;
+            }
+            v
+        };
+        let k = 3000;
+        let seed = g.rng.next_u64();
+        for kind in [KernelKind::MinMax, KernelKind::Resemblance] {
+            let truth = Kernel::eval_dense(&kind, &u, &v);
+            let sk = Kernel::sketcher(&kind, seed, k).expect("linearizable kernel");
+            let su = sk.sketch_dense(&u);
+            let sv = sk.sketch_dense(&v);
+            let got = collision_fraction(Scheme::ZERO_BIT, &su, &sv);
+            // 3σ binomial tolerance + 0.02 headroom for the 0-bit bias
+            // at moderate dimension (§3.4 of the paper).
+            let tol = 3.0 * (truth * (1.0 - truth) / k as f64).sqrt() + 0.02;
+            ensure(
+                (got - truth).abs() <= tol,
+                &format!("{}: collisions {got:.4} vs eval {truth:.4} (tol {tol:.4})", kind.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_non_linearizable_kernels_say_so() {
+    for kind in [KernelKind::Linear, KernelKind::Intersection, KernelKind::Chi2] {
+        assert!(Kernel::sketcher(&kind, 1, 8).is_none(), "{}", kind.name());
+    }
+    for kind in [KernelKind::MinMax, KernelKind::NMinMax, KernelKind::Resemblance] {
+        let s = Kernel::sketcher(&kind, 1, 8).expect("linearizable");
+        assert_eq!(s.k(), 8);
+        assert_eq!(s.seed(), 1);
+    }
+}
+
+#[test]
+fn prop_pipeline_transform_equals_manual_composition() {
+    check("pipeline-equals-manual", 10, |g| {
+        let ds = generate("vowel", SynthConfig { seed: g.rng.next_u64(), n_train: 60, n_test: 40 })
+            .map_err(|e| e.to_string())?;
+        let k = 1 << g.usize_in(3, 6);
+        let i_bits = *g.choose(&[2u8, 4, 8]);
+        let seed = g.rng.next_u64();
+        let pipe = Pipeline::builder()
+            .seed(seed)
+            .samples(k)
+            .i_bits(i_bits)
+            .build()
+            .map_err(|e| e.to_string())?;
+        // Manual composition of the same stages.
+        let hasher = CwsHasher::new(seed, k);
+        let samples = hasher.sketch_matrix(&ds.train_x);
+        let expansion = Expansion::checked(k, i_bits, 0).map_err(|e| e.to_string())?;
+        let manual = expansion.expand(&samples);
+        ensure(pipe.transform(&ds.train_x) == manual, "pipeline == manual stages")
+    });
+}
+
+#[test]
+fn pipeline_end_to_end_recovers_kernel_accuracy_ordering() {
+    // The paper's Figure-7 story through the new API: hashed-linear
+    // accuracy grows with k toward the exact min-max kernel SVM.
+    let ds = generate("letter", SynthConfig { seed: 11, n_train: 150, n_test: 150 }).unwrap();
+    let acc_at = |k: usize| {
+        let mut pipe =
+            Pipeline::builder().seed(7).samples(k).i_bits(8).cost(1.0).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        pipe.accuracy(&ds.test_x, &ds.test_y).unwrap()
+    };
+    let small = acc_at(8);
+    let large = acc_at(256);
+    assert!(large > small + 0.05, "k=8 {small} vs k=256 {large}");
+}
