@@ -58,6 +58,23 @@ fn main() {
     });
     svc.shutdown();
 
+    // Offline batch path: Pipeline::transform over a whole matrix. This
+    // rides the SketchEngine chunked-parallel batch entry via the
+    // Sketcher overrides (MINMAX_THREADS controls sharding), so this
+    // number plus bench_sketch's engine rows/sec are the before/after
+    // record for the loop-inversion refactor (EXPERIMENTS.md §Perf).
+    {
+        use minmax::data::synth::{generate, SynthConfig};
+        use minmax::pipeline::Pipeline;
+        let ds = generate("letter", SynthConfig { seed: 3, n_train: 512, n_test: 1 })
+            .expect("synth dataset");
+        let pipe =
+            Pipeline::builder().seed(5).samples(128).i_bits(8).build().expect("build pipeline");
+        r.bench_with_throughput("pipeline-transform/letter512/k128", Some((512.0, "row")), || {
+            black_box(pipe.transform(&ds.train_x));
+        });
+    }
+
     // PJRT-backed service (skipped without artifacts).
     let dir = default_artifacts_dir();
     if minmax::runtime::pjrt_enabled() && dir.join("manifest.json").exists() {

@@ -1,0 +1,160 @@
+//! Sketching-core throughput: the before/after record for the
+//! loop-inverted `SketchEngine` refactor (EXPERIMENTS.md §Perf).
+//!
+//! Measures rows/sec at varying (nnz, k) for:
+//!
+//! * `strided-pre` — the PRE-refactor materialized loop, reproduced here
+//!   verbatim (outer over samples, strided `[j*dim + i]` reads,
+//!   branchy argmin) so the speedup stays measurable after the old code
+//!   is gone;
+//! * `lazy` — `CwsHasher` per-row hashing (parameters derived on the
+//!   fly; the no-materialization baseline);
+//! * `engine-T1` — the engine batch entry pinned to one thread (pure
+//!   loop-inversion + transposed-slab effect);
+//! * `engine-par` — the same entry at `MINMAX_THREADS`/default threads
+//!   (the chunked parallel scaling the coordinator and pipeline ride);
+//! * `engine-fast-T1` — single-thread engine with the accuracy-checked
+//!   `util::fastmath` toggle engaged.
+//!
+//! Run: `cargo bench --bench bench_sketch [-- --quick]`; CI uploads
+//! `results/bench/bench_sketch.json` as the `BENCH_sketch.json`
+//! artifact next to `BENCH_pipeline.json`.
+
+use minmax::bench::{black_box, Runner};
+use minmax::cws::sampler::params_at;
+use minmax::cws::{CwsHasher, CwsSample, SketchEngine};
+use minmax::util::pool;
+use minmax::util::rng::Pcg64;
+
+/// The pre-refactor `DenseBatchHasher`: `(r, c, β)` laid out
+/// `[j*dim + i]`, outer loop over samples, inner over nonzeros, branchy
+/// argmin — kept here (and only here) as the measurable "before".
+struct StridedReference {
+    k: usize,
+    dim: usize,
+    r: Vec<f64>,
+    c: Vec<f64>,
+    beta: Vec<f64>,
+}
+
+impl StridedReference {
+    fn new(seed: u64, k: usize, dim: usize) -> Self {
+        let n = k * dim;
+        let (mut r, mut c, mut beta) =
+            (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+        for j in 0..k as u32 {
+            for i in 0..dim as u32 {
+                let (rr, cc, bb) = params_at(seed, j, i);
+                r.push(rr);
+                c.push(cc);
+                beta.push(bb);
+            }
+        }
+        Self { k, dim, r, c, beta }
+    }
+
+    fn hash(&self, u: &[f32]) -> Vec<CwsSample> {
+        let mut indices: Vec<u32> = Vec::with_capacity(u.len());
+        let mut ln_u: Vec<f64> = Vec::with_capacity(u.len());
+        for (i, &ui) in u.iter().enumerate() {
+            if ui > 0.0 {
+                indices.push(i as u32);
+                ln_u.push((ui as f64).ln());
+            }
+        }
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let base = j * self.dim;
+            let mut best_a = f64::INFINITY;
+            let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
+            for (&i, &lnu) in indices.iter().zip(&ln_u) {
+                let idx = base + i as usize;
+                let (r, c, beta) = (self.r[idx], self.c[idx], self.beta[idx]);
+                let t = (lnu / r + beta).floor();
+                let a = c * (-(r * (t - beta)) - r).exp();
+                if a < best_a {
+                    best_a = a;
+                    best = CwsSample { i_star: i, t_star: t as i64 };
+                }
+            }
+            out.push(best);
+        }
+        out
+    }
+}
+
+fn random_rows(n: usize, dim: usize, zero_frac: f64, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..dim)
+                .map(|_| {
+                    if rng.uniform() < zero_frac {
+                        0.0
+                    } else {
+                        rng.lognormal(0.0, 1.0) as f32
+                    }
+                })
+                .collect();
+            if !v.iter().any(|&x| x > 0.0) {
+                v[0] = 1.0;
+            }
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    let mut r = Runner::new();
+    let n_rows = 64usize;
+    let threads = pool::default_threads();
+
+    // (dim, k, zero_frac): dense small, dense service-shaped, sparse
+    // service-shaped, large sparse.
+    for (dim, k, zf) in
+        [(64usize, 64usize, 0.0), (256, 128, 0.0), (256, 128, 0.9), (1024, 256, 0.95)]
+    {
+        let rows = random_rows(n_rows, dim, zf, 1);
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let nnz = refs[0].iter().filter(|&&v| v > 0.0).count();
+        let tag = format!("D{dim}/k{k}/nnz{nnz}");
+        let thr = Some((n_rows as f64, "row"));
+
+        let strided = StridedReference::new(7, k, dim);
+        let lazy = CwsHasher::new(7, k);
+        // Exact mode pinned: the engine-T1/engine-par rows must measure
+        // the bit-identical path even if MINMAX_FAST_MATH is set.
+        let engine = SketchEngine::new(7, k, dim).with_fast_math(false);
+        // Parity guard BEFORE any timing: a bench that measures the
+        // wrong bits is worse than no bench, and nothing should be
+        // recorded for this commit if the paths diverge.
+        assert_eq!(engine.sketch_dense(&rows[0]), strided.hash(&rows[0]));
+        assert_eq!(engine.sketch_dense(&rows[0]), lazy.hash_dense(&rows[0]));
+
+        r.bench_with_throughput(&format!("strided-pre/{tag}"), thr, || {
+            for row in &refs {
+                black_box(strided.hash(row));
+            }
+        });
+
+        r.bench_with_throughput(&format!("lazy/{tag}"), thr, || {
+            for row in &refs {
+                black_box(lazy.hash_dense(row));
+            }
+        });
+
+        r.bench_with_throughput(&format!("engine-T1/{tag}"), thr, || {
+            black_box(engine.sketch_rows_with_threads(&refs, 1));
+        });
+        r.bench_with_throughput(&format!("engine-par-T{threads}/{tag}"), thr, || {
+            black_box(engine.sketch_rows(&refs));
+        });
+
+        let fast = SketchEngine::new(7, k, dim).with_fast_math(true);
+        r.bench_with_throughput(&format!("engine-fast-T1/{tag}"), thr, || {
+            black_box(fast.sketch_rows_with_threads(&refs, 1));
+        });
+    }
+
+    r.save("bench_sketch");
+}

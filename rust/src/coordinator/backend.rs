@@ -63,7 +63,11 @@ where
 }
 
 /// Rust-native ICWS: amortizes `(r, c, β)` materialization across the
-/// whole service lifetime (identical output to per-row hashing).
+/// whole service lifetime (identical output to per-row hashing). The
+/// built sketcher is a `DenseBatchHasher` facade over the
+/// `cws::SketchEngine`, so the service's per-batch
+/// `sketch_dense_batch` call shards rows across `MINMAX_THREADS`
+/// scoped threads — identical output at any thread count.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NativeBackend;
 
@@ -229,6 +233,10 @@ mod tests {
 
     #[test]
     fn native_backend_builds_a_parity_sketcher() {
+        if crate::cws::engine::fast_math_requested() {
+            eprintln!("skipped: bit parity is only claimed without MINMAX_FAST_MATH");
+            return;
+        }
         let cfg = ServiceConfig { seed: 5, k: 12, dim: 9, ..Default::default() };
         let s = Box::new(NativeBackend).build(&cfg).unwrap();
         assert_eq!(s.k(), 12);

@@ -41,8 +41,11 @@ pub fn sketch_matrix(sketcher: &dyn Sketcher, m: &Matrix) -> Vec<Option<Vec<CwsS
     sketcher.sketch_matrix(m)
 }
 
-/// Backward-compatible native hashing: ICWS with the `(r, c, β)` grid
-/// amortized across dense rows.
+/// Backward-compatible native hashing: ICWS with the `(r, c, β)` slabs
+/// amortized across dense rows. Both arms land on the parallel
+/// `SketchEngine` batch entry through the `Sketcher` overrides, so
+/// whole-dataset hashing (Figures 7–8 drivers, `hash_dataset`) scales
+/// with `MINMAX_THREADS`.
 pub fn hash_matrix_native(m: &Matrix, seed: u64, k: usize) -> Vec<Option<Vec<CwsSample>>> {
     let hasher = CwsHasher::new(seed, k);
     match m {

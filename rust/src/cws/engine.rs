@@ -1,0 +1,600 @@
+//! The [`SketchEngine`] execution core: one loop-inverted, cache-aware
+//! ICWS sampling kernel behind every sketching layer in the crate.
+//!
+//! The naive sampler (the original `CwsHasher::sample_one` and its three
+//! near-copies in `DenseBatchHasher`) ran `for j in 0..k { for i in
+//! nonzeros }` with strided `[j*dim + i]` parameter reads: every nonzero
+//! touched k cache lines per sample stream, and the argmin carried a
+//! branch per cell. This engine is the inverse:
+//!
+//! * **Transposed structure-of-arrays slabs.** `(r, c, β)` are stored
+//!   `[i*k + j]`, so all k parameters of one dimension are contiguous —
+//!   the inner loop streams three slabs linearly per nonzero.
+//! * **Loop inversion.** Outer over nonzeros, inner over all k samples,
+//!   accumulating into `best_a`/`best_i`/`best_t` slabs with branchless
+//!   select updates (strict `<`, so the first winner of an exact tie is
+//!   kept — identical tie-breaking to the scalar loop, hence bit-for-bit
+//!   identical output; pinned by `rust/tests/engine_parity.rs`).
+//! * **`util::fastmath` behind an accuracy-checked toggle.** With
+//!   `MINMAX_FAST_MATH=1` (or [`SketchEngine::with_fast_math`]) the
+//!   engine precomputes the derived slabs `1/r` and `r·β − r`, replaces
+//!   the per-cell division with a multiply, and routes `ln`/`exp`
+//!   through [`crate::util::fastmath`]. The toggle only engages after a
+//!   runtime probe of the fastmath kernels against libm over the
+//!   sampler's operating range (see [`fastmath_accuracy_ok`]); the
+//!   default mode is exact libm math and byte-identical output.
+//! * **Chunked parallel batch entry.** [`SketchEngine::sketch_rows`]
+//!   shards row chunks across [`crate::util::pool::par_claim`] scoped
+//!   threads (`MINMAX_THREADS` controls the default; batches below a
+//!   minimum work size stay sequential); results are independent of the
+//!   thread count by construction (disjoint output chunks, per-row
+//!   determinism).
+//!
+//! [`crate::cws::CwsHasher`] (lazy parameters) and
+//! [`crate::cws::DenseBatchHasher`] (materialized slabs) are thin
+//! facades over this module — see EXPERIMENTS.md §Perf for measured
+//! before/after throughput (`rust/benches/bench_sketch.rs`).
+
+use std::sync::Mutex;
+
+use super::sampler::{params_at, CwsSample};
+use crate::data::sparse::{Csr, SparseRow};
+use crate::util::fastmath::{fast_exp, fast_ln};
+use crate::util::pool;
+use crate::util::rng::Pcg64;
+
+/// Placeholder sample used to prefill batch output slabs; every live row
+/// overwrites its slots before they are read.
+const EMPTY_SAMPLE: CwsSample = CwsSample { i_star: u32::MAX, t_star: 0 };
+
+/// `true` when the environment requests fast math
+/// (`MINMAX_FAST_MATH=1|true|on`).
+pub fn fast_math_requested() -> bool {
+    matches!(
+        std::env::var("MINMAX_FAST_MATH").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    )
+}
+
+/// Runtime accuracy gate for the fastmath toggle: probe
+/// [`fast_ln`]/[`fast_exp`] against libm over the exact composites the
+/// sampler evaluates (`ln(u₁·u₂)` for uniforms; `exp` of arguments in
+/// the argmin exponent range). The toggle only engages when every probe
+/// is within 1e-9 relative error — far below the ≤2e-11 the kernels are
+/// designed for, so a miscompiled or platform-odd build falls back to
+/// exact math instead of silently degrading sketch quality.
+pub fn fastmath_accuracy_ok() -> bool {
+    let mut rng = Pcg64::new(0xFA57_AC);
+    for _ in 0..512 {
+        let u = rng.uniform_pos() * rng.uniform_pos();
+        if (fast_ln(u) - u.ln()).abs() > 1e-9 * u.ln().abs().max(1.0) {
+            return false;
+        }
+        let x = rng.range_f64(-80.0, 10.0);
+        if (fast_exp(x) / x.exp() - 1.0).abs() > 1e-9 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Branchless k-wide argmin accumulators — the one inner loop every
+/// sketching path in the crate now runs. `best_a` carries the running
+/// minima, `best_i`/`best_t` the argmin payloads; updates are
+/// conditional selects the compiler can vectorize, not branches.
+struct Argmin {
+    best_a: Vec<f64>,
+    best_i: Vec<u32>,
+    best_t: Vec<f64>,
+}
+
+impl Argmin {
+    fn new(k: usize) -> Self {
+        Self { best_a: vec![f64::INFINITY; k], best_i: vec![u32::MAX; k], best_t: vec![0.0; k] }
+    }
+
+    /// Exact-math update for one nonzero: byte-identical arithmetic to
+    /// the original scalar sampler (`t = ⌊ln u / r + β⌋`,
+    /// `a = c·exp(−r(t−β) − r)`), visited in the same per-sample
+    /// candidate order, compared with the same strict `<`.
+    ///
+    /// Indexed loop on purpose: six equal-length slabs walked in
+    /// lockstep with no bounds checks after the `[..k]` narrowing — the
+    /// shape LLVM vectorizes.
+    #[inline]
+    #[allow(clippy::needless_range_loop)]
+    fn update_exact(&mut self, i: u32, lnu: f64, r: &[f64], c: &[f64], beta: &[f64]) {
+        let k = self.best_a.len();
+        let (r, c, beta) = (&r[..k], &c[..k], &beta[..k]);
+        let ba = &mut self.best_a[..k];
+        let bi = &mut self.best_i[..k];
+        let bt = &mut self.best_t[..k];
+        for j in 0..k {
+            let t = (lnu / r[j] + beta[j]).floor();
+            let a = c[j] * (-(r[j] * (t - beta[j])) - r[j]).exp();
+            let better = a < ba[j];
+            ba[j] = if better { a } else { ba[j] };
+            bi[j] = if better { i } else { bi[j] };
+            bt[j] = if better { t } else { bt[j] };
+        }
+    }
+
+    /// Fast-math update: the division becomes a multiply by the
+    /// precomputed `1/r`, the exponent folds the precomputed `r·β − r`
+    /// (`−r(t−β) − r = (r·β − r) − r·t`), and `exp` is
+    /// [`fast_exp`]. Not bit-pinned — gated by [`fastmath_accuracy_ok`]
+    /// and the agreement tests in `rust/tests/engine_parity.rs`.
+    #[inline]
+    #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+    fn update_fast(
+        &mut self,
+        i: u32,
+        lnu: f64,
+        r: &[f64],
+        c: &[f64],
+        beta: &[f64],
+        inv_r: &[f64],
+        shift: &[f64],
+    ) {
+        let k = self.best_a.len();
+        let (r, c, beta, inv_r, shift) = (&r[..k], &c[..k], &beta[..k], &inv_r[..k], &shift[..k]);
+        let ba = &mut self.best_a[..k];
+        let bi = &mut self.best_i[..k];
+        let bt = &mut self.best_t[..k];
+        for j in 0..k {
+            let t = (lnu * inv_r[j] + beta[j]).floor();
+            let a = c[j] * fast_exp(shift[j] - r[j] * t);
+            let better = a < ba[j];
+            ba[j] = if better { a } else { ba[j] };
+            bi[j] = if better { i } else { bi[j] };
+            bt[j] = if better { t } else { bt[j] };
+        }
+    }
+
+    fn write(&self, out: &mut [CwsSample]) {
+        for (slot, ((&a, &i), &t)) in
+            out.iter_mut().zip(self.best_a.iter().zip(&self.best_i).zip(&self.best_t))
+        {
+            debug_assert!(a.is_finite() && i != u32::MAX, "argmin never updated");
+            *slot = CwsSample { i_star: i, t_star: t as i64 };
+        }
+    }
+}
+
+/// Loop-inverted lazy sampling: parameters derived on the fly from
+/// `(seed, j, i)` (no materialization, any index range), accumulated
+/// through the same [`Argmin`] kernel as the materialized paths. This is
+/// what [`crate::cws::CwsHasher`] runs; output is bit-identical to the
+/// pre-refactor per-sample loop.
+pub fn sample_lazy_into(seed: u64, k: usize, indices: &[u32], ln_u: &[f64], out: &mut [CwsSample]) {
+    assert_eq!(indices.len(), ln_u.len(), "indices/ln_u length mismatch");
+    assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
+    assert_eq!(out.len(), k, "output slot must hold k samples");
+    let mut acc = Argmin::new(k);
+    // Per-dimension parameter scratch, refilled for each nonzero: the
+    // derivation cost (6 mix64 + 2 ln per cell) is identical to the lazy
+    // loop it replaces; only the accumulation order changed.
+    let (mut r, mut c, mut beta) = (vec![0.0f64; k], vec![0.0f64; k], vec![0.0f64; k]);
+    for (&i, &lnu) in indices.iter().zip(ln_u) {
+        for (j, ((rj, cj), bj)) in r.iter_mut().zip(&mut c).zip(&mut beta).enumerate() {
+            let (rr, cc, bb) = params_at(seed, j as u32, i);
+            *rj = rr;
+            *cj = cc;
+            *bj = bb;
+        }
+        acc.update_exact(i, lnu, &r, &c, &beta);
+    }
+    acc.write(out);
+}
+
+/// Allocating convenience over [`sample_lazy_into`].
+pub fn sample_lazy(seed: u64, k: usize, indices: &[u32], ln_u: &[f64]) -> Vec<CwsSample> {
+    let mut out = vec![EMPTY_SAMPLE; k];
+    sample_lazy_into(seed, k, indices, ln_u, &mut out);
+    out
+}
+
+/// The materialized ICWS execution core. Owns the `(r, c, β)` parameter
+/// slabs for one `(seed, k, dim)` in transposed `[i*k + j]` layout
+/// (plus the `1/r` and `r·β − r` derived slabs when fast math is on)
+/// and runs every row through the shared loop-inverted [`Argmin`]
+/// kernel. Construct once per configuration and reuse across rows —
+/// facades: [`crate::cws::CwsHasher::dense_batch`],
+/// [`crate::cws::DenseBatchHasher`].
+pub struct SketchEngine {
+    seed: u64,
+    k: usize,
+    dim: usize,
+    /// `r` in `[i*k + j]` transposed layout.
+    r: Vec<f64>,
+    /// `c`, same layout.
+    c: Vec<f64>,
+    /// `β`, same layout.
+    beta: Vec<f64>,
+    /// `1/r`, same layout; empty unless fast math is enabled.
+    inv_r: Vec<f64>,
+    /// `r·β − r`, same layout; empty unless fast math is enabled.
+    shift: Vec<f64>,
+    fast: bool,
+}
+
+impl SketchEngine {
+    /// Materialize the parameter slabs for `(seed, k, dim)`. Fast math
+    /// engages only if `MINMAX_FAST_MATH` requests it AND
+    /// [`fastmath_accuracy_ok`] passes; the default is exact libm math,
+    /// bit-identical to the lazy sampler.
+    pub fn new(seed: u64, k: usize, dim: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        let n = k * dim;
+        let mut r = Vec::with_capacity(n);
+        let mut c = Vec::with_capacity(n);
+        let mut beta = Vec::with_capacity(n);
+        for i in 0..dim as u32 {
+            for j in 0..k as u32 {
+                let (rr, cc, bb) = params_at(seed, j, i);
+                r.push(rr);
+                c.push(cc);
+                beta.push(bb);
+            }
+        }
+        let mut engine =
+            Self { seed, k, dim, r, c, beta, inv_r: Vec::new(), shift: Vec::new(), fast: false };
+        if fast_math_requested() {
+            engine = engine.with_fast_math(true);
+        }
+        engine
+    }
+
+    /// Enable/disable the fastmath path explicitly. Enabling runs the
+    /// accuracy gate; if the probe fails the engine stays exact (the
+    /// toggle is a request, not a promise). Disabling drops the derived
+    /// slabs.
+    pub fn with_fast_math(mut self, fast: bool) -> Self {
+        if fast && fastmath_accuracy_ok() {
+            if self.inv_r.is_empty() {
+                self.inv_r = self.r.iter().map(|&r| 1.0 / r).collect();
+                self.shift = self.r.iter().zip(&self.beta).map(|(&r, &b)| r * b - r).collect();
+            }
+            self.fast = true;
+        } else {
+            self.fast = false;
+            self.inv_r = Vec::new();
+            self.shift = Vec::new();
+        }
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Whether the fastmath path is active.
+    pub fn fast_math(&self) -> bool {
+        self.fast
+    }
+
+    /// The `(r, c, β)` slab for dimension `i` — k contiguous values
+    /// each. Exposed for the golden engine-vs-`params_at` tests.
+    pub fn params_slab(&self, i: usize) -> (&[f64], &[f64], &[f64]) {
+        assert!(i < self.dim, "dimension {i} out of range for dim {}", self.dim);
+        let base = i * self.k;
+        (
+            &self.r[base..base + self.k],
+            &self.c[base..base + self.k],
+            &self.beta[base..base + self.k],
+        )
+    }
+
+    #[inline]
+    fn ln(&self, x: f64) -> f64 {
+        if self.fast {
+            fast_ln(x)
+        } else {
+            x.ln()
+        }
+    }
+
+    /// Core entry: sketch one row given its nonzero `indices` (each
+    /// `< dim`) and cached `ln(uᵢ)` values, writing k samples into
+    /// `out`. Outer loop over nonzeros, inner loop over samples.
+    pub fn sketch_indices_into(&self, indices: &[u32], ln_u: &[f64], out: &mut [CwsSample]) {
+        assert_eq!(indices.len(), ln_u.len(), "indices/ln_u length mismatch");
+        assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
+        assert_eq!(out.len(), self.k, "output slot must hold k samples");
+        let k = self.k;
+        let mut acc = Argmin::new(k);
+        for (&i, &lnu) in indices.iter().zip(ln_u) {
+            let base = i as usize * k;
+            if self.fast {
+                acc.update_fast(
+                    i,
+                    lnu,
+                    &self.r[base..base + k],
+                    &self.c[base..base + k],
+                    &self.beta[base..base + k],
+                    &self.inv_r[base..base + k],
+                    &self.shift[base..base + k],
+                );
+            } else {
+                acc.update_exact(
+                    i,
+                    lnu,
+                    &self.r[base..base + k],
+                    &self.c[base..base + k],
+                    &self.beta[base..base + k],
+                );
+            }
+        }
+        acc.write(out);
+    }
+
+    /// Sketch a sparse row. Index bounds are validated ONCE per row
+    /// (single pass over the nonzeros), not per `(sample, nonzero)` cell
+    /// inside the hot loop.
+    pub fn sketch_sparse_into(&self, row: SparseRow<'_>, out: &mut [CwsSample]) {
+        assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
+        let max = row.indices.iter().copied().max().expect("nonempty row");
+        assert!((max as usize) < self.dim, "index {max} out of range for dim {}", self.dim);
+        let ln_u: Vec<f64> = row.values.iter().map(|&v| self.ln(v as f64)).collect();
+        self.sketch_indices_into(row.indices, &ln_u, out);
+    }
+
+    pub fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
+        let mut out = vec![EMPTY_SAMPLE; self.k];
+        self.sketch_sparse_into(row, &mut out);
+        out
+    }
+
+    /// Sketch a dense row (zeros skipped; panics if no positive entry).
+    pub fn sketch_dense_into(&self, u: &[f32], out: &mut [CwsSample]) {
+        assert_eq!(u.len(), self.dim, "dimension mismatch");
+        let mut indices: Vec<u32> = Vec::with_capacity(u.len());
+        let mut ln_u: Vec<f64> = Vec::with_capacity(u.len());
+        for (i, &ui) in u.iter().enumerate() {
+            if ui > 0.0 {
+                indices.push(i as u32);
+                ln_u.push(self.ln(ui as f64));
+            }
+        }
+        assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
+        self.sketch_indices_into(&indices, &ln_u, out);
+    }
+
+    pub fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+        let mut out = vec![EMPTY_SAMPLE; self.k];
+        self.sketch_dense_into(u, &mut out);
+        out
+    }
+
+    /// The chunked batch entry the coordinator and pipeline ride: sketch
+    /// many dense rows, sharding contiguous row chunks across
+    /// [`pool::par_claim`] scoped threads (sequential below a minimum
+    /// work size — thread spawns would dominate tiny service batches).
+    /// Every row must have a positive entry (callers filter empty rows;
+    /// see [`crate::sketch::Sketcher::sketch_matrix`]). Results are
+    /// identical for every thread count.
+    pub fn sketch_rows(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        self.sketch_rows_with_threads(rows, batch_threads(rows.len(), self.k))
+    }
+
+    /// [`SketchEngine::sketch_rows`] with an explicit thread count
+    /// (honored as given — no work-size clamp — so tests and callers
+    /// with better knowledge can force either path).
+    pub fn sketch_rows_with_threads(&self, rows: &[&[f32]], threads: usize) -> Vec<Vec<CwsSample>> {
+        let mut out: Vec<Vec<CwsSample>> =
+            rows.iter().map(|_| vec![EMPTY_SAMPLE; self.k]).collect();
+        par_fill_chunks(&mut out, threads, |i, slot| {
+            self.sketch_dense_into(rows[i], slot);
+        });
+        out
+    }
+}
+
+/// Below this many output sample slots (`rows × k`) a batch runs
+/// sequentially: scoped-thread spawn/join costs tens of microseconds,
+/// which dwarfs the sketching work of the small dynamic-batcher flushes
+/// the service produces under light load.
+const PAR_MIN_SLOTS: usize = 2048;
+
+/// Default thread count for a `rows × k` batch:
+/// [`pool::default_threads`] (`MINMAX_THREADS`), clamped to sequential
+/// below the minimum work size. The batch entry points the coordinator
+/// and `Sketcher` overrides ride use this; the `*_with_threads` APIs
+/// honor their argument verbatim.
+pub fn batch_threads(rows: usize, k: usize) -> usize {
+    if rows.saturating_mul(k) < PAR_MIN_SLOTS {
+        1
+    } else {
+        pool::default_threads()
+    }
+}
+
+/// Shard the per-row fill `fill(row_index, &mut slot)` over contiguous
+/// chunks of the output. Each chunk's `&mut` slice is handed out
+/// exactly once to whichever [`pool::par_claim`] worker steals it, so
+/// the closure writes disjoint memory (the final per-row `Vec`s
+/// directly — no second copy pass) without locks in the inner loop.
+/// ~4 chunks per thread, claimed one at a time, balances ragged row
+/// costs without a static partition.
+fn par_fill_chunks<T: Send, F>(out: &mut [T], threads: usize, fill: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    let threads = threads.max(1);
+    if threads <= 1 || n <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            fill(i, slot);
+        }
+        return;
+    }
+    let chunk_rows = n.div_ceil(threads * 4).max(1);
+    let nchunks = n.div_ceil(chunk_rows);
+    let slots: Vec<Mutex<Option<&mut [T]>>> =
+        out.chunks_mut(chunk_rows).map(|c| Mutex::new(Some(c))).collect();
+    pool::par_claim(nchunks, threads, |ci| {
+        let slab = slots[ci].lock().unwrap().take().expect("chunk claimed twice");
+        for (off, slot) in slab.iter_mut().enumerate() {
+            fill(ci * chunk_rows + off, slot);
+        }
+    });
+}
+
+/// Parallel sketch over a CSR matrix: rows with no nonzeros yield `None`
+/// (hashing is undefined there), everything else is sketched by `f` into
+/// its k-wide slot. The shared batching substrate behind the
+/// [`crate::sketch::Sketcher::sketch_matrix`] impls of both ICWS
+/// facades (lazy `f` for [`crate::cws::CwsHasher`], engine `f` for
+/// [`crate::cws::DenseBatchHasher`]).
+pub fn sketch_csr_with<F>(m: &Csr, k: usize, threads: usize, f: F) -> Vec<Option<Vec<CwsSample>>>
+where
+    F: Fn(SparseRow<'_>, &mut [CwsSample]) + Sync,
+{
+    let mut out: Vec<Option<Vec<CwsSample>>> = (0..m.rows())
+        .map(|i| if m.row(i).nnz() == 0 { None } else { Some(vec![EMPTY_SAMPLE; k]) })
+        .collect();
+    par_fill_chunks(&mut out, threads, |i, slot| {
+        if let Some(samples) = slot {
+            f(m.row(i), samples);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::Dense;
+    use crate::data::sparse::Csr;
+
+    fn random_row(rng: &mut Pcg64, dim: usize, zero_frac: f64) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim)
+            .map(|_| if rng.uniform() < zero_frac { 0.0 } else { rng.lognormal(0.0, 1.0) as f32 })
+            .collect();
+        if !v.iter().any(|&x| x > 0.0) {
+            v[0] = 1.0;
+        }
+        v
+    }
+
+    #[test]
+    fn slabs_match_params_at() {
+        let e = SketchEngine::new(42, 8, 16);
+        for i in 0..16u32 {
+            let (r, c, b) = e.params_slab(i as usize);
+            for j in 0..8u32 {
+                let (rr, cc, bb) = params_at(42, j, i);
+                assert_eq!(r[j as usize], rr);
+                assert_eq!(c[j as usize], cc);
+                assert_eq!(b[j as usize], bb);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_lazy_sampler_bit_for_bit() {
+        let mut rng = Pcg64::new(17);
+        // Pin exact mode: bit parity is only claimed there (a test run
+        // under MINMAX_FAST_MATH=1 must not flip this engine).
+        let e = SketchEngine::new(9, 24, 48).with_fast_math(false);
+        for _ in 0..25 {
+            let v = random_row(&mut rng, 48, 0.4);
+            let d = Dense::from_rows(&[&v]);
+            let s = Csr::from_dense(&d);
+            let row = s.row(0);
+            let ln_u: Vec<f64> = row.values.iter().map(|&x| (x as f64).ln()).collect();
+            let lazy = sample_lazy(9, 24, row.indices, &ln_u);
+            assert_eq!(e.sketch_dense(&v), lazy);
+            assert_eq!(e.sketch_sparse(row), lazy);
+        }
+    }
+
+    #[test]
+    fn sketch_rows_is_thread_count_invariant() {
+        let mut rng = Pcg64::new(5);
+        let rows: Vec<Vec<f32>> = (0..33).map(|_| random_row(&mut rng, 40, 0.5)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let e = SketchEngine::new(3, 16, 40);
+        let one = e.sketch_rows_with_threads(&refs, 1);
+        for threads in [2usize, 3, 4, 8] {
+            assert_eq!(one, e.sketch_rows_with_threads(&refs, threads), "threads={threads}");
+        }
+        assert_eq!(one.len(), 33);
+        assert!(one.iter().all(|s| s.len() == 16));
+        for (row, samples) in refs.iter().zip(&one) {
+            assert_eq!(*samples, e.sketch_dense(row));
+        }
+    }
+
+    #[test]
+    fn sketch_csr_marks_empty_rows_and_parallelizes() {
+        let mut b = crate::data::sparse::CsrBuilder::new(6);
+        b.push_row(vec![(1, 2.0)]);
+        b.push_row(vec![]);
+        b.push_row(vec![(0, 0.5), (5, 3.0)]);
+        let m = b.finish();
+        let e = SketchEngine::new(1, 8, 6);
+        for threads in [1usize, 4] {
+            let out = sketch_csr_with(&m, 8, threads, |row, slot| {
+                e.sketch_sparse_into(row, slot);
+            });
+            assert_eq!(out.len(), 3);
+            assert_eq!(out[0], Some(e.sketch_sparse(m.row(0))));
+            assert_eq!(out[1], None);
+            assert_eq!(out[2], Some(e.sketch_sparse(m.row(2))));
+        }
+    }
+
+    #[test]
+    fn fast_math_gate_and_agreement() {
+        assert!(fastmath_accuracy_ok());
+        let mut rng = Pcg64::new(11);
+        let exact = SketchEngine::new(7, 64, 64).with_fast_math(false);
+        let fast = SketchEngine::new(7, 64, 64).with_fast_math(true);
+        assert!(fast.fast_math());
+        assert!(!exact.fast_math());
+        let (mut same, mut total) = (0usize, 0usize);
+        for _ in 0..100 {
+            let v = random_row(&mut rng, 64, 0.3);
+            let a = exact.sketch_dense(&v);
+            let b = fast.sketch_dense(&v);
+            total += a.len();
+            same += a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        }
+        // ≤1e-10 relative math error flips an argmin only on near-exact
+        // ties; anything below 99.5% agreement is a real defect.
+        assert!(same as f64 >= 0.995 * total as f64, "fastmath agreement {same}/{total}");
+    }
+
+    #[test]
+    fn disabling_fast_math_drops_derived_slabs() {
+        let e = SketchEngine::new(1, 4, 8).with_fast_math(true).with_fast_math(false);
+        assert!(!e.fast_math());
+        let v = [1.0f32, 0.0, 2.0, 0.0, 0.5, 0.0, 0.0, 3.0];
+        let ln_u: Vec<f64> = [1.0f64, 2.0, 0.5, 3.0].iter().map(|x| x.ln()).collect();
+        assert_eq!(e.sketch_dense(&v), sample_lazy(1, 4, &[0, 2, 4, 7], &ln_u));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_index_is_caught_per_row() {
+        let e = SketchEngine::new(1, 4, 4);
+        let indices = [9u32];
+        let values = [1.0f32];
+        e.sketch_sparse(SparseRow { indices: &indices, values: &values });
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined on the all-zero")]
+    fn zero_vector_panics() {
+        SketchEngine::new(1, 4, 2).sketch_dense(&[0.0, 0.0]);
+    }
+}

@@ -31,13 +31,19 @@
 //! Both hashers implement [`crate::sketch::Sketcher`], the crate-wide
 //! hashing abstraction the coordinator and [`crate::pipeline`] consume;
 //! construct them directly (as here) or via
-//! [`crate::kernels::Kernel::sketcher`].
+//! [`crate::kernels::Kernel::sketcher`]. Since the loop-inversion
+//! refactor they are thin facades over [`engine::SketchEngine`], the
+//! shared execution core (transposed parameter slabs, branchless argmin,
+//! optional fast math, chunked parallel batches) — see `engine` for the
+//! performance story and DESIGN.md §2.1 for ownership.
 
+pub mod engine;
 pub mod lsh;
 pub mod minwise;
 pub mod sampler;
 pub mod schemes;
 
+pub use engine::SketchEngine;
 pub use lsh::{LshConfig, LshIndex};
 pub use minwise::MinwiseHasher;
 pub use sampler::{materialize_params, CwsHasher, CwsSample, DenseBatchHasher};

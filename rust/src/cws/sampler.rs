@@ -1,5 +1,6 @@
 //! The ICWS sampler (Algorithm 1) with counter-based randomness.
 
+use super::engine::SketchEngine;
 use crate::data::sparse::SparseRow;
 
 
@@ -90,15 +91,12 @@ impl CwsHasher {
     /// undefined on the zero vector).
     ///
     /// Perf: `ln(uᵢ)` is computed once per nonzero and reused across all
-    /// k samples (see EXPERIMENTS.md §Perf).
+    /// k samples; the argmin itself runs loop-inverted through
+    /// [`super::engine::sample_lazy`] (see EXPERIMENTS.md §Perf).
     pub fn hash_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
         assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
         let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k as u32 {
-            out.push(self.sample_one(j, row.indices, &ln_u));
-        }
-        out
+        super::engine::sample_lazy(self.seed, self.k, row.indices, &ln_u)
     }
 
     /// Hash a dense nonnegative vector (zeros skipped).
@@ -113,150 +111,66 @@ impl CwsHasher {
             }
         }
         assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k as u32 {
-            out.push(self.sample_one(j, &indices, &ln_u));
-        }
-        out
+        super::engine::sample_lazy(self.seed, self.k, &indices, &ln_u)
     }
 
-    #[inline]
-    fn sample_one(&self, j: u32, indices: &[u32], ln_u: &[f64]) -> CwsSample {
-        let mut best_a = f64::INFINITY;
-        let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
-        for (&i, &lnu) in indices.iter().zip(ln_u) {
-            let (r, c, beta) = params_at(self.seed, j, i);
-            let t = (lnu / r + beta).floor();
-            // a = c / (y * exp(r)) with y = exp(r (t - beta))
-            //   = c * exp(-r (t - beta) - r)  — single exp, no overflow
-            //   for the magnitudes seen in practice.
-            let a = c * (-(r * (t - beta)) - r).exp();
-            if a < best_a {
-                best_a = a;
-                best = CwsSample { i_star: i, t_star: t as i64 };
-            }
-        }
-        debug_assert!(best.i_star != u32::MAX);
-        best
-    }
-
-    /// Hash every row of a CSR matrix; rows with no nonzeros yield `None`.
-    pub fn hash_matrix(&self, m: &crate::data::sparse::Csr) -> Vec<Option<Vec<CwsSample>>> {
-        (0..m.rows())
-            .map(|i| {
-                let row = m.row(i);
-                if row.nnz() == 0 {
-                    None
-                } else {
-                    Some(self.hash_sparse(row))
-                }
-            })
-            .collect()
-    }
-
-    /// Build a [`DenseBatchHasher`] for repeated hashing of dense
-    /// vectors of one fixed dimension: the `(r, c, β)` grid is
-    /// materialized ONCE and shared across rows, removing the ~6 mix64
-    /// and 2 ln per cell of parameter derivation from the per-row cost
-    /// (EXPERIMENTS.md §Perf). Output is identical to [`hash_dense`].
+    /// Build a [`DenseBatchHasher`] for repeated hashing of vectors of
+    /// one fixed dimension: the `(r, c, β)` slabs are materialized ONCE
+    /// (in the engine's transposed layout) and shared across rows,
+    /// removing the ~6 mix64 and 2 ln per cell of parameter derivation
+    /// from the per-row cost (EXPERIMENTS.md §Perf). Output is
+    /// bit-identical to [`hash_dense`](CwsHasher::hash_dense) in the
+    /// default exact mode; `MINMAX_FAST_MATH=1` opts the materialized
+    /// engine into `util::fastmath` (≥99.5% sample agreement), while
+    /// `CwsHasher`'s own paths always stay exact.
     pub fn dense_batch(&self, dim: usize) -> DenseBatchHasher {
-        let n = self.k * dim;
-        let mut r = Vec::with_capacity(n);
-        let mut c = Vec::with_capacity(n);
-        let mut beta = Vec::with_capacity(n);
-        for j in 0..self.k as u32 {
-            for i in 0..dim as u32 {
-                let (rr, cc, bb) = params_at(self.seed, j, i);
-                r.push(rr);
-                c.push(cc);
-                beta.push(bb);
-            }
-        }
-        DenseBatchHasher { seed: self.seed, k: self.k, dim, r, c, beta }
+        DenseBatchHasher::new(self.seed, self.k, dim)
     }
 }
 
-/// Amortized dense hasher: `(r, c, β)` in f64, laid out `[j * dim + i]`.
-/// ~24 bytes/cell of memory (6.3 MB at D=1024, k=256) traded for a
-/// large per-row speedup when many rows share one (seed, k, D).
+/// Amortized hasher for one fixed `(seed, k, D)`: a thin facade over the
+/// materialized [`SketchEngine`] (transposed `[i*k + j]` slabs, ~24
+/// bytes/cell exact mode — 6.3 MB at D=1024, k=256 — plus two derived
+/// slabs when fast math is on), traded for a large per-row speedup when
+/// many rows share one configuration. This is the service hot path.
 pub struct DenseBatchHasher {
-    seed: u64,
-    k: usize,
-    dim: usize,
-    r: Vec<f64>,
-    c: Vec<f64>,
-    beta: Vec<f64>,
+    engine: SketchEngine,
 }
 
 impl DenseBatchHasher {
+    pub fn new(seed: u64, k: usize, dim: usize) -> Self {
+        Self { engine: SketchEngine::new(seed, k, dim) }
+    }
+
     pub fn k(&self) -> usize {
-        self.k
+        self.engine.k()
     }
 
     pub fn seed(&self) -> u64 {
-        self.seed
+        self.engine.seed()
     }
 
     pub fn dim(&self) -> usize {
-        self.dim
+        self.engine.dim()
     }
 
-    /// Hash one dense row — identical output to `CwsHasher::hash_dense`.
+    /// The execution core (parameter slabs + batch entry points).
+    pub fn engine(&self) -> &SketchEngine {
+        &self.engine
+    }
+
+    /// Hash one dense row — identical output to `CwsHasher::hash_dense`
+    /// in the default exact mode (see
+    /// [`dense_batch`](CwsHasher::dense_batch) for the fastmath caveat).
     pub fn hash(&self, u: &[f32]) -> Vec<CwsSample> {
-        assert_eq!(u.len(), self.dim, "dimension mismatch");
-        let mut indices: Vec<u32> = Vec::with_capacity(u.len());
-        let mut ln_u: Vec<f64> = Vec::with_capacity(u.len());
-        for (i, &ui) in u.iter().enumerate() {
-            if ui > 0.0 {
-                indices.push(i as u32);
-                ln_u.push((ui as f64).ln());
-            }
-        }
-        assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k {
-            let base = j * self.dim;
-            let mut best_a = f64::INFINITY;
-            let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
-            for (&i, &lnu) in indices.iter().zip(&ln_u) {
-                let idx = base + i as usize;
-                let (r, c, beta) = (self.r[idx], self.c[idx], self.beta[idx]);
-                let t = (lnu / r + beta).floor();
-                let a = c * (-(r * (t - beta)) - r).exp();
-                if a < best_a {
-                    best_a = a;
-                    best = CwsSample { i_star: i, t_star: t as i64 };
-                }
-            }
-            out.push(best);
-        }
-        out
+        self.engine.sketch_dense(u)
     }
 
-    /// Hash a sparse row against the materialized grid — identical
-    /// output to `CwsHasher::hash_sparse` for indices below `dim`.
+    /// Hash a sparse row against the materialized slabs — identical
+    /// output to `CwsHasher::hash_sparse` (exact mode) for indices
+    /// below `dim` (bounds are validated once per row, not per cell).
     pub fn hash_sparse(&self, row: crate::data::sparse::SparseRow<'_>) -> Vec<CwsSample> {
-        assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
-        let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k {
-            let base = j * self.dim;
-            let mut best_a = f64::INFINITY;
-            let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
-            for (&i, &lnu) in row.indices.iter().zip(&ln_u) {
-                assert!((i as usize) < self.dim, "index {i} out of range for dim {}", self.dim);
-                let idx = base + i as usize;
-                let (r, c, beta) = (self.r[idx], self.c[idx], self.beta[idx]);
-                let t = (lnu / r + beta).floor();
-                let a = c * (-(r * (t - beta)) - r).exp();
-                if a < best_a {
-                    best_a = a;
-                    best = CwsSample { i_star: i, t_star: t as i64 };
-                }
-            }
-            out.push(best);
-        }
-        out
+        self.engine.sketch_sparse(row)
     }
 }
 
@@ -409,6 +323,10 @@ mod tests {
 
     #[test]
     fn dense_batch_hasher_matches_per_row_hasher() {
+        if crate::cws::engine::fast_math_requested() {
+            eprintln!("skipped: bit parity is only claimed without MINMAX_FAST_MATH");
+            return;
+        }
         let mut rng = Pcg64::new(21);
         let h = CwsHasher::new(77, 24);
         let batch = h.dense_batch(40);
@@ -470,12 +388,15 @@ mod tests {
     }
 
     #[test]
-    fn hash_matrix_handles_empty_rows() {
+    fn sketch_matrix_handles_empty_rows() {
+        // `hash_matrix` was removed — `Sketcher::sketch_matrix` is the
+        // one whole-matrix entry (same semantics: empty rows → None).
+        use crate::sketch::Sketcher;
         let mut b = crate::data::sparse::CsrBuilder::new(4);
         b.push_row(vec![(1, 2.0)]);
         b.push_row(vec![]);
-        let m = b.finish();
-        let hs = CwsHasher::new(1, 8).hash_matrix(&m);
+        let m = crate::data::Matrix::Sparse(b.finish());
+        let hs = CwsHasher::new(1, 8).sketch_matrix(&m);
         assert!(hs[0].is_some());
         assert!(hs[1].is_none());
     }

@@ -65,6 +65,24 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
     t.row(["native CWS cell rate".into(), fnum(cells_per_s / 1e6, 1), "Mcell/s".to_string()]);
     j.set("native_cws_vec_per_s", vectors_per_s).set("native_cws_mcell_per_s", cells_per_s / 1e6);
 
+    // --- SketchEngine chunked batch entry (loop-inverted slabs, shards
+    // rows across MINMAX_THREADS; see EXPERIMENTS.md §Perf and
+    // benches/bench_sketch.rs for the full lazy/materialized/engine
+    // comparison).
+    let threads = crate::util::pool::default_threads();
+    let batch = hasher.dense_batch(d);
+    let rows: Vec<&[f32]> = (0..x.rows()).map(|i| x.row(i)).collect();
+    let per_batch = time_it(1.0, || {
+        std::hint::black_box(batch.engine().sketch_rows(&rows));
+    });
+    let engine_vec_per_s = x.rows() as f64 / per_batch;
+    t.row([
+        format!("engine batch sketch (D=256,k=128,T={threads})"),
+        fnum(engine_vec_per_s, 1),
+        "vec/s".to_string(),
+    ]);
+    j.set("engine_batch_vec_per_s", engine_vec_per_s).set("engine_batch_threads", threads as u64);
+
     // --- L3 kernel-matrix throughput.
     let a = random_dense(256, 64, 2);
     let b = random_dense(256, 64, 3);

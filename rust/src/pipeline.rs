@@ -304,6 +304,12 @@ impl Pipeline {
     /// The feature map alone: scale, sketch, expand. Rows with no
     /// positive entry become all-zero feature rows. Deterministic per
     /// (sketcher, expansion) — train/test/serving all agree.
+    ///
+    /// Sketching goes through [`Sketcher::sketch_matrix`], so the
+    /// default ICWS sketchers shard rows across `MINMAX_THREADS` scoped
+    /// threads via the `cws::SketchEngine` batch entry; the output is
+    /// identical at any thread count, so fit/transform stay
+    /// reproducible.
     pub fn transform(&self, x: &Matrix) -> Csr {
         // Scaling::None borrows the input directly — no matrix copy on
         // the default (min-max regime) path.

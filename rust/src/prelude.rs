@@ -15,7 +15,7 @@ pub use crate::sketch::{MinwiseSketcher, Sketcher};
 // Hashing: sampler, schemes, feature expansion.
 pub use crate::cws::{
     collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
-    LshIndex, MinwiseHasher, Scheme,
+    LshIndex, MinwiseHasher, Scheme, SketchEngine,
 };
 pub use crate::features::{Expansion, ExpansionError};
 

@@ -9,6 +9,12 @@
 //! * [`DenseBatchHasher`] — the same sampler with `(r, c, β)`
 //!   materialized once per `(seed, k, D)`; byte-identical output, used
 //!   on the service hot path.
+//!
+//! Both ICWS impls execute on [`crate::cws::SketchEngine`] (loop
+//! inversion, transposed slabs, chunked-parallel batches — their
+//! `sketch_dense_batch`/`sketch_matrix` overrides shard rows across
+//! `MINMAX_THREADS` scoped threads with identical output at any thread
+//! count).
 //! * [`MinwiseSketcher`] — classical minwise hashing over the support
 //!   (binarized view); collisions estimate the resemblance (Eq. 2).
 //! * `coordinator::PjrtSketcher` — the AOT/PJRT executable behind the
@@ -23,8 +29,10 @@
 //! Downstream composition is uniform: `Sketcher → cws::Scheme /
 //! features::Expansion → linear model`, packaged by [`crate::pipeline`].
 
+use crate::cws::engine;
 use crate::cws::minwise::MinwiseHasher;
 use crate::cws::sampler::{CwsHasher, CwsSample, DenseBatchHasher};
+use crate::data::dense::Dense;
 use crate::data::sparse::SparseRow;
 use crate::data::Matrix;
 
@@ -63,6 +71,13 @@ pub trait Sketcher {
     /// Sketch every row of a matrix; rows with no positive entry yield
     /// `None` (hashing is undefined there, and the feature expansion
     /// maps `None` to an all-zero feature row).
+    ///
+    /// The dense arm funnels live rows through
+    /// [`Sketcher::sketch_dense_batch`], so batched impls (the ICWS
+    /// engine facades, PJRT) get their chunked/parallel path for free.
+    /// The sparse arm here is sequential — the trait is not `Sync`, so
+    /// only impls that are (the ICWS facades override this) can shard
+    /// rows across threads.
     fn sketch_matrix(&self, m: &Matrix) -> Vec<Option<Vec<CwsSample>>> {
         match m {
             Matrix::Sparse(s) => (0..s.rows())
@@ -75,19 +90,23 @@ pub trait Sketcher {
                     }
                 })
                 .collect(),
-            Matrix::Dense(d) => {
-                let live: Vec<usize> =
-                    (0..d.rows()).filter(|&i| d.row(i).iter().any(|&v| v > 0.0)).collect();
-                let rows: Vec<&[f32]> = live.iter().map(|&i| d.row(i)).collect();
-                let mut sketched = self.sketch_dense_batch(&rows).into_iter();
-                let mut out: Vec<Option<Vec<CwsSample>>> = vec![None; d.rows()];
-                for &i in &live {
-                    out[i] = Some(sketched.next().expect("batch length"));
-                }
-                out
-            }
+            Matrix::Dense(d) => dense_rows_via_batch(self, d),
         }
     }
+}
+
+/// The dense `sketch_matrix` arm, shared by the trait default and the
+/// overriding impls: gather live rows, sketch them through
+/// `sketch_dense_batch`, scatter back with `None` for empty rows.
+fn dense_rows_via_batch<S: Sketcher + ?Sized>(s: &S, d: &Dense) -> Vec<Option<Vec<CwsSample>>> {
+    let live: Vec<usize> = (0..d.rows()).filter(|&i| d.row(i).iter().any(|&v| v > 0.0)).collect();
+    let rows: Vec<&[f32]> = live.iter().map(|&i| d.row(i)).collect();
+    let mut sketched = s.sketch_dense_batch(&rows).into_iter();
+    let mut out: Vec<Option<Vec<CwsSample>>> = vec![None; d.rows()];
+    for &i in &live {
+        out[i] = Some(sketched.next().expect("batch length"));
+    }
+    out
 }
 
 // ------------------------------------------------------------------ ICWS
@@ -114,15 +133,38 @@ impl Sketcher for CwsHasher {
     }
 
     /// Multi-row batches of one dimension materialize the `(r, c, β)`
-    /// grid once via [`CwsHasher::dense_batch`] — the same amortization
-    /// the service hot path uses (identical output, large speedup).
+    /// slabs once and run the engine's chunked-parallel `sketch_rows`
+    /// (identical output for any `MINMAX_THREADS`, large speedup). The
+    /// engine is pinned to exact math: `CwsHasher`'s per-row paths are
+    /// always exact, so honoring `MINMAX_FAST_MATH` only here would
+    /// make the same vector sketch differently depending on batch size
+    /// or matrix representation. Fast math is an explicit opt-in via
+    /// [`crate::cws::SketchEngine`] / [`DenseBatchHasher`] instead.
     fn sketch_dense_batch(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
         match rows.first() {
             Some(first) if rows.len() > 1 && rows.iter().all(|r| r.len() == first.len()) => {
-                let batch = self.dense_batch(first.len());
-                rows.iter().map(|r| batch.hash(r)).collect()
+                engine::SketchEngine::new(CwsHasher::seed(self), CwsHasher::k(self), first.len())
+                    .with_fast_math(false)
+                    .sketch_rows(rows)
             }
             _ => rows.iter().map(|r| self.hash_dense(r)).collect(),
+        }
+    }
+
+    /// Parallel whole-matrix sketching: the sparse arm shards rows
+    /// across threads with lazy parameter derivation (`CwsHasher` is
+    /// `Sync` — it owns only `(seed, k)`); the dense arm rides the
+    /// batched path above.
+    fn sketch_matrix(&self, m: &Matrix) -> Vec<Option<Vec<CwsSample>>> {
+        match m {
+            Matrix::Sparse(s) => {
+                let (seed, k) = (CwsHasher::seed(self), CwsHasher::k(self));
+                engine::sketch_csr_with(s, k, engine::batch_threads(s.rows(), k), |row, out| {
+                    let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
+                    engine::sample_lazy_into(seed, k, row.indices, &ln_u, out);
+                })
+            }
+            Matrix::Dense(d) => dense_rows_via_batch(self, d),
         }
     }
 }
@@ -146,6 +188,26 @@ impl Sketcher for DenseBatchHasher {
 
     fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
         self.hash(u)
+    }
+
+    /// The engine's chunked-parallel batch entry — the coordinator's
+    /// `HashService` worker lands here via `dyn Sketcher`.
+    fn sketch_dense_batch(&self, rows: &[&[f32]]) -> Vec<Vec<CwsSample>> {
+        self.engine().sketch_rows(rows)
+    }
+
+    /// Parallel whole-matrix sketching against the materialized slabs
+    /// (row index bounds validated once per row).
+    fn sketch_matrix(&self, m: &Matrix) -> Vec<Option<Vec<CwsSample>>> {
+        match m {
+            Matrix::Sparse(s) => engine::sketch_csr_with(
+                s,
+                DenseBatchHasher::k(self),
+                engine::batch_threads(s.rows(), DenseBatchHasher::k(self)),
+                |row, out| self.engine().sketch_sparse_into(row, out),
+            ),
+            Matrix::Dense(d) => dense_rows_via_batch(self, d),
+        }
     }
 }
 
@@ -241,6 +303,10 @@ mod tests {
 
     #[test]
     fn dense_batch_hasher_is_a_parity_sketcher() {
+        if engine::fast_math_requested() {
+            eprintln!("skipped: bit parity is only claimed without MINMAX_FAST_MATH");
+            return;
+        }
         let mut rng = Pcg64::new(7);
         let lazy = CwsHasher::new(9, 24);
         let mat = lazy.dense_batch(40);
@@ -257,6 +323,10 @@ mod tests {
 
     #[test]
     fn sketch_matrix_marks_empty_rows() {
+        if engine::fast_math_requested() {
+            eprintln!("skipped: bit parity is only claimed without MINMAX_FAST_MATH");
+            return;
+        }
         let d = Dense::from_rows(&[&[1.0, 0.0], &[0.0, 0.0], &[0.5, 2.0]]);
         for m in [Matrix::Dense(d.clone()), Matrix::Sparse(Csr::from_dense(&d))] {
             let h = CwsHasher::new(1, 8);

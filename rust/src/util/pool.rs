@@ -34,10 +34,20 @@ pub fn par_for<F>(n: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
+    par_for_with(n, min_chunk, default_threads(), f)
+}
+
+/// [`par_for`] with an explicit thread count, so callers (and tests)
+/// can pin parallelism independently of `MINMAX_THREADS`. `threads <= 1`
+/// runs `f(0, n)` inline with zero thread overhead.
+pub fn par_for_with<F>(n: usize, min_chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
     if n == 0 {
         return;
     }
-    let threads = default_threads();
+    let threads = threads.max(1);
     if threads <= 1 || n <= min_chunk {
         f(0, n);
         return;
@@ -55,6 +65,39 @@ where
                 }
                 let end = (start + chunk).min(n);
                 f(start, end);
+            });
+        }
+    });
+}
+
+/// Claim units `0..n` one at a time across up to `threads` scoped
+/// threads via a work-stealing counter — the dynamic-balancing
+/// primitive behind [`par_rows`] and the sketch engine's chunked
+/// batches (a straggler unit never serializes the others behind a
+/// static partition). `threads <= 1` runs inline.
+pub fn par_claim<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
             });
         }
     });
@@ -226,6 +269,33 @@ mod tests {
             sum.fetch_add((e - s) as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn par_for_with_explicit_threads_covers_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let n = 1000;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_for_with(n, 8, threads, |s, e| {
+                for i in s..e {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_claim_visits_each_unit_once() {
+        for threads in [1usize, 3, 8] {
+            let n = 500;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_claim(n, threads, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+        par_claim(0, 4, |_| panic!("must not be called"));
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Bit-for-bit parity pins for the loop-inverted `SketchEngine`.
+//!
+//! The refactor's contract: transposing the parameter slabs, inverting
+//! the loop order, and batching rows across threads must not change a
+//! single output bit in the default (exact-math) mode. The reference
+//! below IS the pre-refactor sampler — the original `j`-outer scalar
+//! argmin over lazy `params_at` triples — reimplemented here so the
+//! property holds against the spec, not against whatever the crate
+//! currently does. Replay a failing property case with
+//! `MINMAX_PROP_SEED=<seed>`.
+
+use minmax::cws::engine::{fast_math_requested, sample_lazy, sample_lazy_into, sketch_csr_with};
+use minmax::cws::sampler::params_at;
+use minmax::cws::{CwsHasher, CwsSample, DenseBatchHasher, SketchEngine};
+use minmax::data::dense::Dense;
+use minmax::data::sparse::{Csr, CsrBuilder};
+use minmax::data::Matrix;
+use minmax::sketch::Sketcher;
+use minmax::util::prop::{check, ensure, Gen};
+use minmax::util::rng::Pcg64;
+
+/// The pre-refactor sampler, verbatim: for each sample j, scan the
+/// nonzeros in order, keep the strictly-smallest `a` (first winner of a
+/// tie), derive `(r, c, β)` lazily per `(j, i)`.
+fn reference_sample(seed: u64, k: usize, indices: &[u32], values: &[f32]) -> Vec<CwsSample> {
+    let ln_u: Vec<f64> = values.iter().map(|&v| (v as f64).ln()).collect();
+    (0..k as u32)
+        .map(|j| {
+            let mut best_a = f64::INFINITY;
+            let mut best = CwsSample { i_star: u32::MAX, t_star: 0 };
+            for (&i, &lnu) in indices.iter().zip(&ln_u) {
+                let (r, c, beta) = params_at(seed, j, i);
+                let t = (lnu / r + beta).floor();
+                let a = c * (-(r * (t - beta)) - r).exp();
+                if a < best_a {
+                    best_a = a;
+                    best = CwsSample { i_star: i, t_star: t as i64 };
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn gen_sparse_vec(g: &mut Gen, dim: usize, zero_frac: f64) -> (Vec<u32>, Vec<f32>) {
+    let v = g.nonneg_vec(dim, zero_frac);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for (i, &x) in v.iter().enumerate() {
+        if x > 0.0 {
+            indices.push(i as u32);
+            values.push(x);
+        }
+    }
+    if indices.is_empty() {
+        indices.push(0);
+        values.push(1.0);
+    }
+    (indices, values)
+}
+
+fn to_dense(dim: usize, indices: &[u32], values: &[f32]) -> Vec<f32> {
+    let mut u = vec![0.0f32; dim];
+    for (&i, &v) in indices.iter().zip(values) {
+        u[i as usize] = v;
+    }
+    u
+}
+
+/// Bit-for-bit parity is only claimed in exact math mode. When the
+/// operator opts into `MINMAX_FAST_MATH=1`, engine-backed paths
+/// legitimately diverge on near-tie argmins, so the strict-equality
+/// tests stand down (the fastmath agreement test in `cws::engine` still
+/// covers that mode).
+fn exact_mode() -> bool {
+    !fast_math_requested()
+}
+
+#[test]
+fn prop_engine_bit_identical_to_pre_refactor_sampler() {
+    if !exact_mode() {
+        eprintln!("skipped: MINMAX_FAST_MATH is set");
+        return;
+    }
+    check("engine-vs-reference", 120, |g| {
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let k = g.usize_in(1, 64);
+        let dim = g.usize_in(1, 96);
+        let zero_frac = g.f64_in(0.0, 0.9);
+        let (indices, values) = gen_sparse_vec(g, dim, zero_frac);
+        let want = reference_sample(seed, k, &indices, &values);
+
+        // Lazy facade (CwsHasher) — loop-inverted, params on the fly.
+        let hasher = CwsHasher::new(seed, k);
+        let dense = to_dense(dim, &indices, &values);
+        ensure(hasher.hash_dense(&dense) == want, "hash_dense == reference")?;
+        let ln_u: Vec<f64> = values.iter().map(|&v| (v as f64).ln()).collect();
+        ensure(sample_lazy(seed, k, &indices, &ln_u) == want, "sample_lazy == reference")?;
+
+        // Materialized engine — transposed slabs, same bits.
+        let engine = SketchEngine::new(seed, k, dim).with_fast_math(false);
+        ensure(engine.sketch_dense(&dense) == want, "engine dense == reference")?;
+        let batch = DenseBatchHasher::new(seed, k, dim);
+        ensure(batch.hash(&dense) == want, "batch facade == reference")
+    });
+}
+
+#[test]
+fn prop_sparse_paths_bit_identical() {
+    if !exact_mode() {
+        eprintln!("skipped: MINMAX_FAST_MATH is set");
+        return;
+    }
+    check("engine-sparse-vs-reference", 80, |g| {
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let k = g.usize_in(1, 48);
+        let dim = g.usize_in(1, 128);
+        let (indices, values) = gen_sparse_vec(g, dim, g.f64_in(0.3, 0.95));
+        let want = reference_sample(seed, k, &indices, &values);
+
+        let mut b = CsrBuilder::new(dim);
+        b.push_row(indices.iter().zip(&values).map(|(&i, &v)| (i, v)).collect());
+        let m = b.finish();
+        let hasher = CwsHasher::new(seed, k);
+        ensure(hasher.hash_sparse(m.row(0)) == want, "hash_sparse == reference")?;
+        let batch = hasher.dense_batch(dim);
+        ensure(batch.hash_sparse(m.row(0)) == want, "batch sparse == reference")
+    });
+}
+
+#[test]
+fn golden_engine_slabs_match_params_at_pins() {
+    // The cross-language golden constants pinned in
+    // `cws::sampler::tests::golden_params_cross_language`, read back out
+    // of the engine's transposed slabs: the refactor may not perturb a
+    // single parameter bit.
+    let cases: [(u64, u32, u32, f64, f64, f64); 3] = [
+        (42, 0, 0, 2.1321342897249402, 2.34453352747202, 0.9619698314597537),
+        (42, 3, 7, 0.9596960229776987, 1.5230354601677472, 0.4030703586081501),
+        (2015, 127, 255, 2.5218182169423575, 2.662209577473352, 0.642316614160663),
+    ];
+    for (seed, j, i, er, ec, eb) in cases {
+        let engine = SketchEngine::new(seed, (j + 1) as usize, (i + 1) as usize);
+        let (r, c, b) = engine.params_slab(i as usize);
+        assert_eq!(r[j as usize], er, "r({seed},{j},{i})");
+        assert_eq!(c[j as usize], ec, "c({seed},{j},{i})");
+        assert_eq!(b[j as usize], eb, "beta({seed},{j},{i})");
+        // And the lazy derivation agrees with the slab, cell for cell.
+        let (lr, lc, lb) = params_at(seed, j, i);
+        assert_eq!((r[j as usize], c[j as usize], b[j as usize]), (lr, lc, lb));
+    }
+}
+
+#[test]
+fn chunked_parallel_is_thread_count_invariant() {
+    let mut g = Gen { rng: Pcg64::new(0xC0FFEE), size: 1.0 };
+    let dim = 64;
+    let k = 32;
+    let rows: Vec<Vec<f32>> = (0..57)
+        .map(|_| {
+            let mut v = g.nonneg_vec(dim, 0.5);
+            if !v.iter().any(|&x| x > 0.0) {
+                v[0] = 1.0;
+            }
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+    let engine = SketchEngine::new(7, k, dim);
+    let sequential = engine.sketch_rows_with_threads(&refs, 1);
+    for threads in [2usize, 3, 4, 8, 16] {
+        assert_eq!(
+            sequential,
+            engine.sketch_rows_with_threads(&refs, threads),
+            "threads={threads}"
+        );
+    }
+    // Per-row parity against the reference sampler (exact mode only).
+    if exact_mode() {
+        for (row, got) in refs.iter().zip(&sequential) {
+            let indices: Vec<u32> = (0..dim as u32).filter(|&i| row[i as usize] > 0.0).collect();
+            let values: Vec<f32> = indices.iter().map(|&i| row[i as usize]).collect();
+            assert_eq!(*got, reference_sample(7, k, &indices, &values));
+        }
+    }
+}
+
+#[test]
+fn minmax_threads_does_not_change_results() {
+    // The env-driven default path (whatever MINMAX_THREADS is in this
+    // process — CI runs the whole suite under =1 and =4) must agree
+    // bit-for-bit with explicitly pinned 1- and 4-thread runs of the
+    // same sharding substrate. Deliberately NO std::env::set_var here:
+    // mutating the environment while the parallel test harness has
+    // other threads calling env::var (default_threads,
+    // fast_math_requested) is a data race on glibc.
+    let mut g = Gen { rng: Pcg64::new(0xBEEF), size: 1.0 };
+    let dim = 40;
+    let mut b = CsrBuilder::new(dim);
+    for i in 0..41 {
+        if i % 7 == 3 {
+            b.push_row(vec![]); // empty rows stay None under every thread count
+        } else {
+            let v = g.nonneg_vec(dim, 0.6);
+            let mut entries: Vec<(u32, f32)> = v
+                .iter()
+                .enumerate()
+                .filter(|(_, &x)| x > 0.0)
+                .map(|(i, &x)| (i as u32, x))
+                .collect();
+            if entries.is_empty() {
+                entries.push((0, 1.0));
+            }
+            b.push_row(entries);
+        }
+    }
+    let m = Matrix::Sparse(b.finish());
+    let hasher = CwsHasher::new(11, 16);
+    let via_env_default = hasher.sketch_matrix(&m);
+    let csr = m.as_csr().unwrap();
+    for threads in [1usize, 4] {
+        // The CwsHasher sparse arm, with the thread count pinned.
+        let pinned = sketch_csr_with(csr, 16, threads, |row, out| {
+            let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
+            sample_lazy_into(11, 16, row.indices, &ln_u, out);
+        });
+        assert_eq!(via_env_default, pinned, "threads={threads}");
+    }
+    assert!(via_env_default[3].is_none() && via_env_default[10].is_none());
+    // And the result matches the sequential per-row reference (the lazy
+    // sparse path is exact math regardless of MINMAX_FAST_MATH).
+    for i in 0..csr.rows() {
+        let row = csr.row(i);
+        let want = if row.nnz() == 0 {
+            None
+        } else {
+            Some(reference_sample(11, 16, row.indices, row.values))
+        };
+        assert_eq!(via_env_default[i], want, "row {i}");
+    }
+}
+
+#[test]
+fn sketch_csr_with_matches_sketcher_matrix() {
+    let mut g = Gen { rng: Pcg64::new(0xD1CE), size: 1.0 };
+    let dim = 32;
+    let k = 12;
+    let mut b = CsrBuilder::new(dim);
+    for _ in 0..23 {
+        let v = g.nonneg_vec(dim, 0.7);
+        b.push_row(
+            v.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(i, &x)| (i as u32, x)).collect(),
+        );
+    }
+    let csr = b.finish();
+    let batch = DenseBatchHasher::new(3, k, dim);
+    for threads in [1usize, 4] {
+        let direct = sketch_csr_with(&csr, k, threads, |row, out| {
+            batch.engine().sketch_sparse_into(row, out);
+        });
+        let via_trait = batch.sketch_matrix(&Matrix::Sparse(csr.clone()));
+        assert_eq!(direct, via_trait, "threads={threads}");
+    }
+}
+
+#[test]
+fn dense_and_sparse_matrix_forms_agree_through_the_batch_paths() {
+    if !exact_mode() {
+        eprintln!("skipped: MINMAX_FAST_MATH is set");
+        return;
+    }
+    let mut g = Gen { rng: Pcg64::new(0xFEED), size: 1.0 };
+    let dim = 24;
+    let rows: Vec<Vec<f32>> = (0..19)
+        .map(|_| {
+            let mut v = g.nonneg_vec(dim, 0.4);
+            if !v.iter().any(|&x| x > 0.0) {
+                v[0] = 1.0;
+            }
+            v
+        })
+        .collect();
+    let row_refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+    let d = Dense::from_rows(&row_refs);
+    let s = Csr::from_dense(&d);
+    let hasher = CwsHasher::new(21, 20);
+    let dense_out = hasher.sketch_matrix(&Matrix::Dense(d));
+    let sparse_out = hasher.sketch_matrix(&Matrix::Sparse(s));
+    assert_eq!(dense_out, sparse_out);
+    let batch = hasher.dense_batch(dim);
+    let batched = batch.sketch_dense_batch(&row_refs);
+    for (i, out) in dense_out.iter().enumerate() {
+        assert_eq!(out.as_ref().unwrap(), &batched[i]);
+    }
+}
