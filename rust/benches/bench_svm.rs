@@ -1,7 +1,18 @@
 //! SVM solver benchmarks — the training side of Table 1 (precomputed
-//! kernel SVM) and Figures 7–8 (linear SVM on hashed features).
+//! kernel SVM) and Figures 7–8 (linear SVM on hashed features), plus
+//! the CodeMatrix-vs-CSR train-path comparison the learning-layer fast
+//! path is judged by (EXPERIMENTS.md §Perf, train-side rows):
 //!
-//! Run: `cargo bench --bench bench_svm [-- --quick]`
+//! * `linear-svm/train/n300/k128b8` — dual-CD over the legacy CSR
+//!   expansion (index + value loads, converts, multiplies);
+//! * `linear-svm/train-codes/n300/k128b8` — the same solve over the
+//!   one-hot `CodeMatrix` (gathers only; bit-identical predictions,
+//!   pinned by `tests/svm_parity.rs`);
+//! * `ovr/train-par/...` — one-vs-rest over the codes at 1 thread vs
+//!   `MINMAX_THREADS` (classes are embarrassingly parallel).
+//!
+//! Run: `cargo bench --bench bench_svm [-- --quick]`; CI uploads the
+//! JSON as `BENCH_svm.json`.
 
 use minmax::bench::{black_box, Runner};
 use minmax::coordinator::{hash_dataset, PipelineConfig};
@@ -9,7 +20,8 @@ use minmax::data::synth::{generate, SynthConfig};
 use minmax::data::Matrix;
 use minmax::kernels::matrix::kernel_matrix_sym;
 use minmax::kernels::KernelKind;
-use minmax::svm::{KernelSvmParams, LinearSvmParams};
+use minmax::svm::{KernelSvmParams, LinearOvR, LinearSvmParams};
+use minmax::util::pool;
 
 fn main() {
     let mut r = Runner::new();
@@ -35,23 +47,52 @@ fn main() {
         },
     );
 
-    // Linear SVM on hashed CWS features (Figure 7's inner loop).
+    // Linear SVM on hashed CWS features (Figure 7's inner loop): the
+    // same workload through both training representations. The
+    // acceptance ratio is train-codes/train nnz-per-second.
     let ds2 = generate("letter", SynthConfig { seed: 2, n_train: 300, n_test: 10 }).unwrap();
     let hashed = hash_dataset(&ds2, &PipelineConfig::new(3, 128, 8)).unwrap();
+    let train_csr = hashed.train_csr();
+    let nnz = hashed.train.nnz() as f64;
     let y2: Vec<i32> = ds2.train_y.iter().map(|&c| if c == 0 { 1 } else { -1 }).collect();
-    r.bench_with_throughput(
-        "linear-svm/train/n300/k128b8",
-        Some(((300 * 128) as f64, "nnz"),),
-        || {
-            black_box(minmax::svm::linear::train_binary(
-                &hashed.train,
-                &y2,
-                &LinearSvmParams { c: 1.0, ..Default::default() },
-            ));
-        },
-    );
+    let lp = LinearSvmParams { c: 1.0, ..Default::default() };
+    r.bench_with_throughput("linear-svm/train/n300/k128b8", Some((nnz, "nnz")), || {
+        black_box(minmax::svm::linear::train_binary(&train_csr, &y2, &lp));
+    });
+    r.bench_with_throughput("linear-svm/train-codes/n300/k128b8", Some((nnz, "nnz")), || {
+        black_box(minmax::svm::linear::train_binary(&hashed.train, &y2, &lp));
+    });
 
-    // Full hashed pipeline step: hash + expand (Figure 7 outer loop).
+    // One-vs-rest over the code matrix: sequential baseline vs the
+    // pool's thread count (set MINMAX_THREADS to pin it; identical
+    // models either way).
+    let classes = ds2.n_classes();
+    let ovr_work = nnz * classes as f64;
+    r.bench_with_throughput("ovr/train-par/n300/k128b8/t1", Some((ovr_work, "nnz")), || {
+        black_box(LinearOvR::train_with_threads(&hashed.train, &ds2.train_y, classes, &lp, 1));
+    });
+    // Skip the parallel row on single-core hosts: it would duplicate
+    // the t1 name in the JSON and measure the same inline fallback.
+    let threads = pool::default_threads();
+    if threads > 1 {
+        r.bench_with_throughput(
+            &format!("ovr/train-par/n300/k128b8/t{threads}"),
+            Some((ovr_work, "nnz")),
+            || {
+                black_box(LinearOvR::train_with_threads(
+                    &hashed.train,
+                    &ds2.train_y,
+                    classes,
+                    &lp,
+                    threads,
+                ));
+            },
+        );
+    }
+
+    // Full hashed pipeline step: hash + encode (Figure 7 outer loop;
+    // name kept stable across the CSR→CodeMatrix switch so the perf
+    // trajectory stays diffable).
     let dsm = match &ds2.train_x {
         Matrix::Dense(d) => d.clone(),
         _ => unreachable!(),

@@ -9,10 +9,11 @@
 //!   (backpressure), dynamic batching (size/deadline), backend-agnostic
 //!   execution, per-request latency metrics.
 //! * [`router`] — least-loaded routing over replicated services.
-//! * [`pipeline`] — the offline batch pipeline: hash a dataset, expand
-//!   0-bit CWS one-hot features, train/evaluate the linear model, and
-//!   export weights in the layout the `hash_score` AOT serving artifact
-//!   consumes. (The composable object API is [`crate::pipeline`].)
+//! * [`pipeline`] — the offline batch pipeline: hash a dataset, encode
+//!   0-bit CWS one-hot codes (`features::CodeMatrix`, with CSR export
+//!   for IO), train/evaluate the linear model, and export weights in
+//!   the layout the `hash_score` AOT serving artifact consumes. (The
+//!   composable object API is [`crate::pipeline`].)
 //! * [`metrics`] — shared observability.
 
 pub mod backend;

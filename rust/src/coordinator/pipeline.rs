@@ -10,9 +10,9 @@
 
 use crate::cws::{CwsHasher, CwsSample};
 use crate::data::{Csr, Dataset, Matrix};
-use crate::features::{Expansion, ExpansionError};
+use crate::features::{CodeMatrix, Expansion, ExpansionError};
 use crate::sketch::Sketcher;
-use crate::svm::{linear_svm_accuracy, LinearSvmParams};
+use crate::svm::{linear_svm_accuracy, LinearSvmParams, RowSet};
 
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -55,22 +55,38 @@ pub fn hash_matrix_native(m: &Matrix, seed: u64, k: usize) -> Vec<Option<Vec<Cws
     }
 }
 
-/// The hashed features of one dataset split.
+/// The hashed features of one dataset split, in the one-hot
+/// [`CodeMatrix`] representation the learning layer trains on directly
+/// (`k` `u32` codes per row — no CSR scaffolding, no values array).
 pub struct HashedDataset {
-    pub train: Csr,
-    pub test: Csr,
+    pub train: CodeMatrix,
+    pub test: CodeMatrix,
     pub expansion: Expansion,
 }
 
-/// Hash train and test under one seed and expand to one-hot features.
+impl HashedDataset {
+    /// Train split in the legacy CSR representation (LIBSVM IO,
+    /// CSR-consuming learners) — identical to what `Expansion::expand`
+    /// builds for the same samples.
+    pub fn train_csr(&self) -> Csr {
+        self.train.to_csr()
+    }
+
+    /// Test split as CSR — see [`HashedDataset::train_csr`].
+    pub fn test_csr(&self) -> Csr {
+        self.test.to_csr()
+    }
+}
+
+/// Hash train and test under one seed and encode the one-hot codes.
 /// Invalid bit budgets surface as an error instead of a panic.
 pub fn hash_dataset(ds: &Dataset, cfg: &PipelineConfig) -> Result<HashedDataset, ExpansionError> {
     let expansion = cfg.expansion()?;
     let train_samples = hash_matrix_native(&ds.train_x, cfg.seed, cfg.k);
     let test_samples = hash_matrix_native(&ds.test_x, cfg.seed, cfg.k);
     Ok(HashedDataset {
-        train: expansion.expand(&train_samples),
-        test: expansion.expand(&test_samples),
+        train: expansion.encode(&train_samples),
+        test: expansion.encode(&test_samples),
         expansion,
     })
 }
@@ -112,9 +128,11 @@ pub fn hashed_linear_sweep(ds: &Dataset, cfg: &PipelineConfig, cs: &[f64]) -> Ve
 
 /// Train the final hashed linear model and export its weights in the
 /// `[K, 2^bits, C]` layout the `hash_score` AOT serving artifact
-/// consumes — the bridge from offline training to PJRT serving.
-pub fn export_scorer_weights(
-    train: &Csr,
+/// consumes — the bridge from offline training to PJRT serving. Takes
+/// any [`RowSet`] training representation (the `hash_dataset` code
+/// matrix by default; CSR via [`HashedDataset::train_csr`]).
+pub fn export_scorer_weights<X: RowSet + ?Sized>(
+    train: &X,
     train_y: &[i32],
     n_classes: usize,
     expansion: &Expansion,
@@ -172,14 +190,20 @@ mod tests {
     }
 
     #[test]
-    fn hashed_rows_have_k_ones() {
+    fn hashed_rows_have_k_codes() {
         let ds = small("letter");
         let cfg = PipelineConfig::new(2, 16, 4);
         let h = hash_dataset(&ds, &cfg).unwrap();
         for i in 0..h.train.rows() {
-            assert_eq!(h.train.row(i).nnz(), 16);
+            assert_eq!(h.train.codes_of(i).len(), 16);
         }
         assert_eq!(h.train.cols(), 16 * 16);
+        // CSR export carries the same structure: k ones per row.
+        let csr = h.train_csr();
+        for i in 0..csr.rows() {
+            assert_eq!(csr.row(i).nnz(), 16);
+            assert!(csr.row(i).values.iter().all(|&v| v == 1.0));
+        }
     }
 
     #[test]
@@ -225,11 +249,10 @@ mod tests {
         let codes = h.expansion.code_space();
         let n_classes = ds.n_classes();
         for i in 0..h.test.rows().min(20) {
-            let row = h.test.row(i);
-            let want = model.decisions(row);
+            let want = model.decisions_on(&h.test, i);
             // Score via the exported layout (gather + sum).
             let mut got = vec![0.0f64; n_classes];
-            for &col in row.indices {
+            for &col in h.test.codes_of(i) {
                 let j = col as usize / codes;
                 let code = col as usize % codes;
                 for cls in 0..n_classes {

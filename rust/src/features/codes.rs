@@ -1,0 +1,175 @@
+//! Dense one-hot **code matrix** — the fast-path representation of
+//! hashed features.
+//!
+//! The §4 expansion produces exactly one active column per `(row,
+//! sample)` pair, so a CSR with `k` ones per row stores three arrays
+//! (indptr, indices, values) to say what a dense `[n × k]` slab of
+//! `u32` column codes says alone. [`CodeMatrix`] is that slab plus an
+//! empty-row mask: ~3× less memory traffic than the CSR (no `f32`
+//! values, no indptr), and the learning layer's inner products collapse
+//! to `k` gathers with no multiplies (see `svm::rowset`).
+//!
+//! Built by [`crate::features::Expansion::encode`]; [`CodeMatrix::to_csr`]
+//! is the compatibility/export path (LIBSVM IO, CSR-consuming code) and
+//! reproduces `Expansion::expand` exactly.
+
+use crate::data::sparse::{Csr, CsrBuilder};
+
+/// `[n × k]` one-hot column codes, row-major, with an empty-row mask.
+///
+/// Row `i`'s `k` codes are absolute column indices into the
+/// `k · 2^{b_i+b_t}`-dimensional one-hot space — sample `j`'s code
+/// lives in block `j`, so each row's codes are strictly increasing.
+/// Rows hashed from an all-zero input vector (no samples) are marked
+/// empty and behave as all-zero feature rows everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeMatrix {
+    k: usize,
+    /// One-hot dimensionality `k · 2^{b_i+b_t}` (the CSR `cols()`).
+    dim: usize,
+    /// Row-major `[n × k]` absolute column codes; empty rows hold zeros.
+    codes: Vec<u32>,
+    /// Per-row marker for empty input vectors.
+    empty: Vec<bool>,
+}
+
+impl CodeMatrix {
+    pub(crate) fn from_parts(k: usize, dim: usize, codes: Vec<u32>, empty: Vec<bool>) -> Self {
+        debug_assert!(k > 0 && dim % k == 0);
+        debug_assert_eq!(codes.len(), empty.len() * k);
+        Self { k, dim, codes, empty }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.empty.len()
+    }
+
+    /// Total one-hot dimensionality (what the equivalent CSR's `cols()`
+    /// reports and what model weight vectors are sized to).
+    pub fn cols(&self) -> usize {
+        self.dim
+    }
+
+    /// Samples (active columns) per non-empty row.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Active entries over the whole matrix: `k` per non-empty row.
+    pub fn nnz(&self) -> usize {
+        self.k * self.empty.iter().filter(|&&e| !e).count()
+    }
+
+    pub fn is_empty_row(&self, i: usize) -> bool {
+        self.empty[i]
+    }
+
+    /// Row `i`'s strictly-increasing absolute column codes; the empty
+    /// slice for an empty input row.
+    #[inline]
+    pub fn codes_of(&self, i: usize) -> &[u32] {
+        if self.empty[i] {
+            &[]
+        } else {
+            &self.codes[i * self.k..(i + 1) * self.k]
+        }
+    }
+
+    /// Export to the legacy CSR representation (all stored values 1.0)
+    /// — bit-identical to what `Expansion::expand` builds for the same
+    /// samples. Compatibility path for LIBSVM IO and CSR consumers; the
+    /// learning layer trains on the codes directly.
+    pub fn to_csr(&self) -> Csr {
+        let ones = vec![1.0f32; self.k];
+        let mut b = CsrBuilder::new(self.dim);
+        for i in 0..self.rows() {
+            let codes = self.codes_of(i);
+            b.push_sorted_row(codes, &ones[..codes.len()]);
+        }
+        b.finish()
+    }
+
+    /// Validate structural invariants (used by property/parity tests):
+    /// sample `j`'s code must land in column block `j`, which also
+    /// forces strict monotonicity within each row.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.k == 0 || self.dim % self.k != 0 {
+            return Err(format!("dim {} not a multiple of k {}", self.dim, self.k));
+        }
+        if self.codes.len() != self.empty.len() * self.k {
+            return Err("codes slab length disagrees with rows × k".into());
+        }
+        let code_space = self.dim / self.k;
+        for i in 0..self.rows() {
+            for (j, &c) in self.codes_of(i).iter().enumerate() {
+                let (lo, hi) = (j * code_space, (j + 1) * code_space);
+                if !(lo..hi).contains(&(c as usize)) {
+                    return Err(format!("row {i} sample {j}: code {c} outside block [{lo},{hi})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::sampler::{CwsHasher, CwsSample};
+    use crate::features::Expansion;
+
+    fn samples_for(rows: &[&[f32]], k: usize, seed: u64) -> Vec<Option<Vec<CwsSample>>> {
+        let h = CwsHasher::new(seed, k);
+        rows.iter()
+            .map(|r| {
+                if r.iter().any(|&v| v > 0.0) {
+                    Some(h.hash_dense(r))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn encode_to_csr_matches_expand_exactly() {
+        let e = Expansion::new(16, 6);
+        let s = samples_for(
+            &[&[1.0f32, 0.5, 2.0], &[0.0f32, 0.0, 0.0], &[3.0f32, 0.0, 0.1]],
+            16,
+            7,
+        );
+        let cm = e.encode(&s);
+        cm.check_invariants().unwrap();
+        assert_eq!(cm.to_csr(), e.expand(&s));
+        assert_eq!(cm.rows(), 3);
+        assert_eq!(cm.cols(), e.dim());
+        assert_eq!(cm.k(), 16);
+        assert_eq!(cm.nnz(), 32); // two live rows × k
+    }
+
+    #[test]
+    fn empty_rows_are_masked() {
+        let e = Expansion::new(8, 4);
+        let s = samples_for(&[&[0.0f32, 0.0], &[1.0f32, 2.0]], 8, 3);
+        let cm = e.encode(&s);
+        assert!(cm.is_empty_row(0));
+        assert!(!cm.is_empty_row(1));
+        assert!(cm.codes_of(0).is_empty());
+        assert_eq!(cm.codes_of(1).len(), 8);
+        assert_eq!(cm.to_csr().row(0).nnz(), 0);
+    }
+
+    #[test]
+    fn codes_are_block_aligned_and_increasing() {
+        let e = Expansion::new(32, 5).with_t_bits(2).unwrap();
+        let s = samples_for(&[&[0.4f32, 1.7, 0.0, 2.2]], 32, 11);
+        let cm = e.encode(&s);
+        cm.check_invariants().unwrap();
+        let codes = cm.codes_of(0);
+        assert!(codes.windows(2).all(|w| w[0] < w[1]));
+        for (j, &c) in codes.iter().enumerate() {
+            assert_eq!(c as usize / e.code_space(), j);
+        }
+    }
+}

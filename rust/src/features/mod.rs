@@ -8,6 +8,10 @@
 //! collision estimator of `K_MM(u, v)` — a linear kernel approximating
 //! the min-max kernel, which is the whole point of the pipeline.
 
+pub mod codes;
+
+pub use codes::CodeMatrix;
+
 use crate::cws::sampler::CwsSample;
 use crate::cws::schemes::Scheme;
 use crate::data::sparse::{Csr, CsrBuilder};
@@ -132,28 +136,65 @@ impl Expansion {
     /// Expand one vector's samples into a sorted sparse row (indices,
     /// values) with exactly `k` ones.
     pub fn expand_row(&self, samples: &[CwsSample]) -> (Vec<u32>, Vec<f32>) {
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        self.expand_row_into(samples, &mut idx, &mut vals);
+        (idx, vals)
+    }
+
+    /// [`Expansion::expand_row`] into caller-owned buffers, so batch
+    /// expansion reuses one (indices, values) pair instead of
+    /// allocating `vec![1.0; k]` per row.
+    pub fn expand_row_into(&self, samples: &[CwsSample], idx: &mut Vec<u32>, vals: &mut Vec<f32>) {
         assert_eq!(samples.len(), self.k);
-        let idx: Vec<u32> =
-            samples.iter().enumerate().map(|(j, s)| self.column(j, s)).collect();
+        idx.clear();
+        idx.extend(samples.iter().enumerate().map(|(j, s)| self.column(j, s)));
         // One column per sample block ⇒ already strictly increasing.
         debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
-        (idx, vec![1.0; self.k])
+        vals.clear();
+        vals.resize(self.k, 1.0);
     }
 
     /// Expand a batch of per-row samples (rows with `None` — empty input
-    /// vectors — become empty feature rows).
+    /// vectors — become empty feature rows) into the legacy CSR
+    /// representation. The learning layer's default is the leaner
+    /// [`Expansion::encode`]; this stays as the compatibility/IO path.
     pub fn expand(&self, samples: &[Option<Vec<CwsSample>>]) -> Csr {
         let mut b = CsrBuilder::new(self.dim());
+        let (mut idx, mut vals) = (Vec::with_capacity(self.k), Vec::with_capacity(self.k));
         for row in samples {
             match row {
                 Some(s) => {
-                    let (idx, vals) = self.expand_row(s);
+                    self.expand_row_into(s, &mut idx, &mut vals);
                     b.push_sorted_row(&idx, &vals);
                 }
                 None => b.push_sorted_row(&[], &[]),
             }
         }
         b.finish()
+    }
+
+    /// Encode a batch of per-row samples as a [`CodeMatrix`] — the
+    /// one-hot columns alone, no CSR scaffolding or values array. This
+    /// is what `Pipeline::fit`/`hash_dataset` train on;
+    /// [`CodeMatrix::to_csr`] round-trips to exactly
+    /// [`Expansion::expand`]'s output.
+    pub fn encode(&self, samples: &[Option<Vec<CwsSample>>]) -> CodeMatrix {
+        let mut codes = Vec::with_capacity(samples.len() * self.k);
+        let mut empty = Vec::with_capacity(samples.len());
+        for row in samples {
+            match row {
+                Some(s) => {
+                    assert_eq!(s.len(), self.k);
+                    codes.extend(s.iter().enumerate().map(|(j, smp)| self.column(j, smp)));
+                    empty.push(false);
+                }
+                None => {
+                    codes.resize(codes.len() + self.k, 0);
+                    empty.push(true);
+                }
+            }
+        }
+        CodeMatrix::from_parts(self.k, self.dim(), codes, empty)
     }
 }
 
@@ -221,6 +262,20 @@ mod tests {
         let m = e.expand(&[Some(samples_for(&u, 128, 3))]);
         assert_eq!(m.cols(), e.dim());
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expand_row_into_reuses_dirty_buffers() {
+        // The buffers may arrive with arbitrary contents and lengths;
+        // every call must leave exactly the fresh-allocation result.
+        let e = Expansion::new(16, 4);
+        let s1 = samples_for(&[1.0, 2.0], 16, 1);
+        let s2 = samples_for(&[0.5, 3.0, 0.1], 16, 1);
+        let (mut idx, mut vals) = (vec![9u32; 3], vec![0.25f32; 40]);
+        e.expand_row_into(&s1, &mut idx, &mut vals);
+        assert_eq!((idx.clone(), vals.clone()), e.expand_row(&s1));
+        e.expand_row_into(&s2, &mut idx, &mut vals);
+        assert_eq!((idx, vals), e.expand_row(&s2));
     }
 
     #[test]

@@ -27,9 +27,13 @@
 //!   kernel-matrix computation.
 //! * [`cws`] — ICWS sampler (Alg. 1 of the paper) and the 0-bit/1-bit/
 //!   b-bit schemes; [`sketch`] — the [`sketch::Sketcher`] trait over
-//!   every hash family; [`features`] — one-hot hashed-feature expansion.
+//!   every hash family; [`features`] — one-hot hashed features: the
+//!   [`features::CodeMatrix`] code slab (training default) and the CSR
+//!   expansion (IO/export).
 //! * [`svm`] — linear dual-CD SVM, logistic regression, precomputed-kernel
-//!   SVM, multiclass wrappers, C-grid evaluation.
+//!   SVM, multiclass wrappers (parallel OvR/OvO), C-grid evaluation;
+//!   [`svm::RowSet`] specializes the solvers over both feature
+//!   representations.
 //! * [`pipeline`] — the composable fit/transform/predict pipeline.
 //! * [`estimate`] — the Figures 4–6 estimator-quality simulation harness.
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT;

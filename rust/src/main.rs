@@ -192,8 +192,10 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 test_y: vec![],
             };
             let hashed = hash_dataset(&ds, &PipelineConfig::new(seed, k, i_bits))?;
-            libsvm::write_file(std::path::Path::new(&output), &hashed.train, &ds.train_y)?;
-            println!("hashed {n} rows -> {output} (dim {})", hashed.train.cols());
+            // LIBSVM IO consumes the CSR export of the one-hot codes.
+            let expanded = hashed.train_csr();
+            libsvm::write_file(std::path::Path::new(&output), &expanded, &ds.train_y)?;
+            println!("hashed {n} rows -> {output} (dim {})", expanded.cols());
         }
         Some("info") => {
             args.finish()?;

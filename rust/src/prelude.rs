@@ -17,7 +17,7 @@ pub use crate::cws::{
     collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
     LshIndex, MinwiseHasher, Scheme, SketchEngine,
 };
-pub use crate::features::{Expansion, ExpansionError};
+pub use crate::features::{CodeMatrix, Expansion, ExpansionError};
 
 // Kernel helpers.
 pub use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
@@ -35,7 +35,8 @@ pub use crate::data::{Csr, CsrBuilder, Dataset, Dense, Matrix, SparseRow};
 
 // Learning + the §2 evaluation protocol.
 pub use crate::svm::{
-    c_grid, kernel_svm_sweep, linear_svm_accuracy, LinearOvR, LinearSvmParams, SweepResult,
+    c_grid, kernel_svm_sweep, linear_svm_accuracy, LinearOvR, LinearSvmParams, RowSet,
+    SweepResult,
 };
 
 // Serving stack.

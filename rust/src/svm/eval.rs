@@ -75,10 +75,12 @@ pub fn kernel_svm_sweep(ds: &Dataset, kern: KernelKind, cs: &[f64]) -> SweepResu
 
 /// Accuracy of a single train/predict round at one C (used by drivers
 /// that do their own feature engineering, e.g. the hashed pipelines).
-pub fn linear_svm_accuracy(
-    train: &crate::data::Csr,
+/// Generic over [`crate::svm::RowSet`]: hashed one-hot features pass a
+/// `CodeMatrix` (the default fast path), general features a `Csr`.
+pub fn linear_svm_accuracy<X: crate::svm::RowSet + ?Sized>(
+    train: &X,
     train_y: &[i32],
-    test: &crate::data::Csr,
+    test: &X,
     test_y: &[i32],
     n_classes: usize,
     c: f64,
@@ -89,17 +91,17 @@ pub fn linear_svm_accuracy(
     let model = LinearOvR::train(train, train_y, n_classes, &p);
     let mut acc = crate::util::stats::Accuracy::default();
     for i in 0..test.rows() {
-        acc.push(model.predict(test.row(i)), test_y[i]);
+        acc.push(model.predict_on(test, i), test_y[i]);
     }
     acc.value()
 }
 
-/// Sweep C for a linear SVM on explicit sparse features; returns the
-/// curve like [`kernel_svm_sweep`].
-pub fn linear_svm_sweep(
-    train: &crate::data::Csr,
+/// Sweep C for a linear SVM on explicit features; returns the curve
+/// like [`kernel_svm_sweep`].
+pub fn linear_svm_sweep<X: crate::svm::RowSet + ?Sized>(
+    train: &X,
     train_y: &[i32],
-    test: &crate::data::Csr,
+    test: &X,
     test_y: &[i32],
     n_classes: usize,
     cs: &[f64],

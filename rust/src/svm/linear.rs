@@ -17,9 +17,17 @@
 //! (`U = C, D = 0` for L1; `U = ∞, Dᵢᵢ = 1/(2C)` for L2). One coordinate
 //! update is O(nnz(xᵢ)); `w` is maintained incrementally. A bias term is
 //! handled the LIBLINEAR `-B 1` way: an implicit constant-1 feature.
+//!
+//! The solver body is generic over [`RowSet`], so the same code runs
+//! the general CSR path and the one-hot [`crate::features::CodeMatrix`]
+//! fast path (gather-only inner products, constant `Q̄ᵢᵢ = k + bias +
+//! Dᵢᵢ`) with bit-identical results on one-hot data — see
+//! `svm::rowset` for the parity contract.
 
-use crate::data::sparse::{Csr, SparseRow};
+use crate::data::sparse::SparseRow;
 use crate::util::rng::Pcg64;
+
+use super::rowset::RowSet;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Loss {
@@ -82,10 +90,36 @@ impl LinearModel {
             -1
         }
     }
+
+    /// Decision value for row `i` of any [`RowSet`] representation —
+    /// the training-set-shaped counterpart of [`LinearModel::decision`]
+    /// (one-hot code matrices decide with `k` gathers, no multiplies).
+    #[inline]
+    pub fn decision_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> f64 {
+        self.b + x.dot(i, &self.w)
+    }
+
+    pub fn predict_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> i32 {
+        if self.decision_on(x, i) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
 }
 
 /// Train a binary linear SVM. `y` must be ±1 and contain both classes.
-pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
+pub fn train_binary<X: RowSet + ?Sized>(x: &X, y: &[i32], p: &LinearSvmParams) -> LinearModel {
+    train_binary_with_alpha(x, y, p).0
+}
+
+/// [`train_binary`] also returning the dual variables, so convergence
+/// tests can evaluate [`dual_objective`] at the solution.
+pub fn train_binary_with_alpha<X: RowSet + ?Sized>(
+    x: &X,
+    y: &[i32],
+    p: &LinearSvmParams,
+) -> (LinearModel, Vec<f64>) {
     let n = x.rows();
     assert_eq!(n, y.len());
     assert!(y.iter().all(|&v| v == 1 || v == -1), "labels must be ±1");
@@ -95,11 +129,11 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
         Loss::L1 => (p.c, 0.0),
         Loss::L2 => (f64::INFINITY, 1.0 / (2.0 * p.c)),
     };
-    // Q̄ᵢᵢ = xᵢᵀxᵢ (+ bias 1) + Dᵢᵢ
+    // Q̄ᵢᵢ = xᵢᵀxᵢ (+ bias 1) + Dᵢᵢ. For a CodeMatrix this is the
+    // constant k + bias + Dᵢᵢ (an O(1) read per row, no values pass).
     let qii: Vec<f64> = (0..n)
         .map(|i| {
-            let r = x.row(i);
-            let mut s: f64 = r.values.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let mut s = x.row_sq_norm(i);
             if p.bias {
                 s += 1.0;
             }
@@ -122,12 +156,8 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
                 continue; // empty row: only the bias/diag — skip degenerate
             }
             let yi = y[i] as f64;
-            let xi = x.row(i);
             // G = yᵢ f(xᵢ) − 1 + Dᵢᵢ αᵢ
-            let mut fx = b;
-            for (&j, &v) in xi.indices.iter().zip(xi.values) {
-                fx += w[j as usize] * v as f64;
-            }
+            let fx = b + x.dot(i, &w);
             let g = yi * fx - 1.0 + diag * alpha[i];
             // Projected gradient for the box [0, U].
             let pg = if alpha[i] <= 0.0 {
@@ -143,9 +173,7 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
                 alpha[i] = (old - g / qii[i]).clamp(0.0, upper);
                 let delta = (alpha[i] - old) * yi;
                 if delta != 0.0 {
-                    for (&j, &v) in xi.indices.iter().zip(xi.values) {
-                        w[j as usize] += delta * v as f64;
-                    }
+                    x.add_scaled(i, delta, &mut w);
                     if p.bias {
                         b += delta;
                     }
@@ -157,22 +185,36 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LinearSvmParams) -> LinearModel {
             break;
         }
     }
-    LinearModel { w, b, epochs_run }
+    (LinearModel { w, b, epochs_run }, alpha)
 }
 
-/// Dual objective value (for convergence tests): ½‖w‖² + ½b² − Σα + ½DΣα².
-pub fn dual_objective(model: &LinearModel, alpha_sum: f64) -> f64 {
-    // Only used in tests through `train_binary_with_alpha`; kept simple.
+/// Dual objective ½‖w‖² + ½b² − Σα + ½DΣα² — the value of the dual
+/// minimization ½αᵀQ̄α − eᵀα at this α (with `w = Σαᵢyᵢxᵢ`, `b = Σαᵢyᵢ`,
+/// `Q̄ = Q + D`; `D = 0` for L1, `Dᵢᵢ = 1/(2C)` for L2). At the optimum
+/// strong duality gives `primal ≈ −dual`, which the convergence test
+/// pins for both losses.
+pub fn dual_objective(model: &LinearModel, alpha: &[f64], p: &LinearSvmParams) -> f64 {
+    let diag = match p.loss {
+        Loss::L1 => 0.0,
+        Loss::L2 => 1.0 / (2.0 * p.c),
+    };
     let wnorm: f64 = model.w.iter().map(|v| v * v).sum::<f64>() + model.b * model.b;
-    0.5 * wnorm - alpha_sum
+    let alpha_sum: f64 = alpha.iter().sum();
+    let alpha_sq_sum: f64 = alpha.iter().map(|a| a * a).sum();
+    0.5 * wnorm - alpha_sum + 0.5 * diag * alpha_sq_sum
 }
 
 /// Primal objective ½‖w‖² + C Σ loss — exposed for convergence tests.
-pub fn primal_objective(x: &Csr, y: &[i32], m: &LinearModel, p: &LinearSvmParams) -> f64 {
+pub fn primal_objective<X: RowSet + ?Sized>(
+    x: &X,
+    y: &[i32],
+    m: &LinearModel,
+    p: &LinearSvmParams,
+) -> f64 {
     let mut obj: f64 =
         0.5 * (m.w.iter().map(|v| v * v).sum::<f64>() + if p.bias { m.b * m.b } else { 0.0 });
     for i in 0..x.rows() {
-        let margin = 1.0 - y[i] as f64 * m.decision(x.row(i));
+        let margin = 1.0 - y[i] as f64 * m.decision_on(x, i);
         if margin > 0.0 {
             obj += p.c
                 * match p.loss {
@@ -187,7 +229,7 @@ pub fn primal_objective(x: &Csr, y: &[i32], m: &LinearModel, p: &LinearSvmParams
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::sparse::CsrBuilder;
+    use crate::data::sparse::{Csr, CsrBuilder};
 
     fn separable() -> (Csr, Vec<i32>) {
         // Two clusters on the x-axis.
@@ -267,6 +309,41 @@ mod tests {
         assert!(
             primal_objective(&x, &y, &m50, &p50) <= primal_objective(&x, &y, &m1, &p1) + 1e-9
         );
+    }
+
+    #[test]
+    fn dual_objective_matches_primal_at_convergence() {
+        // Strong duality: at the optimum the primal equals −dual. For
+        // L2 loss the ½DΣα² term is strictly positive, so the old
+        // formula (which dropped it) cannot close the gap there.
+        let (x, y) = separable();
+        for loss in [Loss::L1, Loss::L2] {
+            let p = LinearSvmParams {
+                loss,
+                c: 1.0,
+                eps: 1e-10,
+                max_epochs: 20_000,
+                ..Default::default()
+            };
+            let (m, alpha) = train_binary_with_alpha(&x, &y, &p);
+            let primal = primal_objective(&x, &y, &m, &p);
+            let dual = dual_objective(&m, &alpha, &p);
+            assert!(
+                (primal + dual).abs() < 1e-3 * (1.0 + primal.abs()),
+                "{loss:?}: primal {primal} vs -dual {}",
+                -dual
+            );
+            if loss == Loss::L2 {
+                let alpha_sq_sum: f64 = alpha.iter().map(|a| a * a).sum();
+                let d_term = 0.5 * (1.0 / (2.0 * p.c)) * alpha_sq_sum;
+                assert!(d_term > 0.0, "L2 must activate the D term");
+                let without = dual - d_term;
+                assert!(
+                    (primal + without).abs() > (primal + dual).abs(),
+                    "dropping ½DΣα² must worsen the duality gap"
+                );
+            }
+        }
     }
 
     #[test]

@@ -3,8 +3,15 @@
 //! learners exist. Solved in the primal by batch gradient descent with
 //! backtracking line search (objective is smooth and strongly convex;
 //! each pass is O(nnz)).
+//!
+//! Like the dual-CD SVM, the trainer is generic over
+//! [`RowSet`], so one-hot [`crate::features::CodeMatrix`] features get
+//! the gather-only gradient/objective passes (no values array, no
+//! multiplies) from the same body that serves general CSR rows.
 
-use crate::data::sparse::{Csr, SparseRow};
+use crate::data::sparse::SparseRow;
+
+use super::rowset::RowSet;
 
 #[derive(Debug, Clone)]
 pub struct LogisticParams {
@@ -50,17 +57,19 @@ impl LogisticModel {
             -1
         }
     }
+
+    /// Decision value for row `i` of any [`RowSet`] representation.
+    #[inline]
+    pub fn decision_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> f64 {
+        self.b + x.dot(i, &self.w)
+    }
 }
 
 /// Objective: ½‖w‖² + C Σ log(1 + exp(−yᵢ f(xᵢ))).
-fn objective(x: &Csr, y: &[i32], w: &[f64], b: f64, c: f64, bias: bool) -> f64 {
+fn objective<X: RowSet + ?Sized>(x: &X, y: &[i32], w: &[f64], b: f64, c: f64, bias: bool) -> f64 {
     let mut obj = 0.5 * (w.iter().map(|v| v * v).sum::<f64>() + if bias { b * b } else { 0.0 });
     for i in 0..x.rows() {
-        let r = x.row(i);
-        let mut f = b;
-        for (&j, &v) in r.indices.iter().zip(r.values) {
-            f += w[j as usize] * v as f64;
-        }
+        let f = b + x.dot(i, w);
         let m = -(y[i] as f64) * f;
         // log(1+e^m), stable.
         obj += c * if m > 30.0 { m } else { (1.0 + m.exp()).ln() };
@@ -68,7 +77,7 @@ fn objective(x: &Csr, y: &[i32], w: &[f64], b: f64, c: f64, bias: bool) -> f64 {
     obj
 }
 
-pub fn train_binary(x: &Csr, y: &[i32], p: &LogisticParams) -> LogisticModel {
+pub fn train_binary<X: RowSet + ?Sized>(x: &X, y: &[i32], p: &LogisticParams) -> LogisticModel {
     let n = x.rows();
     assert_eq!(n, y.len());
     assert!(y.iter().all(|&v| v == 1 || v == -1), "labels must be ±1");
@@ -83,19 +92,12 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LogisticParams) -> LogisticModel {
         let mut gw = w.clone();
         let mut gb = if p.bias { b } else { 0.0 };
         for i in 0..n {
-            let r = x.row(i);
-            let mut f = b;
-            for (&j, &v) in r.indices.iter().zip(r.values) {
-                f += w[j as usize] * v as f64;
-            }
+            let f = b + x.dot(i, &w);
             let yi = y[i] as f64;
             let sig = 1.0 / (1.0 + (yi * f).exp()); // σ(−yᵢ fᵢ)
-            let coef = -p.c * yi * sig;
-            for (&j, &v) in r.indices.iter().zip(r.values) {
-                gw[j as usize] += coef * v as f64;
-            }
+            x.add_scaled(i, -p.c * yi * sig, &mut gw);
             if p.bias {
-                gb += coef;
+                gb += -p.c * yi * sig;
             }
         }
         let gnorm = gw.iter().map(|v| v.abs()).fold(gb.abs(), f64::max);
@@ -125,7 +127,7 @@ pub fn train_binary(x: &Csr, y: &[i32], p: &LogisticParams) -> LogisticModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::sparse::CsrBuilder;
+    use crate::data::sparse::{Csr, CsrBuilder};
     use crate::util::rng::Pcg64;
 
     fn clusters(n: usize, seed: u64) -> (Csr, Vec<i32>) {

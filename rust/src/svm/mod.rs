@@ -3,6 +3,14 @@
 //! LIBSVM-style precomputed-kernel SVM, multiclass wrappers (OvO for
 //! kernel machines, OvR for linear), and the paper's C-grid evaluation
 //! protocol.
+//!
+//! The linear learners are generic over [`rowset::RowSet`] — the row
+//! abstraction that lets one solver body serve both general CSR rows
+//! and the one-hot [`crate::features::CodeMatrix`] fast path (gathers
+//! instead of multiply-adds, constant `Q̄ᵢᵢ`), with bit-identical
+//! results on one-hot data. OvR classes and OvO pairs train in
+//! parallel over `util::pool` (`MINMAX_THREADS`), thread-count
+//! invariant.
 
 pub mod eval;
 pub mod kernel;
@@ -11,6 +19,7 @@ pub mod logistic;
 pub mod model_io;
 pub mod multiclass;
 pub mod online;
+pub mod rowset;
 
 pub use eval::{c_grid, kernel_svm_sweep, linear_svm_accuracy, linear_svm_sweep, SweepResult};
 pub use kernel::{KernelModel, KernelSvmParams};
@@ -18,3 +27,4 @@ pub use linear::{LinearModel, LinearSvmParams, Loss};
 pub use logistic::{LogisticModel, LogisticParams};
 pub use multiclass::{KernelOvO, LinearOvR};
 pub use online::{AveragedPerceptron, OnlineLearner, OnlineOvR, PassiveAggressive, SgdLogistic};
+pub use rowset::RowSet;

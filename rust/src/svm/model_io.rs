@@ -149,7 +149,7 @@ mod tests {
             &LinearSvmParams::default(),
         );
         let saved = SavedModel::from_ovr(&ovr, cfg.seed, cfg.k, cfg.i_bits, cfg.t_bits);
-        (saved, hashed.test, ds.test_y)
+        (saved, hashed.test_csr(), ds.test_y)
     }
 
     #[test]

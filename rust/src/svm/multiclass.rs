@@ -1,12 +1,21 @@
 //! Multiclass wrappers: one-vs-one for kernel machines (LIBSVM's
 //! strategy) and one-vs-rest for linear models (LIBLINEAR's strategy) —
 //! matching the tools the paper used for each half of its experiments.
+//!
+//! Both wrappers train their constituent binary problems in parallel
+//! over `util::pool::par_claim` (classes for OvR, pairs for OvO): the
+//! subproblems are embarrassingly parallel and each binary solve is
+//! deterministic per seed, so results are **identical at any thread
+//! count** — `MINMAX_THREADS` is purely a throughput knob, pinned by
+//! `rust/tests/svm_parity.rs`.
 
 use crate::data::dense::Dense;
-use crate::data::sparse::{Csr, SparseRow};
+use crate::data::sparse::SparseRow;
+use crate::util::pool;
 
 use super::kernel::{train_binary as train_kernel_binary, KernelModel, KernelSvmParams};
 use super::linear::{train_binary as train_linear_binary, LinearModel, LinearSvmParams};
+use super::rowset::RowSet;
 
 // ------------------------------------------------------------- kernel OvO
 
@@ -20,35 +29,50 @@ pub struct KernelOvO {
 
 impl KernelOvO {
     /// `k_train` is the full n×n precomputed kernel; `y` holds labels in
-    /// `0..n_classes`.
+    /// `0..n_classes`. Pair subproblems run across `MINMAX_THREADS`.
     pub fn train(k_train: &Dense, y: &[i32], n_classes: usize, p: &KernelSvmParams) -> Self {
+        Self::train_with_threads(k_train, y, n_classes, p, pool::default_threads())
+    }
+
+    /// [`KernelOvO::train`] with an explicit thread count. Each pair
+    /// extracts its own subset Gram and trains independently; slots
+    /// preserve the sequential `(a, b)` pair order, so the result is
+    /// identical at any thread count.
+    pub fn train_with_threads(
+        k_train: &Dense,
+        y: &[i32],
+        n_classes: usize,
+        p: &KernelSvmParams,
+        threads: usize,
+    ) -> Self {
         assert_eq!(k_train.rows(), y.len());
-        let mut pairs = Vec::new();
-        for a in 0..n_classes as i32 {
-            for b in (a + 1)..n_classes as i32 {
-                let idx: Vec<usize> =
-                    (0..y.len()).filter(|&i| y[i] == a || y[i] == b).collect();
-                if idx.is_empty() {
-                    continue;
-                }
-                let yy: Vec<i32> = idx.iter().map(|&i| if y[i] == a { 1 } else { -1 }).collect();
-                if yy.iter().all(|&v| v == 1) || yy.iter().all(|&v| v == -1) {
-                    continue; // one of the classes absent — skip pair
-                }
-                // Extract the subset kernel.
-                let m = idx.len();
-                let mut sub = Dense::zeros(m, m);
-                for (r, &i) in idx.iter().enumerate() {
-                    let krow = k_train.row(i);
-                    let srow = sub.row_mut(r);
-                    for (c, &j) in idx.iter().enumerate() {
-                        srow[c] = krow[j];
-                    }
-                }
-                let model = train_kernel_binary(&sub, &yy, p);
-                pairs.push((a, b, idx, model));
+        let combos: Vec<(i32, i32)> = (0..n_classes as i32)
+            .flat_map(|a| ((a + 1)..n_classes as i32).map(move |b| (a, b)))
+            .collect();
+        let trained = pool::par_map_claim(combos.len(), threads, |pi| {
+            let (a, b) = combos[pi];
+            let idx: Vec<usize> = (0..y.len()).filter(|&i| y[i] == a || y[i] == b).collect();
+            if idx.is_empty() {
+                return None;
             }
-        }
+            let yy: Vec<i32> = idx.iter().map(|&i| if y[i] == a { 1 } else { -1 }).collect();
+            if yy.iter().all(|&v| v == 1) || yy.iter().all(|&v| v == -1) {
+                return None; // one of the classes absent — skip pair
+            }
+            // Extract the subset kernel.
+            let m = idx.len();
+            let mut sub = Dense::zeros(m, m);
+            for (r, &i) in idx.iter().enumerate() {
+                let krow = k_train.row(i);
+                let srow = sub.row_mut(r);
+                for (c, &j) in idx.iter().enumerate() {
+                    srow[c] = krow[j];
+                }
+            }
+            let model = train_kernel_binary(&sub, &yy, p);
+            Some((a, b, idx, model))
+        });
+        let pairs = trained.into_iter().flatten().collect();
         Self { n_classes, pairs }
     }
 
@@ -88,7 +112,9 @@ impl KernelOvO {
 
 // ------------------------------------------------------------- linear OvR
 
-/// One-vs-rest linear SVM over sparse features.
+/// One-vs-rest linear SVM over any [`RowSet`] training representation
+/// — the one-hot [`crate::features::CodeMatrix`] fast path by default
+/// (`Pipeline`, `hash_dataset`), CSR for general sparse features.
 #[derive(Debug)]
 pub struct LinearOvR {
     pub n_classes: usize,
@@ -96,14 +122,34 @@ pub struct LinearOvR {
 }
 
 impl LinearOvR {
-    pub fn train(x: &Csr, y: &[i32], n_classes: usize, p: &LinearSvmParams) -> Self {
+    /// Train one binary model per class, classes sharded across
+    /// `MINMAX_THREADS` worker threads.
+    pub fn train<X: RowSet + ?Sized>(
+        x: &X,
+        y: &[i32],
+        n_classes: usize,
+        p: &LinearSvmParams,
+    ) -> Self {
+        Self::train_with_threads(x, y, n_classes, p, pool::default_threads())
+    }
+
+    /// [`LinearOvR::train`] with an explicit thread count (tests pin
+    /// thread-count invariance with it). Classes are claimed one at a
+    /// time by a work-stealing counter; every class's solve is
+    /// deterministic per `p.seed`, so the model set is identical at any
+    /// `threads`.
+    pub fn train_with_threads<X: RowSet + ?Sized>(
+        x: &X,
+        y: &[i32],
+        n_classes: usize,
+        p: &LinearSvmParams,
+        threads: usize,
+    ) -> Self {
         assert_eq!(x.rows(), y.len());
-        let models = (0..n_classes as i32)
-            .map(|c| {
-                let yy: Vec<i32> = y.iter().map(|&v| if v == c { 1 } else { -1 }).collect();
-                train_linear_binary(x, &yy, p)
-            })
-            .collect();
+        let models = pool::par_map_claim(n_classes, threads, |c| {
+            let yy: Vec<i32> = y.iter().map(|&v| if v == c as i32 { 1 } else { -1 }).collect();
+            train_linear_binary(x, &yy, p)
+        });
         Self { n_classes, models }
     }
 
@@ -120,8 +166,28 @@ impl LinearOvR {
         best as i32
     }
 
+    /// Argmax class for row `i` of any [`RowSet`] (code matrices score
+    /// with `k` gathers per class).
+    pub fn predict_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> i32 {
+        let mut best = 0usize;
+        let mut best_dec = f64::NEG_INFINITY;
+        for (c, m) in self.models.iter().enumerate() {
+            let d = m.decision_on(x, i);
+            if d > best_dec {
+                best_dec = d;
+                best = c;
+            }
+        }
+        best as i32
+    }
+
     pub fn decisions(&self, x: SparseRow<'_>) -> Vec<f64> {
         self.models.iter().map(|m| m.decision(x)).collect()
+    }
+
+    /// Per-class decision values for row `i` of any [`RowSet`].
+    pub fn decisions_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> Vec<f64> {
+        self.models.iter().map(|m| m.decision_on(x, i)).collect()
     }
 
     /// Binary shortcut: with 2 classes train a single model.
@@ -133,7 +199,7 @@ impl LinearOvR {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::sparse::CsrBuilder;
+    use crate::data::sparse::{Csr, CsrBuilder};
     use crate::data::Matrix;
     use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
     use crate::kernels::KernelKind;

@@ -308,19 +308,21 @@ mod tests {
         use crate::data::synth::{generate, SynthConfig};
         let ds = generate("vowel", SynthConfig { seed: 5, n_train: 250, n_test: 250 }).unwrap();
         let hashed = hash_dataset(&ds, &PipelineConfig::new(6, 64, 6)).unwrap();
-        let dim = hashed.train.cols();
+        // Online learners stream SparseRows: use the CSR export path.
+        let (train, test) = (hashed.train_csr(), hashed.test_csr());
+        let dim = train.cols();
         let mut ovr =
             OnlineOvR::new(|| PassiveAggressive::new(dim, 1.0), ds.n_classes());
         // Two passes over the training stream.
         for _ in 0..2 {
-            for i in 0..hashed.train.rows() {
-                ovr.update(hashed.train.row(i), ds.train_y[i]);
+            for i in 0..train.rows() {
+                ovr.update(train.row(i), ds.train_y[i]);
             }
         }
-        let ok = (0..hashed.test.rows())
-            .filter(|&i| ovr.predict(hashed.test.row(i)) == ds.test_y[i])
+        let ok = (0..test.rows())
+            .filter(|&i| ovr.predict(test.row(i)) == ds.test_y[i])
             .count();
-        let acc = ok as f64 / hashed.test.rows() as f64;
+        let acc = ok as f64 / test.rows() as f64;
         // Not far from the batch solver's quality on this dataset.
         assert!(acc > 0.6, "online hashed accuracy {acc}");
     }

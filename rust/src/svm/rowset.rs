@@ -1,0 +1,206 @@
+//! [`RowSet`] — the row-access abstraction the linear learners train
+//! over, so the dual-CD SVM and logistic regression have ONE solver
+//! body for both training-set representations:
+//!
+//! * [`Csr`] — general sparse rows: `Σ w[j]·v` with per-element value
+//!   loads, f32→f64 converts, and multiplies.
+//! * [`CodeMatrix`] — one-hot hashed features: the same inner products
+//!   collapse to `k` gathers (`Σ w[code]`, no values array, no
+//!   multiplies) and `xᵢᵀxᵢ` is the constant `k`, read O(1) instead of
+//!   summed O(k) per row.
+//!
+//! **Bit-parity contract** (pinned by `rust/tests/svm_parity.rs`): on a
+//! one-hot CSR (all stored values exactly 1.0) every method must return
+//! bit-identical results to the [`CodeMatrix`] of the same rows —
+//! `w[j] * 1.0` is exact, so this reduces to keeping the *reduction
+//! tree* of the two `dot` impls identical. Both use the same 4-lane
+//! accumulator shape below; change one, change both.
+
+use crate::data::sparse::Csr;
+use crate::features::CodeMatrix;
+
+/// Row access for linear-learner training: row count/width, squared
+/// row norms (for `Q̄ᵢᵢ`), inner products against a weight vector, and
+/// scaled row additions into it.
+///
+/// `Sync` is a supertrait so one training set can be shared across the
+/// one-vs-rest class threads (`LinearOvR::train_with_threads`).
+pub trait RowSet: Sync {
+    fn rows(&self) -> usize;
+
+    /// Feature dimensionality — the weight-vector length.
+    fn cols(&self) -> usize;
+
+    /// `xᵢᵀxᵢ` (0.0 for an empty row).
+    fn row_sq_norm(&self, i: usize) -> f64;
+
+    /// `Σⱼ w[j]·xᵢⱼ` over row `i`'s support.
+    fn dot(&self, i: usize, w: &[f64]) -> f64;
+
+    /// `w += δ·xᵢ` over row `i`'s support.
+    fn add_scaled(&self, i: usize, delta: f64, w: &mut [f64]);
+}
+
+/// 4-lane unrolled sparse dot: breaks the f64 add dependency chain
+/// (the latency bound on one-hot rows) while fixing the summation
+/// order independent of representation. Mirror of [`dot_onehot`].
+#[inline]
+fn dot_sparse(idx: &[u32], val: &[f32], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let mut ic = idx.chunks_exact(4);
+    let mut vc = val.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (q, r) in ic.by_ref().zip(vc.by_ref()) {
+        a0 += w[q[0] as usize] * r[0] as f64;
+        a1 += w[q[1] as usize] * r[1] as f64;
+        a2 += w[q[2] as usize] * r[2] as f64;
+        a3 += w[q[3] as usize] * r[3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for (&j, &v) in ic.remainder().iter().zip(vc.remainder()) {
+        tail += w[j as usize] * v as f64;
+    }
+    ((a0 + a1) + (a2 + a3)) + tail
+}
+
+/// One-hot dot: `k` gathers, no value loads, no multiplies. MUST keep
+/// the exact reduction tree of [`dot_sparse`] (bit-parity contract).
+#[inline]
+fn dot_onehot(codes: &[u32], w: &[f64]) -> f64 {
+    let mut cc = codes.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for q in cc.by_ref() {
+        a0 += w[q[0] as usize];
+        a1 += w[q[1] as usize];
+        a2 += w[q[2] as usize];
+        a3 += w[q[3] as usize];
+    }
+    let mut tail = 0.0f64;
+    for &c in cc.remainder() {
+        tail += w[c as usize];
+    }
+    ((a0 + a1) + (a2 + a3)) + tail
+}
+
+impl RowSet for Csr {
+    fn rows(&self) -> usize {
+        Csr::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Csr::cols(self)
+    }
+
+    fn row_sq_norm(&self, i: usize) -> f64 {
+        // Sequential sum: on all-ones rows each add is exact integer
+        // arithmetic, so this equals CodeMatrix's `k as f64` bitwise.
+        self.row(i).values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    #[inline]
+    fn dot(&self, i: usize, w: &[f64]) -> f64 {
+        let r = self.row(i);
+        dot_sparse(r.indices, r.values, w)
+    }
+
+    #[inline]
+    fn add_scaled(&self, i: usize, delta: f64, w: &mut [f64]) {
+        let r = self.row(i);
+        for (&j, &v) in r.indices.iter().zip(r.values) {
+            w[j as usize] += delta * v as f64;
+        }
+    }
+}
+
+impl RowSet for CodeMatrix {
+    fn rows(&self) -> usize {
+        CodeMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        CodeMatrix::cols(self)
+    }
+
+    fn row_sq_norm(&self, i: usize) -> f64 {
+        // Exactly k ones per non-empty row — the constant `Q̄ᵢᵢ` the
+        // one-hot structure guarantees, with no per-row values pass.
+        if self.is_empty_row(i) {
+            0.0
+        } else {
+            self.k() as f64
+        }
+    }
+
+    #[inline]
+    fn dot(&self, i: usize, w: &[f64]) -> f64 {
+        dot_onehot(self.codes_of(i), w)
+    }
+
+    #[inline]
+    fn add_scaled(&self, i: usize, delta: f64, w: &mut [f64]) {
+        // Each code is distinct within a row, so order is irrelevant;
+        // `delta · 1.0 = delta` keeps parity with the CSR path exact.
+        for &c in self.codes_of(i) {
+            w[c as usize] += delta;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cws::sampler::CwsHasher;
+    use crate::data::sparse::CsrBuilder;
+    use crate::features::Expansion;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn csr_rowset_matches_naive_ops() {
+        let mut b = CsrBuilder::new(6);
+        b.push_row(vec![(0, 1.5), (2, 2.0), (5, 0.5)]);
+        b.push_row(vec![]);
+        b.push_row(vec![(1, 4.0)]);
+        let x = b.finish();
+        let w: Vec<f64> = (0..6).map(|i| (i + 1) as f64 * 0.1).collect();
+        assert!((x.dot(0, &w) - (0.1 * 1.5 + 0.3 * 2.0 + 0.6 * 0.5)).abs() < 1e-12);
+        assert_eq!(x.dot(1, &w), 0.0);
+        assert!((x.row_sq_norm(0) - (1.5f64 * 1.5 + 4.0 + 0.25)).abs() < 1e-12);
+        assert_eq!(x.row_sq_norm(1), 0.0);
+        let mut w2 = w.clone();
+        x.add_scaled(2, 2.0, &mut w2);
+        assert!((w2[1] - (0.2 + 8.0)).abs() < 1e-12);
+        assert_eq!(RowSet::rows(&x), 3);
+        assert_eq!(RowSet::cols(&x), 6);
+    }
+
+    #[test]
+    fn onehot_csr_and_codes_agree_bitwise() {
+        // The parity contract: every RowSet op over a one-hot CSR must
+        // be bit-identical to the CodeMatrix of the same samples.
+        let mut rng = Pcg64::new(5);
+        let e = Expansion::new(37, 5); // odd k exercises the unroll tail
+        let h = CwsHasher::new(2, 37);
+        let samples: Vec<_> = (0..8)
+            .map(|i| {
+                if i == 3 {
+                    None // empty row in the middle
+                } else {
+                    let v: Vec<f32> =
+                        (0..12).map(|_| rng.lognormal(0.0, 1.0) as f32).collect();
+                    Some(h.hash_dense(&v))
+                }
+            })
+            .collect();
+        let cm = e.encode(&samples);
+        let csr = e.expand(&samples);
+        let w: Vec<f64> = (0..e.dim()).map(|_| rng.normal()).collect();
+        for i in 0..cm.rows() {
+            assert_eq!(cm.dot(i, &w).to_bits(), csr.dot(i, &w).to_bits(), "row {i}");
+            assert_eq!(cm.row_sq_norm(i).to_bits(), csr.row_sq_norm(i).to_bits());
+            let (mut wa, mut wb) = (w.clone(), w.clone());
+            cm.add_scaled(i, 0.3, &mut wa);
+            csr.add_scaled(i, 0.3, &mut wb);
+            assert!(wa.iter().zip(&wb).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+}

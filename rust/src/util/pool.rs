@@ -103,6 +103,26 @@ where
     });
 }
 
+/// Parallel ordered map over units `0..n`: claim units like
+/// [`par_claim`], collect each unit's result into its own slot, return
+/// the results in unit order. The order (and, for deterministic `f`,
+/// the content) is identical at any thread count — the primitive
+/// behind the multiclass trainers' parallel classes/pairs.
+pub fn par_map_claim<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    par_claim(n, threads, |i| {
+        *slots[i].lock().unwrap() = Some(f(i));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("claimed unit completed"))
+        .collect()
+}
+
 /// Map over mutable chunks of an output slice in parallel: the slice is
 /// split into per-row blocks of `row_len` and `f(row_index, row_slice)`
 /// is called for each row. This is the kernel-matrix fill pattern.
@@ -296,6 +316,15 @@ mod tests {
             assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
         }
         par_claim(0, 4, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_map_claim_is_ordered_at_any_thread_count() {
+        for threads in [1usize, 2, 5] {
+            let out = par_map_claim(100, threads, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+        assert!(par_map_claim(0, 4, |i| i).is_empty());
     }
 
     #[test]

@@ -159,7 +159,7 @@ fn offline_weights_serve_identically_via_hash_score_artifact() {
     let p = LinearSvmParams { c, ..Default::default() };
     let model = LinearOvR::train(&hashed.train, &ds.train_y, classes_cap, &p);
     let native_preds: Vec<i32> =
-        (0..hashed.test.rows()).map(|i| model.predict(hashed.test.row(i))).collect();
+        (0..hashed.test.rows()).map(|i| model.predict_on(&hashed.test, i)).collect();
 
     // PJRT serving: one fused hash+score execute on the raw test batch.
     let (r, cc, beta) = minmax::cws::materialize_params(seed, d, k);

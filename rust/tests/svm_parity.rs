@@ -1,0 +1,163 @@
+//! Code-path / CSR-path parity for the learning layer.
+//!
+//! The one-hot `CodeMatrix` fast path must be a pure representation
+//! change: training over the codes and over the equivalent CSR (same
+//! seed, same coordinate order) must produce **bit-identical** models
+//! and decisions — `svm::rowset` keeps the two `dot` reduction trees in
+//! lockstep and `w[j]·1.0 = w[j]` exactly, so any drift here is a bug,
+//! not noise. Parallel OvR/OvO must likewise be a pure throughput knob:
+//! explicit 1-thread and 4-thread training (and whatever
+//! `MINMAX_THREADS` CI pins — the suite runs under both `=1` and `=4`)
+//! produce identical models.
+
+use minmax::coordinator::{hash_dataset, hash_matrix_native, PipelineConfig};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Dataset;
+use minmax::kernels::matrix::kernel_matrix_sym;
+use minmax::kernels::KernelKind;
+use minmax::svm::linear::train_binary;
+use minmax::svm::{
+    logistic, KernelOvO, KernelSvmParams, LinearOvR, LinearSvmParams, LogisticParams, Loss,
+};
+
+fn hashed_letter() -> (Dataset, minmax::coordinator::HashedDataset) {
+    let ds = generate("letter", SynthConfig { seed: 13, n_train: 150, n_test: 100 }).unwrap();
+    let hashed = hash_dataset(&ds, &PipelineConfig::new(5, 64, 6)).unwrap();
+    (ds, hashed)
+}
+
+fn binary_labels(y: &[i32]) -> Vec<i32> {
+    y.iter().map(|&c| if c % 2 == 0 { 1 } else { -1 }).collect()
+}
+
+#[test]
+fn code_matrix_is_the_expansion_exactly() {
+    let (ds, hashed) = hashed_letter();
+    hashed.train.check_invariants().unwrap();
+    let samples = hash_matrix_native(&ds.train_x, 5, 64);
+    assert_eq!(hashed.train_csr(), hashed.expansion.expand(&samples));
+    assert_eq!(hashed.train.nnz(), hashed.train_csr().nnz());
+}
+
+#[test]
+fn linear_svm_trains_bit_identically_on_codes_and_csr() {
+    let (ds, hashed) = hashed_letter();
+    let y = binary_labels(&ds.train_y);
+    let (train_csr, test_csr) = (hashed.train_csr(), hashed.test_csr());
+    for loss in [Loss::L1, Loss::L2] {
+        let p = LinearSvmParams { loss, c: 1.0, ..Default::default() };
+        let mc = train_binary(&hashed.train, &y, &p);
+        let ms = train_binary(&train_csr, &y, &p);
+        assert_eq!(mc.epochs_run, ms.epochs_run, "{loss:?}");
+        assert_eq!(mc.b.to_bits(), ms.b.to_bits(), "{loss:?}");
+        assert!(
+            mc.w.iter().zip(&ms.w).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{loss:?}: weight vectors must be bit-identical"
+        );
+        for i in 0..hashed.test.rows() {
+            assert_eq!(
+                mc.decision_on(&hashed.test, i).to_bits(),
+                ms.decision_on(&test_csr, i).to_bits(),
+                "{loss:?} row {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn logistic_trains_bit_identically_on_codes_and_csr() {
+    let (ds, hashed) = hashed_letter();
+    let y = binary_labels(&ds.train_y);
+    let p = LogisticParams { max_iters: 25, ..Default::default() };
+    let mc = logistic::train_binary(&hashed.train, &y, &p);
+    let ms = logistic::train_binary(&hashed.train_csr(), &y, &p);
+    assert_eq!(mc.iters_run, ms.iters_run);
+    assert_eq!(mc.b.to_bits(), ms.b.to_bits());
+    assert!(mc.w.iter().zip(&ms.w).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn empty_rows_are_parity_preserving() {
+    // Hand-built batch with empty rows in the middle: the mask path of
+    // CodeMatrix must behave exactly like the empty CSR rows.
+    use minmax::prelude::{CwsHasher, Expansion};
+    let e = Expansion::new(16, 4);
+    let h = CwsHasher::new(3, 16);
+    let samples = vec![
+        Some(h.hash_dense(&[1.0, 2.0, 0.5])),
+        None,
+        Some(h.hash_dense(&[0.1, 0.0, 4.0])),
+        None,
+        Some(h.hash_dense(&[2.0, 2.0, 2.0])),
+        Some(h.hash_dense(&[0.0, 0.7, 0.0])),
+    ];
+    let cm = e.encode(&samples);
+    let csr = e.expand(&samples);
+    assert_eq!(cm.to_csr(), csr);
+    let y = vec![1, -1, 1, -1, 1, -1];
+    let p = LinearSvmParams::default();
+    let mc = train_binary(&cm, &y, &p);
+    let ms = train_binary(&csr, &y, &p);
+    assert_eq!(mc.b.to_bits(), ms.b.to_bits());
+    assert!(mc.w.iter().zip(&ms.w).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn parallel_ovr_is_thread_count_invariant() {
+    let (ds, hashed) = hashed_letter();
+    let n_classes = ds.n_classes();
+    let p = LinearSvmParams::default();
+    let m1 = LinearOvR::train_with_threads(&hashed.train, &ds.train_y, n_classes, &p, 1);
+    let m4 = LinearOvR::train_with_threads(&hashed.train, &ds.train_y, n_classes, &p, 4);
+    // The env-driven entry (whatever MINMAX_THREADS CI pins) agrees too.
+    let menv = LinearOvR::train(&hashed.train, &ds.train_y, n_classes, &p);
+    for (a, b) in m1.models().iter().zip(m4.models()) {
+        assert_eq!(a.b.to_bits(), b.b.to_bits());
+        assert!(a.w.iter().zip(&b.w).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+    for (a, b) in m1.models().iter().zip(menv.models()) {
+        assert_eq!(a.b.to_bits(), b.b.to_bits());
+        assert!(a.w.iter().zip(&b.w).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+    for i in 0..hashed.test.rows() {
+        assert_eq!(m1.predict_on(&hashed.test, i), m4.predict_on(&hashed.test, i));
+    }
+}
+
+#[test]
+fn ovr_predictions_identical_across_representations() {
+    // The acceptance pin: OvR trained on codes vs on the CSR export
+    // predicts bit-identically (training AND scoring).
+    let (ds, hashed) = hashed_letter();
+    let n_classes = ds.n_classes();
+    let p = LinearSvmParams::default();
+    let (train_csr, test_csr) = (hashed.train_csr(), hashed.test_csr());
+    let mc = LinearOvR::train(&hashed.train, &ds.train_y, n_classes, &p);
+    let ms = LinearOvR::train(&train_csr, &ds.train_y, n_classes, &p);
+    for i in 0..hashed.test.rows() {
+        assert_eq!(
+            mc.decisions_on(&hashed.test, i)
+                .iter()
+                .map(|d| d.to_bits())
+                .collect::<Vec<_>>(),
+            ms.decisions_on(&test_csr, i).iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            "row {i}"
+        );
+        assert_eq!(mc.predict_on(&hashed.test, i), ms.predict_on(&test_csr, i));
+    }
+}
+
+#[test]
+fn parallel_ovo_is_thread_count_invariant() {
+    let ds = generate("vowel", SynthConfig { seed: 7, n_train: 90, n_test: 30 }).unwrap();
+    let gram = kernel_matrix_sym(KernelKind::MinMax, &ds.train_x);
+    let p = KernelSvmParams::default();
+    let m1 = KernelOvO::train_with_threads(&gram, &ds.train_y, ds.n_classes(), &p, 1);
+    let m4 = KernelOvO::train_with_threads(&gram, &ds.train_y, ds.n_classes(), &p, 4);
+    assert_eq!(m1.n_models(), m4.n_models());
+    let test =
+        minmax::kernels::matrix::kernel_matrix(KernelKind::MinMax, &ds.test_x, &ds.train_x);
+    for i in 0..test.rows() {
+        assert_eq!(m1.predict(test.row(i)), m4.predict(test.row(i)), "row {i}");
+    }
+}
