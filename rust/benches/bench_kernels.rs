@@ -7,8 +7,11 @@ use minmax::bench::{black_box, Runner};
 use minmax::data::dense::Dense;
 use minmax::data::sparse::Csr;
 use minmax::data::Matrix;
+use minmax::kernels::gram::{GramSource, OnTheFly};
 use minmax::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
 use minmax::kernels::KernelKind;
+use minmax::svm::kernel::{train_binary, train_binary_on};
+use minmax::svm::KernelSvmParams;
 use minmax::util::rng::Pcg64;
 
 fn random_dense(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Dense {
@@ -80,6 +83,42 @@ fn main() {
             black_box(kernel_matrix_sym(KernelKind::MinMax, &mx));
         },
     );
+
+    // Gram sources: kernel-SVM training cost per path, in solver-visible
+    // rows/s, plus the rows-materialized peak-memory proxy. `pre` pays
+    // the full n×n matrix up front; `otf-cold` streams rows through a
+    // 25%-of-n LRU cache from scratch every call; `otf-hot` reuses a
+    // persistent full-size cache (misses only on the first call).
+    let n = 192usize;
+    let xg = Matrix::Dense(random_dense(n, 48, 0.3, 7));
+    let yg: Vec<i32> = (0..n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+    let p = KernelSvmParams { c: 4.0, max_epochs: 40, ..Default::default() };
+    r.bench_with_throughput(&format!("gram/pre/train-{n}"), Some((n as f64, "row")), || {
+        let k = kernel_matrix_sym(KernelKind::MinMax, &xg);
+        black_box(train_binary(&k, &yg, &p));
+    });
+    r.bench_with_throughput(&format!("gram/otf-cold/train-{n}"), Some((n as f64, "row")), || {
+        let src = OnTheFly::new(KernelKind::MinMax, &xg).with_cache_rows(n / 4);
+        black_box(train_binary_on(&src, &yg, &p));
+    });
+    let hot = OnTheFly::new(KernelKind::MinMax, &xg).with_cache_rows(n);
+    black_box(train_binary_on(&hot, &yg, &p)); // warm the cache once
+    r.bench_with_throughput(&format!("gram/otf-hot/train-{n}"), Some((n as f64, "row")), || {
+        black_box(train_binary_on(&hot, &yg, &p));
+    });
+    // Memory proxies: rows materialized by one training run per path
+    // (pre always holds all n; otf is bounded by its cache and counts
+    // recomputation work).
+    let cold = OnTheFly::new(KernelKind::MinMax, &xg).with_cache_rows(n / 4);
+    black_box(train_binary_on(&cold, &yg, &p));
+    r.stat(&format!("gram/pre/rows-materialized-{n}"), n as f64, "row");
+    r.stat(
+        &format!("gram/otf-cold/rows-materialized-{n}"),
+        cold.rows_materialized() as f64,
+        "row",
+    );
+    r.stat(&format!("gram/otf-cold/rows-resident-{n}"), cold.cached_rows() as f64, "row");
+    r.stat(&format!("gram/otf-hot/rows-materialized-{n}"), hot.rows_materialized() as f64, "row");
 
     r.save("bench_kernels");
 }

@@ -173,6 +173,27 @@ impl Runner {
         self.results.push(m);
     }
 
+    /// Record a measured scalar statistic (not a timing) into the same
+    /// JSON snapshot — e.g. the Gram benches' rows-materialized
+    /// peak-memory proxy. Encoded as a measurement with `median = 1 s`
+    /// so `save`'s `throughput_per_s` field carries the value verbatim
+    /// under the given unit label.
+    pub fn stat(&mut self, name: &str, value: f64, unit: &'static str) {
+        if !self.selected(name) {
+            return;
+        }
+        println!("{:<48} {value:>10} {unit}", name);
+        self.results.push(Measurement {
+            name: name.to_string(),
+            median: 1.0,
+            p05: 1.0,
+            p95: 1.0,
+            samples: 0,
+            iters_per_sample: 0,
+            throughput: Some((value, unit)),
+        });
+    }
+
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

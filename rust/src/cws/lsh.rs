@@ -13,7 +13,9 @@
 use std::collections::HashMap;
 
 use crate::data::sparse::{Csr, SparseRow};
+use crate::data::Matrix;
 use crate::kernels::sparse_minmax;
+use crate::sketch::Sketcher;
 
 use super::sampler::{CwsHasher, CwsSample};
 
@@ -54,16 +56,21 @@ pub struct LshIndex {
 impl LshIndex {
     /// Build over all rows of `corpus` (rows with no nonzeros are
     /// skipped — they can never be retrieved).
+    ///
+    /// The whole corpus is sketched through the engine's chunked
+    /// parallel batch entry ([`Sketcher::sketch_matrix`] — bit-identical
+    /// to per-row [`CwsHasher::hash_sparse`] at any `MINMAX_THREADS`);
+    /// bucket insertion stays sequential in ascending row order so
+    /// bucket contents are deterministic.
     pub fn build(corpus: Csr, cfg: LshConfig) -> LshIndex {
         let hasher = CwsHasher::new(cfg.seed, cfg.k());
         let mut tables: Vec<HashMap<u64, Vec<u32>>> = vec![HashMap::new(); cfg.bands];
-        for row_id in 0..corpus.rows() {
-            let row = corpus.row(row_id);
-            if row.nnz() == 0 {
-                continue;
-            }
-            let samples = hasher.hash_sparse(row);
-            for (band, key) in band_keys(&samples, cfg.rows_per_band).enumerate() {
+        let m = Matrix::Sparse(corpus);
+        let sketched = Sketcher::sketch_matrix(&hasher, &m);
+        let Matrix::Sparse(corpus) = m else { unreachable!("built as sparse") };
+        for (row_id, samples) in sketched.iter().enumerate() {
+            let Some(samples) = samples else { continue };
+            for (band, key) in band_keys(samples, cfg.rows_per_band).enumerate() {
                 tables[band].entry(key).or_default().push(row_id as u32);
             }
         }
@@ -82,7 +89,10 @@ impl LshIndex {
         self.corpus.rows() == 0
     }
 
-    /// Candidate row ids for a query (deduplicated, unordered).
+    /// Candidate row ids for a query: deduplicated and returned in
+    /// ascending row order, so identical input always produces
+    /// identical output (a raw `HashSet` iteration leaked
+    /// nondeterministic ordering run to run).
     pub fn candidates(&self, query: SparseRow<'_>) -> Vec<u32> {
         let samples = self.hasher.hash_sparse(query);
         let mut seen = std::collections::HashSet::new();
@@ -91,7 +101,9 @@ impl LshIndex {
                 seen.extend(ids.iter().copied());
             }
         }
-        seen.into_iter().collect()
+        let mut out: Vec<u32> = seen.into_iter().collect();
+        out.sort_unstable();
+        out
     }
 
     /// Top-`n` most similar corpus rows by exact min-max similarity,
@@ -240,6 +252,41 @@ mod tests {
         let top = idx.query(qm.row(0), 2);
         assert_eq!(top[0].0, 0);
         assert_eq!(top.len(), 1); // the empty row is unreachable
+    }
+
+    #[test]
+    fn candidates_are_sorted_and_deterministic() {
+        let c = corpus(8, 4, 48, 7);
+        let idx = LshIndex::build(c.clone(), LshConfig { bands: 20, rows_per_band: 2, seed: 3 });
+        for q in 0..c.rows() {
+            let a = idx.candidates(c.row(q));
+            assert!(!a.is_empty(), "row {q} must at least find itself");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "unsorted/duplicated candidates: {a:?}");
+            assert_eq!(a, idx.candidates(c.row(q)), "row {q} output must be stable");
+        }
+    }
+
+    #[test]
+    fn batched_build_matches_per_row_sketching() {
+        // The engine-batched build must bucket exactly as per-row
+        // hashing would: querying a corpus row always finds itself
+        // (identical samples ⇒ identical band keys in every band).
+        let c = corpus(5, 3, 32, 9);
+        let cfg = LshConfig { bands: 6, rows_per_band: 3, seed: 11 };
+        let idx = LshIndex::build(c.clone(), cfg);
+        let hasher = CwsHasher::new(cfg.seed, cfg.k());
+        for q in 0..c.rows() {
+            let cands = idx.candidates(c.row(q));
+            assert!(cands.contains(&(q as u32)), "row {q} missing from its own buckets");
+            // Band keys from a fresh per-row hash agree with the index's.
+            let samples = hasher.hash_sparse(c.row(q));
+            for (band, key) in band_keys(&samples, cfg.rows_per_band).enumerate() {
+                assert!(
+                    idx.tables[band].get(&key).is_some_and(|ids| ids.contains(&(q as u32))),
+                    "row {q} not bucketed under its own key in band {band}"
+                );
+            }
+        }
     }
 
     #[test]

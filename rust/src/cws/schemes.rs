@@ -48,19 +48,25 @@ impl Scheme {
 
     /// Encode one sample under this scheme. Equality of codes is the
     /// collision event whose probability estimates `K_MM`.
+    ///
+    /// `b`-bit truncation keeps the component mod `2^b`. For `t*` the
+    /// mask is applied to the two's-complement u64 reinterpretation,
+    /// which equals the euclidean remainder for every `b < 64` (for
+    /// negative `t`, `t as u64 = t + 2^64 ≡ t (mod 2^b)` since
+    /// `2^b | 2^64`) — and, unlike the old `rem_euclid(1i64 << b)`,
+    /// stays correct at `b = 63`, where the i64 shift overflows into
+    /// the sign bit and hands `rem_euclid` a negative modulus.
     #[inline]
     pub fn encode(&self, s: &CwsSample) -> u128 {
         let i_part: u64 = match self.i_bits {
             None => s.i_star as u64,
-            Some(0) => 0,
             Some(b) if b >= 32 => s.i_star as u64,
             Some(b) => (s.i_star as u64) & ((1u64 << b) - 1),
         };
         let t_part: u64 = match self.t_bits {
             None => s.t_star as u64, // bijective i64→u64 reinterpretation
-            Some(0) => 0,
             Some(b) if b >= 64 => s.t_star as u64,
-            Some(b) => s.t_star.rem_euclid(1i64 << b) as u64,
+            Some(b) => (s.t_star as u64) & ((1u64 << b) - 1),
         };
         ((i_part as u128) << 64) | t_part as u128
     }
@@ -128,6 +134,50 @@ mod tests {
     fn wide_bit_requests_saturate() {
         let sch = Scheme { i_bits: Some(32), t_bits: Some(64) };
         assert_eq!(sch.encode(&s(7, -9)), Scheme::FULL.encode(&s(7, -9)));
+    }
+
+    #[test]
+    fn i_bit_truncation_boundaries_31_32() {
+        let i31 = Scheme { i_bits: Some(31), t_bits: Some(0) };
+        // Bit 31 is dropped at 31 bits…
+        assert_eq!(i31.encode(&s(1u32 << 31, 0)), i31.encode(&s(0, 0)));
+        assert_ne!(i31.encode(&s((1u32 << 31) - 1, 0)), i31.encode(&s(0, 0)));
+        // …and kept at 32 (full width for a u32 index).
+        let i32b = Scheme { i_bits: Some(32), t_bits: Some(0) };
+        assert_ne!(i32b.encode(&s(1u32 << 31, 0)), i32b.encode(&s(0, 0)));
+        assert_eq!(i32b.encode(&s(u32::MAX, 0)), Scheme::ZERO_BIT.encode(&s(u32::MAX, 0)));
+    }
+
+    #[test]
+    fn t_bit_truncation_boundaries_62_63_64() {
+        let t62 = Scheme { i_bits: None, t_bits: Some(62) };
+        let t63 = Scheme { i_bits: None, t_bits: Some(63) };
+        let t64 = Scheme { i_bits: None, t_bits: Some(64) };
+        // 2^62 ≡ 0 under 62 kept bits, distinct under 63.
+        assert_eq!(t62.encode(&s(5, 1i64 << 62)), t62.encode(&s(5, 0)));
+        assert_ne!(t63.encode(&s(5, 1i64 << 62)), t63.encode(&s(5, 0)));
+        // 63 bits: the old `1i64 << 63` shifted into the sign bit and
+        // produced a negative modulus. −2^63 ≡ 0 (mod 2^63); −1 maps to
+        // the euclidean remainder 2^63 − 1.
+        assert_eq!(t63.encode(&s(5, i64::MIN)), t63.encode(&s(5, 0)));
+        assert_ne!(t63.encode(&s(5, -1)), t63.encode(&s(5, 0)));
+        assert_eq!(t63.encode(&s(5, -1)) as u64, (1u64 << 63) - 1);
+        // 64 bits keeps everything (= the full scheme).
+        assert_ne!(t64.encode(&s(5, i64::MIN)), t64.encode(&s(5, 0)));
+        assert_eq!(t64.encode(&s(5, -9)), Scheme::FULL.encode(&s(5, -9)));
+    }
+
+    #[test]
+    fn mask_truncation_matches_euclidean_remainder() {
+        // For b ≤ 62 (where the old shift was sound) the new mask path
+        // must agree with rem_euclid exactly, negatives included.
+        for b in [1u8, 2, 7, 31, 32, 33, 62] {
+            let sch = Scheme { i_bits: None, t_bits: Some(b) };
+            for t in [-3i64, -1, 0, 1, 5, -(1i64 << 40), (1i64 << 40) + 9, i64::MAX, i64::MIN] {
+                let want = t.rem_euclid(1i64 << b) as u64;
+                assert_eq!(sch.encode(&s(9, t)) as u64, want, "b={b} t={t}");
+            }
+        }
     }
 
     #[test]

@@ -4,8 +4,9 @@
 use crate::coordinator::{hashed_linear_sweep, PipelineConfig};
 use crate::data::synth::{generate, SynthConfig};
 
+use crate::kernels::gram::GramSpec;
 use crate::kernels::KernelKind;
-use crate::svm::{c_grid, kernel_svm_sweep, SweepResult};
+use crate::svm::{c_grid, kernel_svm_sweep, kernel_svm_sweep_with, SweepResult};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 
@@ -26,6 +27,10 @@ pub struct SvmExperimentConfig {
     /// Extra kernels beyond the paper's four (ablations: resemblance,
     /// chi2, CoRE-style product).
     pub extra_kernels: Vec<KernelKind>,
+    /// How the train Gram is served to the OvO solver (`--gram
+    /// {pre,otf}`): materialized up front, or streamed on demand behind
+    /// a bounded row cache. Models are bit-identical either way.
+    pub gram: GramSpec,
 }
 
 impl Default for SvmExperimentConfig {
@@ -37,6 +42,7 @@ impl Default for SvmExperimentConfig {
             n_test: 600,
             c_points: 9,
             extra_kernels: vec![],
+            gram: GramSpec::Precomputed,
         }
     }
 }
@@ -61,7 +67,7 @@ pub fn run_kernel_sweeps(cfg: &SvmExperimentConfig) -> Vec<DatasetSweeps> {
         let mut kernels: Vec<KernelKind> = table1_kernels().to_vec();
         kernels.extend(cfg.extra_kernels.iter().copied());
         let sweeps: Vec<SweepResult> =
-            kernels.iter().map(|&k| kernel_svm_sweep(&ds, k, &cs)).collect();
+            kernels.iter().map(|&k| kernel_svm_sweep_with(&ds, k, &cs, cfg.gram)).collect();
         crate::info!(
             "{name}: {}",
             sweeps
@@ -249,6 +255,7 @@ mod tests {
             n_test: 120,
             c_points: 3,
             extra_kernels: vec![],
+            gram: GramSpec::Precomputed,
         }
     }
 
@@ -282,6 +289,30 @@ mod tests {
         });
         assert_eq!(t.n_rows(), 1);
         assert!(t.render().contains("vowel"));
+    }
+
+    #[test]
+    fn on_the_fly_gram_reproduces_precomputed_table() {
+        std::env::set_var("MINMAX_RESULTS", std::env::temp_dir().join("mm_res_t1c"));
+        let mut cfg = SvmExperimentConfig {
+            datasets: vec!["vowel".into()],
+            n_train: 60,
+            n_test: 60,
+            ..tiny_cfg()
+        };
+        let pre = run_kernel_sweeps(&cfg);
+        cfg.gram = GramSpec::OnTheFly { cache_rows: Some(15) };
+        let otf = run_kernel_sweeps(&cfg);
+        for (dp, do_) in pre.iter().zip(&otf) {
+            for (sp, so) in dp.sweeps.iter().zip(&do_.sweeps) {
+                assert_eq!(
+                    sp.best_accuracy().to_bits(),
+                    so.best_accuracy().to_bits(),
+                    "{} differs across gram sources",
+                    sp.kernel.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,504 @@
+//! Gram sources — the solver's view of the training kernel.
+//!
+//! The LIBSVM `-t 4` setup the paper's §2 experiments inherit trains on
+//! a fully materialized n×n kernel matrix, which caps n at whatever n²
+//! floats fit in RAM — exactly the scalability wall hashing exists to
+//! remove. [`GramSource`] decouples the dual solver from that choice:
+//!
+//! * [`Precomputed`] (and [`Dense`] directly) — today's path, the whole
+//!   Gram up front. O(n²) memory, O(1) row fetches.
+//! * [`OnTheFly`] — kernel rows computed on demand from the stored
+//!   [`Matrix`] via the existing dense/sparse fast paths, behind a
+//!   bounded LRU row cache; cache-miss rows are filled in parallel
+//!   chunks over [`crate::util::pool::par_chunks_mut`]. O(cache · n)
+//!   memory, one O(n · nnz) computation per cache miss.
+//! * [`SubsetGram`] — a lazy index-mapped view of any source (the
+//!   one-vs-one wrapper hands each class pair one of these instead of
+//!   copying an m×m sub-Gram).
+//!
+//! The hard invariant, pinned by `rust/tests/gram_parity.rs`: every
+//! source yields **bit-identical** rows for the same training matrix, so
+//! `Precomputed` vs `OnTheFly` (any cache size, any thread count)
+//! produce bit-identical models. On-the-fly rows rely on the kernels
+//! being bitwise symmetric (`k(u, v) == k(v, u)` exactly — every
+//! [`Kernel`] here accumulates elementwise-commutative terms in index
+//! order), which makes a streamed full row equal to the mirrored
+//! upper-triangle row of [`super::matrix::kernel_matrix_sym`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::dense::Dense;
+use crate::data::Matrix;
+use crate::util::pool;
+
+use super::{Kernel, KernelKind};
+
+/// Chunk floor for the parallel row fill: below this many kernel
+/// evaluations per chunk, scoped-thread spawns dominate the work (and
+/// nested parallelism inside the already-parallel OvO pair loop would
+/// oversubscribe on small problems).
+const ROW_MIN_CHUNK: usize = 256;
+
+/// The solver's view of a symmetric training kernel: row fetches,
+/// diagonal reads, and a materialization counter. `Sync` because
+/// one-vs-one pairs train in parallel against a shared source.
+///
+/// The generic `with_row` visitor (instead of returning a slice) lets
+/// cached sources hand out rows without copying while keeping eviction
+/// safe: the row is guaranteed alive only for the callback's duration.
+pub trait GramSource: Sync {
+    /// Number of training rows (the Gram is `n × n`).
+    fn n(&self) -> usize;
+
+    /// Diagonal entry `K[i][i]`, at the same f32 precision the row path
+    /// produces (the solver's Q̄ᵢᵢ must agree across sources bit-for-bit).
+    fn diag(&self, i: usize) -> f32;
+
+    /// Visit kernel row `i` (length [`GramSource::n`]).
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R;
+
+    /// Kernel rows materialized so far — the peak-memory/work proxy the
+    /// benches record. A precomputed Gram counts all n up front; an
+    /// on-the-fly source counts cache misses (recomputation after
+    /// eviction counts again: it is a work proxy, not a high-water mark).
+    fn rows_materialized(&self) -> usize;
+}
+
+/// A fully materialized symmetric Gram is a [`GramSource`] directly —
+/// today's `train_binary(&Dense, …)` callers keep working unchanged.
+impl GramSource for Dense {
+    fn n(&self) -> usize {
+        debug_assert_eq!(self.rows(), self.cols(), "gram must be square");
+        self.rows()
+    }
+
+    fn diag(&self, i: usize) -> f32 {
+        self.get(i, i)
+    }
+
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        f(self.row(i))
+    }
+
+    fn rows_materialized(&self) -> usize {
+        self.rows()
+    }
+}
+
+/// Named owner of a precomputed Gram (the LIBSVM `-t 4` path), for
+/// symmetry with [`OnTheFly`] at call sites that own their matrix.
+#[derive(Debug, Clone)]
+pub struct Precomputed(pub Dense);
+
+impl GramSource for Precomputed {
+    fn n(&self) -> usize {
+        GramSource::n(&self.0)
+    }
+
+    fn diag(&self, i: usize) -> f32 {
+        self.0.diag(i)
+    }
+
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.0.with_row(i, f)
+    }
+
+    fn rows_materialized(&self) -> usize {
+        self.0.rows_materialized()
+    }
+}
+
+/// How a driver should build its training-kernel source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GramSpec {
+    /// Materialize the full n×n Gram up front.
+    Precomputed,
+    /// Stream rows on demand behind an LRU cache of `cache_rows` rows
+    /// (`None` = the default cap of n/4 — 25% of the precomputed
+    /// footprint).
+    OnTheFly { cache_rows: Option<usize> },
+}
+
+impl GramSpec {
+    /// Resolve the cache cap for a problem of `n` training rows.
+    pub fn cache_rows_for(&self, n: usize) -> usize {
+        match self {
+            GramSpec::Precomputed => n,
+            GramSpec::OnTheFly { cache_rows } => cache_rows.unwrap_or(n / 4).min(n),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GramSpec::Precomputed => "pre",
+            GramSpec::OnTheFly { .. } => "otf",
+        }
+    }
+}
+
+/// Cache-hit / materialization counters of an [`OnTheFly`] source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GramStats {
+    /// Kernel rows computed (cache misses; eviction makes this a work
+    /// counter, not a distinct-row count).
+    pub rows_computed: usize,
+    /// Row fetches served straight from the cache.
+    pub cache_hits: usize,
+}
+
+#[derive(Debug)]
+struct CacheEntry {
+    /// Last-touch stamp for LRU eviction (unique per touch).
+    stamp: u64,
+    /// Shared so an in-flight reader keeps an evicted row alive.
+    row: Arc<Vec<f32>>,
+}
+
+#[derive(Debug, Default)]
+struct Lru {
+    map: HashMap<usize, CacheEntry>,
+    clock: u64,
+}
+
+/// Kernel rows computed on demand from the stored training matrix —
+/// the O(n²)-memory-free half of the [`GramSource`] pair.
+///
+/// Rows are served from a bounded LRU cache (`with_cache_rows`, default
+/// n/4); a miss computes the full row via the kernel's dense/sparse
+/// fast path, parallel over contiguous column chunks
+/// ([`pool::par_chunks_mut`], `with_threads` — `MINMAX_THREADS` by
+/// default). Row *values* are independent of cache size and thread
+/// count by construction, so solvers above see bit-identical kernels
+/// however this source is tuned.
+pub struct OnTheFly<'a, K: Kernel + Sync = KernelKind> {
+    kern: K,
+    x: &'a Matrix,
+    capacity: usize,
+    threads: usize,
+    cache: Mutex<Lru>,
+    /// Diagonal K[i][i], precomputed once (one row's worth of kernel
+    /// evaluations) — solvers rebuild their Q̄ᵢᵢ per training call, and
+    /// OvO reads it once per pair member, so recomputing per call would
+    /// redo O(n·d) work every retrain.
+    diag: Vec<f32>,
+    computed: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl<'a, K: Kernel + Sync> OnTheFly<'a, K> {
+    /// Source over `x`'s rows (the caller applies the kernel's required
+    /// normalization first, as everywhere else). Default cache cap is
+    /// n/4 rows; default fill parallelism is [`pool::default_threads`].
+    pub fn new(kern: K, x: &'a Matrix) -> Self {
+        let n = x.rows();
+        // Same f32 rounding as the row path, so Q̄ᵢᵢ agrees with a
+        // precomputed Gram bit-for-bit.
+        let diag: Vec<f32> = match x {
+            Matrix::Dense(d) => {
+                (0..n).map(|i| kern.eval_dense(d.row(i), d.row(i)) as f32).collect()
+            }
+            Matrix::Sparse(s) => {
+                (0..n).map(|i| kern.eval_sparse(s.row(i), s.row(i)) as f32).collect()
+            }
+        };
+        Self {
+            kern,
+            x,
+            capacity: (n / 4).max(1),
+            threads: pool::default_threads(),
+            cache: Mutex::new(Lru::default()),
+            diag,
+            computed: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cap the row cache at `rows` entries (`0` disables caching: every
+    /// fetch recomputes — the pure streaming extreme).
+    pub fn with_cache_rows(mut self, rows: usize) -> Self {
+        self.capacity = rows;
+        self
+    }
+
+    /// Thread count for cache-miss row fills. Callers fetching from an
+    /// already-parallel loop (e.g. OvO pairs) should divide their
+    /// budget here — `pairs × fill_threads` scoped threads are live on
+    /// concurrent misses (see `svm::eval::kernel_svm_sweep_with`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn cache_rows(&self) -> usize {
+        self.capacity
+    }
+
+    /// Rows currently resident in the cache (≤ the cap).
+    pub fn cached_rows(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
+    }
+
+    pub fn stats(&self) -> GramStats {
+        GramStats {
+            rows_computed: self.computed.load(Ordering::Relaxed),
+            cache_hits: self.hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Compute kernel row `i` against every training row, filling
+    /// contiguous column chunks in parallel. Each cell is an independent
+    /// kernel evaluation, so the result is identical at any chunking.
+    fn compute_row(&self, i: usize) -> Vec<f32> {
+        let n = self.x.rows();
+        let mut row = vec![0.0f32; n];
+        match self.x {
+            Matrix::Dense(d) => {
+                let xi = d.row(i);
+                pool::par_chunks_mut(&mut row, ROW_MIN_CHUNK, self.threads, |off, chunk| {
+                    for (jj, cell) in chunk.iter_mut().enumerate() {
+                        *cell = self.kern.eval_dense(xi, d.row(off + jj)) as f32;
+                    }
+                });
+            }
+            Matrix::Sparse(s) => {
+                let xi = s.row(i);
+                pool::par_chunks_mut(&mut row, ROW_MIN_CHUNK, self.threads, |off, chunk| {
+                    for (jj, cell) in chunk.iter_mut().enumerate() {
+                        *cell = self.kern.eval_sparse(xi, s.row(off + jj)) as f32;
+                    }
+                });
+            }
+        }
+        row
+    }
+
+    /// Fetch row `i`, from cache when resident. Misses compute outside
+    /// the lock (concurrent fetches of other rows stay servable; two
+    /// threads racing on the same row both compute identical values and
+    /// the loser's insert is a no-op overwrite).
+    fn fetch(&self, i: usize) -> Arc<Vec<f32>> {
+        assert!(i < self.x.rows(), "gram row {i} out of range");
+        {
+            let mut c = self.cache.lock().unwrap();
+            c.clock += 1;
+            let stamp = c.clock;
+            if let Some(entry) = c.map.get_mut(&i) {
+                entry.stamp = stamp;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&entry.row);
+            }
+        }
+        let row = Arc::new(self.compute_row(i));
+        self.computed.fetch_add(1, Ordering::Relaxed);
+        if self.capacity > 0 {
+            let mut c = self.cache.lock().unwrap();
+            c.clock += 1;
+            let stamp = c.clock;
+            if !c.map.contains_key(&i) && c.map.len() >= self.capacity {
+                // Evict the least-recently-touched row; stamps are
+                // unique, so the victim is deterministic.
+                if let Some(victim) = c.map.iter().min_by_key(|(_, e)| e.stamp).map(|(&k, _)| k) {
+                    c.map.remove(&victim);
+                }
+            }
+            c.map.insert(i, CacheEntry { stamp, row: Arc::clone(&row) });
+        }
+        row
+    }
+}
+
+impl<K: Kernel + Sync> GramSource for OnTheFly<'_, K> {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn diag(&self, i: usize) -> f32 {
+        self.diag[i]
+    }
+
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        f(&self.fetch(i))
+    }
+
+    fn rows_materialized(&self) -> usize {
+        self.computed.load(Ordering::Relaxed)
+    }
+}
+
+/// Lazy index-mapped view of a subset of another source's rows — the
+/// one-vs-one wrapper's per-pair Gram (replaces the old copied m×m
+/// sub-Dense). Row fetches gather the parent row through the index map
+/// into a reusable scratch buffer (no per-fetch allocation), so the
+/// parent's cache is shared across every pair touching a row. The O(m)
+/// gather per fetch is the same order as the O(m) gradient update every
+/// fetch feeds, and fetches only happen when a coordinate moves.
+pub struct SubsetGram<'a, G: GramSource> {
+    parent: &'a G,
+    idx: &'a [usize],
+    /// Gather buffer, reused across fetches. A view is owned by one
+    /// solver at a time, so the lock (needed only for `Sync`) is
+    /// uncontended.
+    scratch: Mutex<Vec<f32>>,
+}
+
+impl<'a, G: GramSource> SubsetGram<'a, G> {
+    pub fn new(parent: &'a G, idx: &'a [usize]) -> Self {
+        debug_assert!(idx.iter().all(|&i| i < parent.n()), "subset index out of range");
+        Self { parent, idx, scratch: Mutex::new(Vec::with_capacity(idx.len())) }
+    }
+}
+
+impl<G: GramSource> GramSource for SubsetGram<'_, G> {
+    fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn diag(&self, i: usize) -> f32 {
+        self.parent.diag(self.idx[i])
+    }
+
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.parent.with_row(self.idx[i], |full| {
+            let mut sub = self.scratch.lock().unwrap();
+            sub.clear();
+            sub.extend(self.idx.iter().map(|&j| full[j]));
+            f(&sub)
+        })
+    }
+
+    fn rows_materialized(&self) -> usize {
+        self.parent.rows_materialized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::matrix::kernel_matrix_sym;
+    use super::*;
+    use crate::data::sparse::Csr;
+    use crate::util::rng::Pcg64;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Dense {
+        let mut rng = Pcg64::new(seed);
+        Dense::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| {
+                    if rng.uniform() < 0.4 {
+                        0.0
+                    } else {
+                        rng.lognormal(0.0, 0.8) as f32
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn on_the_fly_rows_match_precomputed_bitwise() {
+        let d = random_matrix(37, 9, 1);
+        for m in [Matrix::Dense(d.clone()), Matrix::Sparse(Csr::from_dense(&d))] {
+            let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+            let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(5);
+            for i in 0..37 {
+                otf.with_row(i, |row| {
+                    assert_eq!(row.len(), 37);
+                    for (j, &v) in row.iter().enumerate() {
+                        assert_eq!(v.to_bits(), pre.get(i, j).to_bits(), "row {i} col {j}");
+                    }
+                });
+                assert_eq!(otf.diag(i).to_bits(), pre.get(i, i).to_bits(), "diag {i}");
+            }
+            assert!(otf.cached_rows() <= 5);
+        }
+    }
+
+    #[test]
+    fn cache_capacity_is_respected_and_hits_count() {
+        let d = random_matrix(16, 6, 2);
+        let m = Matrix::Dense(d);
+        let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(3).with_threads(1);
+        for i in 0..16 {
+            otf.with_row(i, |_| {});
+        }
+        assert_eq!(otf.stats().rows_computed, 16);
+        assert_eq!(otf.stats().cache_hits, 0);
+        assert_eq!(otf.cached_rows(), 3);
+        // The three most recent rows are resident.
+        for i in [13usize, 14, 15] {
+            otf.with_row(i, |_| {});
+        }
+        let s = otf.stats();
+        assert_eq!(s.rows_computed, 16);
+        assert_eq!(s.cache_hits, 3);
+        // An older row was evicted: refetch recomputes.
+        otf.with_row(0, |_| {});
+        assert_eq!(otf.stats().rows_computed, 17);
+    }
+
+    #[test]
+    fn zero_capacity_streams_every_fetch() {
+        let d = random_matrix(8, 4, 3);
+        let m = Matrix::Dense(d);
+        let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(0);
+        let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+        for _ in 0..2 {
+            for i in 0..8 {
+                otf.with_row(i, |row| {
+                    for (j, &v) in row.iter().enumerate() {
+                        assert_eq!(v.to_bits(), pre.get(i, j).to_bits());
+                    }
+                });
+            }
+        }
+        assert_eq!(otf.cached_rows(), 0);
+        assert_eq!(otf.stats().rows_computed, 16);
+    }
+
+    #[test]
+    fn subset_view_gathers_parent_rows() {
+        let d = random_matrix(12, 5, 4);
+        let m = Matrix::Dense(d);
+        let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+        let idx = [2usize, 3, 7, 11];
+        let view = SubsetGram::new(&pre, &idx);
+        assert_eq!(view.n(), 4);
+        for (r, &i) in idx.iter().enumerate() {
+            assert_eq!(view.diag(r).to_bits(), pre.get(i, i).to_bits());
+            view.with_row(r, |row| {
+                assert_eq!(row.len(), 4);
+                for (c, &j) in idx.iter().enumerate() {
+                    assert_eq!(row[c].to_bits(), pre.get(i, j).to_bits());
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn row_fill_is_thread_count_invariant() {
+        let d = random_matrix(40, 8, 5);
+        let m = Matrix::Dense(d);
+        let one = OnTheFly::new(KernelKind::MinMax, &m).with_threads(1);
+        let four = OnTheFly::new(KernelKind::MinMax, &m).with_threads(4);
+        for i in 0..40 {
+            one.with_row(i, |a| {
+                four.with_row(i, |b| {
+                    assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+                });
+            });
+        }
+    }
+
+    #[test]
+    fn gram_spec_resolves_cache_cap() {
+        assert_eq!(GramSpec::Precomputed.cache_rows_for(100), 100);
+        assert_eq!(GramSpec::OnTheFly { cache_rows: None }.cache_rows_for(100), 25);
+        assert_eq!(GramSpec::OnTheFly { cache_rows: Some(7) }.cache_rows_for(100), 7);
+        assert_eq!(GramSpec::OnTheFly { cache_rows: Some(500) }.cache_rows_for(100), 100);
+        assert_eq!(GramSpec::Precomputed.name(), "pre");
+        assert_eq!(GramSpec::OnTheFly { cache_rows: None }.name(), "otf");
+    }
+}

@@ -71,14 +71,51 @@ pub fn kernel_matrix_sym<K: Kernel + Sync>(kern: K, a: &Matrix) -> Dense {
             });
         }
     }
-    // Mirror the strict upper triangle down.
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let v = out.get(i, j);
-            out.set(j, i, v);
-        }
-    }
+    // Mirror the strict upper triangle down — blocked parallel
+    // transpose-copy, so the symmetric path stays parallel end to end
+    // (the old serial `get`/`set` tail was an O(n²) single-thread drag
+    // after the parallel fill).
+    mirror_upper_blocked(out.data_mut(), n, 0, n);
     out
+}
+
+/// Rows per block below which the mirror runs serially: a block copy
+/// this small is cheaper than a scoped-thread spawn.
+const MIRROR_SERIAL_ROWS: usize = 64;
+
+/// Copy every strict-upper entry `(i, j)` with `lo ≤ i < j < hi` to its
+/// mirror `(j, i)`, recursively: the off-diagonal block (`i < m ≤ j`)
+/// is a parallel transpose-copy — `split_at_mut` at row `m` separates
+/// the read side (rows `lo..m`, already filled upper triangle) from the
+/// write side (rows `m..hi`, lower-triangle columns `lo..m`), so
+/// [`par_rows`] can shard the destination rows with no aliasing — and
+/// the two diagonal sub-blocks recurse until they fit the serial base
+/// case. Every entry is copied exactly once.
+fn mirror_upper_blocked(buf: &mut [f32], n: usize, lo: usize, hi: usize) {
+    if hi - lo < 2 {
+        return;
+    }
+    if hi - lo <= MIRROR_SERIAL_ROWS {
+        for i in lo..hi {
+            for j in (i + 1)..hi {
+                buf[j * n + i] = buf[i * n + j];
+            }
+        }
+        return;
+    }
+    let m = (lo + hi) / 2;
+    {
+        let (top, bottom) = buf[lo * n..hi * n].split_at_mut((m - lo) * n);
+        let top: &[f32] = top;
+        par_rows(bottom, n, |jj, row| {
+            let j = m + jj;
+            for (i, cell) in row[lo..m].iter_mut().enumerate() {
+                *cell = top[i * n + j];
+            }
+        });
+    }
+    mirror_upper_blocked(buf, n, lo, m);
+    mirror_upper_blocked(buf, n, m, hi);
 }
 
 /// Check positive semi-definiteness of a symmetric matrix empirically by
@@ -95,8 +132,23 @@ pub fn min_eigenvalue_estimate(k: &Dense, iters: usize, seed: u64) -> f64 {
         upper = upper.max(s);
     }
     // Power iteration on (upper*I - K) converges to upper - λ_min.
+    // Iterates are kept unit-norm (including the initial vector and any
+    // restart), so `lam = ‖(upper·I − K) v‖` is a valid Rayleigh-style
+    // estimate even when the loop ends one step after a (re)start.
     let mut rng = crate::util::rng::Pcg64::new(seed);
-    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let fresh_unit = |rng: &mut crate::util::rng::Pcg64| -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for x in &mut v {
+                *x /= norm;
+            }
+        } else if !v.is_empty() {
+            v[0] = 1.0; // measure-zero fallback
+        }
+        v
+    };
+    let mut v = fresh_unit(&mut rng);
     let mut lam = 0.0;
     for _ in 0..iters {
         let mut w = vec![0.0f64; n];
@@ -109,7 +161,16 @@ pub fn min_eigenvalue_estimate(k: &Dense, iters: usize, seed: u64) -> f64 {
         }
         let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
         if norm == 0.0 {
-            return upper; // K == upper*I ⇒ λ_min == upper? degenerate; bail
+            // The iterate landed exactly in the null space of
+            // (upper·I − K) — i.e. on an eigenvector of K at the
+            // Gershgorin bound. Returning `upper` here is only correct
+            // for K == upper·I; restart from a fresh random vector
+            // instead. (If K really is upper·I, every restart maps to
+            // zero, `lam` stays 0, and `upper − 0` is the right
+            // answer.)
+            v = fresh_unit(&mut rng);
+            lam = 0.0;
+            continue;
         }
         for x in &mut w {
             *x /= norm;
@@ -124,6 +185,7 @@ pub fn min_eigenvalue_estimate(k: &Dense, iters: usize, seed: u64) -> f64 {
 mod tests {
     use super::*;
     use crate::data::sparse::Csr;
+    use crate::kernels::KernelKind;
     use crate::util::rng::Pcg64;
 
     fn random_dense(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Dense {
@@ -200,6 +262,55 @@ mod tests {
         for i in 0..8 {
             assert!((k.get(i, i) - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn sym_mirror_is_exact_at_blocked_sizes() {
+        // 150 rows forces the recursive parallel mirror (serial base
+        // case is ≤64 rows); the result must be perfectly symmetric and
+        // agree with the rectangular path.
+        let a = random_dense(150, 12, 0.4, 11);
+        let m = Matrix::Dense(a);
+        let sym = kernel_matrix_sym(KernelKind::MinMax, &m);
+        let full = kernel_matrix(KernelKind::MinMax, &m, &m);
+        for i in 0..150 {
+            for j in 0..150 {
+                assert_eq!(
+                    sym.get(i, j).to_bits(),
+                    sym.get(j, i).to_bits(),
+                    "mirror asymmetry at ({i},{j})"
+                );
+                assert!((sym.get(i, j) - full.get(i, j)).abs() < 1e-6, "value at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_identity_gram_estimates_upper() {
+        // K = 2I: every iterate maps to zero; the restart loop must
+        // still land on λ_min = 2 (= upper), not loop forever or panic.
+        let mut k = Dense::zeros(3, 3);
+        for i in 0..3 {
+            k.set(i, i, 2.0);
+        }
+        let lam = min_eigenvalue_estimate(&k, 50, 1);
+        assert!((lam - 2.0).abs() < 1e-9, "λ_min estimate {lam}");
+    }
+
+    #[test]
+    fn rank_deficient_gram_estimates_zero_not_upper() {
+        // K = 𝟙𝟙ᵀ (rank one): eigenvalues {n, 0, …, 0}, so λ_min = 0
+        // while the Gershgorin bound is n — a degenerate bail that
+        // returned `upper` would be off by the whole spectrum width.
+        let n = 6;
+        let mut k = Dense::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k.set(i, j, 1.0);
+            }
+        }
+        let lam = min_eigenvalue_estimate(&k, 400, 3);
+        assert!(lam.abs() < 1e-6, "λ_min estimate {lam} (must not bail to upper = {n})");
     }
 
     #[test]

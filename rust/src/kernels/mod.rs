@@ -30,6 +30,7 @@
 //! functional forms. The paper applies normalization before hashing too,
 //! so kernels and sketchers see identical inputs.
 
+pub mod gram;
 pub mod matrix;
 
 use crate::data::sparse::SparseRow;

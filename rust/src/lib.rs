@@ -30,10 +30,11 @@
 //!   every hash family; [`features`] — one-hot hashed features: the
 //!   [`features::CodeMatrix`] code slab (training default) and the CSR
 //!   expansion (IO/export).
-//! * [`svm`] — linear dual-CD SVM, logistic regression, precomputed-kernel
-//!   SVM, multiclass wrappers (parallel OvR/OvO), C-grid evaluation;
-//!   [`svm::RowSet`] specializes the solvers over both feature
-//!   representations.
+//! * [`svm`] — linear dual-CD SVM, logistic regression, kernel SVM over
+//!   any [`kernels::gram::GramSource`] (precomputed or on-the-fly Gram
+//!   with a bounded row cache, LIBLINEAR-style shrinking), multiclass
+//!   wrappers (parallel OvR/OvO), C-grid evaluation; [`svm::RowSet`]
+//!   specializes the solvers over both feature representations.
 //! * [`pipeline`] — the composable fit/transform/predict pipeline.
 //! * [`estimate`] — the Figures 4–6 estimator-quality simulation harness.
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT;

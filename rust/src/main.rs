@@ -9,6 +9,7 @@ use minmax::experiments::svm_tables::{
     run_fig1_3, run_fig7_8, run_table1, HashedSvmConfig, SvmExperimentConfig,
 };
 use minmax::experiments::table2::run_table2;
+use minmax::kernels::gram::GramSpec;
 use minmax::util::cli::Args;
 
 const USAGE: &str = "\
@@ -19,7 +20,10 @@ USAGE: minmax <command> [flags]
 EXPERIMENTS (one per paper table/figure; JSON saved under results/):
   table1    kernel SVM: linear vs min-max vs n-min-max vs intersection
             [--datasets a,b,..] [--n-train N] [--n-test N] [--c-points N]
-            [--seed S] [--ablations]
+            [--seed S] [--ablations] [--gram pre|otf] [--gram-cache N]
+            (--gram otf streams kernel rows on demand behind an N-row
+             LRU cache — default n/4 — instead of an n x n matrix;
+             models are bit-identical)
   fig1-3    accuracy-vs-C curves for the four kernels (finer C grid)
             [same flags; default --c-points 17]
   table2    the 13 calibrated word pairs (f1, f2, R, MM)
@@ -76,6 +80,20 @@ fn svm_cfg(args: &Args) -> Result<SvmExperimentConfig, Box<dyn std::error::Error
         use minmax::kernels::KernelKind;
         cfg.extra_kernels = vec![KernelKind::Resemblance, KernelKind::Chi2, KernelKind::MinMaxChi2];
     }
+    let gram_cache = match args.get("gram-cache") {
+        Some(v) => Some(v.parse::<usize>().map_err(|e| format!("--gram-cache={v}: {e}"))?),
+        None => None,
+    };
+    cfg.gram = match args.str_or("gram", "pre").as_str() {
+        "pre" if gram_cache.is_some() => {
+            // Fail loudly instead of silently materializing the full
+            // n×n Gram the flag was meant to cap.
+            return Err("--gram-cache only applies to --gram otf".into());
+        }
+        "pre" => GramSpec::Precomputed,
+        "otf" => GramSpec::OnTheFly { cache_rows: gram_cache },
+        other => return Err(format!("--gram must be 'pre' or 'otf', got '{other}'").into()),
+    };
     Ok(cfg)
 }
 

@@ -20,6 +20,7 @@ pub use crate::cws::{
 pub use crate::features::{CodeMatrix, Expansion, ExpansionError};
 
 // Kernel helpers.
+pub use crate::kernels::gram::{GramSource, GramSpec, GramStats, OnTheFly, Precomputed, SubsetGram};
 pub use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
 pub use crate::kernels::{
     dense_chi2, dense_dot, dense_intersection, dense_minmax, dense_resemblance, sparse_minmax,
@@ -35,8 +36,8 @@ pub use crate::data::{Csr, CsrBuilder, Dataset, Dense, Matrix, SparseRow};
 
 // Learning + the §2 evaluation protocol.
 pub use crate::svm::{
-    c_grid, kernel_svm_sweep, linear_svm_accuracy, LinearOvR, LinearSvmParams, RowSet,
-    SweepResult,
+    c_grid, kernel_svm_sweep, kernel_svm_sweep_with, linear_svm_accuracy, KernelModel, KernelOvO,
+    KernelSvmParams, LinearOvR, LinearSvmParams, RowSet, SweepResult,
 };
 
 // Serving stack.

@@ -5,6 +5,7 @@
 //! (Table 1).
 
 use crate::data::{Dataset, Matrix};
+use crate::kernels::gram::{GramSource, GramSpec, OnTheFly};
 use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
 use crate::kernels::KernelKind;
 use crate::pipeline::Scaling;
@@ -50,27 +51,70 @@ impl SweepResult {
     }
 }
 
-/// Run the full §2 protocol for one kernel on one dataset.
-///
-/// The kernel matrices are computed once; each C reuses them. Multiclass
-/// is one-vs-one (LIBSVM's strategy).
+/// Run the full §2 protocol for one kernel on one dataset with a
+/// precomputed train Gram (the historical default).
 pub fn kernel_svm_sweep(ds: &Dataset, kern: KernelKind, cs: &[f64]) -> SweepResult {
+    kernel_svm_sweep_with(ds, kern, cs, GramSpec::Precomputed)
+}
+
+/// [`kernel_svm_sweep`] with an explicit [`GramSpec`]: `Precomputed`
+/// materializes the n×n train kernel once and reuses it per C;
+/// `OnTheFly` streams rows on demand behind a bounded LRU cache, so
+/// training never holds more than `cache_rows` kernel rows. Both
+/// produce bit-identical models (`rust/tests/gram_parity.rs`); the
+/// test-side n_test×n_train block is always computed directly.
+/// Multiclass is one-vs-one (LIBSVM's strategy).
+pub fn kernel_svm_sweep_with(
+    ds: &Dataset,
+    kern: KernelKind,
+    cs: &[f64],
+    gram: GramSpec,
+) -> SweepResult {
     let train = normalize_for(kern, &ds.train_x);
     let test = normalize_for(kern, &ds.test_x);
-    let k_train = kernel_matrix_sym(kern, &train);
     let k_test = kernel_matrix(kern, &test, &train);
+    let curve = match gram {
+        GramSpec::Precomputed => {
+            let k_train = kernel_matrix_sym(kern, &train);
+            sweep_curve(&k_train, &k_test, ds, cs)
+        }
+        GramSpec::OnTheFly { .. } => {
+            // Split the thread budget between the OvO pair loop and the
+            // row fills: with enough pairs to saturate the pool, misses
+            // fill serially (avoids pairs × fill-threads
+            // oversubscription); a binary problem gets the whole budget
+            // for its fills.
+            let n_classes = ds.n_classes();
+            let pairs = (n_classes * n_classes.saturating_sub(1) / 2).max(1);
+            let fill_threads = (crate::util::pool::default_threads() / pairs).max(1);
+            let src = OnTheFly::new(kern, &train)
+                .with_cache_rows(gram.cache_rows_for(train.rows()))
+                .with_threads(fill_threads);
+            sweep_curve(&src, &k_test, ds, cs)
+        }
+    };
+    SweepResult { kernel: kern, dataset: ds.name.clone(), curve }
+}
+
+/// One OvO train/eval per C against any training-kernel source.
+fn sweep_curve<G: GramSource>(
+    gram: &G,
+    k_test: &crate::data::Dense,
+    ds: &Dataset,
+    cs: &[f64],
+) -> Vec<(f64, f64)> {
     let n_classes = ds.n_classes();
     let mut curve = Vec::with_capacity(cs.len());
     for &c in cs {
         let p = KernelSvmParams { c, ..Default::default() };
-        let model = KernelOvO::train(&k_train, &ds.train_y, n_classes, &p);
+        let model = KernelOvO::train(gram, &ds.train_y, n_classes, &p);
         let mut acc = crate::util::stats::Accuracy::default();
         for i in 0..ds.n_test() {
             acc.push(model.predict(k_test.row(i)), ds.test_y[i]);
         }
         curve.push((c, acc.value()));
     }
-    SweepResult { kernel: kern, dataset: ds.name.clone(), curve }
+    curve
 }
 
 /// Accuracy of a single train/predict round at one C (used by drivers
@@ -157,6 +201,27 @@ mod tests {
         );
         assert!(mm.best_accuracy() > 0.5);
         assert_eq!(mm.curve.len(), 5);
+    }
+
+    #[test]
+    fn on_the_fly_sweep_matches_precomputed() {
+        // The tentpole invariant at the protocol level: an OnTheFly
+        // sweep with a tight row cache reproduces the precomputed sweep
+        // exactly (bit-identical accuracies at every C).
+        let ds = generate("vowel", SynthConfig { seed: 3, n_train: 60, n_test: 60 }).unwrap();
+        let cs = c_grid(3);
+        let pre = kernel_svm_sweep_with(&ds, KernelKind::MinMax, &cs, GramSpec::Precomputed);
+        let otf = kernel_svm_sweep_with(
+            &ds,
+            KernelKind::MinMax,
+            &cs,
+            GramSpec::OnTheFly { cache_rows: Some(15) },
+        );
+        assert_eq!(pre.curve.len(), otf.curve.len());
+        for (&(c1, a1), &(c2, a2)) in pre.curve.iter().zip(&otf.curve) {
+            assert_eq!(c1, c2);
+            assert_eq!(a1.to_bits(), a2.to_bits(), "accuracy differs at C={c1}");
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! SVM / linear-learner substrates: the LIBLINEAR-style dual coordinate
 //! descent linear SVM, ℓ₂-regularized logistic regression, the
-//! LIBSVM-style precomputed-kernel SVM, multiclass wrappers (OvO for
+//! LIBSVM-style kernel SVM (generic over
+//! [`crate::kernels::gram::GramSource`] — precomputed or on-the-fly
+//! Gram, with LIBLINEAR-style shrinking), multiclass wrappers (OvO for
 //! kernel machines, OvR for linear), and the paper's C-grid evaluation
 //! protocol.
 //!
@@ -21,8 +23,11 @@ pub mod multiclass;
 pub mod online;
 pub mod rowset;
 
-pub use eval::{c_grid, kernel_svm_sweep, linear_svm_accuracy, linear_svm_sweep, SweepResult};
-pub use kernel::{KernelModel, KernelSvmParams};
+pub use eval::{
+    c_grid, kernel_svm_sweep, kernel_svm_sweep_with, linear_svm_accuracy, linear_svm_sweep,
+    SweepResult,
+};
+pub use kernel::{train_binary_on as train_kernel_binary_on, KernelModel, KernelSvmParams};
 pub use linear::{LinearModel, LinearSvmParams, Loss};
 pub use logistic::{LogisticModel, LogisticParams};
 pub use multiclass::{KernelOvO, LinearOvR};

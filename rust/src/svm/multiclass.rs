@@ -9,17 +9,18 @@
 //! count** — `MINMAX_THREADS` is purely a throughput knob, pinned by
 //! `rust/tests/svm_parity.rs`.
 
-use crate::data::dense::Dense;
 use crate::data::sparse::SparseRow;
+use crate::kernels::gram::{GramSource, SubsetGram};
 use crate::util::pool;
 
-use super::kernel::{train_binary as train_kernel_binary, KernelModel, KernelSvmParams};
+use super::kernel::{train_binary_on as train_kernel_binary, KernelModel, KernelSvmParams};
 use super::linear::{train_binary as train_linear_binary, LinearModel, LinearSvmParams};
 use super::rowset::RowSet;
 
 // ------------------------------------------------------------- kernel OvO
 
-/// One-vs-one kernel SVM over a precomputed train kernel.
+/// One-vs-one kernel SVM over any [`GramSource`] train kernel —
+/// precomputed `Dense` (the historical path) or an on-the-fly source.
 #[derive(Debug)]
 pub struct KernelOvO {
     pub n_classes: usize,
@@ -28,24 +29,32 @@ pub struct KernelOvO {
 }
 
 impl KernelOvO {
-    /// `k_train` is the full n×n precomputed kernel; `y` holds labels in
-    /// `0..n_classes`. Pair subproblems run across `MINMAX_THREADS`.
-    pub fn train(k_train: &Dense, y: &[i32], n_classes: usize, p: &KernelSvmParams) -> Self {
-        Self::train_with_threads(k_train, y, n_classes, p, pool::default_threads())
+    /// `gram` is the n×n training kernel behind a [`GramSource`]; `y`
+    /// holds labels in `0..n_classes`. Pair subproblems run across
+    /// `MINMAX_THREADS`.
+    pub fn train<G: GramSource>(
+        gram: &G,
+        y: &[i32],
+        n_classes: usize,
+        p: &KernelSvmParams,
+    ) -> Self {
+        Self::train_with_threads(gram, y, n_classes, p, pool::default_threads())
     }
 
     /// [`KernelOvO::train`] with an explicit thread count. Each pair
-    /// extracts its own subset Gram and trains independently; slots
-    /// preserve the sequential `(a, b)` pair order, so the result is
-    /// identical at any thread count.
-    pub fn train_with_threads(
-        k_train: &Dense,
+    /// trains against a lazy index-mapped [`SubsetGram`] view of the
+    /// shared source (no m×m sub-Gram copies — and with an on-the-fly
+    /// source, pairs share one row cache); slots preserve the
+    /// sequential `(a, b)` pair order, so the result is identical at
+    /// any thread count.
+    pub fn train_with_threads<G: GramSource>(
+        gram: &G,
         y: &[i32],
         n_classes: usize,
         p: &KernelSvmParams,
         threads: usize,
     ) -> Self {
-        assert_eq!(k_train.rows(), y.len());
+        assert_eq!(gram.n(), y.len());
         let combos: Vec<(i32, i32)> = (0..n_classes as i32)
             .flat_map(|a| ((a + 1)..n_classes as i32).map(move |b| (a, b)))
             .collect();
@@ -59,17 +68,8 @@ impl KernelOvO {
             if yy.iter().all(|&v| v == 1) || yy.iter().all(|&v| v == -1) {
                 return None; // one of the classes absent — skip pair
             }
-            // Extract the subset kernel.
-            let m = idx.len();
-            let mut sub = Dense::zeros(m, m);
-            for (r, &i) in idx.iter().enumerate() {
-                let krow = k_train.row(i);
-                let srow = sub.row_mut(r);
-                for (c, &j) in idx.iter().enumerate() {
-                    srow[c] = krow[j];
-                }
-            }
-            let model = train_kernel_binary(&sub, &yy, p);
+            let view = SubsetGram::new(gram, &idx);
+            let model = train_kernel_binary(&view, &yy, p);
             Some((a, b, idx, model))
         });
         let pairs = trained.into_iter().flatten().collect();
@@ -199,6 +199,7 @@ impl LinearOvR {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::dense::Dense;
     use crate::data::sparse::{Csr, CsrBuilder};
     use crate::data::Matrix;
     use crate::kernels::matrix::{kernel_matrix, kernel_matrix_sym};

@@ -123,6 +123,44 @@ where
         .collect()
 }
 
+/// Split `out` into at most `threads` contiguous chunks of at least
+/// `min_chunk` elements and run `f(offset, chunk)` on each chunk across
+/// scoped threads — the "fill one long row cooperatively" primitive
+/// behind the on-the-fly Gram row computation
+/// ([`crate::kernels::gram::OnTheFly`]). `threads <= 1`, or a slice no
+/// longer than `min_chunk`, runs `f(0, out)` inline with zero thread
+/// overhead. Chunk boundaries never affect results when `f` writes each
+/// cell independently of the chunking, which is the intended use.
+pub fn par_chunks_mut<T: Send, F>(out: &mut [T], min_chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    let min_chunk = min_chunk.max(1);
+    if threads <= 1 || n <= min_chunk {
+        f(0, out);
+        return;
+    }
+    let nchunks = threads.min(n.div_ceil(min_chunk)).max(1);
+    let chunk = n.div_ceil(nchunks);
+    // Hand each chunk's &mut out exactly once via take-slots (the
+    // par_rows pattern), so workers write disjoint memory without
+    // unsafe.
+    let slots: Vec<Mutex<Option<(usize, &mut [T])>>> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(ci, slab)| Mutex::new(Some((ci * chunk, slab))))
+        .collect();
+    par_claim(slots.len(), threads, |ci| {
+        let (off, slab) = slots[ci].lock().unwrap().take().expect("chunk claimed twice");
+        f(off, slab);
+    });
+}
+
 /// Map over mutable chunks of an output slice in parallel: the slice is
 /// split into per-row blocks of `row_len` and `f(row_index, row_slice)`
 /// is called for each row. This is the kernel-matrix fill pattern.
@@ -325,6 +363,33 @@ mod tests {
             assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
         }
         assert!(par_map_claim(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_with_correct_offsets() {
+        for threads in [1usize, 2, 3, 8] {
+            let n = 1013; // deliberately not a multiple of any chunking
+            let mut out = vec![0usize; n];
+            par_chunks_mut(&mut out, 16, threads, |off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = off + i + 1;
+                }
+            });
+            assert!(
+                out.iter().enumerate().all(|(i, &v)| v == i + 1),
+                "threads={threads}: offset mismatch"
+            );
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        par_chunks_mut(&mut empty, 8, 4, |_, _| panic!("must not be called"));
+        // At or below min_chunk: one inline call over the whole slice.
+        let mut small = vec![0u32; 8];
+        par_chunks_mut(&mut small, 8, 4, |off, chunk| {
+            assert_eq!(off, 0);
+            assert_eq!(chunk.len(), 8);
+            chunk.fill(7);
+        });
+        assert!(small.iter().all(|&v| v == 7));
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Precomputed / on-the-fly Gram parity for the kernel-SVM layer.
+//!
+//! The `GramSource` abstraction must be a pure representation change:
+//! the solver sees bit-identical kernel rows whether the Gram is
+//! materialized up front (`Dense` / `Precomputed`) or streamed on
+//! demand (`OnTheFly` — any cache size, any fill thread count), so
+//! binary `KernelModel`s and `KernelOvO` predictions must be
+//! **bit-identical** across sources. Shrinking is a separate throughput
+//! knob: on/off reach the same dual objective within the convergence
+//! tolerance (not the same bits). The suite runs under both
+//! `MINMAX_THREADS=1` and `=4` in CI, covering the env-driven default
+//! paths on top of the explicit thread counts pinned here.
+
+use minmax::data::dense::Dense;
+use minmax::data::sparse::Csr;
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Matrix;
+use minmax::kernels::gram::{GramSource, OnTheFly, Precomputed};
+use minmax::kernels::matrix::{kernel_matrix, kernel_matrix_sym};
+use minmax::kernels::KernelKind;
+use minmax::svm::kernel::{dual_objective, train_binary, train_binary_on};
+use minmax::svm::{KernelOvO, KernelSvmParams};
+use minmax::util::rng::Pcg64;
+
+/// The ring problem of the solver's own tests: linearly inseparable,
+/// min-max-kernel separable — the acceptance workload.
+fn ring_data(n: usize, seed: u64) -> (Dense, Vec<i32>) {
+    let mut rng = Pcg64::new(seed);
+    let mut x = Dense::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = if i % 2 == 0 { 1 } else { -1 };
+        let radius = if label == 1 { 0.5 } else { 1.5 };
+        let th = rng.uniform() * std::f64::consts::TAU;
+        x.set(i, 0, (2.0 + radius * th.cos() + 0.05 * rng.normal()) as f32);
+        x.set(i, 1, (2.0 + radius * th.sin() + 0.05 * rng.normal()) as f32);
+        y.push(label);
+    }
+    (x, y)
+}
+
+fn assert_models_bit_identical(a: &minmax::svm::KernelModel, b: &minmax::svm::KernelModel) {
+    assert_eq!(a.epochs_run, b.epochs_run, "epoch counts differ");
+    assert_eq!(a.coef.len(), b.coef.len());
+    for (i, (x, y)) in a.coef.iter().zip(&b.coef).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "coef[{i}] differs: {x} vs {y}");
+    }
+}
+
+#[test]
+fn on_the_fly_trains_bit_identical_models() {
+    let n = 120;
+    let (x, y) = ring_data(n, 1);
+    let m = Matrix::Dense(x);
+    let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+    for shrink in [true, false] {
+        let p = KernelSvmParams { c: 32.0, shrink, ..Default::default() };
+        let base = train_binary(&pre, &y, &p);
+        // Any cache size (0 = pure streaming, n/4 = the acceptance cap,
+        // n = everything resident) × any fill thread count.
+        for cache in [0usize, 1, n / 4, n] {
+            for threads in [1usize, 4] {
+                let otf = OnTheFly::new(KernelKind::MinMax, &m)
+                    .with_cache_rows(cache)
+                    .with_threads(threads);
+                let model = train_binary_on(&otf, &y, &p);
+                assert_models_bit_identical(&base, &model);
+                assert!(
+                    otf.cached_rows() <= cache,
+                    "cache overflow: {} resident > cap {cache}",
+                    otf.cached_rows()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn on_the_fly_parity_holds_on_sparse_matrices() {
+    let (x, y) = ring_data(90, 2);
+    let m = Matrix::Sparse(Csr::from_dense(&x));
+    let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+    let p = KernelSvmParams { c: 8.0, ..Default::default() };
+    let base = train_binary(&pre, &y, &p);
+    let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(10);
+    assert_models_bit_identical(&base, &train_binary_on(&otf, &y, &p));
+}
+
+#[test]
+fn precomputed_wrapper_matches_dense() {
+    let (x, y) = ring_data(60, 3);
+    let m = Matrix::Dense(x);
+    let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+    let p = KernelSvmParams::default();
+    let a = train_binary(&pre, &y, &p);
+    let b = train_binary_on(&Precomputed(pre), &y, &p);
+    assert_models_bit_identical(&a, &b);
+}
+
+#[test]
+fn ovo_predictions_identical_across_gram_sources() {
+    // Multiclass: every pair trains against a lazy SubsetGram view of
+    // the shared source; predictions must agree bit-for-bit between the
+    // precomputed Gram and a tightly-cached on-the-fly source at any
+    // pair-level thread count.
+    let ds = generate("vowel", SynthConfig { seed: 7, n_train: 90, n_test: 45 }).unwrap();
+    let n_classes = ds.n_classes();
+    let p = KernelSvmParams::default();
+    let pre = kernel_matrix_sym(KernelKind::MinMax, &ds.train_x);
+    let k_test = kernel_matrix(KernelKind::MinMax, &ds.test_x, &ds.train_x);
+    let base = KernelOvO::train(&pre, &ds.train_y, n_classes, &p);
+    let otf = OnTheFly::new(KernelKind::MinMax, &ds.train_x).with_cache_rows(90 / 4);
+    for threads in [1usize, 4] {
+        let model = KernelOvO::train_with_threads(&otf, &ds.train_y, n_classes, &p, threads);
+        assert_eq!(base.n_models(), model.n_models());
+        for i in 0..k_test.rows() {
+            assert_eq!(
+                base.predict(k_test.row(i)),
+                model.predict(k_test.row(i)),
+                "prediction differs at test row {i} (threads={threads})"
+            );
+        }
+    }
+    // The shared cache was actually exercised across pairs.
+    let stats = otf.stats();
+    assert!(stats.rows_computed > 0);
+    assert!(otf.cached_rows() <= 90 / 4);
+}
+
+#[test]
+fn shrinking_on_off_reach_same_dual_objective() {
+    let (x, y) = ring_data(100, 4);
+    let m = Matrix::Dense(x);
+    let pre = kernel_matrix_sym(KernelKind::MinMax, &m);
+    for c in [1.0, 32.0] {
+        let on = train_binary(
+            &pre,
+            &y,
+            &KernelSvmParams { c, shrink: true, max_epochs: 400, ..Default::default() },
+        );
+        let off = train_binary(
+            &pre,
+            &y,
+            &KernelSvmParams { c, shrink: false, max_epochs: 400, ..Default::default() },
+        );
+        let o_on = dual_objective(&pre, &y, &on);
+        let o_off = dual_objective(&pre, &y, &off);
+        assert!(
+            (o_on - o_off).abs() < 1e-2 * (1.0 + o_off.abs()),
+            "C={c}: shrink {o_on} vs plain {o_off}"
+        );
+    }
+}
+
+#[test]
+fn hot_cache_serves_retraining_without_recomputation() {
+    let n = 80;
+    let (x, y) = ring_data(n, 5);
+    let m = Matrix::Dense(x);
+    let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(n);
+    let p = KernelSvmParams { c: 4.0, ..Default::default() };
+    let first = train_binary_on(&otf, &y, &p);
+    let computed_after_first = otf.stats().rows_computed;
+    assert!(computed_after_first <= n, "a full-size cache must never recompute a row");
+    let second = train_binary_on(&otf, &y, &p);
+    assert_models_bit_identical(&first, &second);
+    assert_eq!(
+        otf.stats().rows_computed,
+        computed_after_first,
+        "hot retrain must be served entirely from cache"
+    );
+    // rows_materialized is the bench's peak-memory proxy.
+    assert_eq!(otf.rows_materialized(), computed_after_first);
+}
+
+#[test]
+fn bounded_cache_records_materialization_work() {
+    let n = 80;
+    let (x, y) = ring_data(n, 6);
+    let m = Matrix::Dense(x);
+    let cap = n / 4;
+    let otf = OnTheFly::new(KernelKind::MinMax, &m).with_cache_rows(cap);
+    let p = KernelSvmParams { c: 4.0, ..Default::default() };
+    let _ = train_binary_on(&otf, &y, &p);
+    let stats = otf.stats();
+    assert!(stats.rows_computed > 0, "training must touch kernel rows");
+    assert!(otf.cached_rows() <= cap, "resident rows exceed the cap");
+}
