@@ -40,7 +40,7 @@ fn main() {
     let mut id = 0u64;
     r.bench_with_throughput("service-native/hash_blocking/D256k128", Some((1.0, "req")), || {
         id += 1;
-        black_box(svc.hash_blocking(id, v.clone()).unwrap());
+        black_box(svc.hash_blocking(id, &v).unwrap());
     });
     // Burst submission (exercises the dynamic batcher).
     r.bench_with_throughput("service-native/burst32/D256k128", Some((32.0, "req")), || {

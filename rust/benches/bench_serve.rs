@@ -1,0 +1,126 @@
+//! Serving-path throughput and latency: the fused `serve::Scorer`
+//! against the layered `transform_codes → predict_on` baseline it
+//! replaced, plus the zero-allocation claim checked with a counting
+//! global allocator (every heap alloc in this binary bumps a counter,
+//! so "0 allocs/row" is measured, not asserted from reading the code).
+//!
+//! Rows:
+//! * `codes-baseline/*` — the pre-fusion batch path (CodeMatrix
+//!   materialization + per-row predict_on);
+//! * `fused-batch/*` — `Scorer::predict_batch` (chunk-parallel);
+//! * `fused-batch-T1/*` — the same pinned to one thread;
+//! * `fused-single-row/*` — `Scorer::predict_dense` with a reused
+//!   scratch (the p50-latency serving entry);
+//! * `fused-single-row-allocs-per-row` — steady-state heap allocations
+//!   per single-row predict (must be 0; recorded as a stat).
+//!
+//! Run: `cargo bench --bench bench_serve [-- --quick]`; CI uploads
+//! `results/bench/bench_serve.json` as BENCH_serve.json.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use minmax::bench::{black_box, Runner};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::pipeline::Pipeline;
+use minmax::util::pool;
+
+/// System allocator wrapped with an allocation counter.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let mut r = Runner::new();
+    let threads = pool::default_threads();
+
+    // Service-shaped workload: letter analog (D=16) and a wider synth
+    // (D=64) at the paper's default k=128, b=8.
+    for (name, k, i_bits) in [("letter", 128usize, 8u8), ("usps", 64, 6)] {
+        let ds = generate(name, SynthConfig { seed: 3, n_train: 300, n_test: 512 })
+            .expect("synth dataset");
+        let mut pipe = Pipeline::builder()
+            .seed(5)
+            .samples(k)
+            .i_bits(i_bits)
+            .build()
+            .expect("build pipeline");
+        pipe.fit(&ds.train_x, &ds.train_y).expect("fit");
+        let scorer = pipe.scorer(ds.dim()).expect("scorer");
+        let n = ds.test_x.rows();
+        let tag = format!("{name}/D{}/k{k}/b{i_bits}", ds.dim());
+        let thr = Some((n as f64, "row"));
+
+        // Parity guard before any timing: a bench that measures a path
+        // with different answers is worse than no bench.
+        let model = pipe.model().expect("fitted");
+        let codes = pipe.transform_codes(&ds.test_x);
+        let baseline: Vec<i32> = (0..n).map(|i| model.predict_on(&codes, i)).collect();
+        assert_eq!(scorer.predict_batch(&ds.test_x), baseline);
+
+        // The layered baseline the fused path replaced.
+        r.bench_with_throughput(&format!("codes-baseline/{tag}"), thr, || {
+            let codes = pipe.transform_codes(&ds.test_x);
+            let model = pipe.model().unwrap();
+            let preds: Vec<i32> =
+                (0..codes.rows()).map(|i| model.predict_on(&codes, i)).collect();
+            black_box(preds);
+        });
+
+        r.bench_with_throughput(&format!("fused-batch-T{threads}/{tag}"), thr, || {
+            black_box(scorer.predict_batch(&ds.test_x));
+        });
+        r.bench_with_throughput(&format!("fused-batch-T1/{tag}"), thr, || {
+            black_box(scorer.predict_batch_with_threads(&ds.test_x, 1));
+        });
+
+        // Single-row low-latency entry with a reused scratch.
+        let dense = ds.test_x.to_dense();
+        let mut scratch = scorer.scratch();
+        let mut i = 0usize;
+        r.bench_with_throughput(&format!("fused-single-row/{tag}"), Some((1.0, "row")), || {
+            black_box(scorer.predict_dense(dense.row(i % dense.rows()), &mut scratch));
+            i += 1;
+        });
+
+        // Zero-allocation claim, measured: warm the scratch (buffers
+        // grow to their steady-state capacity), then count every heap
+        // allocation across M single-row predicts.
+        for w in 0..dense.rows() {
+            black_box(scorer.predict_dense(dense.row(w), &mut scratch));
+        }
+        let m = 2000usize;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for j in 0..m {
+            black_box(scorer.predict_dense(dense.row(j % dense.rows()), &mut scratch));
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        r.stat(
+            &format!("fused-single-row-allocs-per-row/{tag}"),
+            delta as f64 / m as f64,
+            "alloc/row",
+        );
+        assert_eq!(delta, 0, "steady-state single-row scoring must not allocate ({tag})");
+    }
+
+    r.save("bench_serve");
+}

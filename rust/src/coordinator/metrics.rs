@@ -4,7 +4,13 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::stats::{Online, Reservoir};
+use crate::util::stats::{Histogram, Online, Reservoir};
+
+/// Upper bounds (milliseconds) of the per-request latency histogram —
+/// log-ish spacing from service-local microseconds to multi-second
+/// outliers; the final implicit bucket is overflow.
+pub const LATENCY_BUCKETS_MS: [f64; 12] =
+    [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 1000.0];
 
 #[derive(Debug)]
 struct Inner {
@@ -14,6 +20,10 @@ struct Inner {
     batches: u64,
     batch_fill: Online,
     latency_ms: Reservoir,
+    /// Bucketed latency distribution: O(1) memory for long-lived
+    /// services (the reservoir's exact percentiles keep working; the
+    /// histogram is what gets exported/scraped).
+    latency_hist: Histogram,
     queue_wait_ms: Reservoir,
 }
 
@@ -39,6 +49,7 @@ impl Metrics {
                 batches: 0,
                 batch_fill: Online::new(),
                 latency_ms: Reservoir::new(),
+                latency_hist: Histogram::new(&LATENCY_BUCKETS_MS),
                 queue_wait_ms: Reservoir::new(),
             }),
         }
@@ -60,7 +71,9 @@ impl Metrics {
     }
 
     pub fn record_latency_ms(&self, ms: f64) {
-        self.inner.lock().unwrap().latency_ms.push(ms);
+        let mut m = self.inner.lock().unwrap();
+        m.latency_ms.push(ms);
+        m.latency_hist.push(ms);
     }
 
     pub fn record_queue_wait_ms(&self, ms: f64) {
@@ -80,6 +93,7 @@ impl Metrics {
             latency_p50_ms: m.latency_ms.percentile(50.0),
             latency_p95_ms: m.latency_ms.percentile(95.0),
             latency_p99_ms: m.latency_ms.percentile(99.0),
+            latency_hist: m.latency_hist.counts().to_vec(),
             queue_wait_p50_ms: m.queue_wait_ms.percentile(50.0),
         }
     }
@@ -96,6 +110,9 @@ pub struct Snapshot {
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
+    /// Latency bucket counts over [`LATENCY_BUCKETS_MS`] (last slot =
+    /// overflow).
+    pub latency_hist: Vec<u64>,
     pub queue_wait_p50_ms: f64,
 }
 
@@ -111,6 +128,18 @@ impl Snapshot {
             .set("latency_p50_ms", self.latency_p50_ms)
             .set("latency_p95_ms", self.latency_p95_ms)
             .set("latency_p99_ms", self.latency_p99_ms);
+        j.set(
+            "latency_bucket_le_ms",
+            crate::util::json::Json::Arr(
+                LATENCY_BUCKETS_MS.iter().map(|&b| crate::util::json::Json::Num(b)).collect(),
+            ),
+        );
+        j.set(
+            "latency_bucket_counts",
+            crate::util::json::Json::Arr(
+                self.latency_hist.iter().map(|&c| crate::util::json::Json::Num(c as f64)).collect(),
+            ),
+        );
         j
     }
 
@@ -151,6 +180,25 @@ mod tests {
         assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
         assert!(s.latency_p50_ms >= 1.0 && s.latency_p50_ms <= 3.0);
         assert!(s.throughput_rps > 0.0);
+        // Histogram: one observation at <=1 ms, one at <=5 ms.
+        assert_eq!(s.latency_hist.len(), LATENCY_BUCKETS_MS.len() + 1);
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), 2);
+        let le_1 = LATENCY_BUCKETS_MS.iter().position(|&b| b == 1.0).unwrap();
+        let le_5 = LATENCY_BUCKETS_MS.iter().position(|&b| b == 2.5).unwrap() + 1;
+        assert_eq!(s.latency_hist[le_1], 1);
+        assert_eq!(s.latency_hist[le_5], 1);
+    }
+
+    #[test]
+    fn latency_histogram_serializes() {
+        let m = Metrics::new();
+        m.record_latency_ms(0.2);
+        m.record_latency_ms(5000.0); // overflow bucket
+        let s = m.snapshot();
+        assert_eq!(*s.latency_hist.last().unwrap(), 1);
+        let json = s.to_json().to_string();
+        assert!(json.contains("latency_bucket_counts"));
+        assert!(json.contains("latency_bucket_le_ms"));
     }
 
     #[test]

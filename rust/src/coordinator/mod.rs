@@ -5,10 +5,12 @@
 //!   replaced the closed `Backend` enum: [`NativeBackend`],
 //!   [`PjrtBackend`], or any closure/custom impl building a
 //!   `Box<dyn Sketcher>` on the worker thread.
-//! * [`service`] — the online hashing service: bounded-queue submission
-//!   (backpressure), dynamic batching (size/deadline), backend-agnostic
-//!   execution, per-request latency metrics.
-//! * [`router`] — least-loaded routing over replicated services.
+//! * [`service`] — the online hashing/scoring service: bounded-queue
+//!   submission (backpressure), dynamic batching (size/deadline),
+//!   backend-agnostic hashing OR fused `serve::Scorer` classification
+//!   (score mode), per-request latency metrics + histogram.
+//! * [`router`] — least-loaded routing over replicated services (hash
+//!   or score mode).
 //! * [`pipeline`] — the offline batch pipeline: hash a dataset, encode
 //!   0-bit CWS one-hot codes (`features::CodeMatrix`, with CSR export
 //!   for IO), train/evaluate the linear model, and export weights in
@@ -23,10 +25,10 @@ pub mod router;
 pub mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, PjrtSketcher, SketcherBackend};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 pub use pipeline::{
     export_scorer_weights, hash_dataset, hash_matrix_native, hashed_linear_accuracy,
     hashed_linear_sweep, sketch_matrix, HashedDataset, PipelineConfig,
 };
-pub use router::{RoutedResponse, Router};
-pub use service::{HashResponse, HashService, ServiceConfig, SubmitError};
+pub use router::{Routed, RoutedResponse, RoutedScore, Router};
+pub use service::{HashResponse, HashService, ScoreResponse, ServiceConfig, SubmitError};

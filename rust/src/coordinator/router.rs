@@ -12,9 +12,11 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use crate::serve::Scorer;
+
 use super::backend::SketcherBackend;
 use super::metrics::Snapshot;
-use super::service::{HashResponse, HashService, ServiceConfig, SubmitError};
+use super::service::{HashResponse, HashService, ScoreResponse, ServiceConfig, SubmitError};
 
 pub struct Router {
     replicas: Vec<HashService>,
@@ -44,8 +46,35 @@ impl Router {
         Ok(Router { replicas, outstanding, rr: AtomicU64::new(0) })
     }
 
+    /// Spawn `n` **score-mode** replicas, each owning a clone of the
+    /// fused scorer (its parameter and weight slabs) — the
+    /// classification front door: `score_blocking` returns decisions +
+    /// label. Clones are bit-identical, so replicas stay
+    /// interchangeable.
+    pub fn start_scoring(n: usize, cfg: ServiceConfig, scorer: Scorer) -> Result<Router, String> {
+        assert!(n > 0);
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n - 1 {
+            replicas.push(
+                HashService::start_scoring(cfg.clone(), scorer.clone())
+                    .map_err(|e| format!("replica {i}: {e}"))?,
+            );
+        }
+        replicas.push(
+            HashService::start_scoring(cfg, scorer)
+                .map_err(|e| format!("replica {}: {e}", n - 1))?,
+        );
+        let outstanding = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        Ok(Router { replicas, outstanding, rr: AtomicU64::new(0) })
+    }
+
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// `Some(n_classes)` when the replicas are score-mode services.
+    pub fn n_classes(&self) -> Option<usize> {
+        self.replicas[0].n_classes()
     }
 
     /// Pick the replica with the fewest outstanding requests (ties by
@@ -66,22 +95,22 @@ impl Router {
         best
     }
 
-    /// Route one request. The outstanding counter for the chosen replica
-    /// is decremented when the response is received (wrapped receiver).
-    pub fn submit(
+    /// The one routing body: try the least-loaded pick, then fail over
+    /// the rest; only a fully-full fleet rejects. The outstanding
+    /// counter for the accepting replica is incremented here and
+    /// decremented by [`Routed::wait`].
+    fn route<R>(
         &self,
-        id: u64,
-        vector: Vec<f32>,
-    ) -> Result<RoutedResponse<'_>, SubmitError> {
+        try_submit: impl Fn(&HashService) -> Result<mpsc::Receiver<R>, SubmitError>,
+    ) -> Result<Routed<'_, R>, SubmitError> {
         let n = self.replicas.len();
         let first = self.pick();
-        // Try the least-loaded pick, then fall over the rest.
         for off in 0..n {
             let i = (first + off) % n;
-            match self.replicas[i].submit(id, vector.clone()) {
+            match try_submit(&self.replicas[i]) {
                 Ok(rx) => {
                     self.outstanding[i].fetch_add(1, Ordering::Relaxed);
-                    return Ok(RoutedResponse { router: self, replica: i, rx });
+                    return Ok(Routed { router: self, replica: i, rx });
                 }
                 Err(SubmitError::QueueFull) => continue,
                 Err(e) => return Err(e),
@@ -90,9 +119,32 @@ impl Router {
         Err(SubmitError::QueueFull)
     }
 
-    pub fn hash_blocking(&self, id: u64, vector: Vec<f32>) -> Result<HashResponse, SubmitError> {
+    /// Route one hashing request. Borrows the vector: an owned copy is
+    /// made only per submit attempt.
+    pub fn submit(&self, id: u64, vector: &[f32]) -> Result<RoutedResponse<'_>, SubmitError> {
+        self.route(|svc| svc.submit(id, vector.to_vec()))
+    }
+
+    /// Route one scoring request (score-mode routers only) — same
+    /// least-loaded policy and failover as [`Router::submit`].
+    pub fn submit_score(&self, id: u64, vector: &[f32]) -> Result<RoutedScore<'_>, SubmitError> {
+        self.route(|svc| svc.submit_score(id, vector))
+    }
+
+    pub fn hash_blocking(&self, id: u64, vector: &[f32]) -> Result<HashResponse, SubmitError> {
         let routed = self.submit(id, vector)?;
         routed.wait()
+    }
+
+    /// Blocking scoring through the router: decisions + argmax label.
+    pub fn score_blocking(&self, id: u64, vector: &[f32]) -> Result<ScoreResponse, SubmitError> {
+        let routed = self.submit_score(id, vector)?;
+        routed.wait()
+    }
+
+    /// Blocking classification through the router: label only.
+    pub fn classify_blocking(&self, id: u64, vector: &[f32]) -> Result<i32, SubmitError> {
+        Ok(self.score_blocking(id, vector)?.label)
     }
 
     /// Aggregate metrics across replicas.
@@ -111,19 +163,27 @@ impl Router {
     }
 }
 
-/// A response handle that keeps the router's load accounting correct.
-pub struct RoutedResponse<'r> {
+/// A response handle that keeps the router's load accounting correct:
+/// one type for both response kinds — [`RoutedResponse`] (hash) and
+/// [`RoutedScore`] (score) are aliases.
+pub struct Routed<'r, R> {
     router: &'r Router,
     replica: usize,
-    rx: mpsc::Receiver<HashResponse>,
+    rx: mpsc::Receiver<R>,
 }
 
-impl<'r> RoutedResponse<'r> {
+/// Hash-mode response handle.
+pub type RoutedResponse<'r> = Routed<'r, HashResponse>;
+
+/// Score-mode response handle.
+pub type RoutedScore<'r> = Routed<'r, ScoreResponse>;
+
+impl<'r, R> Routed<'r, R> {
     pub fn replica(&self) -> usize {
         self.replica
     }
 
-    pub fn wait(self) -> Result<HashResponse, SubmitError> {
+    pub fn wait(self) -> Result<R, SubmitError> {
         let res = self.rx.recv().map_err(|_| SubmitError::ShuttingDown);
         self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
         res
@@ -154,10 +214,38 @@ mod tests {
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         let want = CwsHasher::new(11, 8).hash_dense(&v);
         for i in 0..30 {
-            let resp = router.hash_blocking(i, v.clone()).unwrap();
+            let resp = router.hash_blocking(i, &v).unwrap();
             assert_eq!(resp.samples, want, "request {i}");
         }
         assert_eq!(router.total_requests(), 30);
+        assert!(router.n_classes().is_none());
+        router.shutdown();
+    }
+
+    #[test]
+    fn scoring_replicas_agree_with_direct_scorer() {
+        use crate::data::synth::{generate, SynthConfig};
+        use crate::prelude::Pipeline;
+        let ds = generate("letter", SynthConfig { seed: 6, n_train: 90, n_test: 30 }).unwrap();
+        let scfg = ServiceConfig { seed: 3, k: 16, dim: 16, ..cfg() };
+        let mut pipe = Pipeline::builder().seed(3).samples(16).i_bits(4).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let scorer = pipe.scorer(16).unwrap();
+        let direct = scorer.clone();
+        let router = Router::start_scoring(2, scfg, scorer).unwrap();
+        assert_eq!(router.n_classes(), Some(direct.n_classes()));
+        let test = ds.test_x.to_dense();
+        let mut scratch = direct.scratch();
+        for i in 0..test.rows() {
+            let resp = router.score_blocking(i as u64, test.row(i)).unwrap();
+            assert_eq!(resp.label, direct.predict_dense(test.row(i), &mut scratch), "row {i}");
+            assert_eq!(resp.decisions.len(), direct.n_classes());
+            assert_eq!(
+                router.classify_blocking(1000 + i as u64, test.row(i)).unwrap(),
+                resp.label
+            );
+        }
+        assert!(router.total_requests() >= 2 * test.rows() as u64);
         router.shutdown();
     }
 
@@ -168,7 +256,7 @@ mod tests {
         // Submit a burst without waiting, then collect.
         let mut handles = Vec::new();
         for i in 0..40 {
-            handles.push(router.submit(i, v.clone()).unwrap());
+            handles.push(router.submit(i, &v).unwrap());
         }
         let mut used = [0usize; 4];
         for h in handles {
@@ -191,7 +279,7 @@ mod tests {
         let mut rejected = 0;
         let mut handles = Vec::new();
         for i in 0..50 {
-            match router.submit(i, v.clone()) {
+            match router.submit(i, &v) {
                 Ok(h) => {
                     accepted += 1;
                     handles.push(h);
@@ -215,7 +303,7 @@ mod tests {
         let router = Router::start(2, cfg(), |_| NativeBackend).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
         for i in 0..10 {
-            router.hash_blocking(i, v.clone()).unwrap();
+            router.hash_blocking(i, &v).unwrap();
         }
         let snaps = router.snapshot();
         assert_eq!(snaps.len(), 2);

@@ -1,29 +1,36 @@
-//! The hashing service: the deployable L3 piece the paper's §5 pitch
-//! implies ("a tool for feature engineering … extremely efficient and
-//! scalable linear methods").
+//! The hashing/scoring service: the deployable L3 piece the paper's §5
+//! pitch implies ("a tool for feature engineering … extremely efficient
+//! and scalable linear methods").
 //!
-//! Shape: callers submit single nonnegative vectors and receive their
-//! CWS samples asynchronously. Internally:
+//! Shape: callers submit single nonnegative vectors and receive either
+//! their CWS samples (**hash mode**) or per-class decisions + argmax
+//! label (**score mode** — the fused `serve::Scorer` runs
+//! sketch→code→score in one pass on the worker). Internally:
 //!
 //! ```text
-//! submit() ─► bounded queue (backpressure) ─► dynamic batcher
-//!             (max batch size OR deadline) ─► Box<dyn Sketcher>
-//!                 built on the worker thread by the SketcherBackend
-//!                 factory (NativeBackend, PjrtBackend, or any custom
-//!                 impl — the coordinator never enumerates backends)
-//!             ─► per-request responses (mpsc)
+//! submit()/submit_score() ─► bounded queue (backpressure)
+//!   ─► dynamic batcher (max batch size OR deadline)
+//!   ─► hash mode:  Box<dyn Sketcher> built on the worker thread by
+//!                  the SketcherBackend factory
+//!      score mode: serve::Scorer + one reusable Scratch arena
+//!                  (zero per-request sketch/code/decision allocation
+//!                  on the worker — only the response Vec leaves)
+//!   ─► per-request responses (mpsc)
 //! ```
 //!
 //! The built-in backends draw the same counter-based randomness, so
 //! which one a deployment uses is a pure throughput/operational choice
-//! (validated by `rust/tests/pipeline_integration.rs`).
+//! (validated by `rust/tests/pipeline_integration.rs`). A score-mode
+//! service answers plain hash submits too, from the scorer's own
+//! parameter slabs.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cws::CwsSample;
+use crate::cws::{CwsSample, SketchScratch};
+use crate::serve::{argmax, Scorer, Scratch};
 use crate::sketch::Sketcher;
 
 use super::backend::SketcherBackend;
@@ -65,17 +72,60 @@ pub struct HashResponse {
     pub latency: Duration,
 }
 
+/// Score-mode response: per-class decision values and the argmax label
+/// the fused scorer computed — what a classification frontend needs,
+/// with no `CwsSample` stream on the wire.
+pub struct ScoreResponse {
+    pub id: u64,
+    /// Per-class decision values (`len == n_classes`).
+    pub decisions: Vec<f64>,
+    /// `argmax(decisions)` with `LinearOvR::predict_on` semantics.
+    pub label: i32,
+    /// Total time from submit to completion.
+    pub latency: Duration,
+}
+
+/// Where a request's answer goes: hash submits want samples, score
+/// submits want decisions. One queue carries both so the batcher and
+/// backpressure logic stay single-path.
+enum Responder {
+    Hash(mpsc::Sender<HashResponse>),
+    Score(mpsc::Sender<ScoreResponse>),
+}
+
 struct Request {
     id: u64,
     vector: Vec<f32>,
     submitted: Instant,
-    resp: mpsc::Sender<HashResponse>,
+    resp: Responder,
 }
 
 enum Msg {
     Req(Request),
     Flush,
     Shutdown,
+}
+
+/// Score-mode worker state: the fused scorer plus its long-lived
+/// scratch arenas — the "pooled" buffers that make steady-state
+/// per-request work allocation-free on the worker.
+struct ScoreExec {
+    scorer: Scorer,
+    scratch: Scratch,
+    /// Decision staging reused across requests; each response copies it
+    /// into its own (n_classes-sized) Vec.
+    staging: Vec<f64>,
+    /// Sketch scratch + sample staging for hash submits served from
+    /// the scorer's engine.
+    sketch: SketchScratch,
+    samples: Vec<CwsSample>,
+}
+
+/// What the worker thread executes: a backend-built sketcher (hash
+/// mode) or the fused scorer state (score mode).
+enum WorkerExec {
+    Hash(Box<dyn Sketcher>),
+    Score(Box<ScoreExec>),
 }
 
 /// Handle to the running service.
@@ -85,6 +135,8 @@ pub struct HashService {
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
     cfg: ServiceConfig,
+    /// `Some(n_classes)` when started in score mode.
+    scoring: Option<usize>,
 }
 
 #[derive(Debug)]
@@ -92,6 +144,8 @@ pub enum SubmitError {
     QueueFull,
     ShuttingDown,
     BadInput(String),
+    /// `submit_score` on a service started in hash mode.
+    NotScoring,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -100,6 +154,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull => write!(f, "queue full (backpressure)"),
             SubmitError::ShuttingDown => write!(f, "service shutting down"),
             SubmitError::BadInput(s) => write!(f, "bad input: {s}"),
+            SubmitError::NotScoring => write!(f, "service has no scorer (hash mode)"),
         }
     }
 }
@@ -133,7 +188,7 @@ impl HashService {
                         return;
                     }
                 };
-                run_worker(cfg2, sketcher, rx, m2);
+                run_worker(cfg2, WorkerExec::Hash(sketcher), rx, m2);
             })
             .map_err(|e| format!("spawn service worker: {e}"))?;
         match ready_rx.recv() {
@@ -147,7 +202,56 @@ impl HashService {
                 return Err(format!("{label} backend worker died during startup"));
             }
         }
-        Ok(HashService { tx, worker: Some(worker), metrics, stopping, cfg })
+        Ok(HashService { tx, worker: Some(worker), metrics, stopping, cfg, scoring: None })
+    }
+
+    /// Start in **score mode**: the worker owns the fused
+    /// [`Scorer`] (and one long-lived scratch arena) and answers
+    /// `submit_score` with per-class decisions + argmax label. Plain
+    /// `submit` hashing requests are served from the scorer's own
+    /// parameter slabs. The scorer's `(seed, k, dim)` must match the
+    /// service configuration — a mismatched deployment fails here, not
+    /// per request.
+    pub fn start_scoring(cfg: ServiceConfig, scorer: Scorer) -> Result<HashService, String> {
+        if scorer.k() != cfg.k {
+            return Err(format!("scorer k {} != service k {}", scorer.k(), cfg.k));
+        }
+        if scorer.dim() != cfg.dim {
+            return Err(format!("scorer dim {} != service dim {}", scorer.dim(), cfg.dim));
+        }
+        if scorer.seed() != cfg.seed {
+            return Err(format!("scorer seed {} != service seed {}", scorer.seed(), cfg.seed));
+        }
+        let n_classes = scorer.n_classes();
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let m2 = Arc::clone(&metrics);
+        let cfg2 = cfg.clone();
+        let worker = std::thread::Builder::new()
+            .name("minmax-score-service".into())
+            .spawn(move || {
+                let scratch = scorer.scratch();
+                let staging = vec![0.0f64; scorer.n_classes()];
+                let samples = vec![CwsSample { i_star: u32::MAX, t_star: 0 }; scorer.k()];
+                let exec = WorkerExec::Score(Box::new(ScoreExec {
+                    scorer,
+                    scratch,
+                    staging,
+                    sketch: SketchScratch::new(),
+                    samples,
+                }));
+                run_worker(cfg2, exec, rx, m2);
+            })
+            .map_err(|e| format!("spawn score worker: {e}"))?;
+        Ok(HashService {
+            tx,
+            worker: Some(worker),
+            metrics,
+            stopping,
+            cfg,
+            scoring: Some(n_classes),
+        })
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -158,13 +262,12 @@ impl HashService {
         &self.cfg
     }
 
-    /// Submit one vector; the response arrives on the returned channel.
-    /// Fails fast with `QueueFull` under backpressure.
-    pub fn submit(
-        &self,
-        id: u64,
-        vector: Vec<f32>,
-    ) -> Result<mpsc::Receiver<HashResponse>, SubmitError> {
+    /// `Some(n_classes)` when this service was started in score mode.
+    pub fn n_classes(&self) -> Option<usize> {
+        self.scoring
+    }
+
+    fn validate(&self, vector: &[f32]) -> Result<(), SubmitError> {
         if self.stopping.load(Ordering::Relaxed) {
             return Err(SubmitError::ShuttingDown);
         }
@@ -181,11 +284,13 @@ impl HashService {
         if vector.iter().any(|&v| v < 0.0 || !v.is_finite()) {
             return Err(SubmitError::BadInput("negative or non-finite entry".into()));
         }
-        let (rtx, rrx) = mpsc::channel();
-        let req = Request { id, vector, submitted: Instant::now(), resp: rtx };
+        Ok(())
+    }
+
+    fn enqueue(&self, req: Request) -> Result<(), SubmitError> {
         self.metrics.record_request();
         match self.tx.try_send(Msg::Req(req)) {
-            Ok(()) => Ok(rrx),
+            Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
                 Err(SubmitError::QueueFull)
@@ -194,10 +299,63 @@ impl HashService {
         }
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn hash_blocking(&self, id: u64, vector: Vec<f32>) -> Result<HashResponse, SubmitError> {
-        let rx = self.submit(id, vector)?;
+    /// Submit one vector for hashing; the response arrives on the
+    /// returned channel. Fails fast with `QueueFull` under
+    /// backpressure.
+    pub fn submit(
+        &self,
+        id: u64,
+        vector: Vec<f32>,
+    ) -> Result<mpsc::Receiver<HashResponse>, SubmitError> {
+        self.validate(&vector)?;
+        let (rtx, rrx) = mpsc::channel();
+        self.enqueue(Request {
+            id,
+            vector,
+            submitted: Instant::now(),
+            resp: Responder::Hash(rtx),
+        })?;
+        Ok(rrx)
+    }
+
+    /// Submit one vector for fused scoring (score-mode services only):
+    /// the response carries per-class decisions and the argmax label.
+    pub fn submit_score(
+        &self,
+        id: u64,
+        vector: &[f32],
+    ) -> Result<mpsc::Receiver<ScoreResponse>, SubmitError> {
+        if self.scoring.is_none() {
+            return Err(SubmitError::NotScoring);
+        }
+        self.validate(vector)?;
+        let (rtx, rrx) = mpsc::channel();
+        self.enqueue(Request {
+            id,
+            vector: vector.to_vec(),
+            submitted: Instant::now(),
+            resp: Responder::Score(rtx),
+        })?;
+        Ok(rrx)
+    }
+
+    /// Blocking convenience: submit for hashing and wait. Borrows the
+    /// vector — the one owned copy is made here, not by every caller.
+    pub fn hash_blocking(&self, id: u64, vector: &[f32]) -> Result<HashResponse, SubmitError> {
+        let rx = self.submit(id, vector.to_vec())?;
         rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    /// Blocking convenience: submit for scoring and wait.
+    pub fn score_blocking(&self, id: u64, vector: &[f32]) -> Result<ScoreResponse, SubmitError> {
+        let rx = self.submit_score(id, vector)?;
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    /// Blocking classification: submit for scoring, return only the
+    /// argmax label.
+    pub fn classify_blocking(&self, id: u64, vector: &[f32]) -> Result<i32, SubmitError> {
+        Ok(self.score_blocking(id, vector)?.label)
     }
 
     /// Ask the batcher to flush a partial batch immediately.
@@ -224,14 +382,17 @@ impl Drop for HashService {
     }
 }
 
-/// The batching loop. Backend-agnostic: whatever the factory built, the
-/// worker only sees `dyn Sketcher` — batched backends override
-/// `sketch_dense_batch` (the native engine shards the batch across
-/// `MINMAX_THREADS` scoped threads; the PJRT impl pads/chunks to its
-/// fixed B internally).
+/// The batching loop. Hash mode is backend-agnostic: whatever the
+/// factory built, the worker only sees `dyn Sketcher` — batched
+/// backends override `sketch_dense_batch` (the native engine shards the
+/// batch across `MINMAX_THREADS` scoped threads; the PJRT impl
+/// pads/chunks to its fixed B internally). Score mode runs the fused
+/// scorer per request against the worker's long-lived scratch arena —
+/// no sketch/code/decision allocation per request; only the response's
+/// own decisions `Vec` is fresh.
 fn run_worker(
     cfg: ServiceConfig,
-    sketcher: Box<dyn Sketcher>,
+    mut exec: WorkerExec,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) {
@@ -278,6 +439,17 @@ fn run_worker(
             for r in &batch {
                 metrics.record_queue_wait_ms(r.submitted.elapsed().as_secs_f64() * 1e3);
             }
+            run_batch(&mut exec, &batch, &metrics);
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+fn run_batch(exec: &mut WorkerExec, batch: &[Request], metrics: &Metrics) {
+    match exec {
+        WorkerExec::Hash(sketcher) => {
             let rows: Vec<&[f32]> = batch.iter().map(|r| r.vector.as_slice()).collect();
             let sketched = sketcher.sketch_dense_batch(&rows);
             // Hard contract on third-party backends: one output per
@@ -291,19 +463,51 @@ fn run_worker(
                 batch.len()
             );
             for (req, samples) in batch.iter().zip(sketched) {
-                respond(req, samples, &metrics);
+                match &req.resp {
+                    Responder::Hash(_) => respond_hash(req, samples, metrics),
+                    // submit_score is rejected on hash-mode services.
+                    Responder::Score(_) => unreachable!("score request on hash worker"),
+                }
             }
         }
-        if shutdown {
-            break;
+        WorkerExec::Score(state) => {
+            let ScoreExec { scorer, scratch, staging, sketch, samples } = &mut **state;
+            for req in batch {
+                match &req.resp {
+                    Responder::Score(tx) => {
+                        scorer.score_dense_into(&req.vector, scratch, staging);
+                        let label = argmax(staging);
+                        let latency = req.submitted.elapsed();
+                        metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
+                        let _ = tx.send(ScoreResponse {
+                            id: req.id,
+                            decisions: staging.clone(),
+                            label,
+                            latency,
+                        });
+                    }
+                    // Hash submits on a score-mode service ride the
+                    // scorer's own parameter slabs (note: the scorer
+                    // hashes the RAW vector — its scaling stage applies
+                    // to scoring only).
+                    Responder::Hash(_) => {
+                        scorer.engine().sketch_dense_with(&req.vector, sketch, samples);
+                        respond_hash(req, samples.clone(), metrics);
+                    }
+                }
+            }
         }
     }
 }
 
-fn respond(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
+fn respond_hash(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
     let latency = req.submitted.elapsed();
     metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
-    let _ = req.resp.send(HashResponse { id: req.id, samples, latency });
+    let tx = match &req.resp {
+        Responder::Hash(tx) => tx,
+        Responder::Score(_) => unreachable!("hash response to score responder"),
+    };
+    let _ = tx.send(HashResponse { id: req.id, samples, latency });
 }
 
 #[cfg(test)]
@@ -360,7 +564,7 @@ mod tests {
         };
         let svc = HashService::start(c, factory).unwrap();
         let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
-        let resp = svc.hash_blocking(1, v.clone()).unwrap();
+        let resp = svc.hash_blocking(1, &v).unwrap();
         let want = crate::sketch::Sketcher::sketch_dense(
             &crate::sketch::MinwiseSketcher::new(seed, 8),
             &v,
@@ -429,11 +633,61 @@ mod tests {
     #[test]
     fn hash_blocking_roundtrip() {
         let svc = HashService::start(cfg(8, 8), NativeBackend).unwrap();
-        let resp = svc.hash_blocking(7, vec![1.0; 8]).unwrap();
+        let resp = svc.hash_blocking(7, &[1.0; 8]).unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.samples.len(), 8);
         assert!(resp.latency.as_secs_f64() >= 0.0);
+        // Hash-mode services have no scorer.
+        assert!(svc.n_classes().is_none());
+        assert!(matches!(svc.submit_score(1, &[1.0; 8]), Err(SubmitError::NotScoring)));
         svc.shutdown();
+    }
+
+    fn demo_scorer(seed: u64, k: usize, dim: usize) -> crate::serve::Scorer {
+        use crate::data::synth::{generate, SynthConfig};
+        use crate::prelude::Pipeline;
+        let ds = generate("letter", SynthConfig { seed: 2, n_train: 90, n_test: 30 }).unwrap();
+        assert_eq!(ds.dim(), dim, "demo scorer is sized for the letter synth dims");
+        let mut pipe =
+            Pipeline::builder().seed(seed).samples(k).i_bits(4).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        pipe.scorer(dim).unwrap()
+    }
+
+    #[test]
+    fn score_mode_matches_direct_scorer() {
+        let c = cfg(16, 16);
+        let seed = c.seed;
+        let scorer = demo_scorer(seed, 16, 16);
+        let direct = scorer.clone();
+        let svc = HashService::start_scoring(c, scorer).unwrap();
+        assert_eq!(svc.n_classes(), Some(direct.n_classes()));
+        let inputs = vecs(12, 16, 9);
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        for (i, v) in inputs.iter().enumerate() {
+            let resp = svc.score_blocking(i as u64, v).unwrap();
+            direct.score_dense_into(v, &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "request {i}");
+            assert_eq!(resp.label, crate::serve::argmax(&want));
+            assert_eq!(svc.classify_blocking(100 + i as u64, v).unwrap(), resp.label);
+        }
+        // Hash submits are served from the scorer's own slabs.
+        let hashed = svc.hash_blocking(1000, &inputs[0]).unwrap();
+        assert_eq!(hashed.samples, direct.engine().sketch_dense(&inputs[0]));
+        assert!(svc.metrics().snapshot().requests > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn score_mode_validates_scorer_shape() {
+        let scorer = demo_scorer(11, 16, 16);
+        let err = HashService::start_scoring(cfg(8, 16), scorer).unwrap_err();
+        assert!(err.contains("scorer k"), "{err}");
+        let scorer = demo_scorer(11, 16, 16);
+        let bad_seed = ServiceConfig { seed: 999, ..cfg(16, 16) };
+        let err = HashService::start_scoring(bad_seed, scorer).unwrap_err();
+        assert!(err.contains("seed"), "{err}");
     }
 
     #[test]

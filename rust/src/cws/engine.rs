@@ -82,6 +82,7 @@ pub fn fastmath_accuracy_ok() -> bool {
 /// sketching path in the crate now runs. `best_a` carries the running
 /// minima, `best_i`/`best_t` the argmin payloads; updates are
 /// conditional selects the compiler can vectorize, not branches.
+#[derive(Default)]
 struct Argmin {
     best_a: Vec<f64>,
     best_i: Vec<u32>,
@@ -89,8 +90,16 @@ struct Argmin {
 }
 
 impl Argmin {
-    fn new(k: usize) -> Self {
-        Self { best_a: vec![f64::INFINITY; k], best_i: vec![u32::MAX; k], best_t: vec![0.0; k] }
+    /// Re-arm the accumulators for a fresh row of `k` samples. `clear` +
+    /// `resize` reuses the existing capacity, so a long-lived `Argmin`
+    /// (inside a [`SketchScratch`]) allocates only on its first use.
+    fn reset(&mut self, k: usize) {
+        self.best_a.clear();
+        self.best_a.resize(k, f64::INFINITY);
+        self.best_i.clear();
+        self.best_i.resize(k, u32::MAX);
+        self.best_t.clear();
+        self.best_t.resize(k, 0.0);
     }
 
     /// Exact-math update for one nonzero: byte-identical arithmetic to
@@ -161,28 +170,97 @@ impl Argmin {
     }
 }
 
+/// Reusable per-row sketching scratch: the nonzero gather buffers
+/// (`indices`, `ln_u`), the [`Argmin`] accumulators, and the lazy
+/// path's per-dimension parameter buffers. One `SketchScratch` held by
+/// a caller (a serving thread, a batch chunk worker) makes every
+/// subsequent `*_with` sketch call allocation-free in steady state —
+/// the buffers only grow, never shrink, and `clear`/`resize` reuse
+/// capacity. The scratch carries no row state between calls: using a
+/// shared scratch is bit-identical to a fresh one per row (pinned by
+/// the engine tests and `rust/tests/serve_parity.rs`).
+#[derive(Default)]
+pub struct SketchScratch {
+    indices: Vec<u32>,
+    ln_u: Vec<f64>,
+    acc: Argmin,
+    /// Lazy-path per-dimension parameter buffers (k-wide).
+    r: Vec<f64>,
+    c: Vec<f64>,
+    beta: Vec<f64>,
+}
+
+impl SketchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Loop-inverted lazy sampling: parameters derived on the fly from
 /// `(seed, j, i)` (no materialization, any index range), accumulated
 /// through the same [`Argmin`] kernel as the materialized paths. This is
 /// what [`crate::cws::CwsHasher`] runs; output is bit-identical to the
 /// pre-refactor per-sample loop.
 pub fn sample_lazy_into(seed: u64, k: usize, indices: &[u32], ln_u: &[f64], out: &mut [CwsSample]) {
+    let mut scratch = SketchScratch::new();
+    let SketchScratch { acc, r, c, beta, .. } = &mut scratch;
+    sample_lazy_core(seed, k, indices, ln_u, acc, r, c, beta, out);
+}
+
+/// Lazy-sample a sparse row with caller-owned scratch: `ln(v)` is
+/// cached into the scratch (exact libm math — the lazy path never uses
+/// fastmath) and the argmin / parameter buffers are reused across rows
+/// instead of allocated per call.
+pub fn sample_lazy_sparse_with(
+    seed: u64,
+    k: usize,
+    row: SparseRow<'_>,
+    s: &mut SketchScratch,
+    out: &mut [CwsSample],
+) {
+    assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
+    s.ln_u.clear();
+    s.ln_u.extend(row.values.iter().map(|&v| (v as f64).ln()));
+    // Field-disjoint borrows: ln_u is read, acc/r/c/beta are written.
+    let SketchScratch { ln_u, acc, r, c, beta, .. } = s;
+    sample_lazy_core(seed, k, row.indices, ln_u, acc, r, c, beta, out);
+}
+
+/// The shared lazy-sampling body: per-dimension parameter scratch
+/// (`r`, `c`, `beta`) refilled for each nonzero — the derivation cost
+/// (6 mix64 + 2 ln per cell) is identical to the lazy loop it replaced;
+/// only the accumulation order changed.
+#[allow(clippy::too_many_arguments)]
+fn sample_lazy_core(
+    seed: u64,
+    k: usize,
+    indices: &[u32],
+    ln_u: &[f64],
+    acc: &mut Argmin,
+    r: &mut Vec<f64>,
+    c: &mut Vec<f64>,
+    beta: &mut Vec<f64>,
+    out: &mut [CwsSample],
+) {
     assert_eq!(indices.len(), ln_u.len(), "indices/ln_u length mismatch");
     assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
     assert_eq!(out.len(), k, "output slot must hold k samples");
-    let mut acc = Argmin::new(k);
-    // Per-dimension parameter scratch, refilled for each nonzero: the
-    // derivation cost (6 mix64 + 2 ln per cell) is identical to the lazy
-    // loop it replaces; only the accumulation order changed.
-    let (mut r, mut c, mut beta) = (vec![0.0f64; k], vec![0.0f64; k], vec![0.0f64; k]);
+    acc.reset(k);
+    r.clear();
+    r.resize(k, 0.0);
+    c.clear();
+    c.resize(k, 0.0);
+    beta.clear();
+    beta.resize(k, 0.0);
     for (&i, &lnu) in indices.iter().zip(ln_u) {
-        for (j, ((rj, cj), bj)) in r.iter_mut().zip(&mut c).zip(&mut beta).enumerate() {
+        for (j, ((rj, cj), bj)) in r.iter_mut().zip(c.iter_mut()).zip(beta.iter_mut()).enumerate()
+        {
             let (rr, cc, bb) = params_at(seed, j as u32, i);
             *rj = rr;
             *cj = cc;
             *bj = bb;
         }
-        acc.update_exact(i, lnu, &r, &c, &beta);
+        acc.update_exact(i, lnu, r, c, beta);
     }
     acc.write(out);
 }
@@ -200,7 +278,9 @@ pub fn sample_lazy(seed: u64, k: usize, indices: &[u32], ln_u: &[f64]) -> Vec<Cw
 /// and runs every row through the shared loop-inverted [`Argmin`]
 /// kernel. Construct once per configuration and reuse across rows —
 /// facades: [`crate::cws::CwsHasher::dense_batch`],
-/// [`crate::cws::DenseBatchHasher`].
+/// [`crate::cws::DenseBatchHasher`]. `Clone` duplicates the slabs so
+/// service replicas can each own one engine.
+#[derive(Clone)]
 pub struct SketchEngine {
     seed: u64,
     k: usize,
@@ -306,11 +386,23 @@ impl SketchEngine {
     /// `< dim`) and cached `ln(uᵢ)` values, writing k samples into
     /// `out`. Outer loop over nonzeros, inner loop over samples.
     pub fn sketch_indices_into(&self, indices: &[u32], ln_u: &[f64], out: &mut [CwsSample]) {
+        let mut acc = Argmin::default();
+        self.sketch_indices_core(indices, ln_u, &mut acc, out);
+    }
+
+    /// The one argmin loop, against a caller-owned accumulator.
+    fn sketch_indices_core(
+        &self,
+        indices: &[u32],
+        ln_u: &[f64],
+        acc: &mut Argmin,
+        out: &mut [CwsSample],
+    ) {
         assert_eq!(indices.len(), ln_u.len(), "indices/ln_u length mismatch");
         assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
         assert_eq!(out.len(), self.k, "output slot must hold k samples");
         let k = self.k;
-        let mut acc = Argmin::new(k);
+        acc.reset(k);
         for (&i, &lnu) in indices.iter().zip(ln_u) {
             let base = i as usize * k;
             if self.fast {
@@ -340,11 +432,28 @@ impl SketchEngine {
     /// (single pass over the nonzeros), not per `(sample, nonzero)` cell
     /// inside the hot loop.
     pub fn sketch_sparse_into(&self, row: SparseRow<'_>, out: &mut [CwsSample]) {
+        let mut scratch = SketchScratch::new();
+        self.sketch_sparse_with(row, &mut scratch, out);
+    }
+
+    /// [`SketchEngine::sketch_sparse_into`] against caller-owned
+    /// scratch: the `ln(v)` cache and argmin accumulators live in the
+    /// [`SketchScratch`], so a caller that holds one (serving threads,
+    /// batch chunk workers) sketches with zero per-row allocations.
+    /// Output is bit-identical to the allocating entry.
+    pub fn sketch_sparse_with(
+        &self,
+        row: SparseRow<'_>,
+        s: &mut SketchScratch,
+        out: &mut [CwsSample],
+    ) {
         assert!(row.nnz() > 0, "CWS is undefined on the all-zero vector");
         let max = row.indices.iter().copied().max().expect("nonempty row");
         assert!((max as usize) < self.dim, "index {max} out of range for dim {}", self.dim);
-        let ln_u: Vec<f64> = row.values.iter().map(|&v| self.ln(v as f64)).collect();
-        self.sketch_indices_into(row.indices, &ln_u, out);
+        s.ln_u.clear();
+        s.ln_u.extend(row.values.iter().map(|&v| self.ln(v as f64)));
+        let SketchScratch { ln_u, acc, .. } = s;
+        self.sketch_indices_core(row.indices, ln_u, acc, out);
     }
 
     pub fn sketch_sparse(&self, row: SparseRow<'_>) -> Vec<CwsSample> {
@@ -355,17 +464,28 @@ impl SketchEngine {
 
     /// Sketch a dense row (zeros skipped; panics if no positive entry).
     pub fn sketch_dense_into(&self, u: &[f32], out: &mut [CwsSample]) {
+        let mut scratch = SketchScratch::new();
+        self.sketch_dense_with(u, &mut scratch, out);
+    }
+
+    /// [`SketchEngine::sketch_dense_into`] against caller-owned scratch
+    /// (the nonzero gather, `ln(u)` cache, and argmin accumulators all
+    /// reuse the [`SketchScratch`] buffers) — the zero-allocation entry
+    /// the fused serving scorer and the batch chunk loops ride. Output
+    /// is bit-identical to the allocating entry.
+    pub fn sketch_dense_with(&self, u: &[f32], s: &mut SketchScratch, out: &mut [CwsSample]) {
         assert_eq!(u.len(), self.dim, "dimension mismatch");
-        let mut indices: Vec<u32> = Vec::with_capacity(u.len());
-        let mut ln_u: Vec<f64> = Vec::with_capacity(u.len());
+        s.indices.clear();
+        s.ln_u.clear();
         for (i, &ui) in u.iter().enumerate() {
             if ui > 0.0 {
-                indices.push(i as u32);
-                ln_u.push(self.ln(ui as f64));
+                s.indices.push(i as u32);
+                s.ln_u.push(self.ln(ui as f64));
             }
         }
-        assert!(!indices.is_empty(), "CWS is undefined on the all-zero vector");
-        self.sketch_indices_into(&indices, &ln_u, out);
+        assert!(!s.indices.is_empty(), "CWS is undefined on the all-zero vector");
+        let SketchScratch { indices, ln_u, acc, .. } = s;
+        self.sketch_indices_core(indices, ln_u, acc, out);
     }
 
     pub fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
@@ -387,12 +507,14 @@ impl SketchEngine {
 
     /// [`SketchEngine::sketch_rows`] with an explicit thread count
     /// (honored as given — no work-size clamp — so tests and callers
-    /// with better knowledge can force either path).
+    /// with better knowledge can force either path). Each chunk worker
+    /// owns one [`SketchScratch`], so the per-row gather/argmin buffers
+    /// are reused across the chunk instead of allocated per row.
     pub fn sketch_rows_with_threads(&self, rows: &[&[f32]], threads: usize) -> Vec<Vec<CwsSample>> {
         let mut out: Vec<Vec<CwsSample>> =
             rows.iter().map(|_| vec![EMPTY_SAMPLE; self.k]).collect();
-        par_fill_chunks(&mut out, threads, |i, slot| {
-            self.sketch_dense_into(rows[i], slot);
+        par_fill_chunks_ctx(&mut out, threads, SketchScratch::new, |i, slot, scratch| {
+            self.sketch_dense_with(rows[i], scratch, slot);
         });
         out
     }
@@ -417,22 +539,29 @@ pub fn batch_threads(rows: usize, k: usize) -> usize {
     }
 }
 
-/// Shard the per-row fill `fill(row_index, &mut slot)` over contiguous
-/// chunks of the output. Each chunk's `&mut` slice is handed out
-/// exactly once to whichever [`pool::par_claim`] worker steals it, so
-/// the closure writes disjoint memory (the final per-row `Vec`s
-/// directly — no second copy pass) without locks in the inner loop.
-/// ~4 chunks per thread, claimed one at a time, balances ragged row
-/// costs without a static partition.
-fn par_fill_chunks<T: Send, F>(out: &mut [T], threads: usize, fill: F)
+/// Shard the per-row fill `fill(row_index, &mut slot, &mut ctx)` over
+/// contiguous chunks of the output, with one `mk_ctx()` context (e.g. a
+/// [`SketchScratch`] or a serving scratch arena) per claimed chunk so
+/// per-row buffers amortize across the chunk. Each chunk's `&mut`
+/// slice is handed out exactly once to whichever [`pool::par_claim`]
+/// worker steals it, so the closure writes disjoint memory (the final
+/// per-row `Vec`s directly — no second copy pass) without locks in the
+/// inner loop. ~4 chunks per thread, claimed one at a time, balances
+/// ragged row costs without a static partition. The context must not
+/// carry row state between calls (every scratch type here resets per
+/// row), which is what keeps results identical at any thread count.
+pub(crate) fn par_fill_chunks_ctx<T, C, M, F>(out: &mut [T], threads: usize, mk_ctx: M, fill: F)
 where
-    F: Fn(usize, &mut T) + Sync,
+    T: Send,
+    M: Fn() -> C + Sync,
+    F: Fn(usize, &mut T, &mut C) + Sync,
 {
     let n = out.len();
     let threads = threads.max(1);
     if threads <= 1 || n <= 1 {
+        let mut ctx = mk_ctx();
         for (i, slot) in out.iter_mut().enumerate() {
-            fill(i, slot);
+            fill(i, slot, &mut ctx);
         }
         return;
     }
@@ -442,28 +571,31 @@ where
         out.chunks_mut(chunk_rows).map(|c| Mutex::new(Some(c))).collect();
     pool::par_claim(nchunks, threads, |ci| {
         let slab = slots[ci].lock().unwrap().take().expect("chunk claimed twice");
+        let mut ctx = mk_ctx();
         for (off, slot) in slab.iter_mut().enumerate() {
-            fill(ci * chunk_rows + off, slot);
+            fill(ci * chunk_rows + off, slot, &mut ctx);
         }
     });
 }
 
 /// Parallel sketch over a CSR matrix: rows with no nonzeros yield `None`
 /// (hashing is undefined there), everything else is sketched by `f` into
-/// its k-wide slot. The shared batching substrate behind the
+/// its k-wide slot, with a per-chunk [`SketchScratch`] so the `ln(v)` /
+/// argmin buffers are reused across each chunk's rows. The shared
+/// batching substrate behind the
 /// [`crate::sketch::Sketcher::sketch_matrix`] impls of both ICWS
 /// facades (lazy `f` for [`crate::cws::CwsHasher`], engine `f` for
 /// [`crate::cws::DenseBatchHasher`]).
 pub fn sketch_csr_with<F>(m: &Csr, k: usize, threads: usize, f: F) -> Vec<Option<Vec<CwsSample>>>
 where
-    F: Fn(SparseRow<'_>, &mut [CwsSample]) + Sync,
+    F: Fn(SparseRow<'_>, &mut SketchScratch, &mut [CwsSample]) + Sync,
 {
     let mut out: Vec<Option<Vec<CwsSample>>> = (0..m.rows())
         .map(|i| if m.row(i).nnz() == 0 { None } else { Some(vec![EMPTY_SAMPLE; k]) })
         .collect();
-    par_fill_chunks(&mut out, threads, |i, slot| {
+    par_fill_chunks_ctx(&mut out, threads, SketchScratch::new, |i, slot, scratch| {
         if let Some(samples) = slot {
-            f(m.row(i), samples);
+            f(m.row(i), scratch, samples);
         }
     });
     out
@@ -543,8 +675,8 @@ mod tests {
         let m = b.finish();
         let e = SketchEngine::new(1, 8, 6);
         for threads in [1usize, 4] {
-            let out = sketch_csr_with(&m, 8, threads, |row, slot| {
-                e.sketch_sparse_into(row, slot);
+            let out = sketch_csr_with(&m, 8, threads, |row, scratch, slot| {
+                e.sketch_sparse_with(row, scratch, slot);
             });
             assert_eq!(out.len(), 3);
             assert_eq!(out[0], Some(e.sketch_sparse(m.row(0))));
@@ -581,6 +713,36 @@ mod tests {
         let v = [1.0f32, 0.0, 2.0, 0.0, 0.5, 0.0, 0.0, 3.0];
         let ln_u: Vec<f64> = [1.0f64, 2.0, 0.5, 3.0].iter().map(|x| x.ln()).collect();
         assert_eq!(e.sketch_dense(&v), sample_lazy(1, 4, &[0, 2, 4, 7], &ln_u));
+    }
+
+    #[test]
+    fn shared_scratch_is_bit_identical_to_fresh_scratch() {
+        // The zero-allocation contract: a SketchScratch reused across
+        // many rows (dense and sparse, exact and fast math, mixed nnz)
+        // must produce exactly what per-row fresh buffers produce.
+        let mut rng = Pcg64::new(23);
+        for fast in [false, true] {
+            let e = SketchEngine::new(13, 24, 32).with_fast_math(fast);
+            let mut shared = SketchScratch::new();
+            let mut lazy_shared = SketchScratch::new();
+            for _ in 0..20 {
+                let v = random_row(&mut rng, 32, rng.uniform());
+                let d = Dense::from_rows(&[&v]);
+                let csr = Csr::from_dense(&d);
+                let mut got = vec![EMPTY_SAMPLE; 24];
+                e.sketch_dense_with(&v, &mut shared, &mut got);
+                assert_eq!(got, e.sketch_dense(&v));
+                e.sketch_sparse_with(csr.row(0), &mut shared, &mut got);
+                assert_eq!(got, e.sketch_sparse(csr.row(0)));
+                if !fast {
+                    // Lazy scratch path too (always exact math).
+                    sample_lazy_sparse_with(13, 24, csr.row(0), &mut lazy_shared, &mut got);
+                    let ln_u: Vec<f64> =
+                        csr.row(0).values.iter().map(|&x| (x as f64).ln()).collect();
+                    assert_eq!(got, sample_lazy(13, 24, csr.row(0).indices, &ln_u));
+                }
+            }
+        }
     }
 
     #[test]

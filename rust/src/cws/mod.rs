@@ -43,7 +43,7 @@ pub mod minwise;
 pub mod sampler;
 pub mod schemes;
 
-pub use engine::SketchEngine;
+pub use engine::{SketchEngine, SketchScratch};
 pub use lsh::{LshConfig, LshIndex};
 pub use minwise::MinwiseHasher;
 pub use sampler::{materialize_params, CwsHasher, CwsSample, DenseBatchHasher};

@@ -20,74 +20,102 @@ pub fn shift_unit(d: &mut Dense) {
     }
 }
 
+/// ℓ₁-normalize one dense row in place (f64 norm over the full row
+/// including zeros, f32 factor, in-place f32 multiply; all-zero rows
+/// untouched). The single source of the per-row arithmetic — both the
+/// matrix transform below and the fused scorer's per-row mirror
+/// (`serve::Scorer`) call this, so their outputs are bit-identical by
+/// construction.
+pub fn l1_scale_row(row: &mut [f32]) {
+    let s: f64 = row.iter().map(|&x| x.abs() as f64).sum();
+    if s > 0.0 {
+        let inv = (1.0 / s) as f32;
+        for v in row {
+            *v *= inv;
+        }
+    }
+}
+
+/// ℓ₂-normalize one dense row in place — see [`l1_scale_row`].
+pub fn l2_scale_row(row: &mut [f32]) {
+    let s: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if s > 0.0 {
+        let inv = (1.0 / s.sqrt()) as f32;
+        for v in row {
+            *v *= inv;
+        }
+    }
+}
+
+/// Binarize one value — the shared kernel of [`binarize_dense`],
+/// [`binarize_csr`], and the serving mirror.
+#[inline]
+pub fn binarize_value(v: f32) -> f32 {
+    if v != 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// The per-row CSR scaling factor for ℓ₁ (stored values only; rows
+/// with zero norm get factor 1.0). Shared by [`l1_normalize_csr`] and
+/// the fused scorer's sparse mirror.
+pub fn csr_row_l1_factor(row: crate::data::sparse::SparseRow<'_>) -> f32 {
+    let s = row.l1_norm();
+    if s > 0.0 {
+        (1.0 / s) as f32
+    } else {
+        1.0
+    }
+}
+
+/// The per-row CSR scaling factor for ℓ₂ — see [`csr_row_l1_factor`].
+pub fn csr_row_l2_factor(row: crate::data::sparse::SparseRow<'_>) -> f32 {
+    let s = row.l2_norm();
+    if s > 0.0 {
+        (1.0 / s) as f32
+    } else {
+        1.0
+    }
+}
+
 /// Row-wise ℓ₁ normalization: each row sums to 1 (rows of all zeros are
 /// left untouched).
 pub fn l1_normalize_dense(d: &mut Dense) {
     for i in 0..d.rows() {
-        let row = d.row_mut(i);
-        let s: f64 = row.iter().map(|&x| x.abs() as f64).sum();
-        if s > 0.0 {
-            let inv = (1.0 / s) as f32;
-            for v in row {
-                *v *= inv;
-            }
-        }
+        l1_scale_row(d.row_mut(i));
     }
 }
 
 /// Row-wise ℓ₂ normalization: each row has unit Euclidean norm.
 pub fn l2_normalize_dense(d: &mut Dense) {
     for i in 0..d.rows() {
-        let row = d.row_mut(i);
-        let s: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        if s > 0.0 {
-            let inv = (1.0 / s.sqrt()) as f32;
-            for v in row {
-                *v *= inv;
-            }
-        }
+        l2_scale_row(d.row_mut(i));
     }
 }
 
 pub fn l1_normalize_csr(m: &mut Csr) {
-    let factors: Vec<f32> = (0..m.rows())
-        .map(|i| {
-            let s = m.row(i).l1_norm();
-            if s > 0.0 {
-                (1.0 / s) as f32
-            } else {
-                1.0
-            }
-        })
-        .collect();
+    let factors: Vec<f32> = (0..m.rows()).map(|i| csr_row_l1_factor(m.row(i))).collect();
     m.scale_rows(&factors);
 }
 
 pub fn l2_normalize_csr(m: &mut Csr) {
-    let factors: Vec<f32> = (0..m.rows())
-        .map(|i| {
-            let s = m.row(i).l2_norm();
-            if s > 0.0 {
-                (1.0 / s) as f32
-            } else {
-                1.0
-            }
-        })
-        .collect();
+    let factors: Vec<f32> = (0..m.rows()).map(|i| csr_row_l2_factor(m.row(i))).collect();
     m.scale_rows(&factors);
 }
 
 /// Replace every nonzero with 1.0 (resemblance-kernel regime).
 pub fn binarize_dense(d: &mut Dense) {
     for v in d.data_mut() {
-        *v = if *v != 0.0 { 1.0 } else { 0.0 };
+        *v = binarize_value(*v);
     }
 }
 
 /// Sparse binarization: stored values become 1.0 in place — the
 /// structure (and memory) is untouched, no densification.
 pub fn binarize_csr(m: &mut Csr) {
-    m.map_values(|v| if v != 0.0 { 1.0 } else { 0.0 });
+    m.map_values(binarize_value);
 }
 
 /// Clamp negatives to zero (the kernels require nonnegative input).

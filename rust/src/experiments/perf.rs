@@ -109,7 +109,7 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
     let n = 2000;
     let start = Instant::now();
     for i in 0..n {
-        let _ = svc.hash_blocking(i, v.clone()).unwrap();
+        let _ = svc.hash_blocking(i, &v).unwrap();
     }
     let elapsed = start.elapsed().as_secs_f64();
     let snap = svc.metrics().snapshot();
@@ -120,6 +120,33 @@ pub fn run_perf(with_pjrt: bool) -> PerfReport {
         .set("service_p50_ms", snap.latency_p50_ms)
         .set("service_p99_ms", snap.latency_p99_ms);
     svc.shutdown();
+
+    // --- Fused serving scorer: single-row latency on the zero-alloc
+    // path (see benches/bench_serve.rs for the full baseline/fused
+    // comparison and the allocation count).
+    {
+        use crate::data::synth::{generate, SynthConfig};
+        use crate::pipeline::Pipeline;
+        let ds = generate("letter", SynthConfig { seed: 5, n_train: 200, n_test: 200 })
+            .expect("letter synth");
+        let mut pipe =
+            Pipeline::builder().seed(5).samples(128).i_bits(8).build().expect("pipeline");
+        pipe.fit(&ds.train_x, &ds.train_y).expect("fit");
+        let scorer = pipe.scorer(ds.dim()).expect("scorer");
+        let test = ds.test_x.to_dense();
+        let mut scratch = scorer.scratch();
+        let mut i = 0usize;
+        let per_row = time_it(1.0, || {
+            std::hint::black_box(scorer.predict_dense(test.row(i % test.rows()), &mut scratch));
+            i += 1;
+        });
+        t.row([
+            "fused scorer single-row predict (D=16,k=128)".into(),
+            fnum(per_row * 1e6, 2),
+            "us/row".into(),
+        ]);
+        j.set("fused_scorer_row_us", per_row * 1e6);
+    }
 
     // --- PJRT execute path (when artifacts exist).
     if with_pjrt {

@@ -36,6 +36,12 @@
 //!   wrappers (parallel OvR/OvO), C-grid evaluation; [`svm::RowSet`]
 //!   specializes the solvers over both feature representations.
 //! * [`pipeline`] — the composable fit/transform/predict pipeline.
+//! * [`serve`] — the fused zero-allocation serving path:
+//!   [`serve::Scorer`] runs sketch → b-bit code → weight-slab gather in
+//!   one pass (bit-identical to the layered predict path), with a
+//!   reusable [`serve::Scratch`] arena and a chunk-parallel batch
+//!   entry; `Pipeline::predict` and the coordinator's score mode ride
+//!   it.
 //! * [`estimate`] — the Figures 4–6 estimator-quality simulation harness.
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt` (L2/L1 AOT;
 //!   stubbed without the `pjrt` feature).
@@ -58,6 +64,7 @@ pub mod features;
 
 pub mod pipeline;
 pub mod prelude;
+pub mod serve;
 
 pub mod kernels;
 pub mod runtime;

@@ -30,6 +30,7 @@ use crate::cws::CwsSample;
 use crate::data::{scale, Csr, Matrix};
 use crate::features::{CodeMatrix, Expansion, ExpansionError};
 use crate::kernels::{Kernel, Normalization};
+use crate::serve::{ServeError, Scorer};
 use crate::sketch::Sketcher;
 use crate::svm::{LinearOvR, LinearSvmParams, RowSet};
 
@@ -111,6 +112,12 @@ pub enum PipelineError {
     NotFitted,
     /// Label/row count disagreement in `fit`.
     ShapeMismatch { rows: usize, labels: usize },
+    /// [`Pipeline::scorer`] on a sketcher family the fused scorer
+    /// cannot replay (only the native ICWS families ride the
+    /// `SketchEngine` parameter slabs).
+    UnsupportedSketcher(&'static str),
+    /// Weight-slab validation failed while building a scorer.
+    Serve(ServeError),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -128,6 +135,10 @@ impl std::fmt::Display for PipelineError {
             PipelineError::ShapeMismatch { rows, labels } => {
                 write!(f, "{rows} feature rows vs {labels} labels")
             }
+            PipelineError::UnsupportedSketcher(name) => {
+                write!(f, "sketcher '{name}' has no fused serving scorer")
+            }
+            PipelineError::Serve(e) => write!(f, "scorer: {e}"),
         }
     }
 }
@@ -137,6 +148,12 @@ impl std::error::Error for PipelineError {}
 impl From<ExpansionError> for PipelineError {
     fn from(e: ExpansionError) -> Self {
         PipelineError::Expansion(e)
+    }
+}
+
+impl From<ServeError> for PipelineError {
+    fn from(e: ServeError) -> Self {
+        PipelineError::Serve(e)
     }
 }
 
@@ -282,6 +299,7 @@ impl PipelineBuilder {
             c: self.c,
             model: None,
             n_classes: 0,
+            scorer_cache: None,
         })
     }
 }
@@ -295,6 +313,11 @@ pub struct Pipeline {
     c: f64,
     model: Option<LinearOvR>,
     n_classes: usize,
+    /// Fused serving scorer built once at `fit` (for the training
+    /// dimensionality) so repeated `predict` calls don't re-materialize
+    /// the parameter and weight slabs; `None` for sketchers without a
+    /// fused path.
+    scorer_cache: Option<Scorer>,
 }
 
 impl Pipeline {
@@ -337,7 +360,10 @@ impl Pipeline {
     }
 
     /// Fit the linear model on hashed features (the one-hot code-matrix
-    /// fast path; OvR classes train across `MINMAX_THREADS`).
+    /// fast path; OvR classes train across `MINMAX_THREADS`). Also
+    /// builds the fused serving scorer for the training dimensionality,
+    /// so subsequent `predict` calls score without re-materializing the
+    /// parameter/weight slabs.
     pub fn fit(&mut self, x: &Matrix, y: &[i32]) -> Result<&mut Self, PipelineError> {
         if x.rows() != y.len() {
             return Err(PipelineError::ShapeMismatch { rows: x.rows(), labels: y.len() });
@@ -347,15 +373,61 @@ impl Pipeline {
         let params = LinearSvmParams { c: self.c, ..Default::default() };
         self.model = Some(LinearOvR::train(&features, y, n_classes, &params));
         self.n_classes = n_classes;
+        self.scorer_cache = match self.scorer(x.cols()) {
+            Ok(s) => Some(s),
+            Err(PipelineError::UnsupportedSketcher(_)) => None,
+            Err(e) => return Err(e),
+        };
         Ok(self)
     }
 
-    /// Predict class labels for a feature matrix (code-matrix path:
-    /// `k` gathers per class per row, no CSR materialization).
+    /// Predict class labels for a feature matrix. ICWS-backed pipelines
+    /// ride the fused [`Scorer`] batch path (sketch → code → gather in
+    /// one pass, no `CodeMatrix` materialization, rows sharded across
+    /// `MINMAX_THREADS`); its predictions are bit-identical to the
+    /// layered `transform_codes → predict_on` path, which remains the
+    /// fallback for non-ICWS sketchers (minwise, PJRT).
     pub fn predict(&self, x: &Matrix) -> Result<Vec<i32>, PipelineError> {
         let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
+        // Fit-time cache when the dimensionality matches; otherwise a
+        // fresh scorer for this matrix's width. Only a sketcher with no
+        // fused path falls back to the layered route — any other scorer
+        // error is a real fault and propagates.
+        if let Some(scorer) = self.scorer_cache.as_ref().filter(|s| s.dim() == x.cols()) {
+            return Ok(scorer.predict_batch(x));
+        }
+        match self.scorer(x.cols()) {
+            Ok(scorer) => return Ok(scorer.predict_batch(x)),
+            Err(PipelineError::UnsupportedSketcher(_)) => {}
+            Err(e) => return Err(e),
+        }
         let features = self.transform_codes(x);
         Ok((0..features.rows()).map(|i| model.predict_on(&features, i)).collect())
+    }
+
+    /// Build the fused serving [`Scorer`] for this fitted pipeline:
+    /// the model's weights are transposed into the class-minor
+    /// `[K, 2^bits, C]` slab at full f64 precision, the pipeline's
+    /// scaling stage is carried over, and the ICWS parameter slabs are
+    /// materialized for raw input dimensionality `dim`. Only the
+    /// native ICWS sketcher families are supported (`icws` pins exact
+    /// math — its batch path always sketches exact — while
+    /// `icws-materialized` follows `MINMAX_FAST_MATH` like the engine
+    /// it wraps); other sketchers yield
+    /// [`PipelineError::UnsupportedSketcher`].
+    pub fn scorer(&self, dim: usize) -> Result<Scorer, PipelineError> {
+        let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
+        let pin_exact = match self.sketcher.name() {
+            "icws" => true,
+            "icws-materialized" => false,
+            name => return Err(PipelineError::UnsupportedSketcher(name)),
+        };
+        let mut scorer = Scorer::from_model(self.sketcher.seed(), dim, self.expansion, model)?
+            .with_scaling(self.scaling);
+        if pin_exact {
+            scorer = scorer.with_fast_math(false);
+        }
+        Ok(scorer)
     }
 
     /// Per-class decision values for one already-transformed row set —
@@ -368,6 +440,19 @@ impl Pipeline {
     ) -> Result<Vec<f64>, PipelineError> {
         let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
         Ok(model.decisions_on(features, row))
+    }
+
+    /// [`Pipeline::decisions`] into a caller-owned buffer
+    /// (`len == n_classes`) — no per-row allocation.
+    pub fn decisions_into<X: RowSet + ?Sized>(
+        &self,
+        features: &X,
+        row: usize,
+        out: &mut [f64],
+    ) -> Result<(), PipelineError> {
+        let model = self.model.as_ref().ok_or(PipelineError::NotFitted)?;
+        model.decisions_into(features, row, out);
+        Ok(())
     }
 
     /// Test accuracy against ground-truth labels.
@@ -612,6 +697,56 @@ mod tests {
         assert_eq!(w.len(), want.len());
         for (a, b) in w.iter().zip(&want) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn predict_rides_the_fused_scorer_bit_identically() {
+        // The serving invariant at the pipeline level: the fused path
+        // `predict` now rides equals the layered codes path exactly.
+        let ds = letter();
+        let mut pipe = Pipeline::builder().seed(8).samples(24).i_bits(5).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let via_scorer = pipe.predict(&ds.test_x).unwrap();
+        let codes = pipe.transform_codes(&ds.test_x);
+        let model = pipe.model().unwrap();
+        let layered: Vec<i32> =
+            (0..codes.rows()).map(|i| model.predict_on(&codes, i)).collect();
+        assert_eq!(via_scorer, layered);
+        // Sparse representation of the same data agrees too.
+        let sparse = Matrix::Sparse(ds.test_x.to_csr());
+        assert_eq!(pipe.predict(&sparse).unwrap(), layered);
+    }
+
+    #[test]
+    fn scorer_requires_fit_and_icws() {
+        let ds = letter();
+        let pipe = Pipeline::builder().build().unwrap();
+        assert!(matches!(pipe.scorer(ds.dim()), Err(PipelineError::NotFitted)));
+        let mut mw = Pipeline::builder()
+            .sketcher(Box::new(MinwiseSketcher::new(1, 16)))
+            .i_bits(4)
+            .build()
+            .unwrap();
+        mw.fit(&ds.train_x, &ds.train_y).unwrap();
+        assert!(matches!(
+            mw.scorer(ds.dim()),
+            Err(PipelineError::UnsupportedSketcher("minwise"))
+        ));
+        // The minwise pipeline still predicts via the layered fallback.
+        assert_eq!(mw.predict(&ds.test_x).unwrap().len(), ds.n_test());
+    }
+
+    #[test]
+    fn decisions_into_matches_decisions() {
+        let ds = letter();
+        let mut pipe = Pipeline::builder().seed(4).samples(16).i_bits(4).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let codes = pipe.transform_codes(&ds.test_x);
+        let mut buf = vec![0.0f64; pipe.n_classes()];
+        for i in 0..codes.rows().min(10) {
+            pipe.decisions_into(&codes, i, &mut buf).unwrap();
+            assert_eq!(buf, pipe.decisions(&codes, i).unwrap());
         }
     }
 

@@ -15,7 +15,7 @@ pub use crate::sketch::{MinwiseSketcher, Sketcher};
 // Hashing: sampler, schemes, feature expansion.
 pub use crate::cws::{
     collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
-    LshIndex, MinwiseHasher, Scheme, SketchEngine,
+    LshIndex, MinwiseHasher, Scheme, SketchEngine, SketchScratch,
 };
 pub use crate::features::{CodeMatrix, Expansion, ExpansionError};
 
@@ -30,6 +30,9 @@ pub use crate::kernels::{
 // The composable pipeline.
 pub use crate::pipeline::{Pipeline, PipelineBuilder, PipelineError, Scaling};
 
+// The fused serving path.
+pub use crate::serve::{Scorer, Scratch, ServeError};
+
 // Data layer.
 pub use crate::data::synth::{generate, SynthConfig};
 pub use crate::data::{Csr, CsrBuilder, Dataset, Dense, Matrix, SparseRow};
@@ -42,8 +45,8 @@ pub use crate::svm::{
 
 // Serving stack.
 pub use crate::coordinator::{
-    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, Router, ServiceConfig,
-    SketcherBackend, SubmitError,
+    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, Router, ScoreResponse,
+    ServiceConfig, SketcherBackend, SubmitError,
 };
 
 // Runtime bridge (stubbed without the `pjrt` feature).

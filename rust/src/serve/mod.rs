@@ -1,0 +1,641 @@
+//! The fused serving path: `sketch → b-bit code → score` in one pass.
+//!
+//! This is the inference-side counterpart of the training fast path
+//! (PR 3's `CodeMatrix`): the paper's whole pitch is that 0-bit CWS
+//! turns the min-max kernel into a *linear* scorer cheap enough for
+//! massive-traffic serving (§1, §4), and a linear scorer over one-hot
+//! codes is just `k` gathers per class. The layered path the crate used
+//! to serve with (`Pipeline::predict`) materialized a full
+//! [`CodeMatrix`] for the batch, allocated a `Vec<CwsSample>` per row
+//! and a `Vec<f64>` of decisions per row — all scaffolding the gather
+//! never needed.
+//!
+//! [`Scorer`] collapses the three stages:
+//!
+//! 1. **Sketch** — the ICWS argmin runs on [`SketchEngine`]'s
+//!    transposed `(r, c, β)` slabs through the zero-allocation
+//!    `sketch_dense_with`/`sketch_sparse_with` entries (gather buffers
+//!    and argmin accumulators live in the reusable [`Scratch`]).
+//! 2. **Code** — each of the `k` samples is truncated to its b-bit
+//!    code (`Expansion::column`) straight into a scratch buffer; no
+//!    `CodeMatrix`, no CSR.
+//! 3. **Score** — the codes gather into the class-minor
+//!    `[K, 2^bits, C]` weight slab with four per-class lane
+//!    accumulators that mirror `svm::rowset::dot_onehot`'s reduction
+//!    tree **exactly**, so decisions (not just labels) are
+//!    bit-identical to `LinearOvR::decisions_on` over the codes path.
+//!
+//! The hard invariant (pinned by `rust/tests/serve_parity.rs`): scorer
+//! predictions are bit-identical to the layered
+//! `transform_codes → predict_on` path at every thread count, every
+//! b-bit width, fast math on or off. That holds because each stage
+//! reuses the exact arithmetic of the layer it fuses — same sketch
+//! bits, same code function, same reduction tree, same argmax order.
+//!
+//! Construction:
+//! * [`crate::pipeline::Pipeline::scorer`] — from a fitted pipeline
+//!   (weights copied out of the `LinearOvR` at full f64 precision,
+//!   per-class bias kept separate so empty rows score like the layered
+//!   path);
+//! * [`Scorer::from_exported`] — from the f32 `[K, 2^bits, C]` slab
+//!   `export_scorer_weights` emits (the bias is folded into slot 0
+//!   there, so a coordinator can serve without any training structs —
+//!   decisions then match to f32 precision and predictions agree).
+//!
+//! Batch entry: [`Scorer::predict_batch`] shards rows across
+//! `MINMAX_THREADS` scoped threads like `SketchEngine::sketch_rows`,
+//! with one [`Scratch`] per chunk. Single-row entries
+//! ([`Scorer::score_dense_into`], [`Scorer::predict_dense`], sparse
+//! twins) are allocation-free in steady state — the serving bench
+//! (`rust/benches/bench_serve.rs`) verifies 0 allocs/row with a
+//! counting allocator.
+
+use crate::cws::engine::{self, SketchEngine, SketchScratch};
+use crate::cws::CwsSample;
+use crate::data::{scale, Matrix, SparseRow};
+use crate::features::Expansion;
+use crate::pipeline::Scaling;
+use crate::svm::LinearOvR;
+
+/// Errors constructing a [`Scorer`] from weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// Weight slab length disagrees with `expansion.dim() × n_classes`.
+    WeightShape { expected: usize, got: usize },
+    /// A scorer needs at least one class.
+    NoClasses,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::WeightShape { expected, got } => {
+                write!(f, "weight slab holds {got} values, expansion × classes needs {expected}")
+            }
+            ServeError::NoClasses => write!(f, "scorer needs at least one class"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Placeholder sample for scratch prefill; every scored row overwrites
+/// its slots before they are read.
+const EMPTY_SAMPLE: CwsSample = CwsSample { i_star: u32::MAX, t_star: 0 };
+
+/// Reusable per-thread scoring arena: the sketch gather/argmin buffers,
+/// the k-sample and k-code staging slots, the four gather lanes, and
+/// the scaling buffer. Create one per serving thread with
+/// [`Scorer::scratch`] and reuse it across requests — every buffer
+/// resets per row (reuse is bit-identical to a fresh scratch, pinned by
+/// `serve_parity.rs`), and after the first few calls no entry allocates.
+pub struct Scratch {
+    sketch: SketchScratch,
+    samples: Vec<CwsSample>,
+    codes: Vec<u32>,
+    /// Per-class lane accumulators (4 × n_classes) mirroring the 4-lane
+    /// reduction of `svm::rowset::dot_onehot`.
+    lanes: Vec<f64>,
+    /// Decision staging for the `predict_*` entries.
+    decisions: Vec<f64>,
+    /// Scaled copy of the input row (dense values or sparse values),
+    /// used only when the scorer carries a non-`None` [`Scaling`].
+    scaled: Vec<f32>,
+}
+
+/// Argmax with `LinearOvR::predict_on`'s exact semantics: start at
+/// class 0, strict `>`, so the first of tied maxima wins.
+pub fn argmax(decisions: &[f64]) -> i32 {
+    let mut best = 0usize;
+    let mut best_dec = f64::NEG_INFINITY;
+    for (c, &d) in decisions.iter().enumerate() {
+        if d > best_dec {
+            best_dec = d;
+            best = c;
+        }
+    }
+    best as i32
+}
+
+/// The fused single-pass scoring kernel. Owns the ICWS parameter slabs
+/// (via [`SketchEngine`]), the b-bit expansion, and the class-minor
+/// `[K, 2^bits, C]` weight slab (f64) plus per-class biases. `Clone`
+/// duplicates everything so router replicas can each own one.
+#[derive(Clone)]
+pub struct Scorer {
+    engine: SketchEngine,
+    expansion: Expansion,
+    scaling: Scaling,
+    n_classes: usize,
+    /// `[K, 2^bits, C]` class-minor: weight of absolute column `col`
+    /// for class `cls` at `weights[col * n_classes + cls]`.
+    weights: Vec<f64>,
+    /// Per-class bias, added after the gather (separate — NOT folded
+    /// into slot 0 — so empty rows score `bias + 0` exactly like
+    /// `LinearModel::decision_on` over an empty feature row).
+    bias: Vec<f64>,
+}
+
+impl Scorer {
+    /// Build from an explicit weight slab + biases. `weights` is the
+    /// class-minor `[K, 2^bits, C]` layout (`expansion.dim() ×
+    /// bias.len()` values); `dim` is the raw input dimensionality the
+    /// ICWS parameter slabs are materialized for. Fast math follows
+    /// `MINMAX_FAST_MATH` (like `SketchEngine::new`); pin it explicitly
+    /// with [`Scorer::with_fast_math`].
+    pub fn from_parts(
+        seed: u64,
+        dim: usize,
+        expansion: Expansion,
+        weights: Vec<f64>,
+        bias: Vec<f64>,
+    ) -> Result<Self, ServeError> {
+        if bias.is_empty() {
+            return Err(ServeError::NoClasses);
+        }
+        let expected = expansion.dim() * bias.len();
+        if weights.len() != expected {
+            return Err(ServeError::WeightShape { expected, got: weights.len() });
+        }
+        Ok(Self {
+            engine: SketchEngine::new(seed, expansion.k, dim),
+            expansion,
+            scaling: Scaling::None,
+            n_classes: bias.len(),
+            weights,
+            bias,
+        })
+    }
+
+    /// Build from a trained [`LinearOvR`]: per-class weight vectors are
+    /// transposed into the class-minor slab at full f64 precision and
+    /// biases kept separate — decisions are bit-identical to
+    /// `model.decisions_on` over the codes of the same sketches.
+    pub fn from_model(
+        seed: u64,
+        dim: usize,
+        expansion: Expansion,
+        model: &LinearOvR,
+    ) -> Result<Self, ServeError> {
+        let c = model.models().len();
+        if c == 0 {
+            return Err(ServeError::NoClasses);
+        }
+        let d = expansion.dim();
+        let mut weights = vec![0.0f64; d * c];
+        let mut bias = vec![0.0f64; c];
+        for (cls, m) in model.models().iter().enumerate() {
+            if m.w.len() != d {
+                return Err(ServeError::WeightShape { expected: d, got: m.w.len() });
+            }
+            bias[cls] = m.b;
+            for (col, &wv) in m.w.iter().enumerate() {
+                weights[col * c + cls] = wv;
+            }
+        }
+        Self::from_parts(seed, dim, expansion, weights, bias)
+    }
+
+    /// Build from the exported f32 `[K, 2^bits, C]` serving slab
+    /// (`coordinator::export_scorer_weights` /
+    /// `Pipeline::export_weights`) — no training structs needed, which
+    /// is how a coordinator deploys a model it only has weights for.
+    /// The export folds each class bias into every code of slot 0, so
+    /// the separate bias here is zero; decisions agree with the
+    /// from-model scorer to f32 precision and predictions agree
+    /// (pinned by `serve_parity.rs`). Empty input rows score 0 for
+    /// every class (the fold is unrecoverable without the row's slot-0
+    /// gather).
+    pub fn from_exported(
+        seed: u64,
+        dim: usize,
+        expansion: Expansion,
+        n_classes: usize,
+        weights: &[f32],
+    ) -> Result<Self, ServeError> {
+        if n_classes == 0 {
+            return Err(ServeError::NoClasses);
+        }
+        let w64: Vec<f64> = weights.iter().map(|&v| v as f64).collect();
+        Self::from_parts(seed, dim, expansion, w64, vec![0.0f64; n_classes])
+    }
+
+    /// Apply this row preprocessing before sketching (mirrors the
+    /// fitted pipeline's `Scaling` stage, bit-exactly per row).
+    pub fn with_scaling(mut self, scaling: Scaling) -> Self {
+        self.scaling = scaling;
+        self
+    }
+
+    /// Pin the sketching fast-math toggle (see
+    /// `SketchEngine::with_fast_math` — enabling still runs the
+    /// accuracy gate).
+    pub fn with_fast_math(mut self, fast: bool) -> Self {
+        self.engine = self.engine.with_fast_math(fast);
+        self
+    }
+
+    pub fn k(&self) -> usize {
+        self.expansion.k
+    }
+
+    /// Raw input dimensionality the parameter slabs cover.
+    pub fn dim(&self) -> usize {
+        self.engine.dim()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.engine.seed()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn expansion(&self) -> &Expansion {
+        &self.expansion
+    }
+
+    pub fn scaling(&self) -> Scaling {
+        self.scaling
+    }
+
+    pub fn fast_math(&self) -> bool {
+        self.engine.fast_math()
+    }
+
+    /// The sketching core (exposed so a score-mode service can answer
+    /// plain hashing requests from the same parameter slabs).
+    pub fn engine(&self) -> &SketchEngine {
+        &self.engine
+    }
+
+    /// A scoring arena sized for this scorer. One per serving thread.
+    pub fn scratch(&self) -> Scratch {
+        Scratch {
+            sketch: SketchScratch::new(),
+            samples: vec![EMPTY_SAMPLE; self.expansion.k],
+            codes: Vec::with_capacity(self.expansion.k),
+            lanes: vec![0.0f64; 4 * self.n_classes],
+            decisions: vec![0.0f64; self.n_classes],
+            scaled: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------ single row
+
+    /// Per-class decision values for one dense row, written into `out`
+    /// (`len == n_classes`). Zero heap allocations in steady state. A
+    /// row with no positive entry (after scaling) scores `bias + 0`
+    /// per class, exactly like an empty feature row on the layered
+    /// path.
+    pub fn score_dense_into(&self, u: &[f32], s: &mut Scratch, out: &mut [f64]) {
+        let Scratch { sketch, samples, codes, lanes, scaled, .. } = s;
+        self.score_dense_core(u, sketch, samples, codes, lanes, scaled, out);
+    }
+
+    /// Argmax label for one dense row (low-latency serving entry).
+    pub fn predict_dense(&self, u: &[f32], s: &mut Scratch) -> i32 {
+        let Scratch { sketch, samples, codes, lanes, scaled, decisions } = s;
+        decisions.clear();
+        decisions.resize(self.n_classes, 0.0);
+        self.score_dense_core(u, sketch, samples, codes, lanes, scaled, decisions);
+        argmax(decisions)
+    }
+
+    /// Per-class decisions for one sparse row — see
+    /// [`Scorer::score_dense_into`].
+    pub fn score_sparse_into(&self, row: SparseRow<'_>, s: &mut Scratch, out: &mut [f64]) {
+        let Scratch { sketch, samples, codes, lanes, scaled, .. } = s;
+        self.score_sparse_core(row, sketch, samples, codes, lanes, scaled, out);
+    }
+
+    /// Argmax label for one sparse row.
+    pub fn predict_sparse(&self, row: SparseRow<'_>, s: &mut Scratch) -> i32 {
+        let Scratch { sketch, samples, codes, lanes, scaled, decisions } = s;
+        decisions.clear();
+        decisions.resize(self.n_classes, 0.0);
+        self.score_sparse_core(row, sketch, samples, codes, lanes, scaled, decisions);
+        argmax(decisions)
+    }
+
+    // ----------------------------------------------------------- batch
+
+    /// Predict labels for every row of a matrix, sharding contiguous
+    /// row chunks across scoped threads like `SketchEngine::sketch_rows`
+    /// (sequential below the engine's minimum work size). One
+    /// [`Scratch`] per chunk; results are identical at any thread
+    /// count.
+    pub fn predict_batch(&self, x: &Matrix) -> Vec<i32> {
+        self.predict_batch_with_threads(x, engine::batch_threads(x.rows(), self.expansion.k))
+    }
+
+    /// [`Scorer::predict_batch`] with an explicit thread count (honored
+    /// as given, so tests can pin both paths).
+    pub fn predict_batch_with_threads(&self, x: &Matrix, threads: usize) -> Vec<i32> {
+        let mut out = vec![0i32; x.rows()];
+        engine::par_fill_chunks_ctx(
+            &mut out,
+            threads,
+            || self.scratch(),
+            |i, slot, s| {
+                *slot = match x {
+                    Matrix::Dense(d) => self.predict_dense(d.row(i), s),
+                    Matrix::Sparse(m) => self.predict_sparse(m.row(i), s),
+                };
+            },
+        );
+        out
+    }
+
+    // ------------------------------------------------------- internals
+
+    #[allow(clippy::too_many_arguments)]
+    fn score_dense_core(
+        &self,
+        u: &[f32],
+        sketch: &mut SketchScratch,
+        samples: &mut Vec<CwsSample>,
+        codes: &mut Vec<u32>,
+        lanes: &mut Vec<f64>,
+        scaled: &mut Vec<f32>,
+        out: &mut [f64],
+    ) {
+        let row = self.scale_dense(u, scaled);
+        codes.clear();
+        // Liveness check AFTER scaling, mirroring the layered path
+        // (scale, then `sketch_matrix` filters rows with no positive
+        // entry into all-zero feature rows).
+        if row.iter().any(|&v| v > 0.0) {
+            if samples.len() != self.expansion.k {
+                samples.resize(self.expansion.k, EMPTY_SAMPLE);
+            }
+            self.engine.sketch_dense_with(row, sketch, samples);
+            codes.extend(samples.iter().enumerate().map(|(j, smp)| self.expansion.column(j, smp)));
+        }
+        self.gather(codes, lanes, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn score_sparse_core(
+        &self,
+        row: SparseRow<'_>,
+        sketch: &mut SketchScratch,
+        samples: &mut Vec<CwsSample>,
+        codes: &mut Vec<u32>,
+        lanes: &mut Vec<f64>,
+        scaled: &mut Vec<f32>,
+        out: &mut [f64],
+    ) {
+        codes.clear();
+        // Scaling preserves sparse structure, so the layered path's
+        // emptiness test (`nnz() == 0`) is scaling-independent.
+        if row.nnz() > 0 {
+            let row = self.scale_sparse(row, scaled);
+            if samples.len() != self.expansion.k {
+                samples.resize(self.expansion.k, EMPTY_SAMPLE);
+            }
+            self.engine.sketch_sparse_with(row, sketch, samples);
+            codes.extend(samples.iter().enumerate().map(|(j, smp)| self.expansion.column(j, smp)));
+        }
+        self.gather(codes, lanes, out);
+    }
+
+    /// The fused gather: `out[cls] = bias[cls] + Σⱼ w[codeⱼ, cls]`,
+    /// accumulated code-outer/class-inner (each code reads its C
+    /// contiguous weights once) into four per-class lanes whose final
+    /// combine `((a0+a1)+(a2+a3))+tail` replays
+    /// `svm::rowset::dot_onehot` exactly — per class, the same values
+    /// are added in the same order through the same tree, so decisions
+    /// are bit-identical to `LinearModel::decision_on` on the codes
+    /// path. Change that reduction tree, change this (and
+    /// `serve_parity.rs` will catch it).
+    #[allow(clippy::needless_range_loop)]
+    fn gather(&self, codes: &[u32], lanes: &mut Vec<f64>, out: &mut [f64]) {
+        let c = self.n_classes;
+        assert_eq!(out.len(), c, "decision buffer must hold n_classes values");
+        lanes.clear();
+        lanes.resize(4 * c, 0.0);
+        let (l01, l23) = lanes.split_at_mut(2 * c);
+        let (l0, l1) = l01.split_at_mut(c);
+        let (l2, l3) = l23.split_at_mut(c);
+        // `out` doubles as the tail accumulator until the final combine.
+        out.fill(0.0);
+        let w = &self.weights[..];
+        let mut chunks = codes.chunks_exact(4);
+        for q in chunks.by_ref() {
+            let w0 = &w[q[0] as usize * c..q[0] as usize * c + c];
+            let w1 = &w[q[1] as usize * c..q[1] as usize * c + c];
+            let w2 = &w[q[2] as usize * c..q[2] as usize * c + c];
+            let w3 = &w[q[3] as usize * c..q[3] as usize * c + c];
+            for cls in 0..c {
+                l0[cls] += w0[cls];
+                l1[cls] += w1[cls];
+                l2[cls] += w2[cls];
+                l3[cls] += w3[cls];
+            }
+        }
+        for &code in chunks.remainder() {
+            let wt = &w[code as usize * c..code as usize * c + c];
+            for (t, &wv) in out.iter_mut().zip(wt) {
+                *t += wv;
+            }
+        }
+        for cls in 0..c {
+            out[cls] = self.bias[cls] + (((l0[cls] + l1[cls]) + (l2[cls] + l3[cls])) + out[cls]);
+        }
+    }
+
+    /// Per-row mirror of the dense scaling stage: copy the row into the
+    /// scratch buffer and apply the SAME per-row helper the matrix
+    /// transforms use (`data::scale::{l1,l2}_scale_row` /
+    /// `binarize_value`) — one source of arithmetic, so a scaled row
+    /// sketches bit-identically to a row of the pre-scaled matrix.
+    fn scale_dense<'a>(&self, u: &'a [f32], buf: &'a mut Vec<f32>) -> &'a [f32] {
+        match self.scaling {
+            Scaling::None => u,
+            Scaling::L1 => {
+                buf.clear();
+                buf.extend_from_slice(u);
+                scale::l1_scale_row(buf);
+                buf
+            }
+            Scaling::L2 => {
+                buf.clear();
+                buf.extend_from_slice(u);
+                scale::l2_scale_row(buf);
+                buf
+            }
+            Scaling::Binarize => {
+                buf.clear();
+                buf.extend(u.iter().map(|&v| scale::binarize_value(v)));
+                buf
+            }
+        }
+    }
+
+    /// Per-row mirror of the CSR scaling stage: stored values scaled by
+    /// the same per-row factor helper `data::scale::csr_row_*_factor`
+    /// the matrix transforms use; structure untouched.
+    fn scale_sparse<'a>(&self, row: SparseRow<'a>, buf: &'a mut Vec<f32>) -> SparseRow<'a> {
+        let factor = match self.scaling {
+            Scaling::None => return row,
+            Scaling::L1 => scale::csr_row_l1_factor(row),
+            Scaling::L2 => scale::csr_row_l2_factor(row),
+            Scaling::Binarize => {
+                buf.clear();
+                buf.extend(row.values.iter().map(|&v| scale::binarize_value(v)));
+                return SparseRow { indices: row.indices, values: buf };
+            }
+        };
+        buf.clear();
+        buf.extend(row.values.iter().map(|&v| v * factor));
+        SparseRow { indices: row.indices, values: buf }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::scale;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::data::{Csr, Dense};
+    use crate::svm::LinearSvmParams;
+
+    fn letter() -> crate::data::Dataset {
+        generate("letter", SynthConfig { seed: 4, n_train: 120, n_test: 80 }).unwrap()
+    }
+
+    fn fitted(ds: &crate::data::Dataset, k: usize, i_bits: u8) -> (LinearOvR, Expansion, u64) {
+        let seed = 7u64;
+        let expansion = Expansion::new(k, i_bits);
+        let sketcher = crate::cws::CwsHasher::new(seed, k);
+        let samples = crate::sketch::Sketcher::sketch_matrix(&sketcher, &ds.train_x);
+        let codes = expansion.encode(&samples);
+        let n_classes = ds.n_classes();
+        let model =
+            LinearOvR::train(&codes, &ds.train_y, n_classes, &LinearSvmParams::default());
+        (model, expansion, seed)
+    }
+
+    #[test]
+    fn fused_decisions_bit_match_codes_path() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 33, 5); // odd k: unroll tail
+        let scorer = Scorer::from_model(seed, ds.dim(), expansion, &model)
+            .unwrap()
+            .with_fast_math(false);
+        let sketcher = crate::cws::CwsHasher::new(seed, 33);
+        let samples = crate::sketch::Sketcher::sketch_matrix(&sketcher, &ds.test_x);
+        let codes = expansion.encode(&samples);
+        let d = ds.test_x.to_dense();
+        let mut scratch = scorer.scratch();
+        let mut got = vec![0.0f64; ds.n_classes()];
+        for i in 0..d.rows() {
+            scorer.score_dense_into(d.row(i), &mut scratch, &mut got);
+            let want = model.decisions_on(&codes, i);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+            assert_eq!(scorer.predict_dense(d.row(i), &mut scratch), model.predict_on(&codes, i));
+        }
+    }
+
+    #[test]
+    fn batch_is_thread_count_invariant() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4);
+        let scorer =
+            Scorer::from_model(seed, ds.dim(), expansion, &model).unwrap().with_fast_math(false);
+        let one = scorer.predict_batch_with_threads(&ds.test_x, 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(one, scorer.predict_batch_with_threads(&ds.test_x, threads));
+        }
+    }
+
+    #[test]
+    fn empty_rows_score_bias_exactly() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 8, 4);
+        let dim = ds.dim();
+        let scorer =
+            Scorer::from_model(seed, dim, expansion, &model).unwrap().with_fast_math(false);
+        let zero = vec![0.0f32; dim];
+        let mut scratch = scorer.scratch();
+        let mut got = vec![0.0f64; ds.n_classes()];
+        scorer.score_dense_into(&zero, &mut scratch, &mut got);
+        // The layered path's empty feature row: decision = b + dot(∅).
+        let empty = Expansion::new(8, 4).encode(&[None]);
+        let want = model.decisions_on(&empty, 0);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(scorer.predict_dense(&zero, &mut scratch), model.predict_on(&empty, 0));
+    }
+
+    #[test]
+    fn scaling_mirrors_match_matrix_scaling() {
+        // Per-row scaling inside the scorer must reproduce the matrix
+        // transforms bit-exactly (same f64 norm, same f32 factor).
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.5, 0.0, 2.0, 0.25],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![3.0, 1.0, 0.0, 7.5],
+        ];
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let dense = Dense::from_rows(&refs);
+        let csr = Csr::from_dense(&dense);
+        for (scaling, dense_fn) in [
+            (Scaling::L1, scale::l1_normalize_dense as fn(&mut Dense)),
+            (Scaling::L2, scale::l2_normalize_dense as fn(&mut Dense)),
+            (Scaling::Binarize, scale::binarize_dense as fn(&mut Dense)),
+        ] {
+            let scorer = Scorer::from_parts(1, 4, Expansion::new(4, 4), vec![0.0; 64], vec![0.0])
+                .unwrap()
+                .with_scaling(scaling);
+            let mut want_dense = dense.clone();
+            dense_fn(&mut want_dense);
+            let mut buf = Vec::new();
+            for i in 0..dense.rows() {
+                let got = scorer.scale_dense(dense.row(i), &mut buf).to_vec();
+                assert_eq!(got, want_dense.row(i), "{scaling:?} dense row {i}");
+            }
+            let mut want_csr = csr.clone();
+            match scaling {
+                Scaling::L1 => scale::l1_normalize_csr(&mut want_csr),
+                Scaling::L2 => scale::l2_normalize_csr(&mut want_csr),
+                Scaling::Binarize => scale::binarize_csr(&mut want_csr),
+                Scaling::None => {}
+            }
+            let mut sbuf = Vec::new();
+            for i in 0..csr.rows() {
+                let got = scorer.scale_sparse(csr.row(i), &mut sbuf);
+                assert_eq!(got.indices, want_csr.row(i).indices);
+                assert_eq!(got.values, want_csr.row(i).values, "{scaling:?} sparse row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn constructors_validate_shapes() {
+        let e = Expansion::new(4, 4);
+        assert_eq!(
+            Scorer::from_parts(1, 8, e, vec![0.0; 7], vec![0.0; 2]).err(),
+            Some(ServeError::WeightShape { expected: 2 * e.dim(), got: 7 })
+        );
+        assert_eq!(
+            Scorer::from_parts(1, 8, e, Vec::new(), Vec::new()).err(),
+            Some(ServeError::NoClasses)
+        );
+        assert_eq!(Scorer::from_exported(1, 8, e, 0, &[]).err(), Some(ServeError::NoClasses));
+        assert!(Scorer::from_exported(1, 8, e, 2, &vec![0.0f32; 2 * e.dim()]).is_ok());
+    }
+
+    #[test]
+    fn argmax_matches_predict_on_semantics() {
+        assert_eq!(argmax(&[0.0]), 0);
+        assert_eq!(argmax(&[1.0, 2.0, 2.0]), 1); // first max wins
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+        assert_eq!(argmax(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), 0);
+    }
+}

@@ -159,10 +159,14 @@ impl Sketcher for CwsHasher {
         match m {
             Matrix::Sparse(s) => {
                 let (seed, k) = (CwsHasher::seed(self), CwsHasher::k(self));
-                engine::sketch_csr_with(s, k, engine::batch_threads(s.rows(), k), |row, out| {
-                    let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
-                    engine::sample_lazy_into(seed, k, row.indices, &ln_u, out);
-                })
+                engine::sketch_csr_with(
+                    s,
+                    k,
+                    engine::batch_threads(s.rows(), k),
+                    |row, scratch, out| {
+                        engine::sample_lazy_sparse_with(seed, k, row, scratch, out);
+                    },
+                )
             }
             Matrix::Dense(d) => dense_rows_via_batch(self, d),
         }
@@ -204,7 +208,7 @@ impl Sketcher for DenseBatchHasher {
                 s,
                 DenseBatchHasher::k(self),
                 engine::batch_threads(s.rows(), DenseBatchHasher::k(self)),
-                |row, out| self.engine().sketch_sparse_into(row, out),
+                |row, scratch, out| self.engine().sketch_sparse_with(row, scratch, out),
             ),
             Matrix::Dense(d) => dense_rows_via_batch(self, d),
         }

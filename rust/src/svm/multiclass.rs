@@ -182,12 +182,37 @@ impl LinearOvR {
     }
 
     pub fn decisions(&self, x: SparseRow<'_>) -> Vec<f64> {
-        self.models.iter().map(|m| m.decision(x)).collect()
+        let mut out = vec![0.0f64; self.models.len()];
+        self.decisions_sparse_into(x, &mut out);
+        out
     }
 
-    /// Per-class decision values for row `i` of any [`RowSet`].
+    /// [`LinearOvR::decisions`] into a caller-owned buffer
+    /// (`len == n_classes`) — the allocation-free serving variant.
+    pub fn decisions_sparse_into(&self, x: SparseRow<'_>, out: &mut [f64]) {
+        assert_eq!(out.len(), self.models.len(), "decision buffer must hold n_classes values");
+        for (slot, m) in out.iter_mut().zip(&self.models) {
+            *slot = m.decision(x);
+        }
+    }
+
+    /// Per-class decision values for row `i` of any [`RowSet`] — thin
+    /// allocating wrapper over [`LinearOvR::decisions_into`].
     pub fn decisions_on<X: RowSet + ?Sized>(&self, x: &X, i: usize) -> Vec<f64> {
-        self.models.iter().map(|m| m.decision_on(x, i)).collect()
+        let mut out = vec![0.0f64; self.models.len()];
+        self.decisions_into(x, i, &mut out);
+        out
+    }
+
+    /// [`LinearOvR::decisions_on`] into a caller-owned buffer
+    /// (`len == n_classes`): one `decision_on` per class, no per-row
+    /// allocation. Same values in the same order as `decisions_on`
+    /// (pinned by `rust/tests/svm_parity.rs`).
+    pub fn decisions_into<X: RowSet + ?Sized>(&self, x: &X, i: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.models.len(), "decision buffer must hold n_classes values");
+        for (slot, m) in out.iter_mut().zip(&self.models) {
+            *slot = m.decision_on(x, i);
+        }
     }
 
     /// Binary shortcut: with 2 classes train a single model.

@@ -174,6 +174,46 @@ impl Reservoir {
     }
 }
 
+/// Fixed-bucket histogram over static upper bounds (a Prometheus-style
+/// cumulative-free bucket layout): `counts[i]` holds the observations
+/// `x <= bounds[i]` that no earlier bucket claimed, and the final slot
+/// is the overflow bucket (`x > bounds.last()`). Unlike [`Reservoir`]
+/// (which stores every value for exact percentiles) this is O(buckets)
+/// memory forever — the shape the coordinator exports for per-request
+/// latency so long-lived services don't grow without bound.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// `bounds` must be strictly increasing.
+    pub fn new(bounds: &'static [f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        Self { bounds, counts: vec![0u64; bounds.len() + 1] }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|&b| b < x);
+        self.counts[idx] += 1;
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts; the last entry is the overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
 /// Binary/multiclass accuracy counter.
 #[derive(Debug, Clone, Default)]
 pub struct Accuracy {
@@ -276,6 +316,19 @@ mod tests {
         assert!(r.percentile(50.0).is_nan());
         r.push(7.0);
         assert_eq!(r.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        static BOUNDS: [f64; 3] = [1.0, 5.0, 10.0];
+        let mut h = Histogram::new(&BOUNDS);
+        for x in [0.5, 1.0, 1.1, 5.0, 9.9, 10.0, 11.0, 1e9] {
+            h.push(x);
+        }
+        // <=1: {0.5, 1.0}; <=5: {1.1, 5.0}; <=10: {9.9, 10.0}; over: 2.
+        assert_eq!(h.counts(), &[2, 2, 2, 2]);
+        assert_eq!(h.total(), 8);
+        assert_eq!(h.bounds(), &BOUNDS);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! currently does. Replay a failing property case with
 //! `MINMAX_PROP_SEED=<seed>`.
 
-use minmax::cws::engine::{fast_math_requested, sample_lazy, sample_lazy_into, sketch_csr_with};
+use minmax::cws::engine::{fast_math_requested, sample_lazy, sketch_csr_with};
 use minmax::cws::sampler::params_at;
 use minmax::cws::{CwsHasher, CwsSample, DenseBatchHasher, SketchEngine};
 use minmax::data::dense::Dense;
@@ -220,9 +220,8 @@ fn minmax_threads_does_not_change_results() {
     let csr = m.as_csr().unwrap();
     for threads in [1usize, 4] {
         // The CwsHasher sparse arm, with the thread count pinned.
-        let pinned = sketch_csr_with(csr, 16, threads, |row, out| {
-            let ln_u: Vec<f64> = row.values.iter().map(|&v| (v as f64).ln()).collect();
-            sample_lazy_into(11, 16, row.indices, &ln_u, out);
+        let pinned = sketch_csr_with(csr, 16, threads, |row, scratch, out| {
+            minmax::cws::engine::sample_lazy_sparse_with(11, 16, row, scratch, out);
         });
         assert_eq!(via_env_default, pinned, "threads={threads}");
     }
@@ -255,8 +254,8 @@ fn sketch_csr_with_matches_sketcher_matrix() {
     let csr = b.finish();
     let batch = DenseBatchHasher::new(3, k, dim);
     for threads in [1usize, 4] {
-        let direct = sketch_csr_with(&csr, k, threads, |row, out| {
-            batch.engine().sketch_sparse_into(row, out);
+        let direct = sketch_csr_with(&csr, k, threads, |row, scratch, out| {
+            batch.engine().sketch_sparse_with(row, scratch, out);
         });
         let via_trait = batch.sketch_matrix(&Matrix::Sparse(csr.clone()));
         assert_eq!(direct, via_trait, "threads={threads}");

@@ -64,8 +64,8 @@ fn pjrt_service_agrees_with_native_service() {
     let mut agree = 0usize;
     let mut total = 0usize;
     for (i, v) in vectors.iter().enumerate() {
-        let a = pjrt.hash_blocking(i as u64, v.clone()).unwrap();
-        let b = native.hash_blocking(i as u64, v.clone()).unwrap();
+        let a = pjrt.hash_blocking(i as u64, v).unwrap();
+        let b = native.hash_blocking(i as u64, v).unwrap();
         assert_eq!(a.samples.len(), 64);
         assert_eq!(b.samples.len(), 64);
         for (sa, sb) in a.samples.iter().zip(&b.samples) {

@@ -1,0 +1,250 @@
+//! Fused-scorer / layered-path parity for the serving layer.
+//!
+//! The fused `serve::Scorer` (sketch → b-bit code → weight-slab gather
+//! in one pass) must be a pure execution change: its decisions and
+//! predictions must be **bit-identical** to the layered
+//! `transform_codes → LinearOvR::{decisions_on, predict_on}` path on
+//! dense and sparse inputs, at every thread count, every b-bit width,
+//! fast math on or off, with a reused scratch arena or a fresh one per
+//! row. The suite runs under both `MINMAX_THREADS=1` and `=4` in CI,
+//! and pins explicit 1-vs-4-thread batches on top.
+
+use minmax::cws::CwsHasher;
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::{Dataset, Dense, Matrix};
+use minmax::features::Expansion;
+use minmax::pipeline::Pipeline;
+use minmax::serve::Scorer;
+use minmax::sketch::Sketcher;
+use minmax::svm::{LinearOvR, LinearSvmParams};
+
+fn letter() -> Dataset {
+    generate("letter", SynthConfig { seed: 13, n_train: 150, n_test: 100 }).unwrap()
+}
+
+/// Layered reference: the pipeline's own codes + per-row model scoring
+/// (what `Pipeline::predict` computed before the fused path existed).
+fn layered_labels(pipe: &Pipeline, x: &Matrix) -> Vec<i32> {
+    let codes = pipe.transform_codes(x);
+    let model = pipe.model().unwrap();
+    (0..codes.rows()).map(|i| model.predict_on(&codes, i)).collect()
+}
+
+#[test]
+fn scorer_matches_layered_path_across_bit_widths_and_threads() {
+    let ds = letter();
+    let sparse_test = Matrix::Sparse(ds.test_x.to_csr());
+    for i_bits in [4u8, 8] {
+        let mut pipe =
+            Pipeline::builder().seed(11).samples(32).i_bits(i_bits).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let scorer = pipe.scorer(ds.dim()).unwrap();
+        let want = layered_labels(&pipe, &ds.test_x);
+        for threads in [1usize, 4] {
+            assert_eq!(
+                scorer.predict_batch_with_threads(&ds.test_x, threads),
+                want,
+                "b={i_bits} threads={threads} dense"
+            );
+            assert_eq!(
+                scorer.predict_batch_with_threads(&sparse_test, threads),
+                want,
+                "b={i_bits} threads={threads} sparse"
+            );
+        }
+        // Pipeline::predict itself rides the fused path now.
+        assert_eq!(pipe.predict(&ds.test_x).unwrap(), want);
+        assert_eq!(pipe.predict(&sparse_test).unwrap(), want);
+
+        // Decisions — not just labels — are bit-identical.
+        let codes = pipe.transform_codes(&ds.test_x);
+        let model = pipe.model().unwrap();
+        let dense = ds.test_x.to_dense();
+        let mut scratch = scorer.scratch();
+        let mut got = vec![0.0f64; pipe.n_classes()];
+        for i in 0..20 {
+            scorer.score_dense_into(dense.row(i), &mut scratch, &mut got);
+            let want_d = model.decisions_on(&codes, i);
+            for (cls, (a, b)) in got.iter().zip(&want_d).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "b={i_bits} row {i} class {cls}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scorer_matches_layered_path_at_16_bits() {
+    // 16-bit codes explode the one-hot dimension (k · 65536 columns),
+    // so pin parity on a binary problem with small k.
+    let ds = letter();
+    let y2: Vec<i32> = ds.train_y.iter().map(|&c| (c % 2 == 0) as i32).collect();
+    let mut pipe = Pipeline::builder().seed(3).samples(4).i_bits(16).build().unwrap();
+    pipe.fit(&ds.train_x, &y2).unwrap();
+    let scorer = pipe.scorer(ds.dim()).unwrap();
+    let want = layered_labels(&pipe, &ds.test_x);
+    for threads in [1usize, 4] {
+        assert_eq!(scorer.predict_batch_with_threads(&ds.test_x, threads), want);
+    }
+    assert_eq!(pipe.predict(&ds.test_x).unwrap(), want);
+}
+
+#[test]
+fn fast_math_scorer_matches_fast_codes_path() {
+    // With fast math ON, the fused scorer must equal the layered path
+    // computed over the SAME fast-math sketches (the toggle changes the
+    // sketch bits, and both paths must change together). The gate is
+    // shared, so if the accuracy probe rejected fastmath both sides
+    // fall back to exact identically.
+    let ds = letter();
+    let (k, i_bits, seed) = (24usize, 5u8, 9u64);
+    let expansion = Expansion::new(k, i_bits);
+    // Train on the exact-math codes (weights are arbitrary for parity).
+    let hasher = CwsHasher::new(seed, k);
+    let train_codes = expansion.encode(&hasher.sketch_matrix(&ds.train_x));
+    let model =
+        LinearOvR::train(&train_codes, &ds.train_y, ds.n_classes(), &LinearSvmParams::default());
+    let scorer =
+        Scorer::from_model(seed, ds.dim(), expansion, &model).unwrap().with_fast_math(true);
+    // Layered fast-math reference: fast engine sketches → encode →
+    // predict_on.
+    let fast_engine = minmax::cws::SketchEngine::new(seed, k, ds.dim()).with_fast_math(true);
+    assert_eq!(scorer.fast_math(), fast_engine.fast_math());
+    let dense = ds.test_x.to_dense();
+    let rows: Vec<&[f32]> = (0..dense.rows()).map(|i| dense.row(i)).collect();
+    let sketched: Vec<_> =
+        fast_engine.sketch_rows(&rows).into_iter().map(Some).collect();
+    let codes = expansion.encode(&sketched);
+    let mut scratch = scorer.scratch();
+    let mut got = vec![0.0f64; ds.n_classes()];
+    for i in 0..dense.rows() {
+        scorer.score_dense_into(dense.row(i), &mut scratch, &mut got);
+        let want = model.decisions_on(&codes, i);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fast-math row {i}");
+        }
+        assert_eq!(scorer.predict_dense(dense.row(i), &mut scratch), model.predict_on(&codes, i));
+    }
+    // And the exact-math scorer over the same weights differs only via
+    // sketch bits: it must equal the exact layered path.
+    let exact = Scorer::from_model(seed, ds.dim(), expansion, &model).unwrap()
+        .with_fast_math(false);
+    let exact_codes = expansion.encode(&hasher.sketch_matrix(&ds.test_x));
+    for i in 0..dense.rows() {
+        assert_eq!(
+            exact.predict_dense(dense.row(i), &mut scratch),
+            model.predict_on(&exact_codes, i)
+        );
+    }
+}
+
+#[test]
+fn exported_weights_scorer_agrees_with_model_scorer() {
+    // A coordinator serving from the exported f32 [K, 2^bits, C] slab
+    // (bias folded into slot 0) must predict exactly what the
+    // full-precision from-model scorer predicts, and its decisions must
+    // agree to f32 precision.
+    let ds = letter();
+    let mut pipe = Pipeline::builder().seed(7).samples(16).i_bits(4).build().unwrap();
+    pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+    let from_model = pipe.scorer(ds.dim()).unwrap();
+    let exported = pipe.export_weights().unwrap();
+    let from_export = Scorer::from_exported(
+        pipe.sketcher().seed(),
+        ds.dim(),
+        *pipe.expansion(),
+        pipe.n_classes(),
+        &exported,
+    )
+    .unwrap()
+    .with_fast_math(false);
+    assert_eq!(
+        from_model.predict_batch_with_threads(&ds.test_x, 1),
+        from_export.predict_batch_with_threads(&ds.test_x, 1)
+    );
+    let dense = ds.test_x.to_dense();
+    let mut sa = from_model.scratch();
+    let mut sb = from_export.scratch();
+    let (mut da, mut db) = (vec![0.0f64; pipe.n_classes()], vec![0.0f64; pipe.n_classes()]);
+    for i in 0..dense.rows() {
+        from_model.score_dense_into(dense.row(i), &mut sa, &mut da);
+        from_export.score_dense_into(dense.row(i), &mut sb, &mut db);
+        for (a, b) in da.iter().zip(&db) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_equals_fresh_scratch() {
+    let ds = letter();
+    let mut pipe = Pipeline::builder().seed(5).samples(32).i_bits(6).build().unwrap();
+    pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+    let scorer = pipe.scorer(ds.dim()).unwrap();
+    let dense = ds.test_x.to_dense();
+    let csr = ds.test_x.to_csr();
+    let mut shared = scorer.scratch();
+    let (mut a, mut b) = (vec![0.0f64; pipe.n_classes()], vec![0.0f64; pipe.n_classes()]);
+    for i in 0..dense.rows() {
+        // Alternate dense/sparse through ONE scratch to shake out any
+        // state leakage between representations and rows.
+        scorer.score_dense_into(dense.row(i), &mut shared, &mut a);
+        let mut fresh = scorer.scratch();
+        scorer.score_dense_into(dense.row(i), &mut fresh, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()), "dense row {i}");
+        scorer.score_sparse_into(csr.row(i), &mut shared, &mut a);
+        let mut fresh = scorer.scratch();
+        scorer.score_sparse_into(csr.row(i), &mut fresh, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()), "sparse row {i}");
+    }
+}
+
+#[test]
+fn empty_rows_agree_with_layered_path() {
+    // A serving batch with all-zero rows in the middle: the fused path
+    // must reproduce the layered path's bias-only scoring for them.
+    let ds = letter();
+    let mut pipe = Pipeline::builder().seed(2).samples(16).i_bits(4).build().unwrap();
+    pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+    let dense = ds.test_x.to_dense();
+    let dim = ds.dim();
+    let zero = vec![0.0f32; dim];
+    let mut rows: Vec<&[f32]> = Vec::new();
+    for i in 0..10 {
+        rows.push(dense.row(i));
+        rows.push(&zero);
+    }
+    let mixed = Matrix::Dense(Dense::from_rows(&rows));
+    let scorer = pipe.scorer(dim).unwrap();
+    let want = layered_labels(&pipe, &mixed);
+    for threads in [1usize, 4] {
+        assert_eq!(scorer.predict_batch_with_threads(&mixed, threads), want);
+    }
+    assert_eq!(pipe.predict(&mixed).unwrap(), want);
+    // Sparse twin (empty CSR rows).
+    let mixed_sparse = Matrix::Sparse(mixed.to_csr());
+    assert_eq!(scorer.predict_batch(&mixed_sparse), want);
+}
+
+#[test]
+fn scaled_pipelines_ride_the_scorer_bit_identically() {
+    use minmax::pipeline::Scaling;
+    let ds = letter();
+    let sparse_test = Matrix::Sparse(ds.test_x.to_csr());
+    for scaling in [Scaling::L1, Scaling::L2, Scaling::Binarize] {
+        let mut pipe = Pipeline::builder()
+            .seed(17)
+            .samples(16)
+            .i_bits(4)
+            .scaling(scaling)
+            .build()
+            .unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let scorer = pipe.scorer(ds.dim()).unwrap();
+        assert_eq!(scorer.scaling(), scaling);
+        let want = layered_labels(&pipe, &ds.test_x);
+        assert_eq!(scorer.predict_batch(&ds.test_x), want, "{scaling:?} dense");
+        let want_sparse = layered_labels(&pipe, &sparse_test);
+        assert_eq!(scorer.predict_batch(&sparse_test), want_sparse, "{scaling:?} sparse");
+        assert_eq!(pipe.predict(&ds.test_x).unwrap(), want);
+    }
+}

@@ -148,6 +148,27 @@ fn ovr_predictions_identical_across_representations() {
 }
 
 #[test]
+fn decisions_into_is_a_pure_buffer_variant() {
+    // decisions_on is now a thin wrapper over decisions_into; both (and
+    // the sparse-row twin) must return the exact bits the per-model
+    // decision_on loop returns, into dirty caller buffers.
+    let (ds, hashed) = hashed_letter();
+    let n_classes = ds.n_classes();
+    let model =
+        LinearOvR::train(&hashed.train, &ds.train_y, n_classes, &LinearSvmParams::default());
+    let test_csr = hashed.test_csr();
+    let mut buf = vec![f64::NAN; n_classes]; // dirty on purpose
+    for i in 0..hashed.test.rows().min(25) {
+        model.decisions_into(&hashed.test, i, &mut buf);
+        let want = model.decisions_on(&hashed.test, i);
+        assert!(buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "row {i}");
+        let mut sbuf = vec![f64::INFINITY; n_classes];
+        model.decisions_sparse_into(test_csr.row(i), &mut sbuf);
+        assert_eq!(sbuf, model.decisions(test_csr.row(i)), "sparse row {i}");
+    }
+}
+
+#[test]
 fn parallel_ovo_is_thread_count_invariant() {
     let ds = generate("vowel", SynthConfig { seed: 7, n_train: 90, n_test: 30 }).unwrap();
     let gram = kernel_matrix_sym(KernelKind::MinMax, &ds.train_x);
