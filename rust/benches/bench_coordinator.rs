@@ -1,0 +1,185 @@
+//! Cluster saturation bench: throughput scaling across shard counts,
+//! open-loop overload behaviour (bounded queues + load shedding must
+//! keep p99 finite), and hot-swap-under-load loss accounting.
+//!
+//! Rows / stats:
+//! * `cluster-batch/S{n}/*` — closed-loop `score_batch_blocking`
+//!   rows/s at 1, 2, 4 shards (the near-linear-scaling claim);
+//! * `fused-batch-T1/*` — the single-threaded fused batch path, the
+//!   zero-queue baseline the 1-shard cluster pays overhead against;
+//! * `open-loop/S{n}/*` stats — offered vs completed rps, merged
+//!   histogram p50/p99 (must stay finite under overload), shed and
+//!   rejected counts against a deliberately tiny queue;
+//! * `hot-swap/S{n}/*` stats — swaps published under full load, with
+//!   lost-request count (must be 0).
+//!
+//! Run: `cargo bench --bench bench_coordinator [-- --quick]`; CI
+//! uploads `results/bench/bench_coordinator.json` as
+//! BENCH_coordinator.json.
+
+use std::time::{Duration, Instant};
+
+use minmax::bench::{black_box, Runner};
+use minmax::coordinator::{ClusterConfig, ClusterError, ScoreRouter};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Dense;
+use minmax::pipeline::Pipeline;
+use minmax::serve::Scorer;
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("MINMAX_BENCH_QUICK").is_ok()
+}
+
+/// Wait until every accepted request has been served (bounded, so a
+/// bug cannot hang the bench).
+fn drain(cluster: &ScoreRouter) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = cluster.snapshot();
+        if s.completed >= s.requests {
+            return;
+        }
+        assert!(Instant::now() < deadline, "cluster failed to drain: {}", s.render());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn main() {
+    let mut r = Runner::new();
+    let quick = quick();
+
+    // Paper-scale serving shape: k=128 samples, b=8 codes, D=64.
+    let ds = generate("usps", SynthConfig { seed: 3, n_train: 300, n_test: 512 })
+        .expect("synth dataset");
+    let mut pipe =
+        Pipeline::builder().seed(5).samples(128).i_bits(8).build().expect("build pipeline");
+    pipe.fit(&ds.train_x, &ds.train_y).expect("fit");
+    let scorer = pipe.scorer(ds.dim()).expect("scorer");
+    let baseline = scorer.predict_batch_with_threads(&ds.test_x, 1);
+    let n = ds.test_x.rows();
+    let tag = format!("usps/D{}/k128/b8", ds.dim());
+    let dense: Dense = ds.test_x.to_dense();
+
+    // Zero-queue baseline for the scaling comparison.
+    r.bench_with_throughput(&format!("fused-batch-T1/{tag}"), Some((n as f64, "row")), || {
+        black_box(scorer.predict_batch_with_threads(&ds.test_x, 1));
+    });
+
+    // ---- Closed-loop batch scaling across shard counts -------------
+    for shards in [1usize, 2, 4] {
+        let cluster = ScoreRouter::start(
+            scorer.clone(),
+            ClusterConfig { shards, queue_cap: 1024, shed_watermark: None, steal: true },
+        )
+        .expect("start cluster");
+        // Parity guard before timing: the cluster must compute the
+        // same answers as the path it scales out.
+        assert_eq!(cluster.score_batch_blocking(&ds.test_x).unwrap(), baseline);
+        r.bench_with_throughput(
+            &format!("cluster-batch/S{shards}/{tag}"),
+            Some((n as f64, "row")),
+            || {
+                black_box(cluster.score_batch_blocking(&ds.test_x).unwrap());
+            },
+        );
+        cluster.shutdown();
+    }
+
+    // ---- Open-loop saturation against a tiny bounded queue ---------
+    // Fire-and-forget submits (response handles dropped — the cluster
+    // tolerates absent receivers) against queue_cap=64, shed
+    // watermark 48: the queue must stay bounded, overload must shed,
+    // and the latency histogram must keep p99 finite.
+    let window = if quick { Duration::from_millis(300) } else { Duration::from_secs(2) };
+    for shards in [1usize, 4] {
+        let cluster = ScoreRouter::start(
+            scorer.clone(),
+            ClusterConfig { shards, queue_cap: 64, shed_watermark: Some(48), steal: true },
+        )
+        .expect("start cluster");
+        let start = Instant::now();
+        let mut offered = 0u64;
+        let mut shed = 0u64;
+        let mut rejected = 0u64;
+        while start.elapsed() < window {
+            match cluster.submit(offered, dense.row((offered as usize) % n)) {
+                Ok(sub) => drop(sub),
+                Err(ClusterError::Shed { .. }) => shed += 1,
+                Err(ClusterError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+            offered += 1;
+        }
+        drain(&cluster);
+        let snap = cluster.snapshot();
+        let secs = start.elapsed().as_secs_f64();
+        assert_eq!(snap.completed, snap.requests, "open loop lost requests");
+        assert_eq!(snap.shed, shed);
+        assert!(
+            snap.latency_p99_ms.is_finite(),
+            "p99 must stay finite under overload: {}",
+            snap.render()
+        );
+        r.stat(&format!("open-loop/S{shards}/offered-rps"), offered as f64 / secs, "req/s");
+        r.stat(
+            &format!("open-loop/S{shards}/completed-rps"),
+            snap.completed as f64 / secs,
+            "req/s",
+        );
+        r.stat(&format!("open-loop/S{shards}/p50-ms"), snap.latency_p50_ms, "ms");
+        r.stat(&format!("open-loop/S{shards}/p99-ms"), snap.latency_p99_ms, "ms");
+        r.stat(&format!("open-loop/S{shards}/shed"), shed as f64, "req");
+        r.stat(&format!("open-loop/S{shards}/rejected"), rejected as f64, "req");
+        cluster.shutdown();
+    }
+
+    // ---- Hot swap under full load ----------------------------------
+    // Publish fresh versions while an open-loop submitter saturates
+    // the queues; every accepted request must complete (zero lost),
+    // and completions must be tallied under the versions that ran.
+    let swaps = if quick { 5usize } else { 25 };
+    for shards in [1usize, 4] {
+        let cluster = ScoreRouter::start(
+            scorer.clone(),
+            ClusterConfig { shards, queue_cap: 256, shed_watermark: None, steal: true },
+        )
+        .expect("start cluster");
+        let republished: Scorer = scorer.clone();
+        std::thread::scope(|s| {
+            let publisher = s.spawn(|| {
+                for _ in 0..swaps {
+                    cluster.publish(republished.clone()).expect("publish");
+                    std::thread::sleep(Duration::from_millis(if quick { 2 } else { 10 }));
+                }
+            });
+            let mut i = 0u64;
+            while !publisher.is_finished() {
+                match cluster.submit(i, dense.row((i as usize) % n)) {
+                    Ok(sub) => drop(sub),
+                    Err(ClusterError::QueueFull) => std::thread::yield_now(),
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                i += 1;
+            }
+            publisher.join().unwrap();
+        });
+        drain(&cluster);
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, snap.requests, "hot swap lost requests: {}", snap.render());
+        let lost = snap.requests.saturating_sub(snap.completed);
+        assert_eq!(snap.current_version, 1 + swaps as u64);
+        let tallied: u64 = snap.version_counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(tallied, snap.completed);
+        r.stat(&format!("hot-swap/S{shards}/swaps"), swaps as f64, "swap");
+        r.stat(&format!("hot-swap/S{shards}/completed"), snap.completed as f64, "req");
+        r.stat(&format!("hot-swap/S{shards}/lost"), lost as f64, "req");
+        r.stat(
+            &format!("hot-swap/S{shards}/versions-served"),
+            snap.version_counts.len() as f64,
+            "version",
+        );
+        cluster.shutdown();
+    }
+
+    r.save("bench_coordinator");
+}

@@ -1,0 +1,935 @@
+//! The sharded, replicated, hot-swappable serving cluster — the layer
+//! the paper's "industrial applications with massive data" pitch (§1,
+//! §5) actually needs above the per-row fused scorer.
+//!
+//! [`super::service::HashService`] made one worker allocation-free;
+//! [`ScoreRouter`] puts N of them behind bounded queues:
+//!
+//! ```text
+//!            submit(id, &row) ── validate ── pick least-deep shard
+//!                │                               │ (failover on full)
+//!                ▼                               ▼
+//!   ┌── shard 0: bounded MPMC queue ──► worker 0 (Scorer slabs + Scratch)
+//!   ├── shard 1: bounded MPMC queue ──► worker 1        │
+//!   ├── …                 ▲    │                        │ idle workers
+//!   └── shard N-1 ────────┘    └──── work stealing ◄────┘
+//!                │
+//!                ▼
+//!      RwLock<Arc<Versioned>> ── publish() swaps the model Arc;
+//!      workers re-read it at every dequeue (hot swap, zero downtime)
+//! ```
+//!
+//! ## Queue / backpressure contract
+//!
+//! Every shard queue is bounded by `queue_cap` (**backpressure**:
+//! submits fail fast with [`ClusterError::QueueFull`] once every shard
+//! is full — the router fails over full shards first) and optionally
+//! **load-shed** above `shed_watermark`: a submit finding the
+//! *least-loaded* shard at or beyond the watermark is rejected with
+//! [`ClusterError::Shed`] and counted in the snapshot — the knob that
+//! keeps p99 finite under sustained overload instead of letting every
+//! queue fill to the hard cap. Queues are MPMC: any submitter can feed
+//! any shard, and an idle worker steals from a sibling's queue before
+//! sleeping again, so one hot shard cannot strand work while others
+//! idle.
+//!
+//! ## Version-swap protocol
+//!
+//! The current model lives in one `RwLock<Arc<Versioned>>`.
+//! [`ScoreRouter::publish`] validates the new [`Scorer`]'s shape
+//! (`k`/`dim`/`seed` must match — replicas must stay interchangeable),
+//! bumps the version, and swaps the `Arc` under the write lock — a
+//! pointer swap, no worker pause. Workers clone the `Arc` at every
+//! dequeue, so requests already dequeued **drain against the version
+//! they started with** while the next dequeue picks up the new slab;
+//! the old model is freed when its last in-flight request drops its
+//! handle. No request is lost or re-scored during a swap (pinned by
+//! `rust/tests/cluster_parity.rs`), and every response carries the
+//! version that scored it, tallied per version in the snapshot.
+//!
+//! ## Shutdown contract
+//!
+//! [`ScoreRouter::shutdown`] closes every queue (new submits fail with
+//! the typed [`ClusterError::ShuttingDown`]), then workers drain every
+//! queued request — their own queue first, then stealing siblings' —
+//! and answer each exactly once before exiting. Same guarantee as the
+//! single service: accepted-then-dropped cannot happen.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::data::Matrix;
+use crate::serve::{argmax, Scorer, Scratch};
+use crate::util::stats::Histogram;
+
+use super::metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
+
+/// Cluster shape and flow-control knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker/shard count — each shard owns a bounded queue, a scratch
+    /// arena, and its own metrics.
+    pub shards: usize,
+    /// Per-shard queue bound (hard backpressure).
+    pub queue_cap: usize,
+    /// Load-shedding watermark: a submit that finds the least-loaded
+    /// shard at or beyond this depth is rejected with
+    /// [`ClusterError::Shed`]. `None` disables shedding (only the hard
+    /// cap rejects).
+    pub shed_watermark: Option<usize>,
+    /// Let idle workers steal from sibling queues (default on). Off
+    /// pins each request to the shard that accepted it — useful when
+    /// benchmarking routing policies.
+    pub steal: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { shards: 2, queue_cap: 1024, shed_watermark: None, steal: true }
+    }
+}
+
+/// Typed submit/publish errors — the cluster never fails silently.
+#[derive(Debug)]
+pub enum ClusterError {
+    /// Every shard's queue is at `queue_cap` (hard backpressure).
+    QueueFull,
+    /// Queue depth crossed the load-shedding watermark.
+    Shed { depth: usize, watermark: usize },
+    /// Cluster is shutting down (or a worker died).
+    ShuttingDown,
+    BadInput(String),
+    /// `publish` with a scorer whose `k`/`dim`/`seed` disagree with
+    /// the cluster's.
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::QueueFull => write!(f, "every shard queue is full (backpressure)"),
+            ClusterError::Shed { depth, watermark } => {
+                write!(f, "load shed: queue depth {depth} >= watermark {watermark}")
+            }
+            ClusterError::ShuttingDown => write!(f, "cluster shutting down"),
+            ClusterError::BadInput(s) => write!(f, "bad input: {s}"),
+            ClusterError::ShapeMismatch(s) => write!(f, "scorer shape mismatch: {s}"),
+        }
+    }
+}
+impl std::error::Error for ClusterError {}
+
+/// One scored request: decisions + label like the service's
+/// `ScoreResponse`, plus WHICH model version and shard answered —
+/// the observability a hot-swapping deployment needs.
+pub struct ClusterScoreResponse {
+    pub id: u64,
+    /// Per-class decision values (`len == n_classes` of the scoring
+    /// version).
+    pub decisions: Vec<f64>,
+    /// `argmax(decisions)` with `LinearOvR::predict_on` semantics.
+    pub label: i32,
+    /// Model version that scored this request.
+    pub version: u64,
+    /// Shard whose worker served it (≠ accepting shard when stolen).
+    pub shard: usize,
+    /// Total time from submit to completion.
+    pub latency: Duration,
+}
+
+struct ClusterRequest {
+    id: u64,
+    vector: Vec<f32>,
+    submitted: Instant,
+    tx: mpsc::Sender<ClusterScoreResponse>,
+}
+
+/// A versioned model: the immutable unit the `Arc` swap publishes.
+struct Versioned {
+    version: u64,
+    scorer: Scorer,
+}
+
+// ------------------------------------------------------------- queue
+
+struct QueueInner {
+    queue: VecDeque<ClusterRequest>,
+    closed: bool,
+}
+
+/// One bounded MPMC queue: submitters push from any thread, the owning
+/// worker pops, idle siblings steal. `push` never blocks — flow
+/// control is rejection, not waiting, so a submitter can fail over to
+/// another shard immediately.
+struct ShardQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+}
+
+enum PushError {
+    Full,
+    Shed { depth: usize, watermark: usize },
+    Closed,
+}
+
+enum Pop {
+    Req(Box<ClusterRequest>),
+    /// Timed out with nothing queued (steal opportunity).
+    Empty,
+    /// Closed AND drained — the worker's own queue is finished.
+    Closed,
+}
+
+impl ShardQueue {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Rejections hand the request back so the submitter can fail
+    /// over to another shard without cloning the row.
+    fn push(
+        &self,
+        req: ClusterRequest,
+        cap: usize,
+        watermark: Option<usize>,
+    ) -> Result<(), (PushError, ClusterRequest)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((PushError::Closed, req));
+        }
+        let depth = g.queue.len();
+        if depth >= cap {
+            return Err((PushError::Full, req));
+        }
+        if let Some(w) = watermark {
+            if depth >= w {
+                return Err((PushError::Shed { depth, watermark: w }, req));
+            }
+        }
+        g.queue.push_back(req);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Pop, waiting up to `timeout`. Items are always drained before
+    /// `Closed` is reported, so closing never strands queued work.
+    fn pop_wait(&self, timeout: Duration) -> Pop {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.queue.pop_front() {
+                return Pop::Req(Box::new(r));
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let (g2, res) = self.ready.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return match g.queue.pop_front() {
+                    Some(r) => Pop::Req(Box::new(r)),
+                    None if g.closed => Pop::Closed,
+                    None => Pop::Empty,
+                };
+            }
+        }
+    }
+
+    /// Non-blocking pop (the steal path).
+    fn try_pop(&self) -> Option<Box<ClusterRequest>> {
+        self.inner.lock().unwrap().queue.pop_front().map(Box::new)
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+// ------------------------------------------------------------ shared
+
+/// Per-shard `version → completed` tally map.
+type VersionTally = Mutex<BTreeMap<u64, u64>>;
+
+struct Shared {
+    queues: Vec<ShardQueue>,
+    /// The hot-swap slot. Read (cheap: shared lock + `Arc` clone) at
+    /// every dequeue; written only by `publish`.
+    model: RwLock<Arc<Versioned>>,
+    shard_metrics: Vec<Metrics>,
+    /// Per-shard `version → completed` tallies (shard-local so the
+    /// serve hot path never contends across shards); merged by
+    /// `snapshot()`.
+    shard_versions: Vec<VersionTally>,
+    steal: bool,
+}
+
+/// How long an idle worker blocks on its own queue before scanning
+/// siblings for stealable work.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+fn worker_loop(shard: usize, shared: &Shared) {
+    // One long-lived arena per worker. `k`/`dim` are invariant across
+    // published versions, so the scratch survives hot swaps; only the
+    // decision staging is (cheaply) resized per request.
+    let mut scratch: Option<Scratch> = None;
+    let mut staging: Vec<f64> = Vec::new();
+    loop {
+        match shared.queues[shard].pop_wait(STEAL_POLL) {
+            Pop::Req(req) => serve(shard, shared, &req, &mut scratch, &mut staging),
+            Pop::Empty => {
+                if shared.steal {
+                    if let Some(req) = steal(shard, shared) {
+                        serve(shard, shared, &req, &mut scratch, &mut staging);
+                    }
+                }
+            }
+            Pop::Closed => {
+                // Shutdown drain: the own queue is empty+closed; help
+                // finish whatever is still queued anywhere, then exit.
+                // Queues reject pushes once closed, so this terminates.
+                while let Some(req) = steal_any(shard, shared) {
+                    serve(shard, shared, &req, &mut scratch, &mut staging);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Scan sibling queues (not our own — it was just found empty).
+fn steal(me: usize, shared: &Shared) -> Option<Box<ClusterRequest>> {
+    let n = shared.queues.len();
+    (1..n).find_map(|off| shared.queues[(me + off) % n].try_pop())
+}
+
+/// Scan every queue, own first (the shutdown-drain sweep).
+fn steal_any(me: usize, shared: &Shared) -> Option<Box<ClusterRequest>> {
+    let n = shared.queues.len();
+    (0..n).find_map(|off| shared.queues[(me + off) % n].try_pop())
+}
+
+fn serve(
+    shard: usize,
+    shared: &Shared,
+    req: &ClusterRequest,
+    scratch: &mut Option<Scratch>,
+    staging: &mut Vec<f64>,
+) {
+    let metrics = &shared.shard_metrics[shard];
+    metrics.record_queue_wait_ms(req.submitted.elapsed().as_secs_f64() * 1e3);
+    // Pick up the current version; in-flight work keeps this Arc alive
+    // through a concurrent publish (the drain half of the swap
+    // protocol).
+    let model: Arc<Versioned> = shared.model.read().unwrap().clone();
+    let scorer = &model.scorer;
+    let s = scratch.get_or_insert_with(|| scorer.scratch());
+    staging.clear();
+    staging.resize(scorer.n_classes(), 0.0);
+    scorer.score_dense_into(&req.vector, s, staging);
+    let label = argmax(staging);
+    let latency = req.submitted.elapsed();
+    metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
+    *shared.shard_versions[shard].lock().unwrap().entry(model.version).or_insert(0) += 1;
+    let _ = req.tx.send(ClusterScoreResponse {
+        id: req.id,
+        decisions: staging.clone(),
+        label,
+        version: model.version,
+        shard,
+        latency,
+    });
+}
+
+// ------------------------------------------------------------ router
+
+/// The sharded scoring front door. See the module docs for the queue,
+/// swap, and shutdown contracts.
+pub struct ScoreRouter {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stopping: AtomicBool,
+    rr: AtomicU64,
+    cfg: ClusterConfig,
+    started: Instant,
+    // Invariant shape every published version must match.
+    k: usize,
+    dim: usize,
+    seed: u64,
+}
+
+/// An accepted submission: the response handle plus which shard's
+/// queue took it.
+pub struct Submitted {
+    rx: mpsc::Receiver<ClusterScoreResponse>,
+    shard: usize,
+}
+
+impl Submitted {
+    /// Shard whose queue accepted the request (a stealing worker may
+    /// still serve it — the response's `shard` field is authoritative).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block for the response. `ShuttingDown` here means a worker died
+    /// abnormally — graceful shutdown answers every accepted request.
+    pub fn wait(self) -> Result<ClusterScoreResponse, ClusterError> {
+        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)
+    }
+}
+
+impl ScoreRouter {
+    /// Start `cfg.shards` workers serving `scorer` as version 1. The
+    /// scorer is NOT cloned per shard — workers share one slab behind
+    /// the version `Arc` (replication is of execution state: scratch
+    /// arenas and queues, which is what actually needs to be
+    /// per-worker).
+    pub fn start(scorer: Scorer, cfg: ClusterConfig) -> Result<ScoreRouter, String> {
+        if cfg.shards == 0 {
+            return Err("cluster needs at least one shard".into());
+        }
+        if cfg.queue_cap == 0 {
+            return Err("queue_cap must be positive".into());
+        }
+        if let Some(w) = cfg.shed_watermark {
+            if w == 0 || w > cfg.queue_cap {
+                return Err(format!(
+                    "shed watermark {w} must be in 1..=queue_cap ({})",
+                    cfg.queue_cap
+                ));
+            }
+        }
+        let (k, dim, seed) = (scorer.k(), scorer.dim(), scorer.seed());
+        let shared = Arc::new(Shared {
+            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            model: RwLock::new(Arc::new(Versioned { version: 1, scorer })),
+            shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
+            shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            steal: cfg.steal,
+        });
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("minmax-cluster-w{i}"))
+                .spawn(move || worker_loop(i, &sh))
+                .map_err(|e| format!("spawn cluster worker {i}: {e}"))?;
+            workers.push(h);
+        }
+        Ok(ScoreRouter {
+            shared,
+            workers,
+            stopping: AtomicBool::new(false),
+            rr: AtomicU64::new(0),
+            cfg,
+            started: Instant::now(),
+            k,
+            dim,
+            seed,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cfg.shards
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Version currently being published to workers.
+    pub fn current_version(&self) -> u64 {
+        self.shared.model.read().unwrap().version
+    }
+
+    /// Class count of the current version.
+    pub fn n_classes(&self) -> usize {
+        self.shared.model.read().unwrap().scorer.n_classes()
+    }
+
+    /// Per-shard metrics handle (tests / scraping).
+    pub fn metrics(&self, shard: usize) -> &Metrics {
+        &self.shared.shard_metrics[shard]
+    }
+
+    /// Publish a new model version: validate shape, swap the `Arc`.
+    /// Returns the new version number. Zero downtime — requests
+    /// dequeued before the swap drain against the old version (their
+    /// workers hold its `Arc`); every later dequeue scores with the
+    /// new slab. The class count MAY change between versions; each
+    /// response reports the version that produced it.
+    pub fn publish(&self, scorer: Scorer) -> Result<u64, ClusterError> {
+        if scorer.k() != self.k {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "k {} != cluster k {}",
+                scorer.k(),
+                self.k
+            )));
+        }
+        if scorer.dim() != self.dim {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "dim {} != cluster dim {}",
+                scorer.dim(),
+                self.dim
+            )));
+        }
+        if scorer.seed() != self.seed {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "seed {} != cluster seed {}",
+                scorer.seed(),
+                self.seed
+            )));
+        }
+        let mut slot = self.shared.model.write().unwrap();
+        let version = slot.version + 1;
+        *slot = Arc::new(Versioned { version, scorer });
+        Ok(version)
+    }
+
+    fn validate(&self, vector: &[f32]) -> Result<(), ClusterError> {
+        if self.stopping.load(Ordering::Acquire) {
+            return Err(ClusterError::ShuttingDown);
+        }
+        if vector.len() != self.dim {
+            return Err(ClusterError::BadInput(format!("dim {} != {}", vector.len(), self.dim)));
+        }
+        if vector.iter().any(|&v| v < 0.0 || !v.is_finite()) {
+            return Err(ClusterError::BadInput("negative or non-finite entry".into()));
+        }
+        // NOTE: all-zero rows are accepted (they score `bias + 0` per
+        // class), matching `Pipeline::predict` over a matrix with empty
+        // rows — the cluster must be prediction-compatible with the
+        // offline path, which the single service's stricter validation
+        // is not.
+        Ok(())
+    }
+
+    /// Least-deep shard with a rotating round-robin tie-break start, so
+    /// equal-depth shards share arrivals instead of all landing on 0.
+    fn pick(&self) -> usize {
+        let n = self.cfg.shards;
+        let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+        let mut best = start;
+        let mut best_depth = usize::MAX;
+        for off in 0..n {
+            let i = (start + off) % n;
+            let d = self.shared.queues[i].depth();
+            if d < best_depth {
+                best_depth = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Submit one dense row for scoring. Fail-fast flow control: `Shed`
+    /// past the watermark (evaluated on the least-loaded shard, so it
+    /// reflects cluster-wide pressure), `QueueFull` only when every
+    /// shard is at the hard cap.
+    pub fn submit(&self, id: u64, vector: &[f32]) -> Result<Submitted, ClusterError> {
+        self.validate(vector)?;
+        let first = self.pick();
+        let n = self.cfg.shards;
+        let (rtx, rrx) = mpsc::channel();
+        let mut req = ClusterRequest {
+            id,
+            vector: vector.to_vec(),
+            submitted: Instant::now(),
+            tx: rtx,
+        };
+        for off in 0..n {
+            let i = (first + off) % n;
+            match self.shared.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
+                Ok(()) => {
+                    self.shared.shard_metrics[i].record_request();
+                    return Ok(Submitted { rx: rrx, shard: i });
+                }
+                Err((PushError::Shed { depth, watermark }, _)) => {
+                    // Terminal: `first` was the least-loaded shard, so
+                    // the whole cluster is past the watermark.
+                    self.shared.shard_metrics[i].record_shed();
+                    return Err(ClusterError::Shed { depth, watermark });
+                }
+                Err((PushError::Closed, _)) => return Err(ClusterError::ShuttingDown),
+                Err((PushError::Full, back)) => {
+                    // Reclaim the request and fail over to the next
+                    // shard.
+                    req = back;
+                }
+            }
+        }
+        self.shared.shard_metrics[first].record_rejected();
+        Err(ClusterError::QueueFull)
+    }
+
+    /// Blocking submit-and-wait.
+    pub fn score_blocking(
+        &self,
+        id: u64,
+        vector: &[f32],
+    ) -> Result<ClusterScoreResponse, ClusterError> {
+        self.submit(id, vector)?.wait()
+    }
+
+    /// Blocking classification: label only.
+    pub fn classify_blocking(&self, id: u64, vector: &[f32]) -> Result<i32, ClusterError> {
+        Ok(self.score_blocking(id, vector)?.label)
+    }
+
+    /// Score a whole matrix through the cluster, in row order — the
+    /// batch entry the saturation bench and parity tests drive. A
+    /// backpressure-aware closed-loop client: submissions race ahead
+    /// until a queue rejects, then the oldest outstanding response is
+    /// reaped before retrying (shed rejections are retried too — this
+    /// client wants every row answered).
+    pub fn score_batch_blocking(&self, x: &Matrix) -> Result<Vec<i32>, ClusterError> {
+        let dense = x.to_dense();
+        let n = dense.rows();
+        let mut out = vec![0i32; n];
+        let mut pending: VecDeque<(usize, Submitted)> = VecDeque::new();
+        for i in 0..n {
+            loop {
+                match self.submit(i as u64, dense.row(i)) {
+                    Ok(s) => {
+                        pending.push_back((i, s));
+                        break;
+                    }
+                    Err(ClusterError::QueueFull) | Err(ClusterError::Shed { .. }) => {
+                        match pending.pop_front() {
+                            Some((j, s)) => out[j] = s.wait()?.label,
+                            // Another client owns the queue space; let
+                            // the workers drain and retry.
+                            None => std::thread::yield_now(),
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        for (j, s) in pending {
+            out[j] = s.wait()?.label;
+        }
+        Ok(out)
+    }
+
+    /// Cluster-wide snapshot: per-shard metrics plus merged totals,
+    /// fleet latency quantiles from the merged histograms, queue
+    /// depths, and per-version completion tallies.
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        let shards: Vec<Snapshot> =
+            self.shared.shard_metrics.iter().map(|m| m.snapshot()).collect();
+        let mut merged = Histogram::new(&LATENCY_BUCKETS_MS);
+        for s in &shards {
+            merged.merge(&Histogram::with_counts(&LATENCY_BUCKETS_MS, s.latency_hist.clone()));
+        }
+        let mut version_counts: BTreeMap<u64, u64> = BTreeMap::new();
+        for vm in &self.shared.shard_versions {
+            for (&v, &c) in vm.lock().unwrap().iter() {
+                *version_counts.entry(v).or_insert(0) += c;
+            }
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let completed: u64 = shards.iter().map(|s| s.completed).sum();
+        ClusterSnapshot {
+            requests: shards.iter().map(|s| s.requests).sum(),
+            completed,
+            rejected: shards.iter().map(|s| s.rejected).sum(),
+            shed: shards.iter().map(|s| s.shed).sum(),
+            queue_depths: self.shared.queues.iter().map(|q| q.depth()).collect(),
+            elapsed_s: elapsed,
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            latency_p50_ms: merged.quantile(50.0),
+            latency_p90_ms: merged.quantile(90.0),
+            latency_p99_ms: merged.quantile(99.0),
+            current_version: self.current_version(),
+            version_counts: version_counts.into_iter().collect(),
+            shards,
+        }
+    }
+
+    /// Graceful shutdown: close every queue (typed rejections from
+    /// here on), then block until the workers have drained and
+    /// answered every accepted request.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stopping.store(true, Ordering::Release);
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for h in std::mem::take(&mut self.workers) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScoreRouter {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Aggregated cluster state. Semantics differ from the single-service
+/// [`Snapshot`] in one deliberate way: cluster `requests` counts
+/// ACCEPTED submissions (rejections are only in `rejected`/`shed`), so
+/// at quiescence `requests == completed` exactly — the reconciliation
+/// `cluster_parity.rs` pins. Per-shard `requests` vs `completed` may
+/// differ when work stealing moved a request between shards; the
+/// cluster-wide sums always reconcile.
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    pub shards: Vec<Snapshot>,
+    /// Accepted submissions, cluster-wide.
+    pub requests: u64,
+    pub completed: u64,
+    /// Hard-cap backpressure rejections.
+    pub rejected: u64,
+    /// Watermark load-shed rejections.
+    pub shed: u64,
+    pub queue_depths: Vec<usize>,
+    pub elapsed_s: f64,
+    /// Completions per second since the cluster started.
+    pub throughput_rps: f64,
+    /// Fleet latency quantiles estimated from the merged per-shard
+    /// histograms (exact per-shard reservoir percentiles live in
+    /// `shards`).
+    pub latency_p50_ms: f64,
+    pub latency_p90_ms: f64,
+    pub latency_p99_ms: f64,
+    pub current_version: u64,
+    /// `(version, completed)` tallies, ascending by version.
+    pub version_counts: Vec<(u64, u64)>,
+}
+
+impl ClusterSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("shed", self.shed)
+            .set("elapsed_s", self.elapsed_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("latency_p50_ms", self.latency_p50_ms)
+            .set("latency_p90_ms", self.latency_p90_ms)
+            .set("latency_p99_ms", self.latency_p99_ms)
+            .set("current_version", self.current_version);
+        j.set(
+            "queue_depths",
+            Json::Arr(self.queue_depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        j.set(
+            "version_counts",
+            Json::Arr(
+                self.version_counts
+                    .iter()
+                    .map(|&(v, c)| Json::Arr(vec![Json::Num(v as f64), Json::Num(c as f64)]))
+                    .collect(),
+            ),
+        );
+        j.set("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()));
+        j
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "v{} requests={} completed={} rejected={} shed={} rps={:.1} p50={:.2}ms p90={:.2}ms p99={:.2}ms depths={:?}",
+            self.current_version,
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.shed,
+            self.throughput_rps,
+            self.latency_p50_ms,
+            self.latency_p90_ms,
+            self.latency_p99_ms,
+            self.queue_depths
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::prelude::Pipeline;
+
+    fn demo_scorer(seed: u64, k: usize, data_seed: u64) -> (Scorer, crate::data::Dataset) {
+        let ds =
+            generate("letter", SynthConfig { seed: data_seed, n_train: 90, n_test: 40 }).unwrap();
+        let mut pipe = Pipeline::builder().seed(seed).samples(k).i_bits(4).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let scorer = pipe.scorer(ds.dim()).unwrap();
+        (scorer, ds)
+    }
+
+    fn cfg(shards: usize) -> ClusterConfig {
+        ClusterConfig { shards, queue_cap: 64, shed_watermark: None, steal: true }
+    }
+
+    #[test]
+    fn cluster_matches_direct_scorer() {
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        let direct = scorer.clone();
+        let cluster = ScoreRouter::start(scorer, cfg(2)).unwrap();
+        assert_eq!(cluster.shards(), 2);
+        assert_eq!(cluster.current_version(), 1);
+        let test = ds.test_x.to_dense();
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        for i in 0..test.rows() {
+            let resp = cluster.score_blocking(i as u64, test.row(i)).unwrap();
+            direct.score_dense_into(test.row(i), &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "row {i}");
+            assert_eq!(resp.label, argmax(&want));
+            assert_eq!(resp.version, 1);
+            assert!(resp.shard < 2);
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.requests, test.rows() as u64);
+        assert_eq!(snap.completed, snap.requests);
+        assert_eq!(snap.version_counts, vec![(1, snap.completed)]);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn batch_matches_predict_batch() {
+        let (scorer, ds) = demo_scorer(5, 16, 3);
+        let direct = scorer.clone();
+        let cluster = ScoreRouter::start(scorer, ClusterConfig { queue_cap: 8, ..cfg(3) }).unwrap();
+        let want = direct.predict_batch(&ds.test_x);
+        let got = cluster.score_batch_blocking(&ds.test_x).unwrap();
+        assert_eq!(got, want);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn publish_swaps_version_and_validates_shape() {
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        // Same seed/k/dim, different training data → different weights.
+        let (next, _) = demo_scorer(9, 16, 7);
+        let next_direct = next.clone();
+        let cluster = ScoreRouter::start(scorer, cfg(2)).unwrap();
+        let test = ds.test_x.to_dense();
+        let before = cluster.score_blocking(0, test.row(0)).unwrap();
+        assert_eq!(before.version, 1);
+
+        let v = cluster.publish(next).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(cluster.current_version(), 2);
+        let mut scratch = next_direct.scratch();
+        let mut want = vec![0.0f64; next_direct.n_classes()];
+        for i in 0..test.rows() {
+            let resp = cluster.score_blocking(i as u64, test.row(i)).unwrap();
+            assert_eq!(resp.version, 2, "row {i} must score on the new version");
+            next_direct.score_dense_into(test.row(i), &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "row {i}");
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.version_counts.len(), 2);
+        assert_eq!(snap.version_counts[0].0, 1);
+        assert_eq!(snap.version_counts[1].0, 2);
+
+        // Wrong shape is a typed error, not a swap.
+        let (wrong_k, _) = demo_scorer(9, 8, 2);
+        assert!(matches!(cluster.publish(wrong_k), Err(ClusterError::ShapeMismatch(_))));
+        let (wrong_seed, _) = demo_scorer(10, 16, 2);
+        assert!(matches!(cluster.publish(wrong_seed), Err(ClusterError::ShapeMismatch(_))));
+        assert_eq!(cluster.current_version(), 2);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn shed_and_backpressure_are_counted_and_typed() {
+        let (scorer, ds) = demo_scorer(9, 256, 2);
+        // One shard, tiny queue, low watermark: a burst must shed.
+        let cluster = ScoreRouter::start(
+            scorer,
+            ClusterConfig { shards: 1, queue_cap: 4, shed_watermark: Some(2), steal: false },
+        )
+        .unwrap();
+        let test = ds.test_x.to_dense();
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..400u64 {
+            match cluster.submit(i, test.row((i as usize) % test.rows())) {
+                Ok(s) => accepted.push(s),
+                Err(ClusterError::Shed { depth, watermark }) => {
+                    assert!(depth >= watermark);
+                    shed += 1;
+                }
+                Err(ClusterError::QueueFull) => {
+                    unreachable!("watermark (2) trips before the hard cap (4)")
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(shed > 0, "burst against a 2-deep watermark must shed");
+        let n_accepted = accepted.len() as u64;
+        for s in accepted {
+            s.wait().unwrap();
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.shed, shed);
+        assert_eq!(snap.requests, n_accepted);
+        assert_eq!(snap.completed, n_accepted);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_every_accepted_request() {
+        let (scorer, ds) = demo_scorer(9, 128, 2);
+        let cluster = ScoreRouter::start(
+            scorer,
+            ClusterConfig { shards: 2, queue_cap: 256, shed_watermark: None, steal: true },
+        )
+        .unwrap();
+        let test = ds.test_x.to_dense();
+        let mut accepted = Vec::new();
+        for i in 0..300u64 {
+            match cluster.submit(i, test.row((i as usize) % test.rows())) {
+                Ok(s) => accepted.push((i, s)),
+                Err(ClusterError::QueueFull) => {}
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        let n = accepted.len() as u64;
+        cluster.shutdown();
+        for (i, s) in accepted {
+            let resp = s.wait().expect("accepted request dropped at shutdown");
+            assert_eq!(resp.id, i);
+        }
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn rejects_bad_vectors_and_bad_configs() {
+        let (scorer, _) = demo_scorer(9, 16, 2);
+        let cluster = ScoreRouter::start(scorer.clone(), cfg(1)).unwrap();
+        assert!(matches!(cluster.submit(0, &[1.0; 3]), Err(ClusterError::BadInput(_))));
+        assert!(matches!(cluster.submit(0, &[-1.0; 16]), Err(ClusterError::BadInput(_))));
+        // All-zero rows are VALID here (empty-row parity with
+        // Pipeline::predict).
+        assert!(cluster.submit(0, &[0.0; 16]).is_ok());
+        cluster.shutdown();
+        assert!(ScoreRouter::start(scorer.clone(), ClusterConfig { shards: 0, ..cfg(1) }).is_err());
+        assert!(ScoreRouter::start(
+            scorer,
+            ClusterConfig { shed_watermark: Some(9999), queue_cap: 8, ..cfg(1) }
+        )
+        .is_err());
+    }
+}

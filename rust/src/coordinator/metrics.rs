@@ -1,6 +1,27 @@
 //! Service metrics: request/batch counters, latency percentiles,
-//! throughput — the observability layer of the hashing service.
+//! throughput — the observability layer of the hashing/serving stack.
+//!
+//! Counters are lock-free atomics (the submit path increments
+//! `requests` on every attempt — putting that behind the distribution
+//! mutex made every submitter serialize on the worker's latency
+//! recording). Distribution state (reservoirs, histogram, batch fill)
+//! stays behind one mutex; it is only touched by workers and
+//! `snapshot()`.
+//!
+//! ## Counter-ordering contract
+//!
+//! Increments use `Release`, snapshot loads use `Acquire`, and
+//! [`Metrics::snapshot`] reads the *outcome* counters (`completed`,
+//! `rejected`, `shed`) **before** the `requests` counter. Every
+//! outcome increment is preceded by its request increment (same thread
+//! for rejections; via the request queue's happens-before edge for
+//! completions), so observing an outcome implies the matching request
+//! increment is visible: a concurrent snapshot can never report
+//! `completed + rejected > requests`. Read them in the other order and
+//! torn totals appear under load — `metrics::tests::
+//! concurrent_counters_reconcile` hammers exactly this.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -12,17 +33,16 @@ use crate::util::stats::{Histogram, Online, Reservoir};
 pub const LATENCY_BUCKETS_MS: [f64; 12] =
     [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 1000.0];
 
+/// Distribution state that genuinely needs a lock. The hot-path
+/// counters live outside as atomics.
 #[derive(Debug)]
-struct Inner {
-    started: Instant,
-    requests: u64,
-    rejected: u64,
-    batches: u64,
+struct Dists {
     batch_fill: Online,
     latency_ms: Reservoir,
     /// Bucketed latency distribution: O(1) memory for long-lived
     /// services (the reservoir's exact percentiles keep working; the
-    /// histogram is what gets exported/scraped).
+    /// histogram is what gets exported/scraped and merged across
+    /// shards).
     latency_hist: Histogram,
     queue_wait_ms: Reservoir,
 }
@@ -30,7 +50,19 @@ struct Inner {
 /// Thread-safe metrics sink shared by the service and its workers.
 #[derive(Debug)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    started: Instant,
+    /// Submit attempts (the service increments this before the queue
+    /// push, so rejected attempts are included).
+    requests: AtomicU64,
+    /// Typed rejections: queue full (backpressure) at submit time.
+    rejected: AtomicU64,
+    /// Load-shed rejections: queue depth crossed the configured
+    /// watermark (cluster deployments; always 0 for a bare service).
+    shed: AtomicU64,
+    /// Requests answered — exactly one latency observation each.
+    completed: AtomicU64,
+    batches: AtomicU64,
+    dists: Mutex<Dists>,
 }
 
 impl Default for Metrics {
@@ -42,11 +74,13 @@ impl Default for Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                started: Instant::now(),
-                requests: 0,
-                rejected: 0,
-                batches: 0,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            dists: Mutex::new(Dists {
                 batch_fill: Online::new(),
                 latency_ms: Reservoir::new(),
                 latency_hist: Histogram::new(&LATENCY_BUCKETS_MS),
@@ -56,45 +90,70 @@ impl Metrics {
     }
 
     pub fn record_request(&self) {
-        self.inner.lock().unwrap().requests += 1;
+        self.requests.fetch_add(1, Ordering::Release);
     }
 
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.rejected.fetch_add(1, Ordering::Release);
+    }
+
+    /// A request rejected by load shedding (queue-depth watermark).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Release);
     }
 
     /// `fill` is the fraction of the batch capacity actually used.
     pub fn record_batch(&self, size: usize, capacity: usize) {
-        let mut m = self.inner.lock().unwrap();
-        m.batches += 1;
-        m.batch_fill.push(size as f64 / capacity.max(1) as f64);
+        self.batches.fetch_add(1, Ordering::Release);
+        let mut d = self.dists.lock().unwrap();
+        d.batch_fill.push(size as f64 / capacity.max(1) as f64);
     }
 
+    /// Record a finished request: one latency observation AND the
+    /// completion count — callers must invoke this exactly once per
+    /// answered request so `completed` reconciles against `requests`.
     pub fn record_latency_ms(&self, ms: f64) {
-        let mut m = self.inner.lock().unwrap();
-        m.latency_ms.push(ms);
-        m.latency_hist.push(ms);
+        {
+            let mut d = self.dists.lock().unwrap();
+            d.latency_ms.push(ms);
+            d.latency_hist.push(ms);
+        }
+        // After the observation lands: a snapshot that sees this
+        // completion also sees its latency in the locked state.
+        self.completed.fetch_add(1, Ordering::Release);
     }
 
     pub fn record_queue_wait_ms(&self, ms: f64) {
-        self.inner.lock().unwrap().queue_wait_ms.push(ms);
+        self.dists.lock().unwrap().queue_wait_ms.push(ms);
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut m = self.inner.lock().unwrap();
-        let elapsed = m.started.elapsed().as_secs_f64();
+        let mut d = self.dists.lock().unwrap();
+        // Outcome counters BEFORE the request counter — see the
+        // module-level ordering contract.
+        let completed = self.completed.load(Ordering::Acquire);
+        let rejected = self.rejected.load(Ordering::Acquire);
+        let shed = self.shed.load(Ordering::Acquire);
+        let batches = self.batches.load(Ordering::Acquire);
+        let requests = self.requests.load(Ordering::Acquire);
+        let elapsed = self.started.elapsed().as_secs_f64();
         Snapshot {
-            requests: m.requests,
-            rejected: m.rejected,
-            batches: m.batches,
+            requests,
+            rejected,
+            shed,
+            completed,
+            batches,
             elapsed_s: elapsed,
-            throughput_rps: if elapsed > 0.0 { m.requests as f64 / elapsed } else { 0.0 },
-            mean_batch_fill: m.batch_fill.mean(),
-            latency_p50_ms: m.latency_ms.percentile(50.0),
-            latency_p95_ms: m.latency_ms.percentile(95.0),
-            latency_p99_ms: m.latency_ms.percentile(99.0),
-            latency_hist: m.latency_hist.counts().to_vec(),
-            queue_wait_p50_ms: m.queue_wait_ms.percentile(50.0),
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            mean_batch_fill: d.batch_fill.mean(),
+            latency_p50_ms: d.latency_ms.percentile(50.0),
+            latency_p95_ms: d.latency_ms.percentile(95.0),
+            latency_p99_ms: d.latency_ms.percentile(99.0),
+            latency_hist_p50_ms: d.latency_hist.quantile(50.0),
+            latency_hist_p90_ms: d.latency_hist.quantile(90.0),
+            latency_hist_p99_ms: d.latency_hist.quantile(99.0),
+            latency_hist: d.latency_hist.counts().to_vec(),
+            queue_wait_p50_ms: d.queue_wait_ms.percentile(50.0),
         }
     }
 }
@@ -103,6 +162,13 @@ impl Metrics {
 pub struct Snapshot {
     pub requests: u64,
     pub rejected: u64,
+    /// Load-shed rejections (watermark crossings) — disjoint from
+    /// `rejected`.
+    pub shed: u64,
+    /// Requests answered; at quiescence
+    /// `requests == completed + rejected` (service semantics — see
+    /// `Metrics`).
+    pub completed: u64,
     pub batches: u64,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
@@ -110,6 +176,12 @@ pub struct Snapshot {
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
+    /// Bucket-estimated quantiles from `latency_hist` (the O(buckets)
+    /// answer that stays cheap forever and merges across shards; the
+    /// exact reservoir percentiles above are the reference).
+    pub latency_hist_p50_ms: f64,
+    pub latency_hist_p90_ms: f64,
+    pub latency_hist_p99_ms: f64,
     /// Latency bucket counts over [`LATENCY_BUCKETS_MS`] (last slot =
     /// overflow).
     pub latency_hist: Vec<u64>,
@@ -121,13 +193,18 @@ impl Snapshot {
         let mut j = crate::util::json::Json::obj();
         j.set("requests", self.requests)
             .set("rejected", self.rejected)
+            .set("shed", self.shed)
+            .set("completed", self.completed)
             .set("batches", self.batches)
             .set("elapsed_s", self.elapsed_s)
             .set("throughput_rps", self.throughput_rps)
             .set("mean_batch_fill", self.mean_batch_fill)
             .set("latency_p50_ms", self.latency_p50_ms)
             .set("latency_p95_ms", self.latency_p95_ms)
-            .set("latency_p99_ms", self.latency_p99_ms);
+            .set("latency_p99_ms", self.latency_p99_ms)
+            .set("latency_hist_p50_ms", self.latency_hist_p50_ms)
+            .set("latency_hist_p90_ms", self.latency_hist_p90_ms)
+            .set("latency_hist_p99_ms", self.latency_hist_p99_ms);
         j.set(
             "latency_bucket_le_ms",
             crate::util::json::Json::Arr(
@@ -145,9 +222,11 @@ impl Snapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} rejected={} batches={} rps={:.1} fill={:.2} p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            "requests={} completed={} rejected={} shed={} batches={} rps={:.1} fill={:.2} p50={:.2}ms p95={:.2}ms p99={:.2}ms",
             self.requests,
+            self.completed,
             self.rejected,
+            self.shed,
             self.batches,
             self.throughput_rps,
             self.mean_batch_fill,
@@ -161,6 +240,7 @@ impl Snapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn counters_accumulate() {
@@ -176,6 +256,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 5);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.shed, 0);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
         assert!(s.latency_p50_ms >= 1.0 && s.latency_p50_ms <= 3.0);
@@ -187,6 +269,10 @@ mod tests {
         let le_5 = LATENCY_BUCKETS_MS.iter().position(|&b| b == 2.5).unwrap() + 1;
         assert_eq!(s.latency_hist[le_1], 1);
         assert_eq!(s.latency_hist[le_5], 1);
+        // Bucket-estimated quantiles track the exact ones to within a
+        // bucket width.
+        assert!(s.latency_hist_p50_ms >= 0.5 && s.latency_hist_p50_ms <= 5.0);
+        assert!(s.latency_hist_p99_ms <= 5.0);
     }
 
     #[test]
@@ -199,6 +285,8 @@ mod tests {
         let json = s.to_json().to_string();
         assert!(json.contains("latency_bucket_counts"));
         assert!(json.contains("latency_bucket_le_ms"));
+        assert!(json.contains("latency_hist_p99_ms"));
+        assert!(json.contains("\"shed\""));
     }
 
     #[test]
@@ -208,5 +296,54 @@ mod tests {
         let s = m.snapshot();
         assert!(s.render().contains("requests=1"));
         assert!(s.to_json().to_string().contains("\"requests\""));
+    }
+
+    /// The satellite audit's regression test: outcome counters must
+    /// never be observed ahead of their request increments, and totals
+    /// must reconcile exactly at quiescence. Writers follow the service
+    /// protocol (request first, then exactly one outcome); concurrent
+    /// snapshotters assert the invariant the read ordering guarantees.
+    #[test]
+    fn concurrent_counters_reconcile() {
+        const WRITERS: u64 = 4;
+        const PER_WRITER: u64 = 2_000;
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for t in 0..WRITERS {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    m.record_request();
+                    if (i + t) % 8 == 0 {
+                        m.record_rejected();
+                    } else {
+                        m.record_latency_ms(0.5);
+                    }
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..300 {
+                    let s = m.snapshot();
+                    assert!(
+                        s.completed + s.rejected <= s.requests,
+                        "torn snapshot: completed={} rejected={} > requests={}",
+                        s.completed,
+                        s.rejected,
+                        s.requests
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, WRITERS * PER_WRITER);
+        assert_eq!(s.completed + s.rejected, s.requests);
+        // Every completion left exactly one histogram observation.
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), s.completed);
     }
 }

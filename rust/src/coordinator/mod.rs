@@ -11,6 +11,10 @@
 //!   (score mode), per-request latency metrics + histogram.
 //! * [`router`] — least-loaded routing over replicated services (hash
 //!   or score mode).
+//! * [`cluster`] — the sharded serving cluster: N scorer workers
+//!   behind bounded MPMC queues with work stealing, watermark
+//!   load-shedding, atomic model hot-swap (versioned `Arc` publish),
+//!   and per-shard metrics merged into a cluster snapshot.
 //! * [`pipeline`] — the offline batch pipeline: hash a dataset, encode
 //!   0-bit CWS one-hot codes (`features::CodeMatrix`, with CSR export
 //!   for IO), train/evaluate the linear model, and export weights in
@@ -19,12 +23,16 @@
 //! * [`metrics`] — shared observability.
 
 pub mod backend;
+pub mod cluster;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
 pub mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, PjrtSketcher, SketcherBackend};
+pub use cluster::{
+    ClusterConfig, ClusterError, ClusterScoreResponse, ClusterSnapshot, ScoreRouter, Submitted,
+};
 pub use metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 pub use pipeline::{
     export_scorer_weights, hash_dataset, hash_matrix_native, hashed_linear_accuracy,

@@ -14,8 +14,10 @@ use std::sync::mpsc;
 
 use crate::serve::Scorer;
 
+use crate::util::stats::Histogram;
+
 use super::backend::SketcherBackend;
-use super::metrics::Snapshot;
+use super::metrics::{Snapshot, LATENCY_BUCKETS_MS};
 use super::service::{HashResponse, HashService, ScoreResponse, ServiceConfig, SubmitError};
 
 pub struct Router {
@@ -156,6 +158,21 @@ impl Router {
         self.snapshot().iter().map(|s| s.requests).sum()
     }
 
+    /// Fleet-wide latency quantile estimates `(p50, p90, p99)` in
+    /// milliseconds: per-replica histogram exports merged bucket-wise,
+    /// then estimated — the aggregation exact reservoir percentiles
+    /// cannot do across replicas without shipping every sample.
+    pub fn latency_quantiles_ms(&self) -> (f64, f64, f64) {
+        let mut merged = Histogram::new(&LATENCY_BUCKETS_MS);
+        for s in self.snapshot() {
+            merged.merge(&Histogram::with_counts(&LATENCY_BUCKETS_MS, s.latency_hist));
+        }
+        (merged.quantile(50.0), merged.quantile(90.0), merged.quantile(99.0))
+    }
+
+    /// Shut every replica down gracefully — each drains and answers
+    /// its accepted requests before its worker exits (see
+    /// [`HashService::shutdown`]).
     pub fn shutdown(self) {
         for r in self.replicas {
             r.shutdown();
@@ -308,6 +325,10 @@ mod tests {
         let snaps = router.snapshot();
         assert_eq!(snaps.len(), 2);
         assert_eq!(snaps.iter().map(|s| s.requests).sum::<u64>(), 10);
+        // Fleet-wide histogram-estimated quantiles are finite and
+        // ordered once any replica has completions.
+        let (p50, p90, p99) = router.latency_quantiles_ms();
+        assert!(p50.is_finite() && p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
         router.shutdown();
     }
 }

@@ -103,7 +103,6 @@ struct Request {
 enum Msg {
     Req(Request),
     Flush,
-    Shutdown,
 }
 
 /// Score-mode worker state: the fused scorer plus its long-lived
@@ -129,8 +128,23 @@ enum WorkerExec {
 }
 
 /// Handle to the running service.
+///
+/// ## Shutdown contract (graceful drain)
+///
+/// [`HashService::shutdown`] (and `Drop`) closes the queue by dropping
+/// the sender — NOT by racing a control message past queued work. The
+/// worker keeps receiving until the channel reports disconnection,
+/// which by mpsc semantics only happens after every buffered message
+/// has been delivered; it then flushes its final partial batch and
+/// exits. Consequence: **every request a submit accepted gets exactly
+/// one response** — accepted-then-dropped requests cannot happen, and
+/// submits that lose the race to shutdown fail with the typed
+/// [`SubmitError::ShuttingDown`] instead. Pinned by
+/// `shutdown_drains_accepted_requests` below.
 pub struct HashService {
-    tx: mpsc::SyncSender<Msg>,
+    /// `None` once shutdown began — dropping the sender is what closes
+    /// the queue and lets the worker drain it.
+    tx: Option<mpsc::SyncSender<Msg>>,
     worker: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
@@ -202,7 +216,14 @@ impl HashService {
                 return Err(format!("{label} backend worker died during startup"));
             }
         }
-        Ok(HashService { tx, worker: Some(worker), metrics, stopping, cfg, scoring: None })
+        Ok(HashService {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            stopping,
+            cfg,
+            scoring: None,
+        })
     }
 
     /// Start in **score mode**: the worker owns the fused
@@ -245,7 +266,7 @@ impl HashService {
             })
             .map_err(|e| format!("spawn score worker: {e}"))?;
         Ok(HashService {
-            tx,
+            tx: Some(tx),
             worker: Some(worker),
             metrics,
             stopping,
@@ -288,8 +309,9 @@ impl HashService {
     }
 
     fn enqueue(&self, req: Request) -> Result<(), SubmitError> {
+        let tx = self.tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
         self.metrics.record_request();
-        match self.tx.try_send(Msg::Req(req)) {
+        match tx.try_send(Msg::Req(req)) {
             Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
@@ -360,12 +382,24 @@ impl HashService {
 
     /// Ask the batcher to flush a partial batch immediately.
     pub fn flush(&self) {
-        let _ = self.tx.try_send(Msg::Flush);
+        if let Some(tx) = self.tx.as_ref() {
+            let _ = tx.try_send(Msg::Flush);
+        }
     }
 
+    /// Graceful shutdown: refuse new submits, close the queue, and
+    /// block until the worker has drained and answered every request
+    /// that was already accepted (see the type-level shutdown
+    /// contract).
     pub fn shutdown(mut self) {
-        self.stopping.store(true, Ordering::Relaxed);
-        let _ = self.tx.send(Msg::Shutdown);
+        self.stop_and_drain();
+    }
+
+    fn stop_and_drain(&mut self) {
+        self.stopping.store(true, Ordering::Release);
+        // Dropping the sender closes the queue; buffered requests stay
+        // receivable, so the worker serves them all before exiting.
+        drop(self.tx.take());
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -374,11 +408,7 @@ impl HashService {
 
 impl Drop for HashService {
     fn drop(&mut self) {
-        self.stopping.store(true, Ordering::Relaxed);
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
+        self.stop_and_drain();
     }
 }
 
@@ -390,6 +420,11 @@ impl Drop for HashService {
 /// scorer per request against the worker's long-lived scratch arena —
 /// no sketch/code/decision allocation per request; only the response's
 /// own decisions `Vec` is fresh.
+///
+/// Shutdown is signaled by sender disconnection, which mpsc reports
+/// only after every buffered message has been received — so the loop
+/// naturally drains the queue, answers everything, and only then
+/// exits (the service's exactly-one-response guarantee).
 fn run_worker(
     cfg: ServiceConfig,
     mut exec: WorkerExec,
@@ -406,7 +441,8 @@ fn run_worker(
                     Instant::now() + cfg.max_wait
                 }
                 Ok(Msg::Flush) => continue,
-                Ok(Msg::Shutdown) | Err(_) => break,
+                // Disconnected with nothing buffered: fully drained.
+                Err(_) => break,
             }
         } else {
             Instant::now() + cfg.max_wait
@@ -422,10 +458,6 @@ fn run_worker(
             match rx.recv_timeout(left) {
                 Ok(Msg::Req(r)) => pending.push(r),
                 Ok(Msg::Flush) => flush_now = true,
-                Ok(Msg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     shutdown = true;
@@ -517,7 +549,13 @@ mod tests {
     use crate::cws::CwsHasher;
 
     fn cfg(k: usize, dim: usize) -> ServiceConfig {
-        ServiceConfig { k, dim, max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() }
+        ServiceConfig {
+            k,
+            dim,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        }
     }
 
     fn vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -688,6 +726,42 @@ mod tests {
         let bad_seed = ServiceConfig { seed: 999, ..cfg(16, 16) };
         let err = HashService::start_scoring(bad_seed, scorer).unwrap_err();
         assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_requests() {
+        // Fill the queue deep, then shut down immediately: every
+        // accepted submit must still receive exactly one response —
+        // drained, not dropped (the graceful-shutdown contract).
+        let c = ServiceConfig {
+            k: 64,
+            dim: 64,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 512,
+            ..Default::default()
+        };
+        let svc = HashService::start(c, NativeBackend).unwrap();
+        let v: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        let mut rxs = Vec::new();
+        let mut rejected = 0u32;
+        for i in 0..200u64 {
+            match svc.submit(i, v.clone()) {
+                Ok(rx) => rxs.push((i, rx)),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        let accepted = rxs.len() as u32;
+        svc.shutdown();
+        // After shutdown returns every accepted response is buffered.
+        for (i, rx) in rxs {
+            let resp = rx.recv().expect("accepted request dropped at shutdown");
+            assert_eq!(resp.id, i);
+            // Exactly one: a second recv must see the closed channel.
+            assert!(rx.try_recv().is_err(), "duplicate response for {i}");
+        }
+        assert_eq!(accepted + rejected, 200);
     }
 
     #[test]

@@ -47,7 +47,8 @@
 //!   stubbed without the `pjrt` feature).
 //! * [`coordinator`] — the deployable hashing/serving stack: open
 //!   [`coordinator::SketcherBackend`] factories, the batching service,
-//!   the replica router, and the offline batch pipeline.
+//!   the replica router, the sharded hot-swappable serving cluster
+//!   ([`coordinator::ScoreRouter`]), and the offline batch pipeline.
 //! * [`experiments`] — drivers regenerating every paper table and figure.
 
 pub mod bench;

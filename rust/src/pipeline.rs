@@ -430,6 +430,23 @@ impl Pipeline {
         Ok(scorer)
     }
 
+    /// Stand up a sharded serving cluster
+    /// ([`crate::coordinator::cluster::ScoreRouter`]) for this fitted
+    /// pipeline: builds the fused [`Scorer`] for raw dimensionality
+    /// `dim` and starts `cfg.shards` workers behind bounded queues.
+    /// Subsequent retrains can be pushed with
+    /// [`crate::coordinator::cluster::ScoreRouter::publish`] without
+    /// restarting the cluster. Errors are stringly typed to match the
+    /// coordinator layer's start functions.
+    pub fn cluster(
+        &self,
+        dim: usize,
+        cfg: crate::coordinator::ClusterConfig,
+    ) -> Result<crate::coordinator::ScoreRouter, String> {
+        let scorer = self.scorer(dim).map_err(|e| e.to_string())?;
+        crate::coordinator::ScoreRouter::start(scorer, cfg)
+    }
+
     /// Per-class decision values for one already-transformed row set —
     /// a [`CodeMatrix`] from [`Pipeline::transform_codes`] or a legacy
     /// CSR from [`Pipeline::transform`].

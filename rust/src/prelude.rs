@@ -45,8 +45,9 @@ pub use crate::svm::{
 
 // Serving stack.
 pub use crate::coordinator::{
-    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, Router, ScoreResponse,
-    ServiceConfig, SketcherBackend, SubmitError,
+    ClusterConfig, ClusterError, ClusterScoreResponse, ClusterSnapshot, HashResponse, HashService,
+    NativeBackend, PipelineConfig, PjrtBackend, Router, ScoreResponse, ScoreRouter, ServiceConfig,
+    SketcherBackend, SubmitError,
 };
 
 // Runtime bridge (stubbed without the `pjrt` feature).

@@ -194,6 +194,30 @@ impl Histogram {
         Self { bounds, counts: vec![0u64; bounds.len() + 1] }
     }
 
+    /// Rebuild a histogram from exported bucket counts (e.g. a metrics
+    /// snapshot's `latency_hist`) so aggregators can [`Histogram::merge`]
+    /// shard-level exports and estimate fleet-wide quantiles without
+    /// access to the live histograms. `counts` must have one slot per
+    /// bound plus the overflow slot.
+    pub fn with_counts(bounds: &'static [f64], counts: Vec<u64>) -> Self {
+        assert_eq!(
+            counts.len(),
+            bounds.len() + 1,
+            "counts must hold bounds.len() + 1 slots (incl. overflow)"
+        );
+        Self { bounds, counts }
+    }
+
+    /// Element-wise merge of another histogram over the SAME bucket
+    /// layout (panics on a layout mismatch — merging incompatible
+    /// histograms would silently misattribute observations).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bounds must match to merge");
+        for (a, &b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+
     #[inline]
     pub fn push(&mut self, x: f64) {
         let idx = self.bounds.partition_point(|&b| b < x);
@@ -211,6 +235,44 @@ impl Histogram {
 
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
+    }
+
+    /// Estimated quantile (`p` in `[0, 100]`) from the bucket counts —
+    /// the Prometheus `histogram_quantile` estimator: find the bucket
+    /// the target rank falls in, then interpolate linearly between its
+    /// edges. The first bucket's lower edge is 0 (every histogram in
+    /// this crate records nonnegative quantities — latencies), and
+    /// ranks landing in the overflow bucket clamp to the last finite
+    /// bound (there is no upper edge to interpolate toward). Returns
+    /// NaN for an empty histogram.
+    ///
+    /// Estimation error is bounded by the containing bucket's width —
+    /// see the exact [`Reservoir`] percentiles when the full sample is
+    /// affordable; this is the O(buckets) answer long-lived services
+    /// export.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let total = self.total();
+        if total == 0 || self.bounds.is_empty() {
+            return f64::NAN;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let prev = cum as f64;
+            cum += c;
+            if c > 0 && cum as f64 >= target {
+                if i >= self.bounds.len() {
+                    // Overflow bucket: clamp to the last finite bound.
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = ((target - prev) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+        }
+        // All mass sits in the overflow bucket.
+        self.bounds[self.bounds.len() - 1]
     }
 }
 
@@ -329,6 +391,46 @@ mod tests {
         assert_eq!(h.counts(), &[2, 2, 2, 2]);
         assert_eq!(h.total(), 8);
         assert_eq!(h.bounds(), &BOUNDS);
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        static BOUNDS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+        let mut h = Histogram::new(&BOUNDS);
+        assert!(h.quantile(50.0).is_nan());
+        // 100 observations uniform over (0, 2]: 50 in (0,1], 50 in (1,2].
+        for i in 0..100 {
+            h.push((i as f64 + 1.0) / 50.0);
+        }
+        // p50 rank = 50, exactly the full first bucket -> its upper edge.
+        assert!((h.quantile(50.0) - 1.0).abs() < 1e-9);
+        // p75 rank = 75: halfway through the (1, 2] bucket.
+        assert!((h.quantile(75.0) - 1.5).abs() < 1e-9);
+        assert!((h.quantile(100.0) - 2.0).abs() < 1e-9);
+        // Overflow clamps to the last finite bound.
+        let mut o = Histogram::new(&BOUNDS);
+        o.push(100.0);
+        assert_eq!(o.quantile(99.0), 8.0);
+    }
+
+    #[test]
+    fn histogram_merge_and_with_counts() {
+        static BOUNDS: [f64; 3] = [1.0, 5.0, 10.0];
+        let mut a = Histogram::new(&BOUNDS);
+        let mut b = Histogram::new(&BOUNDS);
+        for x in [0.5, 3.0, 20.0] {
+            a.push(x);
+        }
+        for x in [0.7, 7.0] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.counts(), &[2, 1, 1, 1]);
+        assert_eq!(a.total(), 5);
+        // Round-trip through exported counts (the snapshot path).
+        let rebuilt = Histogram::with_counts(&BOUNDS, a.counts().to_vec());
+        assert_eq!(rebuilt.counts(), a.counts());
+        assert_eq!(rebuilt.quantile(50.0), a.quantile(50.0));
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Cluster / layered-path parity for the sharded serving coordinator.
+//!
+//! The `coordinator::cluster::ScoreRouter` must be a pure execution
+//! change over the fused scorer, exactly like the scorer is over the
+//! layered path: predictions through the cluster are **bit-identical**
+//! to `Pipeline::predict` — before a hot swap, during one (requests in
+//! flight drain against the version that dequeued them), and after —
+//! at every shard count. And a swap under load loses nothing: every
+//! accepted request gets exactly one response, tagged with the version
+//! that scored it, whose label matches that version's model.
+//!
+//! CI runs this under a `MINMAX_THREADS × MINMAX_TEST_SHARDS` matrix;
+//! without the env var every test covers shard counts {1, 4} itself.
+
+use minmax::coordinator::{ClusterConfig, ClusterError, ScoreRouter};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Dataset;
+use minmax::pipeline::Pipeline;
+use minmax::serve::Scorer;
+
+/// Shard counts under test: `MINMAX_TEST_SHARDS` pins one (the CI
+/// matrix), default sweeps both.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("MINMAX_TEST_SHARDS") {
+        Ok(s) => vec![s.trim().parse().expect("MINMAX_TEST_SHARDS must be a shard count")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn letter(data_seed: u64) -> Dataset {
+    generate("letter", SynthConfig { seed: data_seed, n_train: 120, n_test: 60 }).unwrap()
+}
+
+/// Two models with identical serving shape (same sketcher seed, k,
+/// dim) but different weights — the hot-swap pair.
+fn trained_pair() -> (Pipeline, Pipeline, Dataset) {
+    let ds = letter(13);
+    let other = letter(31);
+    assert_eq!(ds.dim(), other.dim());
+    let mut a = Pipeline::builder().seed(7).samples(24).i_bits(4).build().unwrap();
+    a.fit(&ds.train_x, &ds.train_y).unwrap();
+    let mut b = Pipeline::builder().seed(7).samples(24).i_bits(4).build().unwrap();
+    b.fit(&other.train_x, &other.train_y).unwrap();
+    (a, b, ds)
+}
+
+fn cfg(shards: usize) -> ClusterConfig {
+    ClusterConfig { shards, queue_cap: 512, shed_watermark: None, steal: true }
+}
+
+#[test]
+fn cluster_matches_pipeline_before_and_after_swap() {
+    let (pipe_a, pipe_b, ds) = trained_pair();
+    let want_a = pipe_a.predict(&ds.test_x).unwrap();
+    let want_b = pipe_b.predict(&ds.test_x).unwrap();
+    assert_ne!(want_a, want_b, "swap pair must actually disagree somewhere");
+    let scorer_b = pipe_b.scorer(ds.dim()).unwrap();
+
+    for shards in shard_counts() {
+        let cluster = pipe_a.cluster(ds.dim(), cfg(shards)).unwrap();
+        assert_eq!(cluster.current_version(), 1);
+
+        // Before the swap: bit-identical to Pipeline::predict.
+        assert_eq!(
+            cluster.score_batch_blocking(&ds.test_x).unwrap(),
+            want_a,
+            "shards={shards} pre-swap"
+        );
+
+        // After: the new weights, still bit-identical, version tagged.
+        let v = cluster.publish(scorer_b.clone()).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(
+            cluster.score_batch_blocking(&ds.test_x).unwrap(),
+            want_b,
+            "shards={shards} post-swap"
+        );
+        let row0 = ds.test_x.to_dense();
+        let resp = cluster.score_blocking(0, row0.row(0)).unwrap();
+        assert_eq!(resp.version, 2);
+        assert_eq!(resp.label, want_b[0]);
+
+        // Everything accepted was answered.
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, snap.requests);
+        assert_eq!(snap.rejected + snap.shed, 0);
+        assert_eq!(snap.current_version, 2);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn cluster_decisions_are_bit_identical_to_direct_scorer() {
+    let (pipe_a, _, ds) = trained_pair();
+    let direct = pipe_a.scorer(ds.dim()).unwrap();
+    let test = ds.test_x.to_dense();
+    for shards in shard_counts() {
+        let cluster = pipe_a.cluster(ds.dim(), cfg(shards)).unwrap();
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        for i in 0..test.rows() {
+            let resp = cluster.score_blocking(i as u64, test.row(i)).unwrap();
+            direct.score_dense_into(test.row(i), &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "shards={shards} row {i}");
+        }
+        cluster.shutdown();
+    }
+}
+
+/// Hot swap under load: publishers flip versions while clients hammer
+/// submits. Every accepted request must get exactly one response whose
+/// label is bit-identical to the model of the version that scored it —
+/// in-flight requests drain on their dequeue-time version, none are
+/// lost or re-scored.
+#[test]
+fn hot_swap_under_load_loses_nothing_and_scores_on_tagged_version() {
+    let (pipe_a, pipe_b, ds) = trained_pair();
+    let want_a = pipe_a.predict(&ds.test_x).unwrap();
+    let want_b = pipe_b.predict(&ds.test_x).unwrap();
+    let scorer_a = pipe_a.scorer(ds.dim()).unwrap();
+    let scorer_b = pipe_b.scorer(ds.dim()).unwrap();
+    let test = ds.test_x.to_dense();
+    let rows = test.rows();
+
+    for shards in shard_counts() {
+        let cluster = pipe_a.cluster(ds.dim(), cfg(shards)).unwrap();
+        let n_clients = 3usize;
+        let per_client = 200usize;
+        let swaps = 20usize;
+        std::thread::scope(|s| {
+            // Publisher: alternate B, A, B, … so versions 1,3,5,… are
+            // model A and 2,4,6,… are model B.
+            let publisher = s.spawn(|| {
+                for i in 0..swaps {
+                    let next =
+                        if i % 2 == 0 { scorer_b.clone() } else { scorer_a.clone() };
+                    cluster.publish(next).unwrap();
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            });
+            let clients: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    let cluster = &cluster;
+                    let test = &test;
+                    let (want_a, want_b) = (&want_a, &want_b);
+                    s.spawn(move || {
+                        let mut accepted = 0u64;
+                        for i in 0..per_client {
+                            let row = (c * per_client + i) % rows;
+                            match cluster.submit(row as u64, test.row(row)) {
+                                Ok(sub) => {
+                                    accepted += 1;
+                                    let resp = sub.wait().expect("accepted request lost");
+                                    assert_eq!(resp.id, row as u64);
+                                    let want = if resp.version % 2 == 1 {
+                                        want_a[row]
+                                    } else {
+                                        want_b[row]
+                                    };
+                                    assert_eq!(
+                                        resp.label, want,
+                                        "shards={shards} row {row} version {}",
+                                        resp.version
+                                    );
+                                }
+                                Err(ClusterError::QueueFull) => {}
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            }
+                        }
+                        accepted
+                    })
+                })
+                .collect();
+            let total: u64 = clients.into_iter().map(|h| h.join().unwrap()).sum();
+            publisher.join().unwrap();
+            assert!(total > 0);
+            let snap = cluster.snapshot();
+            assert_eq!(snap.requests, total, "shards={shards}");
+            assert_eq!(snap.completed, total, "shards={shards} zero loss");
+            assert_eq!(snap.current_version, 1 + swaps as u64);
+            let counted: u64 = snap.version_counts.iter().map(|&(_, c)| c).sum();
+            assert_eq!(counted, total, "every completion tallied under some version");
+        });
+        cluster.shutdown();
+    }
+}
+
+/// Graceful shutdown drains: accepted-then-dropped cannot happen even
+/// when shutdown races a full pipeline of queued work.
+#[test]
+fn shutdown_under_load_answers_every_accepted_request() {
+    let (pipe_a, _, ds) = trained_pair();
+    let test = ds.test_x.to_dense();
+    for shards in shard_counts() {
+        let cluster: ScoreRouter = pipe_a.cluster(ds.dim(), cfg(shards)).unwrap();
+        let mut pending = Vec::new();
+        for i in 0..400u64 {
+            match cluster.submit(i, test.row((i as usize) % test.rows())) {
+                Ok(sub) => pending.push((i, sub)),
+                Err(ClusterError::QueueFull) => {}
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        let accepted = pending.len();
+        cluster.shutdown();
+        for (i, sub) in pending {
+            let resp = sub.wait().expect("accepted request dropped at shutdown");
+            assert_eq!(resp.id, i, "shards={shards}");
+        }
+        assert!(accepted > 0);
+    }
+}
+
+/// A cloned-from-the-same-pipeline scorer publishes cleanly; a scorer
+/// with a different sketcher seed is refused — replicas must stay
+/// interchangeable.
+#[test]
+fn publish_shape_validation_is_enforced() {
+    let (pipe_a, _, ds) = trained_pair();
+    let cluster = pipe_a.cluster(ds.dim(), cfg(1)).unwrap();
+    let mut other = Pipeline::builder().seed(8).samples(24).i_bits(4).build().unwrap();
+    other.fit(&ds.train_x, &ds.train_y).unwrap();
+    let wrong_seed: Scorer = other.scorer(ds.dim()).unwrap();
+    assert!(matches!(cluster.publish(wrong_seed), Err(ClusterError::ShapeMismatch(_))));
+    assert_eq!(cluster.current_version(), 1);
+    cluster.shutdown();
+}
