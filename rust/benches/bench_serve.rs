@@ -12,7 +12,14 @@
 //! * `fused-single-row/*` — `Scorer::predict_dense` with a reused
 //!   scratch (the p50-latency serving entry);
 //! * `fused-single-row-allocs-per-row` — steady-state heap allocations
-//!   per single-row predict (must be 0; recorded as a stat).
+//!   per single-row predict (must be 0; recorded as a stat);
+//! * `fused-simd/*` — the runtime-dispatched SIMD gather at one thread
+//!   (the `simd-wide` stat records whether wide lanes engaged; set
+//!   `MINMAX_SIMD=off` before launch to bench the scalar fallback —
+//!   dispatch is latched process-wide on first use);
+//! * `fused-f32/*`, `fused-int8/*` — the quantized weight slabs;
+//! * `fused-packed/*` — b-bit codes packed into u64 words (emitted only
+//!   for word-aligned widths; b=6 cannot pack).
 //!
 //! Run: `cargo bench --bench bench_serve [-- --quick]`; CI uploads
 //! `results/bench/bench_serve.json` as BENCH_serve.json.
@@ -23,7 +30,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use minmax::bench::{black_box, Runner};
 use minmax::data::synth::{generate, SynthConfig};
 use minmax::pipeline::Pipeline;
-use minmax::util::pool;
+use minmax::serve::SlabPrecision;
+use minmax::util::{pool, simd};
 
 /// System allocator wrapped with an allocation counter.
 struct CountingAlloc;
@@ -120,6 +128,55 @@ fn main() {
             "alloc/row",
         );
         assert_eq!(delta, 0, "steady-state single-row scoring must not allocate ({tag})");
+
+        // The PR 7 variants. `fused-simd` is the dispatched gather at
+        // one thread (compare against `fused-batch-T1` across a
+        // MINMAX_SIMD=off run to isolate the lanes); the rest swap the
+        // slab precision or the code representation.
+        r.stat(&format!("simd-wide/{tag}"), if simd::wide() { 1.0 } else { 0.0 }, "bool");
+        r.bench_with_throughput(&format!("fused-simd/{tag}"), thr, || {
+            black_box(scorer.predict_batch_with_threads(&ds.test_x, 1));
+        });
+
+        let agreement = |labels: &[i32]| {
+            labels.iter().zip(&baseline).filter(|(a, b)| a == b).count() as f64 / n as f64
+        };
+        let f32_scorer = scorer.clone().with_precision(SlabPrecision::F32);
+        let f32_labels = f32_scorer.predict_batch_with_threads(&ds.test_x, 1);
+        assert!(agreement(&f32_labels) >= 0.98, "f32 slab drifted from the f64 baseline ({tag})");
+        r.bench_with_throughput(&format!("fused-f32/{tag}"), thr, || {
+            black_box(f32_scorer.predict_batch_with_threads(&ds.test_x, 1));
+        });
+
+        let int8_scorer = scorer.clone().with_precision(SlabPrecision::Int8);
+        assert_eq!(int8_scorer.precision(), SlabPrecision::Int8, "int8 gate must engage ({tag})");
+        let int8_labels = int8_scorer.predict_batch_with_threads(&ds.test_x, 1);
+        let int8_agree = agreement(&int8_labels);
+        r.stat(&format!("fused-int8-agreement/{tag}"), int8_agree, "frac");
+        assert!(int8_agree >= 0.90, "int8 slab failed the accuracy floor ({tag})");
+        r.bench_with_throughput(&format!("fused-int8/{tag}"), thr, || {
+            black_box(int8_scorer.predict_batch_with_threads(&ds.test_x, 1));
+        });
+
+        let packed_scorer = scorer.clone().with_packed_codes(true);
+        if packed_scorer.packed_codes() {
+            // Packing never changes bits, so the guard is exact; and the
+            // packed single-row path must stay allocation-free too.
+            assert_eq!(packed_scorer.predict_batch_with_threads(&ds.test_x, 1), baseline);
+            r.bench_with_throughput(&format!("fused-packed/{tag}"), thr, || {
+                black_box(packed_scorer.predict_batch_with_threads(&ds.test_x, 1));
+            });
+            let mut pscratch = packed_scorer.scratch();
+            for w in 0..dense.rows() {
+                black_box(packed_scorer.predict_dense(dense.row(w), &mut pscratch));
+            }
+            let before = ALLOCS.load(Ordering::Relaxed);
+            for j in 0..m {
+                black_box(packed_scorer.predict_dense(dense.row(j % dense.rows()), &mut pscratch));
+            }
+            let delta = ALLOCS.load(Ordering::Relaxed) - before;
+            assert_eq!(delta, 0, "packed single-row scoring must not allocate ({tag})");
+        }
     }
 
     r.save("bench_serve");

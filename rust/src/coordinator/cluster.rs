@@ -37,8 +37,11 @@
 //!
 //! The current model lives in one `RwLock<Arc<Versioned>>`.
 //! [`ScoreRouter::publish`] validates the new [`Scorer`]'s shape
-//! (`k`/`dim`/`seed` must match — replicas must stay interchangeable),
-//! bumps the version, and swaps the `Arc` under the write lock — a
+//! (`k`/`dim`/`seed` must match — replicas must stay interchangeable —
+//! and so must the serving plan: slab precision and code packing,
+//! since a swap that silently changed them would change the fleet's
+//! latency and accuracy characteristics), bumps the version, and swaps
+//! the `Arc` under the write lock — a
 //! pointer swap, no worker pause. Workers clone the `Arc` at every
 //! dequeue, so requests already dequeued **drain against the version
 //! they started with** while the next dequeue picks up the new slab;
@@ -61,7 +64,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::data::Matrix;
-use crate::serve::{argmax, Scorer, Scratch};
+use crate::serve::{argmax, Scorer, Scratch, SlabPrecision};
 use crate::util::stats::Histogram;
 
 use super::metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
@@ -101,8 +104,8 @@ pub enum ClusterError {
     /// Cluster is shutting down (or a worker died).
     ShuttingDown,
     BadInput(String),
-    /// `publish` with a scorer whose `k`/`dim`/`seed` disagree with
-    /// the cluster's.
+    /// `publish` with a scorer whose `k`/`dim`/`seed`/slab precision/
+    /// code packing disagree with the cluster's.
     ShapeMismatch(String),
 }
 
@@ -365,6 +368,11 @@ pub struct ScoreRouter {
     k: usize,
     dim: usize,
     seed: u64,
+    // Serving-plan invariants (PR 7): replicas must stream the same
+    // slab precision and code packing, or a hot swap silently changes
+    // latency/accuracy characteristics mid-fleet.
+    precision: SlabPrecision,
+    packed: bool,
 }
 
 /// An accepted submission: the response handle plus which shard's
@@ -410,6 +418,7 @@ impl ScoreRouter {
             }
         }
         let (k, dim, seed) = (scorer.k(), scorer.dim(), scorer.seed());
+        let (precision, packed) = (scorer.precision(), scorer.packed_codes());
         let shared = Arc::new(Shared {
             queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
             model: RwLock::new(Arc::new(Versioned { version: 1, scorer })),
@@ -436,6 +445,8 @@ impl ScoreRouter {
             k,
             dim,
             seed,
+            precision,
+            packed,
         })
     }
 
@@ -488,6 +499,20 @@ impl ScoreRouter {
                 "seed {} != cluster seed {}",
                 scorer.seed(),
                 self.seed
+            )));
+        }
+        if scorer.precision() != self.precision {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "slab precision {} != cluster precision {}",
+                scorer.precision(),
+                self.precision
+            )));
+        }
+        if scorer.packed_codes() != self.packed {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "packed codes {} != cluster packing {}",
+                scorer.packed_codes(),
+                self.packed
             )));
         }
         let mut slot = self.shared.model.write().unwrap();
@@ -850,6 +875,49 @@ mod tests {
         assert!(matches!(cluster.publish(wrong_seed), Err(ClusterError::ShapeMismatch(_))));
         assert_eq!(cluster.current_version(), 2);
         cluster.shutdown();
+    }
+
+    #[test]
+    fn publish_rejects_precision_and_packing_mismatches() {
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        let cluster = ScoreRouter::start(scorer.clone(), cfg(2)).unwrap();
+        // Same k/dim/seed but a different serving plan must not swap in.
+        let f32_variant = scorer.clone().with_precision(SlabPrecision::F32);
+        assert!(matches!(
+            cluster.publish(f32_variant),
+            Err(ClusterError::ShapeMismatch(_))
+        ));
+        let packed_variant = scorer.clone().with_packed_codes(true);
+        assert!(packed_variant.packed_codes());
+        assert!(matches!(
+            cluster.publish(packed_variant),
+            Err(ClusterError::ShapeMismatch(_))
+        ));
+        assert_eq!(cluster.current_version(), 1, "rejected publishes must not bump the version");
+        cluster.shutdown();
+
+        // A cluster serving a quantized, packed plan accepts a matching
+        // publish and rejects the plain one — and still scores in
+        // agreement with its direct twin.
+        let quant = scorer.clone().with_precision(SlabPrecision::Int8).with_packed_codes(true);
+        assert_eq!(quant.precision(), SlabPrecision::Int8);
+        assert!(quant.packed_codes());
+        let direct = quant.clone();
+        let qcluster = ScoreRouter::start(quant, cfg(2)).unwrap();
+        assert!(matches!(qcluster.publish(scorer), Err(ClusterError::ShapeMismatch(_))));
+        let (retrain, _) = demo_scorer(9, 16, 7);
+        let retrain = retrain.with_precision(SlabPrecision::Int8).with_packed_codes(true);
+        assert_eq!(qcluster.publish(retrain).unwrap(), 2);
+        let test = ds.test_x.to_dense();
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        direct.score_dense_into(test.row(0), &mut scratch, &mut want);
+        // Version 2 has different weights; republish v1's twin to compare.
+        let again = direct.clone();
+        assert_eq!(qcluster.publish(again).unwrap(), 3);
+        let resp = qcluster.score_blocking(0, test.row(0)).unwrap();
+        assert_eq!(resp.decisions, want);
+        qcluster.shutdown();
     }
 
     #[test]

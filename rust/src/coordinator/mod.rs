@@ -35,8 +35,8 @@ pub use cluster::{
 };
 pub use metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 pub use pipeline::{
-    export_scorer_weights, hash_dataset, hash_matrix_native, hashed_linear_accuracy,
-    hashed_linear_sweep, sketch_matrix, HashedDataset, PipelineConfig,
+    export_scorer_slab, export_scorer_weights, hash_dataset, hash_matrix_native,
+    hashed_linear_accuracy, hashed_linear_sweep, sketch_matrix, HashedDataset, PipelineConfig,
 };
 pub use router::{Routed, RoutedResponse, RoutedScore, Router};
 pub use service::{HashResponse, HashService, ScoreResponse, ServiceConfig, SubmitError};

@@ -11,6 +11,7 @@
 use crate::cws::{CwsHasher, CwsSample};
 use crate::data::{Csr, Dataset, Matrix};
 use crate::features::{CodeMatrix, Expansion, ExpansionError};
+use crate::serve::{ExportedWeights, SlabPrecision};
 use crate::sketch::Sketcher;
 use crate::svm::{linear_svm_accuracy, LinearSvmParams, RowSet};
 
@@ -138,27 +139,31 @@ pub fn export_scorer_weights<X: RowSet + ?Sized>(
     expansion: &Expansion,
     c: f64,
 ) -> Vec<f32> {
+    match export_scorer_slab(train, train_y, n_classes, expansion, c, SlabPrecision::F32) {
+        ExportedWeights::F32(w) => w,
+        _ => unreachable!("an F32 export always carries an F32 slab"),
+    }
+}
+
+/// Precision-parameterized counterpart of [`export_scorer_weights`]:
+/// train the final hashed linear model and export its serving slab as
+/// an [`ExportedWeights`] at `precision` (f64 master, f32, or gated
+/// per-class affine int8 — see
+/// `svm::LinearOvR::export_scorer_weights`). The bias is folded into
+/// every code of slot 0 in all three variants, so the scorer built by
+/// `serve::Scorer::from_exported_slab` needs no training structs.
+pub fn export_scorer_slab<X: RowSet + ?Sized>(
+    train: &X,
+    train_y: &[i32],
+    n_classes: usize,
+    expansion: &Expansion,
+    c: f64,
+    precision: SlabPrecision,
+) -> ExportedWeights {
     use crate::svm::LinearOvR;
     let p = LinearSvmParams { c, ..Default::default() };
     let model = LinearOvR::train(train, train_y, n_classes, &p);
-    let codes = expansion.code_space();
-    let k = expansion.k;
-    // w[j, code, class] = weight of feature (j * codes + code) in class.
-    let mut w = vec![0.0f32; k * codes * n_classes];
-    for (cls, m) in model.models().iter().enumerate() {
-        for j in 0..k {
-            for code in 0..codes {
-                let fidx = j * codes + code;
-                // Fold the per-class bias into every code of slot 0 so the
-                // serving gather (which has no bias input) is exact:
-                // every row selects exactly one code per slot.
-                let bias_share = if j == 0 { m.b } else { 0.0 };
-                w[(j * codes + code) * n_classes + cls] =
-                    (m.w[fidx] + bias_share) as f32;
-            }
-        }
-    }
-    w
+    model.export_scorer_weights(expansion, precision)
 }
 
 #[cfg(test)]
@@ -262,6 +267,54 @@ mod tests {
             for cls in 0..n_classes {
                 assert!(
                     (got[cls] - want[cls]).abs() < 1e-4 * (1.0 + want[cls].abs()),
+                    "row {i} class {cls}: {} vs {}",
+                    got[cls],
+                    want[cls]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f64_slab_export_reproduces_decisions_near_exactly() {
+        // The f32 export's 1e-4 tolerance (test above) is all rounding;
+        // the f64 slab carries the model weights verbatim, so the only
+        // slack left is summation order.
+        use crate::svm::LinearOvR;
+        let ds = small("vowel");
+        let cfg = PipelineConfig::new(9, 16, 4);
+        let h = hash_dataset(&ds, &cfg).unwrap();
+        let c = 1.0;
+        let slab = export_scorer_slab(
+            &h.train,
+            &ds.train_y,
+            ds.n_classes(),
+            &h.expansion,
+            c,
+            SlabPrecision::F64,
+        );
+        assert_eq!(slab.precision(), SlabPrecision::F64);
+        let w = match &slab {
+            ExportedWeights::F64(w) => w,
+            _ => unreachable!(),
+        };
+        let p = LinearSvmParams { c, ..Default::default() };
+        let model = LinearOvR::train(&h.train, &ds.train_y, ds.n_classes(), &p);
+        let n_classes = ds.n_classes();
+        for i in 0..h.test.rows().min(20) {
+            if h.test.codes_of(i).is_empty() {
+                continue; // empty rows miss the slot-0 bias fold by design
+            }
+            let want = model.decisions_on(&h.test, i);
+            let mut got = vec![0.0f64; n_classes];
+            for &col in h.test.codes_of(i) {
+                for cls in 0..n_classes {
+                    got[cls] += w[col as usize * n_classes + cls];
+                }
+            }
+            for cls in 0..n_classes {
+                assert!(
+                    (got[cls] - want[cls]).abs() < 1e-9 * (1.0 + want[cls].abs()),
                     "row {i} class {cls}: {} vs {}",
                     got[cls],
                     want[cls]

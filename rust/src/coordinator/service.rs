@@ -151,6 +151,11 @@ pub struct HashService {
     cfg: ServiceConfig,
     /// `Some(n_classes)` when started in score mode.
     scoring: Option<usize>,
+    /// The serving plan when started in score mode: which weight slab
+    /// the worker's scorer streams and whether it packs codes —
+    /// deployment observability, mirroring the cluster's publish-time
+    /// invariants.
+    score_plan: Option<(crate::serve::SlabPrecision, bool)>,
 }
 
 #[derive(Debug)]
@@ -223,6 +228,7 @@ impl HashService {
             stopping,
             cfg,
             scoring: None,
+            score_plan: None,
         })
     }
 
@@ -244,6 +250,7 @@ impl HashService {
             return Err(format!("scorer seed {} != service seed {}", scorer.seed(), cfg.seed));
         }
         let n_classes = scorer.n_classes();
+        let score_plan = Some((scorer.precision(), scorer.packed_codes()));
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
         let metrics = Arc::new(Metrics::new());
         let stopping = Arc::new(AtomicBool::new(false));
@@ -272,6 +279,7 @@ impl HashService {
             stopping,
             cfg,
             scoring: Some(n_classes),
+            score_plan,
         })
     }
 
@@ -286,6 +294,14 @@ impl HashService {
     /// `Some(n_classes)` when this service was started in score mode.
     pub fn n_classes(&self) -> Option<usize> {
         self.scoring
+    }
+
+    /// `Some((slab precision, packed codes))` when this service was
+    /// started in score mode — the serving plan the worker's scorer
+    /// executes (see `serve::SlabPrecision` and
+    /// `serve::Scorer::with_packed_codes`).
+    pub fn score_plan(&self) -> Option<(crate::serve::SlabPrecision, bool)> {
+        self.score_plan
     }
 
     fn validate(&self, vector: &[f32]) -> Result<(), SubmitError> {
@@ -718,6 +734,34 @@ mod tests {
     }
 
     #[test]
+    fn score_mode_serves_quantized_packed_plans() {
+        use crate::serve::SlabPrecision;
+        let c = cfg(16, 16);
+        let seed = c.seed;
+        let scorer = demo_scorer(seed, 16, 16)
+            .with_precision(SlabPrecision::Int8)
+            .with_packed_codes(true);
+        assert_eq!(scorer.precision(), SlabPrecision::Int8);
+        assert!(scorer.packed_codes());
+        let direct = scorer.clone();
+        let svc = HashService::start_scoring(c, scorer).unwrap();
+        assert_eq!(svc.score_plan(), Some((SlabPrecision::Int8, true)));
+        let inputs = vecs(8, 16, 21);
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        for (i, v) in inputs.iter().enumerate() {
+            let resp = svc.score_blocking(i as u64, v).unwrap();
+            direct.score_dense_into(v, &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "request {i}");
+        }
+        svc.shutdown();
+        // Hash mode carries no plan.
+        let hash_svc = HashService::start(cfg(8, 8), NativeBackend).unwrap();
+        assert!(hash_svc.score_plan().is_none());
+        hash_svc.shutdown();
+    }
+
+    #[test]
     fn score_mode_validates_scorer_shape() {
         let scorer = demo_scorer(11, 16, 16);
         let err = HashService::start_scoring(cfg(8, 16), scorer).unwrap_err();
@@ -776,7 +820,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let inputs = vecs(25, 16, 100 + t);
                 for (i, v) in inputs.into_iter().enumerate() {
-                    let resp = svc.hash_blocking(t * 1000 + i as u64, v).unwrap();
+                    let resp = svc.hash_blocking(t * 1000 + i as u64, &v).unwrap();
                     assert_eq!(resp.samples.len(), 8);
                 }
             }));

@@ -15,6 +15,15 @@
 //!   select updates (strict `<`, so the first winner of an exact tie is
 //!   kept — identical tie-breaking to the scalar loop, hence bit-for-bit
 //!   identical output; pinned by `rust/tests/engine_parity.rs`).
+//! * **SIMD-chunked argmin (PR 7).** The inner loop is element-wise
+//!   across the k slots, so [`crate::util::simd`] dispatch splits it
+//!   into chunks of [`crate::util::simd::CHUNK`] staged through fixed
+//!   lane arrays — same arithmetic, same candidate order, same strict
+//!   `<`, hence bit-identical to the scalar fallback that
+//!   `MINMAX_SIMD=off` forces (pinned by the lanes-vs-scalar module
+//!   tests). The exact path keeps libm `exp` as scalar calls; the
+//!   fast-math path vectorizes end to end because [`fast_exp`] is pure
+//!   float arithmetic.
 //! * **`util::fastmath` behind an accuracy-checked toggle.** With
 //!   `MINMAX_FAST_MATH=1` (or [`SketchEngine::with_fast_math`]) the
 //!   engine precomputes the derived slabs `1/r` and `r·β − r`, replaces
@@ -42,6 +51,7 @@ use crate::data::sparse::{Csr, SparseRow};
 use crate::util::fastmath::{fast_exp, fast_ln};
 use crate::util::pool;
 use crate::util::rng::Pcg64;
+use crate::util::simd;
 
 /// Placeholder sample used to prefill batch output slabs; every live row
 /// overwrites its slots before they are read.
@@ -102,17 +112,33 @@ impl Argmin {
         self.best_t.resize(k, 0.0);
     }
 
-    /// Exact-math update for one nonzero: byte-identical arithmetic to
-    /// the original scalar sampler (`t = ⌊ln u / r + β⌋`,
-    /// `a = c·exp(−r(t−β) − r)`), visited in the same per-sample
-    /// candidate order, compared with the same strict `<`.
+    /// Exact-math update for one nonzero, dispatched once per call on
+    /// the cached [`simd::wide`] decision: the chunked kernel when SIMD
+    /// is enabled, the verbatim scalar loop under `MINMAX_SIMD=off`.
+    /// Both variants perform the same per-slot arithmetic in the same
+    /// candidate order with the same strict `<`, so the dispatch is
+    /// bit-invisible (pinned by the module tests below and
+    /// `rust/tests/engine_parity.rs`).
+    #[inline]
+    fn update_exact(&mut self, i: u32, lnu: f64, r: &[f64], c: &[f64], beta: &[f64]) {
+        if simd::wide() {
+            self.update_exact_lanes(i, lnu, r, c, beta);
+        } else {
+            self.update_exact_scalar(i, lnu, r, c, beta);
+        }
+    }
+
+    /// Byte-identical arithmetic to the original scalar sampler
+    /// (`t = ⌊ln u / r + β⌋`, `a = c·exp(−r(t−β) − r)`), visited in the
+    /// same per-sample candidate order, compared with the same strict
+    /// `<`.
     ///
     /// Indexed loop on purpose: six equal-length slabs walked in
     /// lockstep with no bounds checks after the `[..k]` narrowing — the
     /// shape LLVM vectorizes.
     #[inline]
     #[allow(clippy::needless_range_loop)]
-    fn update_exact(&mut self, i: u32, lnu: f64, r: &[f64], c: &[f64], beta: &[f64]) {
+    fn update_exact_scalar(&mut self, i: u32, lnu: f64, r: &[f64], c: &[f64], beta: &[f64]) {
         let k = self.best_a.len();
         let (r, c, beta) = (&r[..k], &c[..k], &beta[..k]);
         let ba = &mut self.best_a[..k];
@@ -128,14 +154,79 @@ impl Argmin {
         }
     }
 
-    /// Fast-math update: the division becomes a multiply by the
-    /// precomputed `1/r`, the exponent folds the precomputed `r·β − r`
-    /// (`−r(t−β) − r = (r·β − r) − r·t`), and `exp` is
-    /// [`fast_exp`]. Not bit-pinned — gated by [`fastmath_accuracy_ok`]
-    /// and the agreement tests in `rust/tests/engine_parity.rs`.
+    /// Chunked exact update: stage `t` and `a` for [`simd::CHUNK`]
+    /// slots into fixed arrays (the divide/floor/select phases
+    /// vectorize; `exp` stays a scalar libm call per slot, so the
+    /// arithmetic is identical to [`Self::update_exact_scalar`] — only
+    /// instruction scheduling changes), then run the branchless selects
+    /// lane-wise. The tail reuses the scalar body verbatim.
+    #[inline]
+    #[allow(clippy::needless_range_loop)]
+    fn update_exact_lanes(&mut self, i: u32, lnu: f64, r: &[f64], c: &[f64], beta: &[f64]) {
+        const L: usize = simd::CHUNK;
+        let k = self.best_a.len();
+        let (r, c, beta) = (&r[..k], &c[..k], &beta[..k]);
+        let ba = &mut self.best_a[..k];
+        let bi = &mut self.best_i[..k];
+        let bt = &mut self.best_t[..k];
+        let mut j = 0;
+        while j + L <= k {
+            let mut t = [0.0f64; L];
+            let mut a = [0.0f64; L];
+            for l in 0..L {
+                t[l] = (lnu / r[j + l] + beta[j + l]).floor();
+            }
+            for l in 0..L {
+                a[l] = c[j + l] * (-(r[j + l] * (t[l] - beta[j + l])) - r[j + l]).exp();
+            }
+            for l in 0..L {
+                let better = a[l] < ba[j + l];
+                ba[j + l] = if better { a[l] } else { ba[j + l] };
+                bi[j + l] = if better { i } else { bi[j + l] };
+                bt[j + l] = if better { t[l] } else { bt[j + l] };
+            }
+            j += L;
+        }
+        while j < k {
+            let t = (lnu / r[j] + beta[j]).floor();
+            let a = c[j] * (-(r[j] * (t - beta[j])) - r[j]).exp();
+            let better = a < ba[j];
+            ba[j] = if better { a } else { ba[j] };
+            bi[j] = if better { i } else { bi[j] };
+            bt[j] = if better { t } else { bt[j] };
+            j += 1;
+        }
+    }
+
+    /// Fast-math update, dispatched like [`Self::update_exact`]: the
+    /// division becomes a multiply by the precomputed `1/r`, the
+    /// exponent folds the precomputed `r·β − r`
+    /// (`−r(t−β) − r = (r·β − r) − r·t`), and `exp` is [`fast_exp`].
+    /// Not bit-pinned against libm — gated by [`fastmath_accuracy_ok`]
+    /// and the agreement tests in `rust/tests/engine_parity.rs` — but
+    /// the lanes/scalar pair is still bit-identical to each other.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn update_fast(
+        &mut self,
+        i: u32,
+        lnu: f64,
+        r: &[f64],
+        c: &[f64],
+        beta: &[f64],
+        inv_r: &[f64],
+        shift: &[f64],
+    ) {
+        if simd::wide() {
+            self.update_fast_lanes(i, lnu, r, c, beta, inv_r, shift);
+        } else {
+            self.update_fast_scalar(i, lnu, r, c, beta, inv_r, shift);
+        }
+    }
+
     #[inline]
     #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
-    fn update_fast(
+    fn update_fast_scalar(
         &mut self,
         i: u32,
         lnu: f64,
@@ -157,6 +248,58 @@ impl Argmin {
             ba[j] = if better { a } else { ba[j] };
             bi[j] = if better { i } else { bi[j] };
             bt[j] = if better { t } else { bt[j] };
+        }
+    }
+
+    /// Chunked fast-math update. Unlike the exact path, *everything*
+    /// here vectorizes — [`fast_exp`] is pure float arithmetic with no
+    /// libm call, so the whole chunk lowers to straight-line vector
+    /// code. Same per-slot arithmetic and select order as
+    /// [`Self::update_fast_scalar`], hence bit-identical to it.
+    #[inline]
+    #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+    fn update_fast_lanes(
+        &mut self,
+        i: u32,
+        lnu: f64,
+        r: &[f64],
+        c: &[f64],
+        beta: &[f64],
+        inv_r: &[f64],
+        shift: &[f64],
+    ) {
+        const L: usize = simd::CHUNK;
+        let k = self.best_a.len();
+        let (r, c, beta, inv_r, shift) = (&r[..k], &c[..k], &beta[..k], &inv_r[..k], &shift[..k]);
+        let ba = &mut self.best_a[..k];
+        let bi = &mut self.best_i[..k];
+        let bt = &mut self.best_t[..k];
+        let mut j = 0;
+        while j + L <= k {
+            let mut t = [0.0f64; L];
+            let mut a = [0.0f64; L];
+            for l in 0..L {
+                t[l] = (lnu * inv_r[j + l] + beta[j + l]).floor();
+            }
+            for l in 0..L {
+                a[l] = c[j + l] * fast_exp(shift[j + l] - r[j + l] * t[l]);
+            }
+            for l in 0..L {
+                let better = a[l] < ba[j + l];
+                ba[j + l] = if better { a[l] } else { ba[j + l] };
+                bi[j + l] = if better { i } else { bi[j + l] };
+                bt[j + l] = if better { t[l] } else { bt[j + l] };
+            }
+            j += L;
+        }
+        while j < k {
+            let t = (lnu * inv_r[j] + beta[j]).floor();
+            let a = c[j] * fast_exp(shift[j] - r[j] * t);
+            let better = a < ba[j];
+            ba[j] = if better { a } else { ba[j] };
+            bi[j] = if better { i } else { bi[j] };
+            bt[j] = if better { t } else { bt[j] };
+            j += 1;
         }
     }
 
@@ -646,6 +789,46 @@ mod tests {
             let lazy = sample_lazy(9, 24, row.indices, &ln_u);
             assert_eq!(e.sketch_dense(&v), lazy);
             assert_eq!(e.sketch_sparse(row), lazy);
+        }
+    }
+
+    #[test]
+    fn lanes_argmin_is_bit_identical_to_scalar() {
+        // The SIMD dispatch contract: chunked and scalar argmin updates
+        // compute the same bits for every k (full chunks, ragged tails,
+        // k below one chunk), in both exact and fast math.
+        let mut rng = Pcg64::new(0x1A9E);
+        for &k in &[1usize, 3, 7, 8, 9, 16, 23, 64] {
+            let exact = SketchEngine::new(77, k, 40).with_fast_math(false);
+            let fast = SketchEngine::new(77, k, 40).with_fast_math(true);
+            let mut scalar = Argmin::default();
+            let mut lanes = Argmin::default();
+            let mut scalar_f = Argmin::default();
+            let mut lanes_f = Argmin::default();
+            scalar.reset(k);
+            lanes.reset(k);
+            scalar_f.reset(k);
+            lanes_f.reset(k);
+            for i in 0..40u32 {
+                let lnu = rng.range_f64(-6.0, 2.0);
+                let (r, c, beta) = exact.params_slab(i as usize);
+                scalar.update_exact_scalar(i, lnu, r, c, beta);
+                lanes.update_exact_lanes(i, lnu, r, c, beta);
+                let base = i as usize * k;
+                let (inv_r, shift) =
+                    (&fast.inv_r[base..base + k], &fast.shift[base..base + k]);
+                scalar_f.update_fast_scalar(i, lnu, r, c, beta, inv_r, shift);
+                lanes_f.update_fast_lanes(i, lnu, r, c, beta, inv_r, shift);
+            }
+            for (s, l) in [(&scalar, &lanes), (&scalar_f, &lanes_f)] {
+                let a_same =
+                    s.best_a.iter().zip(&l.best_a).all(|(x, y)| x.to_bits() == y.to_bits());
+                let t_same =
+                    s.best_t.iter().zip(&l.best_t).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(a_same, "best_a diverged at k={k}");
+                assert!(t_same, "best_t diverged at k={k}");
+                assert_eq!(s.best_i, l.best_i, "best_i diverged at k={k}");
+            }
         }
     }
 

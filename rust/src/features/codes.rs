@@ -12,6 +12,14 @@
 //! Built by [`crate::features::Expansion::encode`]; [`CodeMatrix::to_csr`]
 //! is the compatibility/export path (LIBSVM IO, CSR-consuming code) and
 //! reproduces `Expansion::expand` exactly.
+//!
+//! [`PackedCodes`] compresses the slab further for the serving tier: a
+//! row's k codes at b bits each packed into contiguous `u64` words —
+//! the b-bit minwise footprint argument (arXiv:1105.4385) applied to
+//! the serving memory stream. Lossless whenever `b = b_i + b_t` divides
+//! 64 (the 4/8/16-bit configurations the serving path cares about),
+//! because a code's block offset `j · 2^b` is recoverable from its slot
+//! position alone.
 
 use crate::data::sparse::{Csr, CsrBuilder};
 
@@ -110,6 +118,170 @@ impl CodeMatrix {
         }
         Ok(())
     }
+
+    /// Pack the slab into b-bit words ([`PackedCodes`]), or `None` when
+    /// this matrix's code space has no supported packing width (see
+    /// [`PackedCodes::supported_bits`]). Lossless:
+    /// [`PackedCodes::to_code_matrix`] reproduces `self` exactly.
+    pub fn pack(&self) -> Option<PackedCodes> {
+        let code_space = self.dim / self.k;
+        let bits = PackedCodes::supported_bits(code_space)?;
+        let wpr = PackedCodes::words_per_row(self.k, bits);
+        let mut words = vec![0u64; wpr * self.rows()];
+        for i in 0..self.rows() {
+            if !self.empty[i] {
+                let row = &self.codes[i * self.k..(i + 1) * self.k];
+                PackedCodes::pack_row(row, code_space, bits, &mut words[i * wpr..(i + 1) * wpr]);
+            }
+        }
+        Some(PackedCodes {
+            k: self.k,
+            bits,
+            dim: self.dim,
+            words_per_row: wpr,
+            words,
+            empty: self.empty.clone(),
+        })
+    }
+}
+
+/// `[n × ⌈k·b/64⌉]` packed b-bit code words — [`CodeMatrix`] with the
+/// redundant block offsets stripped.
+///
+/// A row's sample-`j` code is `j · 2^b + rel` where only the b-bit
+/// `rel` varies, so the packed form stores `rel` alone: slot `j` lives
+/// in word `j / (64/b)` at bit offset `(j mod 64/b) · b`, and the
+/// absolute code is reconstructed from the slot position for free. The
+/// last word of a row is zero-padded; empty input rows keep all-zero
+/// words plus their mask bit. At `b = 4` this is a 8× smaller stream
+/// than the `u32` slab — the difference between a row's codes spilling
+/// cache lines and fitting in a couple of registers on the serving hot
+/// path (`serve::Scorer::with_packed_codes`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodes {
+    k: usize,
+    /// Bits per code (`b_i + b_t`); always a divisor of 64.
+    bits: u8,
+    /// One-hot dimensionality of the unpacked space, `k · 2^bits`.
+    dim: usize,
+    words_per_row: usize,
+    /// Row-major `[n × words_per_row]` packed words.
+    words: Vec<u64>,
+    /// Per-row marker for empty input vectors.
+    empty: Vec<bool>,
+}
+
+impl PackedCodes {
+    /// The packing width for a code space, or `None` when unsupported.
+    /// Supported widths are exactly the power-of-two code spaces whose
+    /// bit count divides 64 — b ∈ {1, 2, 4, 8, 16} given the crate's
+    /// `MAX_CODE_BITS = 24` cap — so rows never straddle word
+    /// boundaries and pack/unpack stay shift-and-mask only.
+    pub fn supported_bits(code_space: usize) -> Option<u8> {
+        if code_space < 2 || !code_space.is_power_of_two() {
+            return None;
+        }
+        let bits = code_space.trailing_zeros() as u8;
+        (64 % bits as usize == 0).then_some(bits)
+    }
+
+    /// Words needed for one row of `k` codes at `bits` per code.
+    pub fn words_per_row(k: usize, bits: u8) -> usize {
+        k.div_ceil(64 / bits as usize)
+    }
+
+    /// Pack one row of absolute codes into a pre-zeroed word slice.
+    /// `rel = abs & (2^bits − 1)` is exact because `abs = j·2^bits +
+    /// rel` keeps the low `bits` untouched by the block offset.
+    fn pack_row(codes: &[u32], code_space: usize, bits: u8, out: &mut [u64]) {
+        let cpw = 64 / bits as usize;
+        let mask = code_space as u64 - 1;
+        for (j, &abs) in codes.iter().enumerate() {
+            out[j / cpw] |= (abs as u64 & mask) << ((j % cpw) * bits as usize);
+        }
+    }
+
+    /// Pack one row's absolute codes into a reusable word buffer
+    /// (cleared and resized to exactly the row's word count) — the
+    /// serving scratch entry point: zero allocations in steady state.
+    pub fn pack_row_into(codes: &[u32], code_space: usize, bits: u8, words: &mut Vec<u64>) {
+        let cpw = 64 / bits as usize;
+        words.clear();
+        words.resize(codes.len().div_ceil(cpw), 0);
+        Self::pack_row(codes, code_space, bits, words);
+    }
+
+    /// Decode sample `j`'s **absolute** code from a packed row slice.
+    #[inline]
+    pub fn unpack_abs(words: &[u64], code_space: usize, bits: u8, j: usize) -> u32 {
+        let cpw = 64 / bits as usize;
+        let rel = (words[j / cpw] >> ((j % cpw) * bits as usize)) & (code_space as u64 - 1);
+        (j * code_space) as u32 + rel as u32
+    }
+
+    pub fn rows(&self) -> usize {
+        self.empty.len()
+    }
+
+    /// Samples per non-empty row.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bits per packed code.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// One-hot dimensionality of the unpacked space.
+    pub fn cols(&self) -> usize {
+        self.dim
+    }
+
+    /// Per-sample code space `2^bits`.
+    pub fn code_space(&self) -> usize {
+        1usize << self.bits
+    }
+
+    pub fn is_empty_row(&self, i: usize) -> bool {
+        self.empty[i]
+    }
+
+    /// Row `i`'s packed words (zero-padded tail; all-zero for empty
+    /// rows — check [`Self::is_empty_row`] before decoding).
+    #[inline]
+    pub fn word_row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Decode row `i` into `out` as absolute codes (cleared first; left
+    /// empty for an empty input row) — mirrors
+    /// [`CodeMatrix::codes_of`] semantics on a reusable buffer.
+    pub fn unpack_row_into(&self, i: usize, out: &mut Vec<u32>) {
+        out.clear();
+        if self.empty[i] {
+            return;
+        }
+        let row = self.word_row(i);
+        let cs = self.code_space();
+        out.extend((0..self.k).map(|j| Self::unpack_abs(row, cs, self.bits, j)));
+    }
+
+    /// Reconstruct the unpacked [`CodeMatrix`] — the lossless inverse
+    /// of [`CodeMatrix::pack`] (pinned by the roundtrip property test).
+    pub fn to_code_matrix(&self) -> CodeMatrix {
+        let mut codes = vec![0u32; self.rows() * self.k];
+        let cs = self.code_space();
+        for i in 0..self.rows() {
+            if !self.empty[i] {
+                let row = self.word_row(i);
+                for (j, slot) in codes[i * self.k..(i + 1) * self.k].iter_mut().enumerate() {
+                    *slot = Self::unpack_abs(row, cs, self.bits, j);
+                }
+            }
+        }
+        CodeMatrix::from_parts(self.k, self.dim, codes, self.empty.clone())
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +343,70 @@ mod tests {
         for (j, &c) in codes.iter().enumerate() {
             assert_eq!(c as usize / e.code_space(), j);
         }
+    }
+
+    #[test]
+    fn supported_bits_are_exactly_the_word_aligned_widths() {
+        assert_eq!(PackedCodes::supported_bits(2), Some(1));
+        assert_eq!(PackedCodes::supported_bits(4), Some(2));
+        assert_eq!(PackedCodes::supported_bits(16), Some(4));
+        assert_eq!(PackedCodes::supported_bits(256), Some(8));
+        assert_eq!(PackedCodes::supported_bits(1 << 16), Some(16));
+        // 3/5/6-bit codes straddle word boundaries; not supported.
+        assert_eq!(PackedCodes::supported_bits(8), None);
+        assert_eq!(PackedCodes::supported_bits(32), None);
+        assert_eq!(PackedCodes::supported_bits(64), None);
+        // Degenerate / non-power-of-two spaces.
+        assert_eq!(PackedCodes::supported_bits(0), None);
+        assert_eq!(PackedCodes::supported_bits(1), None);
+        assert_eq!(PackedCodes::supported_bits(48), None);
+    }
+
+    #[test]
+    fn pack_is_a_lossless_roundtrip() {
+        // Property: for every supported (b_i, b_t) width, pack →
+        // to_code_matrix reproduces the CodeMatrix exactly (empty rows
+        // included), and the streaming row entry points agree with the
+        // slab ones.
+        crate::util::prop::check("packed-codes-roundtrip", 60, |g| {
+            let k = g.usize_in(1, 48);
+            let &(i_bits, t_bits) = g.choose(&[(4u8, 0u8), (2, 2), (8, 0), (4, 4), (8, 8)]);
+            let e = Expansion::new(k, i_bits).with_t_bits(t_bits).map_err(|x| x.to_string())?;
+            let dim = g.usize_in(2, 24);
+            let rows: Vec<Vec<f32>> =
+                (0..g.usize_in(1, 12)).map(|_| g.nonneg_vec(dim, g.rng.uniform())).collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            let s = samples_for(&refs, k, 21);
+            let cm = e.encode(&s);
+            let packed = cm.pack().ok_or("supported width must pack")?;
+            crate::util::prop::ensure(
+                packed.bits() == i_bits + t_bits,
+                "packed width is b_i + b_t",
+            )?;
+            crate::util::prop::ensure(packed.to_code_matrix() == cm, "pack/unpack roundtrip")?;
+            let mut buf = Vec::new();
+            let mut words = Vec::new();
+            for i in 0..cm.rows() {
+                packed.unpack_row_into(i, &mut buf);
+                crate::util::prop::ensure(buf == cm.codes_of(i), "unpack_row_into == codes_of")?;
+                PackedCodes::pack_row_into(
+                    cm.codes_of(i),
+                    e.code_space(),
+                    packed.bits(),
+                    &mut words,
+                );
+                let want: &[u64] =
+                    if cm.is_empty_row(i) { &[] } else { packed.word_row(i) };
+                crate::util::prop::ensure(words == want, "pack_row_into == slab words")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unsupported_widths_do_not_pack() {
+        let e = Expansion::new(8, 3);
+        let s = samples_for(&[&[1.0f32, 2.0]], 8, 5);
+        assert!(e.encode(&s).pack().is_none(), "3-bit codes must not pack");
     }
 }

@@ -10,7 +10,7 @@
 
 pub mod codes;
 
-pub use codes::CodeMatrix;
+pub use codes::{CodeMatrix, PackedCodes};
 
 use crate::cws::sampler::CwsSample;
 use crate::cws::schemes::Scheme;

@@ -486,21 +486,24 @@ impl Pipeline {
     /// layout (see `coordinator::export_scorer_weights`); `None` before
     /// `fit`.
     pub fn export_weights(&self) -> Option<Vec<f32>> {
-        let model = self.model.as_ref()?;
-        let codes = self.expansion.code_space();
-        let k = self.expansion.k;
-        let n_classes = self.n_classes;
-        let mut w = vec![0.0f32; k * codes * n_classes];
-        for (cls, m) in model.models().iter().enumerate() {
-            for j in 0..k {
-                for code in 0..codes {
-                    let bias_share = if j == 0 { m.b } else { 0.0 };
-                    w[(j * codes + code) * n_classes + cls] =
-                        (m.w[j * codes + code] + bias_share) as f32;
-                }
-            }
+        match self.export_weights_with(crate::serve::SlabPrecision::F32)? {
+            crate::serve::ExportedWeights::F32(w) => Some(w),
+            _ => unreachable!("an F32 export always carries an F32 slab"),
         }
-        Some(w)
+    }
+
+    /// [`Pipeline::export_weights`] at a chosen slab precision: the
+    /// f64 master, the historical f32 bytes, or the gated per-class
+    /// affine int8 triple (see `svm::LinearOvR::export_scorer_weights`
+    /// for the layout and quantization contract). Feed the result to
+    /// [`Scorer::from_exported_slab`] to serve without training
+    /// structs; `None` before `fit`.
+    pub fn export_weights_with(
+        &self,
+        precision: crate::serve::SlabPrecision,
+    ) -> Option<crate::serve::ExportedWeights> {
+        let model = self.model.as_ref()?;
+        Some(model.export_scorer_weights(&self.expansion, precision))
     }
 
     pub fn expansion(&self) -> &Expansion {

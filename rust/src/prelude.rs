@@ -17,7 +17,7 @@ pub use crate::cws::{
     collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
     LshIndex, MinwiseHasher, Scheme, SketchEngine, SketchScratch,
 };
-pub use crate::features::{CodeMatrix, Expansion, ExpansionError};
+pub use crate::features::{CodeMatrix, Expansion, ExpansionError, PackedCodes};
 
 // Kernel helpers.
 pub use crate::kernels::gram::{GramSource, GramSpec, GramStats, OnTheFly, Precomputed, SubsetGram};
@@ -31,7 +31,7 @@ pub use crate::kernels::{
 pub use crate::pipeline::{Pipeline, PipelineBuilder, PipelineError, Scaling};
 
 // The fused serving path.
-pub use crate::serve::{Scorer, Scratch, ServeError};
+pub use crate::serve::{ExportedWeights, Scorer, Scratch, ServeError, SlabPrecision};
 
 // Data layer.
 pub use crate::data::synth::{generate, SynthConfig};

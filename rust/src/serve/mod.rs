@@ -32,6 +32,27 @@
 //! reuses the exact arithmetic of the layer it fuses — same sketch
 //! bits, same code function, same reduction tree, same argmax order.
 //!
+//! **Vectorization and quantization (PR 7, DESIGN.md §2.6).** The
+//! gather is memory-bandwidth bound, so the path scales three ways:
+//!
+//! * **SIMD dispatch** — the lane adds route through
+//!   [`crate::util::simd`], which picks AVX2 intrinsics / portable
+//!   chunked kernels / the scalar fallback at runtime (`MINMAX_SIMD`
+//!   forces the fallback). Every level performs the same element-wise
+//!   adds, so dispatch never changes bits.
+//! * **[`SlabPrecision`]** — alongside the f64 master slab the scorer
+//!   can carry an f32 copy (half the memory stream; decisions equal
+//!   the f64 gather over the f32-rounded weights bit-for-bit, because
+//!   accumulation stays f64) or a per-class affine int8 slab (quarter
+//!   stream; integer lane sums are exact, so the only error is the
+//!   ≤ scale/2 per-weight rounding, bounded per decision by
+//!   `k·scale/2`). Like `MINMAX_FAST_MATH`, requesting int8 runs an
+//!   accuracy gate first and silently stays on f64 if it fails — the
+//!   precision is a request, not a promise.
+//! * **Packed codes** — [`Scorer::with_packed_codes`] stages each
+//!   row's k codes as b-bit words ([`PackedCodes`]) and decodes during
+//!   the gather; same codes, same adds, bit-identical decisions.
+//!
 //! Construction:
 //! * [`crate::pipeline::Pipeline::scorer`] — from a fitted pipeline
 //!   (weights copied out of the `LinearOvR` at full f64 precision,
@@ -40,7 +61,10 @@
 //! * [`Scorer::from_exported`] — from the f32 `[K, 2^bits, C]` slab
 //!   `export_scorer_weights` emits (the bias is folded into slot 0
 //!   there, so a coordinator can serve without any training structs —
-//!   decisions then match to f32 precision and predictions agree).
+//!   decisions then match to f32 precision and predictions agree);
+//! * [`Scorer::from_exported_slab`] — the same deployment story for
+//!   all three precisions via [`ExportedWeights`]
+//!   (`LinearOvR::export_scorer_weights`).
 //!
 //! Batch entry: [`Scorer::predict_batch`] shards rows across
 //! `MINMAX_THREADS` scoped threads like `SketchEngine::sketch_rows`,
@@ -53,9 +77,10 @@
 use crate::cws::engine::{self, SketchEngine, SketchScratch};
 use crate::cws::CwsSample;
 use crate::data::{scale, Matrix, SparseRow};
-use crate::features::Expansion;
+use crate::features::{Expansion, PackedCodes};
 use crate::pipeline::Scaling;
 use crate::svm::LinearOvR;
+use crate::util::simd;
 
 /// Errors constructing a [`Scorer`] from weights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,23 +104,167 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Numeric precision of the serving weight slab a [`Scorer`] gathers
+/// from. The f64 master slab is always kept (it is what `with_precision`
+/// derives the narrow slabs from, and the fallback when the int8 gate
+/// refuses); the enum names which slab the hot path streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlabPrecision {
+    /// Full-precision f64 slab — the PR 5 baseline, bit-identical to
+    /// the layered training path.
+    F64,
+    /// f32 slab, accumulated in f64. Decisions are bit-identical to an
+    /// f64 gather over the f32-rounded weights: the only loss is the
+    /// one-time per-weight rounding, the memory stream halves.
+    F32,
+    /// Per-class affine int8 quantization (`w ≈ offset + scale·q`).
+    /// Integer lane sums are exact; per-decision error is bounded by
+    /// `k · scale/2` per class. Guarded by an accuracy gate.
+    Int8,
+}
+
+impl std::fmt::Display for SlabPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SlabPrecision::F64 => "f64",
+            SlabPrecision::F32 => "f32",
+            SlabPrecision::Int8 => "int8",
+        })
+    }
+}
+
+/// A class-minor `[K, 2^bits, C]` serving slab exported from a trained
+/// model at a chosen precision (`LinearOvR::export_scorer_weights`),
+/// with each class bias folded into every code of slot 0 — the
+/// training-struct-free deployment format [`Scorer::from_exported_slab`]
+/// consumes. The int8 variant ships the quantized bytes *and* the
+/// per-class `(scale, offset)` pair so serving reuses the training-side
+/// quantization verbatim instead of re-deriving it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExportedWeights {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+    Int8 { q: Vec<i8>, scale: Vec<f64>, offset: Vec<f64> },
+}
+
+impl ExportedWeights {
+    pub fn precision(&self) -> SlabPrecision {
+        match self {
+            ExportedWeights::F64(_) => SlabPrecision::F64,
+            ExportedWeights::F32(_) => SlabPrecision::F32,
+            ExportedWeights::Int8 { .. } => SlabPrecision::Int8,
+        }
+    }
+
+    /// Slab entries (`expansion.dim() × n_classes` when well-formed).
+    pub fn len(&self) -> usize {
+        match self {
+            ExportedWeights::F64(w) => w.len(),
+            ExportedWeights::F32(w) => w.len(),
+            ExportedWeights::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-class affine int8 quantization of a class-minor f64 slab:
+/// `scale[cls] = (max − min)/255` over class `cls`'s column,
+/// `q = round((w − min)/scale) − 128`, `offset[cls] = min + 128·scale`,
+/// so `w ≈ offset + scale·q` with |error| ≤ scale/2 per weight
+/// (round-to-nearest). A constant column gets `scale = 0` and
+/// reconstructs exactly. One shared implementation so the
+/// training-side export and the serving-side [`Scorer::with_precision`]
+/// produce bit-identical `(q, scale, offset)` triples.
+pub(crate) fn quantize_slab(w: &[f64], n_classes: usize) -> (Vec<i8>, Vec<f64>, Vec<f64>) {
+    let c = n_classes;
+    let mut q = vec![0i8; w.len()];
+    let mut scale = vec![0.0f64; c];
+    let mut offset = vec![0.0f64; c];
+    for cls in 0..c {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut col = cls;
+        while col < w.len() {
+            lo = lo.min(w[col]);
+            hi = hi.max(w[col]);
+            col += c;
+        }
+        let s = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+        scale[cls] = s;
+        if s == 0.0 {
+            // Constant (possibly empty-range) column: q = 0 everywhere
+            // and offset carries the constant exactly.
+            offset[cls] = if lo.is_finite() { lo } else { 0.0 };
+            continue;
+        }
+        offset[cls] = lo + 128.0 * s;
+        let mut col = cls;
+        while col < w.len() {
+            // Clamp defensively: round((hi−lo)/s) = 255 exactly in
+            // theory, but one ulp of slop must not wrap the i8.
+            let t = ((w[col] - lo) / s).round() as i32 - 128;
+            q[col] = t.clamp(-128, 127) as i8;
+            col += c;
+        }
+    }
+    (q, scale, offset)
+}
+
+/// Accuracy gate for an int8 slab, in the `MINMAX_FAST_MATH` style:
+/// verify on the *actual* slab that every dequantized weight sits
+/// within half a quantization step of its f64 master (what
+/// round-to-nearest guarantees — a degenerate class range or an odd
+/// platform rounding shows up here) and that the worst-case
+/// per-decision error `k·scale/2` is finite. `false` → the caller
+/// stays on the exact f64 slab.
+fn int8_slab_ok(w: &[f64], q: &[i8], scale: &[f64], offset: &[f64], k: usize) -> bool {
+    let c = scale.len();
+    if c == 0 || q.len() != w.len() || offset.len() != c {
+        return false;
+    }
+    for (col, (&wv, &qv)) in w.iter().zip(q).enumerate() {
+        let cls = col % c;
+        let tol = 0.5 * scale[cls] * (1.0 + 1e-9) + 1e-300;
+        if !((offset[cls] + scale[cls] * qv as f64 - wv).abs() <= tol) {
+            return false;
+        }
+    }
+    let worst = scale.iter().fold(0.0f64, |m, &s| m.max(s)) * 0.5 * k as f64;
+    worst.is_finite()
+}
+
 /// Placeholder sample for scratch prefill; every scored row overwrites
 /// its slots before they are read.
 const EMPTY_SAMPLE: CwsSample = CwsSample { i_star: u32::MAX, t_star: 0 };
 
+/// Lane accumulators + packed-word staging for the gather stage, split
+/// out of [`Scratch`] so the score cores can borrow them disjointly
+/// from the sketch buffers.
+#[derive(Default)]
+struct GatherScratch {
+    /// Per-class f64 lanes (4 × n_classes) mirroring the 4-lane
+    /// reduction of `svm::rowset::dot_onehot` (f64/f32 slabs).
+    lanes: Vec<f64>,
+    /// Per-class i32 lanes (4 × n_classes) for the int8 slab.
+    lanes_i: Vec<i32>,
+    /// b-bit packed code words for the packed-codes path.
+    words: Vec<u64>,
+}
+
 /// Reusable per-thread scoring arena: the sketch gather/argmin buffers,
-/// the k-sample and k-code staging slots, the four gather lanes, and
-/// the scaling buffer. Create one per serving thread with
-/// [`Scorer::scratch`] and reuse it across requests — every buffer
-/// resets per row (reuse is bit-identical to a fresh scratch, pinned by
-/// `serve_parity.rs`), and after the first few calls no entry allocates.
+/// the k-sample and k-code staging slots, the gather lanes (f64 and
+/// i32) plus packed-word staging, and the scaling buffer. Create one
+/// per serving thread with [`Scorer::scratch`] and reuse it across
+/// requests — every buffer resets per row (reuse is bit-identical to a
+/// fresh scratch, pinned by `serve_parity.rs`), and after the first few
+/// calls no entry allocates.
 pub struct Scratch {
     sketch: SketchScratch,
     samples: Vec<CwsSample>,
     codes: Vec<u32>,
-    /// Per-class lane accumulators (4 × n_classes) mirroring the 4-lane
-    /// reduction of `svm::rowset::dot_onehot`.
-    lanes: Vec<f64>,
+    gather: GatherScratch,
     /// Decision staging for the `predict_*` entries.
     decisions: Vec<f64>,
     /// Scaled copy of the input row (dense values or sparse values),
@@ -118,9 +287,11 @@ pub fn argmax(decisions: &[f64]) -> i32 {
 }
 
 /// The fused single-pass scoring kernel. Owns the ICWS parameter slabs
-/// (via [`SketchEngine`]), the b-bit expansion, and the class-minor
-/// `[K, 2^bits, C]` weight slab (f64) plus per-class biases. `Clone`
-/// duplicates everything so router replicas can each own one.
+/// (via [`SketchEngine`]), the b-bit expansion, the class-minor
+/// `[K, 2^bits, C]` f64 master slab plus per-class biases, and — when
+/// [`Scorer::with_precision`] selects one — a derived f32 or int8 slab
+/// the gather streams instead. `Clone` duplicates everything so router
+/// replicas can each own one.
 #[derive(Clone)]
 pub struct Scorer {
     engine: SketchEngine,
@@ -128,12 +299,28 @@ pub struct Scorer {
     scaling: Scaling,
     n_classes: usize,
     /// `[K, 2^bits, C]` class-minor: weight of absolute column `col`
-    /// for class `cls` at `weights[col * n_classes + cls]`.
+    /// for class `cls` at `weights[col * n_classes + cls]`. Always the
+    /// f64 master, whatever precision the gather runs at.
     weights: Vec<f64>,
     /// Per-class bias, added after the gather (separate — NOT folded
     /// into slot 0 — so empty rows score `bias + 0` exactly like
     /// `LinearModel::decision_on` over an empty feature row).
     bias: Vec<f64>,
+    /// Which slab the gather streams; the derived slabs below are empty
+    /// unless their precision is active (same pattern as the engine's
+    /// fast-math `inv_r`/`shift`).
+    precision: SlabPrecision,
+    /// f32 copy of `weights` (precision == F32 only).
+    w32: Vec<f32>,
+    /// int8 quantized slab + per-class scale/offset (Int8 only).
+    q8: Vec<i8>,
+    q_scale: Vec<f64>,
+    q_offset: Vec<f64>,
+    /// Route the gather through b-bit packed code words.
+    packed: bool,
+    /// Packed width `b_i + b_t` when this expansion supports word-
+    /// aligned packing, else 0 (packing requests are then ignored).
+    pack_bits: u8,
 }
 
 impl Scorer {
@@ -164,6 +351,13 @@ impl Scorer {
             n_classes: bias.len(),
             weights,
             bias,
+            precision: SlabPrecision::F64,
+            w32: Vec::new(),
+            q8: Vec::new(),
+            q_scale: Vec::new(),
+            q_offset: Vec::new(),
+            packed: false,
+            pack_bits: PackedCodes::supported_bits(expansion.code_space()).unwrap_or(0),
         })
     }
 
@@ -200,12 +394,23 @@ impl Scorer {
     /// (`coordinator::export_scorer_weights` /
     /// `Pipeline::export_weights`) — no training structs needed, which
     /// is how a coordinator deploys a model it only has weights for.
-    /// The export folds each class bias into every code of slot 0, so
-    /// the separate bias here is zero; decisions agree with the
-    /// from-model scorer to f32 precision and predictions agree
-    /// (pinned by `serve_parity.rs`). Empty input rows score 0 for
-    /// every class (the fold is unrecoverable without the row's slot-0
-    /// gather).
+    ///
+    /// **Precision contract.** The export folds each class bias into
+    /// every code of slot 0, so the separate bias here is zero and
+    /// empty input rows score 0 for every class (the fold is
+    /// unrecoverable without the row's slot-0 gather). This legacy f32
+    /// entry widens the slab back to an f64 master and serves at
+    /// [`SlabPrecision::F64`] — exactly the PR 5 behaviour: decisions
+    /// agree with the from-model scorer to f32 precision and
+    /// predictions agree (pinned by `serve_parity.rs`). For a scorer
+    /// that *serves* at the exported precision, use
+    /// [`Scorer::from_exported_slab`]: `F64` slabs reproduce this
+    /// constructor's decisions exactly, `F32` slabs gather the f32
+    /// bytes directly (bit-identical decisions to this constructor,
+    /// since both accumulate the same f32-rounded values in f64), and
+    /// `Int8` slabs reuse the exported `(q, scale, offset)` verbatim so
+    /// serving-side dequantization is bit-identical to the
+    /// training-side quantizer that passed the accuracy gate.
     pub fn from_exported(
         seed: u64,
         dim: usize,
@@ -220,6 +425,60 @@ impl Scorer {
         Self::from_parts(seed, dim, expansion, w64, vec![0.0f64; n_classes])
     }
 
+    /// Build from an [`ExportedWeights`] slab at its exported
+    /// precision — the all-precisions deployment entry (see the
+    /// precision contract on [`Scorer::from_exported`]). The f64
+    /// master is always populated (widened or dequantized), so
+    /// [`Scorer::with_precision`] can still re-derive other slabs.
+    pub fn from_exported_slab(
+        seed: u64,
+        dim: usize,
+        expansion: Expansion,
+        n_classes: usize,
+        weights: &ExportedWeights,
+    ) -> Result<Self, ServeError> {
+        if n_classes == 0 {
+            return Err(ServeError::NoClasses);
+        }
+        let zero_bias = vec![0.0f64; n_classes];
+        match weights {
+            ExportedWeights::F64(w) => Self::from_parts(seed, dim, expansion, w.clone(), zero_bias),
+            ExportedWeights::F32(w) => {
+                let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+                let mut s = Self::from_parts(seed, dim, expansion, w64, zero_bias)?;
+                s.w32 = w.clone();
+                s.precision = SlabPrecision::F32;
+                Ok(s)
+            }
+            ExportedWeights::Int8 { q, scale, offset } => {
+                let expected = expansion.dim() * n_classes;
+                if q.len() != expected {
+                    return Err(ServeError::WeightShape { expected, got: q.len() });
+                }
+                if scale.len() != n_classes || offset.len() != n_classes {
+                    return Err(ServeError::WeightShape {
+                        expected: n_classes,
+                        got: scale.len().max(offset.len()),
+                    });
+                }
+                // Master = dequantized weights; the gather streams the
+                // exported bytes verbatim (no re-quantization, so the
+                // served arithmetic is exactly what the trainer gated).
+                let mut w64 = vec![0.0f64; expected];
+                for (col, &qv) in q.iter().enumerate() {
+                    let cls = col % n_classes;
+                    w64[col] = offset[cls] + scale[cls] * qv as f64;
+                }
+                let mut s = Self::from_parts(seed, dim, expansion, w64, zero_bias)?;
+                s.q8 = q.clone();
+                s.q_scale = scale.clone();
+                s.q_offset = offset.clone();
+                s.precision = SlabPrecision::Int8;
+                Ok(s)
+            }
+        }
+    }
+
     /// Apply this row preprocessing before sketching (mirrors the
     /// fitted pipeline's `Scaling` stage, bit-exactly per row).
     pub fn with_scaling(mut self, scaling: Scaling) -> Self {
@@ -232,6 +491,52 @@ impl Scorer {
     /// accuracy gate).
     pub fn with_fast_math(mut self, fast: bool) -> Self {
         self.engine = self.engine.with_fast_math(fast);
+        self
+    }
+
+    /// Select the slab precision the gather streams, deriving the
+    /// narrow slab from the f64 master. Requesting
+    /// [`SlabPrecision::Int8`] runs the accuracy gate first
+    /// (`MINMAX_FAST_MATH` pattern): if the quantized slab cannot
+    /// reproduce the master within half a step per weight, the scorer
+    /// silently stays on f64 — check [`Scorer::precision`] for what
+    /// actually engaged. Switching precision drops previously derived
+    /// slabs.
+    pub fn with_precision(mut self, precision: SlabPrecision) -> Self {
+        self.w32 = Vec::new();
+        self.q8 = Vec::new();
+        self.q_scale = Vec::new();
+        self.q_offset = Vec::new();
+        self.precision = SlabPrecision::F64;
+        match precision {
+            SlabPrecision::F64 => {}
+            SlabPrecision::F32 => {
+                self.w32 = self.weights.iter().map(|&v| v as f32).collect();
+                self.precision = SlabPrecision::F32;
+            }
+            SlabPrecision::Int8 => {
+                let (q, scale, offset) = quantize_slab(&self.weights, self.n_classes);
+                if int8_slab_ok(&self.weights, &q, &scale, &offset, self.expansion.k) {
+                    self.q8 = q;
+                    self.q_scale = scale;
+                    self.q_offset = offset;
+                    self.precision = SlabPrecision::Int8;
+                }
+            }
+        }
+        self
+    }
+
+    /// Route the per-row gather through b-bit packed code words
+    /// ([`PackedCodes`]) — the sketch output shrinks from `k × u32` to
+    /// `k × b` bits before it is re-read by the gather, which is the
+    /// whole point at small b. Engages only when the expansion's code
+    /// width divides 64 ([`PackedCodes::supported_bits`]); otherwise
+    /// the request is ignored (check [`Scorer::packed_codes`]).
+    /// Decisions are bit-identical either way: packing is lossless and
+    /// the gather performs the same adds in the same order.
+    pub fn with_packed_codes(mut self, packed: bool) -> Self {
+        self.packed = packed && self.pack_bits != 0;
         self
     }
 
@@ -264,6 +569,17 @@ impl Scorer {
         self.engine.fast_math()
     }
 
+    /// The slab precision the gather actually streams (what engaged,
+    /// not what was requested — see [`Scorer::with_precision`]).
+    pub fn precision(&self) -> SlabPrecision {
+        self.precision
+    }
+
+    /// Whether the gather routes through packed b-bit code words.
+    pub fn packed_codes(&self) -> bool {
+        self.packed
+    }
+
     /// The sketching core (exposed so a score-mode service can answer
     /// plain hashing requests from the same parameter slabs).
     pub fn engine(&self) -> &SketchEngine {
@@ -272,11 +588,20 @@ impl Scorer {
 
     /// A scoring arena sized for this scorer. One per serving thread.
     pub fn scratch(&self) -> Scratch {
+        let words_cap = if self.pack_bits != 0 {
+            PackedCodes::words_per_row(self.expansion.k, self.pack_bits)
+        } else {
+            0
+        };
         Scratch {
             sketch: SketchScratch::new(),
             samples: vec![EMPTY_SAMPLE; self.expansion.k],
             codes: Vec::with_capacity(self.expansion.k),
-            lanes: vec![0.0f64; 4 * self.n_classes],
+            gather: GatherScratch {
+                lanes: vec![0.0f64; 4 * self.n_classes],
+                lanes_i: vec![0i32; 4 * self.n_classes],
+                words: Vec::with_capacity(words_cap),
+            },
             decisions: vec![0.0f64; self.n_classes],
             scaled: Vec::new(),
         }
@@ -290,32 +615,32 @@ impl Scorer {
     /// per class, exactly like an empty feature row on the layered
     /// path.
     pub fn score_dense_into(&self, u: &[f32], s: &mut Scratch, out: &mut [f64]) {
-        let Scratch { sketch, samples, codes, lanes, scaled, .. } = s;
-        self.score_dense_core(u, sketch, samples, codes, lanes, scaled, out);
+        let Scratch { sketch, samples, codes, gather, scaled, .. } = s;
+        self.score_dense_core(u, sketch, samples, codes, gather, scaled, out);
     }
 
     /// Argmax label for one dense row (low-latency serving entry).
     pub fn predict_dense(&self, u: &[f32], s: &mut Scratch) -> i32 {
-        let Scratch { sketch, samples, codes, lanes, scaled, decisions } = s;
+        let Scratch { sketch, samples, codes, gather, scaled, decisions } = s;
         decisions.clear();
         decisions.resize(self.n_classes, 0.0);
-        self.score_dense_core(u, sketch, samples, codes, lanes, scaled, decisions);
+        self.score_dense_core(u, sketch, samples, codes, gather, scaled, decisions);
         argmax(decisions)
     }
 
     /// Per-class decisions for one sparse row — see
     /// [`Scorer::score_dense_into`].
     pub fn score_sparse_into(&self, row: SparseRow<'_>, s: &mut Scratch, out: &mut [f64]) {
-        let Scratch { sketch, samples, codes, lanes, scaled, .. } = s;
-        self.score_sparse_core(row, sketch, samples, codes, lanes, scaled, out);
+        let Scratch { sketch, samples, codes, gather, scaled, .. } = s;
+        self.score_sparse_core(row, sketch, samples, codes, gather, scaled, out);
     }
 
     /// Argmax label for one sparse row.
     pub fn predict_sparse(&self, row: SparseRow<'_>, s: &mut Scratch) -> i32 {
-        let Scratch { sketch, samples, codes, lanes, scaled, decisions } = s;
+        let Scratch { sketch, samples, codes, gather, scaled, decisions } = s;
         decisions.clear();
         decisions.resize(self.n_classes, 0.0);
-        self.score_sparse_core(row, sketch, samples, codes, lanes, scaled, decisions);
+        self.score_sparse_core(row, sketch, samples, codes, gather, scaled, decisions);
         argmax(decisions)
     }
 
@@ -357,7 +682,7 @@ impl Scorer {
         sketch: &mut SketchScratch,
         samples: &mut Vec<CwsSample>,
         codes: &mut Vec<u32>,
-        lanes: &mut Vec<f64>,
+        gather: &mut GatherScratch,
         scaled: &mut Vec<f32>,
         out: &mut [f64],
     ) {
@@ -373,7 +698,7 @@ impl Scorer {
             self.engine.sketch_dense_with(row, sketch, samples);
             codes.extend(samples.iter().enumerate().map(|(j, smp)| self.expansion.column(j, smp)));
         }
-        self.gather(codes, lanes, out);
+        self.gather(codes, gather, out);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -383,7 +708,7 @@ impl Scorer {
         sketch: &mut SketchScratch,
         samples: &mut Vec<CwsSample>,
         codes: &mut Vec<u32>,
-        lanes: &mut Vec<f64>,
+        gather: &mut GatherScratch,
         scaled: &mut Vec<f32>,
         out: &mut [f64],
     ) {
@@ -398,22 +723,62 @@ impl Scorer {
             self.engine.sketch_sparse_with(row, sketch, samples);
             codes.extend(samples.iter().enumerate().map(|(j, smp)| self.expansion.column(j, smp)));
         }
-        self.gather(codes, lanes, out);
+        self.gather(codes, gather, out);
     }
 
-    /// The fused gather: `out[cls] = bias[cls] + Σⱼ w[codeⱼ, cls]`,
-    /// accumulated code-outer/class-inner (each code reads its C
-    /// contiguous weights once) into four per-class lanes whose final
-    /// combine `((a0+a1)+(a2+a3))+tail` replays
-    /// `svm::rowset::dot_onehot` exactly — per class, the same values
-    /// are added in the same order through the same tree, so decisions
-    /// are bit-identical to `LinearModel::decision_on` on the codes
-    /// path. Change that reduction tree, change this (and
-    /// `serve_parity.rs` will catch it).
-    #[allow(clippy::needless_range_loop)]
-    fn gather(&self, codes: &[u32], lanes: &mut Vec<f64>, out: &mut [f64]) {
+    /// The fused gather, dispatched on slab precision and code packing.
+    /// Every variant accumulates code-outer/class-inner (each code
+    /// reads its C contiguous weights once) into four per-class lanes;
+    /// the f64/f32 combines replay `svm::rowset::dot_onehot`'s
+    /// `((a0+a1)+(a2+a3))+tail` tree exactly (see
+    /// [`Scorer::gather_f64_core`]). The packed paths decode the same
+    /// codes from b-bit words and perform the same adds in the same
+    /// order, so packing never changes bits.
+    fn gather(&self, codes: &[u32], g: &mut GatherScratch, out: &mut [f64]) {
         let c = self.n_classes;
         assert_eq!(out.len(), c, "decision buffer must hold n_classes values");
+        let GatherScratch { lanes, lanes_i, words } = g;
+        if self.packed {
+            let cs = self.expansion.code_space();
+            let bits = self.pack_bits;
+            PackedCodes::pack_row_into(codes, cs, bits, words);
+            let words = &words[..];
+            let fetch = |j: usize| PackedCodes::unpack_abs(words, cs, bits, j) as usize;
+            match self.precision {
+                SlabPrecision::F64 => self.gather_f64_core(codes.len(), fetch, lanes, out),
+                SlabPrecision::F32 => self.gather_f32_core(codes.len(), fetch, lanes, out),
+                SlabPrecision::Int8 => self.gather_i8_core(codes.len(), fetch, lanes_i, out),
+            }
+        } else {
+            let fetch = |j: usize| codes[j] as usize;
+            match self.precision {
+                SlabPrecision::F64 => self.gather_f64_core(codes.len(), fetch, lanes, out),
+                SlabPrecision::F32 => self.gather_f32_core(codes.len(), fetch, lanes, out),
+                SlabPrecision::Int8 => self.gather_i8_core(codes.len(), fetch, lanes_i, out),
+            }
+        }
+    }
+
+    /// f64 gather core: `out[cls] = bias[cls] + Σⱼ w[fetch(j), cls]`,
+    /// four per-class lanes whose final combine `((a0+a1)+(a2+a3))+tail`
+    /// replays `svm::rowset::dot_onehot` exactly — per class, the same
+    /// values are added in the same order through the same tree, so
+    /// decisions are bit-identical to `LinearModel::decision_on` on the
+    /// codes path. Change that reduction tree, change this (and
+    /// `serve_parity.rs` will catch it). Generic over `fetch` so the
+    /// unpacked (`codes[j]`) and packed (b-bit word decode) paths share
+    /// one arithmetic definition; the lane adds route through
+    /// [`simd::add_assign`], which is element-wise and therefore
+    /// bit-invisible.
+    #[allow(clippy::needless_range_loop)]
+    fn gather_f64_core(
+        &self,
+        n: usize,
+        fetch: impl Fn(usize) -> usize,
+        lanes: &mut Vec<f64>,
+        out: &mut [f64],
+    ) {
+        let c = self.n_classes;
         lanes.clear();
         lanes.resize(4 * c, 0.0);
         let (l01, l23) = lanes.split_at_mut(2 * c);
@@ -422,27 +787,108 @@ impl Scorer {
         // `out` doubles as the tail accumulator until the final combine.
         out.fill(0.0);
         let w = &self.weights[..];
-        let mut chunks = codes.chunks_exact(4);
-        for q in chunks.by_ref() {
-            let w0 = &w[q[0] as usize * c..q[0] as usize * c + c];
-            let w1 = &w[q[1] as usize * c..q[1] as usize * c + c];
-            let w2 = &w[q[2] as usize * c..q[2] as usize * c + c];
-            let w3 = &w[q[3] as usize * c..q[3] as usize * c + c];
-            for cls in 0..c {
-                l0[cls] += w0[cls];
-                l1[cls] += w1[cls];
-                l2[cls] += w2[cls];
-                l3[cls] += w3[cls];
-            }
+        let mut j = 0;
+        while j + 4 <= n {
+            let (q0, q1, q2, q3) = (fetch(j), fetch(j + 1), fetch(j + 2), fetch(j + 3));
+            simd::add_assign(l0, &w[q0 * c..q0 * c + c]);
+            simd::add_assign(l1, &w[q1 * c..q1 * c + c]);
+            simd::add_assign(l2, &w[q2 * c..q2 * c + c]);
+            simd::add_assign(l3, &w[q3 * c..q3 * c + c]);
+            j += 4;
         }
-        for &code in chunks.remainder() {
-            let wt = &w[code as usize * c..code as usize * c + c];
-            for (t, &wv) in out.iter_mut().zip(wt) {
-                *t += wv;
-            }
+        while j < n {
+            let q = fetch(j);
+            simd::add_assign(out, &w[q * c..q * c + c]);
+            j += 1;
         }
         for cls in 0..c {
             out[cls] = self.bias[cls] + (((l0[cls] + l1[cls]) + (l2[cls] + l3[cls])) + out[cls]);
+        }
+    }
+
+    /// f32 gather core: same lane structure and combine tree as
+    /// [`Scorer::gather_f64_core`], but streaming the f32 slab and
+    /// widening each weight to f64 at the add (exact). Decisions are
+    /// therefore bit-identical to the f64 core run over the
+    /// f32-rounded master — the precision loss is entirely the
+    /// one-time rounding in `with_precision`, never the accumulation.
+    #[allow(clippy::needless_range_loop)]
+    fn gather_f32_core(
+        &self,
+        n: usize,
+        fetch: impl Fn(usize) -> usize,
+        lanes: &mut Vec<f64>,
+        out: &mut [f64],
+    ) {
+        let c = self.n_classes;
+        lanes.clear();
+        lanes.resize(4 * c, 0.0);
+        let (l01, l23) = lanes.split_at_mut(2 * c);
+        let (l0, l1) = l01.split_at_mut(c);
+        let (l2, l3) = l23.split_at_mut(c);
+        out.fill(0.0);
+        let w = &self.w32[..];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (q0, q1, q2, q3) = (fetch(j), fetch(j + 1), fetch(j + 2), fetch(j + 3));
+            simd::add_assign_f32(l0, &w[q0 * c..q0 * c + c]);
+            simd::add_assign_f32(l1, &w[q1 * c..q1 * c + c]);
+            simd::add_assign_f32(l2, &w[q2 * c..q2 * c + c]);
+            simd::add_assign_f32(l3, &w[q3 * c..q3 * c + c]);
+            j += 4;
+        }
+        while j < n {
+            let q = fetch(j);
+            simd::add_assign_f32(out, &w[q * c..q * c + c]);
+            j += 1;
+        }
+        for cls in 0..c {
+            out[cls] = self.bias[cls] + (((l0[cls] + l1[cls]) + (l2[cls] + l3[cls])) + out[cls]);
+        }
+    }
+
+    /// int8 gather core: the lanes accumulate raw `q` bytes in i32
+    /// (integer addition is exact and associative, so the lane split is
+    /// purely for ILP — no reduction-tree contract here), and the
+    /// affine map is applied once per class at the end:
+    /// `out = bias + offset·n + scale·Σq`. A row with no codes scores
+    /// its bias exactly (early return, no `0·offset` float noise).
+    fn gather_i8_core(
+        &self,
+        n: usize,
+        fetch: impl Fn(usize) -> usize,
+        lanes_i: &mut Vec<i32>,
+        out: &mut [f64],
+    ) {
+        let c = self.n_classes;
+        if n == 0 {
+            out.copy_from_slice(&self.bias);
+            return;
+        }
+        lanes_i.clear();
+        lanes_i.resize(4 * c, 0);
+        let (l01, l23) = lanes_i.split_at_mut(2 * c);
+        let (l0, l1) = l01.split_at_mut(c);
+        let (l2, l3) = l23.split_at_mut(c);
+        let q8 = &self.q8[..];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (q0, q1, q2, q3) = (fetch(j), fetch(j + 1), fetch(j + 2), fetch(j + 3));
+            simd::add_assign_i8(l0, &q8[q0 * c..q0 * c + c]);
+            simd::add_assign_i8(l1, &q8[q1 * c..q1 * c + c]);
+            simd::add_assign_i8(l2, &q8[q2 * c..q2 * c + c]);
+            simd::add_assign_i8(l3, &q8[q3 * c..q3 * c + c]);
+            j += 4;
+        }
+        while j < n {
+            let q = fetch(j);
+            simd::add_assign_i8(l0, &q8[q * c..q * c + c]);
+            j += 1;
+        }
+        let live = n as f64;
+        for (cls, slot) in out.iter_mut().enumerate() {
+            let sum = (l0[cls] + l1[cls]) + (l2[cls] + l3[cls]);
+            *slot = self.bias[cls] + self.q_offset[cls] * live + self.q_scale[cls] * sum as f64;
         }
     }
 
@@ -571,6 +1017,17 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert_eq!(scorer.predict_dense(&zero, &mut scratch), model.predict_on(&empty, 0));
+        // The int8 path's stronger guarantee: bias verbatim.
+        let q = Scorer::from_model(seed, dim, expansion, &model)
+            .unwrap()
+            .with_fast_math(false)
+            .with_precision(SlabPrecision::Int8);
+        assert_eq!(q.precision(), SlabPrecision::Int8);
+        let mut qs = q.scratch();
+        q.score_dense_into(&zero, &mut qs, &mut got);
+        for (a, b) in got.iter().zip(&q.bias) {
+            assert_eq!(a.to_bits(), b.to_bits(), "int8 empty row must score bias verbatim");
+        }
     }
 
     #[test]
@@ -629,6 +1086,26 @@ mod tests {
         );
         assert_eq!(Scorer::from_exported(1, 8, e, 0, &[]).err(), Some(ServeError::NoClasses));
         assert!(Scorer::from_exported(1, 8, e, 2, &vec![0.0f32; 2 * e.dim()]).is_ok());
+        // The slab entry enforces per-variant shapes too.
+        let short =
+            ExportedWeights::Int8 { q: vec![0; 3], scale: vec![0.0; 2], offset: vec![0.0; 2] };
+        assert_eq!(
+            Scorer::from_exported_slab(1, 8, e, 2, &short).err(),
+            Some(ServeError::WeightShape { expected: 2 * e.dim(), got: 3 })
+        );
+        let bad_meta = ExportedWeights::Int8 {
+            q: vec![0; 2 * e.dim()],
+            scale: vec![0.0; 1],
+            offset: vec![0.0; 2],
+        };
+        assert_eq!(
+            Scorer::from_exported_slab(1, 8, e, 2, &bad_meta).err(),
+            Some(ServeError::WeightShape { expected: 2, got: 2 })
+        );
+        assert_eq!(
+            Scorer::from_exported_slab(1, 8, e, 0, &ExportedWeights::F64(Vec::new())).err(),
+            Some(ServeError::NoClasses)
+        );
     }
 
     #[test]
@@ -637,5 +1114,191 @@ mod tests {
         assert_eq!(argmax(&[1.0, 2.0, 2.0]), 1); // first max wins
         assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
         assert_eq!(argmax(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), 0);
+    }
+
+    #[test]
+    fn quantize_slab_roundtrips_within_half_a_step() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4);
+        let scorer = Scorer::from_model(seed, ds.dim(), expansion, &model).unwrap();
+        let (q, s, o) = quantize_slab(&scorer.weights, scorer.n_classes);
+        assert!(int8_slab_ok(&scorer.weights, &q, &s, &o, scorer.k()));
+        for (col, &wv) in scorer.weights.iter().enumerate() {
+            let cls = col % scorer.n_classes;
+            let back = o[cls] + s[cls] * q[col] as f64;
+            assert!(
+                (back - wv).abs() <= 0.5 * s[cls] * (1.0 + 1e-9) + 1e-300,
+                "col {col}: {back} vs {wv} (scale {})",
+                s[cls]
+            );
+        }
+        // Constant columns reconstruct exactly (scale 0, offset = value).
+        let (q, s, o) = quantize_slab(&[2.5, -1.0, 2.5, -1.0, 2.5, -1.0], 2);
+        assert_eq!(s, vec![0.0, 0.0]);
+        assert_eq!(o, vec![2.5, -1.0]);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn f32_precision_gathers_the_rounded_master_bit_for_bit() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4);
+        let f64_scorer = Scorer::from_model(seed, ds.dim(), expansion, &model)
+            .unwrap()
+            .with_fast_math(false);
+        let f32_scorer = f64_scorer.clone().with_precision(SlabPrecision::F32);
+        assert_eq!(f32_scorer.precision(), SlabPrecision::F32);
+        // Reference: an f64 scorer whose master IS the rounded slab.
+        let rounded: Vec<f64> = f64_scorer.weights.iter().map(|&v| v as f32 as f64).collect();
+        let reference =
+            Scorer::from_parts(seed, ds.dim(), expansion, rounded, f64_scorer.bias.clone())
+                .unwrap()
+                .with_fast_math(false);
+        let d = ds.test_x.to_dense();
+        let mut s32 = f32_scorer.scratch();
+        let mut sref = reference.scratch();
+        let (mut got, mut want) = (vec![0.0; ds.n_classes()], vec![0.0; ds.n_classes()]);
+        for i in 0..d.rows() {
+            f32_scorer.score_dense_into(d.row(i), &mut s32, &mut got);
+            reference.score_dense_into(d.row(i), &mut sref, &mut want);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_gate_engages_and_decisions_stay_within_bound() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4);
+        let exact = Scorer::from_model(seed, ds.dim(), expansion, &model)
+            .unwrap()
+            .with_fast_math(false);
+        let quant = exact.clone().with_precision(SlabPrecision::Int8);
+        assert_eq!(quant.precision(), SlabPrecision::Int8, "gate must engage on a real slab");
+        let bound: f64 = quant.q_scale.iter().fold(0.0f64, |m, &s| m.max(s)) * 0.5
+            * quant.k() as f64
+            + 1e-9;
+        let d = ds.test_x.to_dense();
+        let mut se = exact.scratch();
+        let mut sq = quant.scratch();
+        let (mut want, mut got) = (vec![0.0; ds.n_classes()], vec![0.0; ds.n_classes()]);
+        let (mut agree, mut total) = (0usize, 0usize);
+        for i in 0..d.rows() {
+            exact.score_dense_into(d.row(i), &mut se, &mut want);
+            quant.score_dense_into(d.row(i), &mut sq, &mut got);
+            for (cls, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "row {i} class {cls}: |{a} − {b}| > k·scale/2 = {bound}"
+                );
+            }
+            total += 1;
+            agree += (argmax(&got) == argmax(&want)) as usize;
+        }
+        // Quantization can only flip near-ties; large-scale agreement
+        // is the accuracy-parity pin (the serve_parity matrix retests
+        // this across widths and packings).
+        assert!(agree * 10 >= total * 9, "int8 prediction agreement {agree}/{total}");
+    }
+
+    #[test]
+    fn packed_codes_are_bit_identical_across_precisions() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4); // 4-bit codes: packable
+        let d = ds.test_x.to_dense();
+        for precision in [SlabPrecision::F64, SlabPrecision::F32, SlabPrecision::Int8] {
+            let plain = Scorer::from_model(seed, ds.dim(), expansion, &model)
+                .unwrap()
+                .with_fast_math(false)
+                .with_precision(precision);
+            let packed = plain.clone().with_packed_codes(true);
+            assert!(packed.packed_codes(), "4-bit codes must pack");
+            let mut sp = plain.scratch();
+            let mut sk = packed.scratch();
+            let (mut a, mut b) = (vec![0.0; ds.n_classes()], vec![0.0; ds.n_classes()]);
+            for i in 0..d.rows() {
+                plain.score_dense_into(d.row(i), &mut sp, &mut a);
+                packed.score_dense_into(d.row(i), &mut sk, &mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{precision} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_pack_width_ignores_the_request() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 8, 5); // 5-bit codes: unpackable
+        let scorer = Scorer::from_model(seed, ds.dim(), expansion, &model)
+            .unwrap()
+            .with_fast_math(false)
+            .with_packed_codes(true);
+        assert!(!scorer.packed_codes(), "5-bit codes must not pack");
+        // And scoring still works on the plain path.
+        let d = ds.test_x.to_dense();
+        let mut s = scorer.scratch();
+        let mut out = vec![0.0; ds.n_classes()];
+        scorer.score_dense_into(d.row(0), &mut s, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn exported_slab_roundtrips_match_the_legacy_f32_entry() {
+        let ds = letter();
+        let (model, expansion, seed) = fitted(&ds, 16, 4);
+        let f64_export = match model.export_scorer_weights(&expansion, SlabPrecision::F64) {
+            ExportedWeights::F64(w) => w,
+            _ => unreachable!(),
+        };
+        let f32_slab: Vec<f32> = f64_export.iter().map(|&v| v as f32).collect();
+        let legacy = Scorer::from_exported(seed, ds.dim(), expansion, ds.n_classes(), &f32_slab)
+            .unwrap()
+            .with_fast_math(false);
+        let via_slab = Scorer::from_exported_slab(
+            seed,
+            ds.dim(),
+            expansion,
+            ds.n_classes(),
+            &ExportedWeights::F32(f32_slab.clone()),
+        )
+        .unwrap()
+        .with_fast_math(false);
+        assert_eq!(via_slab.precision(), SlabPrecision::F32);
+        let d = ds.test_x.to_dense();
+        let mut sl = legacy.scratch();
+        let mut sv = via_slab.scratch();
+        let (mut a, mut b) = (vec![0.0; ds.n_classes()], vec![0.0; ds.n_classes()]);
+        for i in 0..d.rows() {
+            legacy.score_dense_into(d.row(i), &mut sl, &mut a);
+            via_slab.score_dense_into(d.row(i), &mut sv, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                // Both gathers add f64(w32[i]) in the same order.
+                assert_eq!(x.to_bits(), y.to_bits(), "row {i}");
+            }
+        }
+        // Int8 export → from_exported_slab ≡ F64 export → with_precision
+        // (the shared quantizer makes both sides bit-identical).
+        let int8 = model.export_scorer_weights(&expansion, SlabPrecision::Int8);
+        let served =
+            Scorer::from_exported_slab(seed, ds.dim(), expansion, ds.n_classes(), &int8)
+                .unwrap()
+                .with_fast_math(false);
+        assert_eq!(served.precision(), SlabPrecision::Int8);
+        let local = Scorer::from_exported_slab(
+            seed,
+            ds.dim(),
+            expansion,
+            ds.n_classes(),
+            &ExportedWeights::F64(f64_export),
+        )
+        .unwrap()
+        .with_fast_math(false)
+        .with_precision(SlabPrecision::Int8);
+        assert_eq!(local.precision(), SlabPrecision::Int8);
+        assert_eq!(served.q8, local.q8);
+        assert_eq!(served.q_scale, local.q_scale);
+        assert_eq!(served.q_offset, local.q_offset);
     }
 }

@@ -14,7 +14,9 @@
 //! inversion, transposed slabs, chunked-parallel batches — their
 //! `sketch_dense_batch`/`sketch_matrix` overrides shard rows across
 //! `MINMAX_THREADS` scoped threads with identical output at any thread
-//! count).
+//! count; the per-element argmin inner loop runs SIMD-chunked via
+//! `util::simd` with a `MINMAX_SIMD=off` scalar fallback, bit-identical
+//! either way).
 //! * [`MinwiseSketcher`] — classical minwise hashing over the support
 //!   (binarized view); collisions estimate the resemblance (Eq. 2).
 //! * `coordinator::PjrtSketcher` — the AOT/PJRT executable behind the

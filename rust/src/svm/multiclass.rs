@@ -10,7 +10,9 @@
 //! `rust/tests/svm_parity.rs`.
 
 use crate::data::sparse::SparseRow;
+use crate::features::Expansion;
 use crate::kernels::gram::{GramSource, SubsetGram};
+use crate::serve::{quantize_slab, ExportedWeights, SlabPrecision};
 use crate::util::pool;
 
 use super::kernel::{train_binary_on as train_kernel_binary, KernelModel, KernelSvmParams};
@@ -218,6 +220,51 @@ impl LinearOvR {
     /// Binary shortcut: with 2 classes train a single model.
     pub fn models(&self) -> &[LinearModel] {
         &self.models
+    }
+
+    /// Export the class-minor `[K, 2^bits, C]` serving slab at a chosen
+    /// precision, with each class bias folded into every code of slot 0
+    /// (the serving gather has no bias input; every live row selects
+    /// exactly one code per slot, so the fold is exact). The `F32` arm
+    /// reproduces the historical `coordinator::export_scorer_weights`
+    /// bytes bit-for-bit (one f64→f32 rounding per weight); the `Int8`
+    /// arm quantizes with the same per-class affine scheme
+    /// `serve::Scorer::with_precision` uses, so a scorer built from
+    /// this export serves the exact arithmetic the trainer gated.
+    /// Consumed by [`crate::serve::Scorer::from_exported_slab`].
+    pub fn export_scorer_weights(
+        &self,
+        expansion: &Expansion,
+        precision: SlabPrecision,
+    ) -> ExportedWeights {
+        let codes = expansion.code_space();
+        let k = expansion.k;
+        let c = self.models.len();
+        let mut w = vec![0.0f64; k * codes * c];
+        for (cls, m) in self.models.iter().enumerate() {
+            assert_eq!(
+                m.w.len(),
+                k * codes,
+                "model weight vector must cover the expansion's columns"
+            );
+            for j in 0..k {
+                let bias_share = if j == 0 { m.b } else { 0.0 };
+                for code in 0..codes {
+                    let fidx = j * codes + code;
+                    w[fidx * c + cls] = m.w[fidx] + bias_share;
+                }
+            }
+        }
+        match precision {
+            SlabPrecision::F64 => ExportedWeights::F64(w),
+            SlabPrecision::F32 => {
+                ExportedWeights::F32(w.iter().map(|&v| v as f32).collect())
+            }
+            SlabPrecision::Int8 => {
+                let (q, scale, offset) = quantize_slab(&w, c);
+                ExportedWeights::Int8 { q, scale, offset }
+            }
+        }
     }
 }
 

@@ -1,6 +1,7 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! RNG + samplers, thread pool, CLI parsing, JSON, statistics, logging,
-//! text tables, and a mini property-testing harness.
+//! text tables, runtime-dispatched SIMD kernels, and a mini
+//! property-testing harness.
 
 pub mod cli;
 pub mod fastmath;
@@ -9,5 +10,6 @@ pub mod log;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,364 @@
+//! Runtime-dispatched SIMD substrate for the serving hot loops.
+//!
+//! The fused serving path (DESIGN.md §2.4/§2.6) is memory-bandwidth
+//! bound: the argmin inner loop streams the transposed parameter slabs
+//! and the gather stage streams class-minor weight rows. Both loops are
+//! *element-wise* — the argmin tracks a per-slot running minimum and the
+//! gather adds disjoint lanes — so a vectorized variant performs exactly
+//! the same scalar operations on exactly the same elements and is
+//! **bit-identical** to the scalar fallback at every level. That is the
+//! contract this module exports: dispatch changes speed, never bits.
+//!
+//! Three levels, resolved once per process and cached:
+//!
+//! * [`SimdLevel::Scalar`] — the pre-SIMD loops, verbatim. Forced with
+//!   `MINMAX_SIMD=off` (the CI SIMD-off leg).
+//! * [`SimdLevel::Lanes`] — portable chunks-of-N kernels shaped so the
+//!   autovectorizer lowers them to whatever the target offers
+//!   (SSE2/AVX on x86, NEON on aarch64). No `unsafe`, no feature
+//!   detection; this is the default on non-x86 targets.
+//! * [`SimdLevel::Avx2`] — hand-written `core::arch::x86_64`
+//!   intrinsics behind `#[target_feature(enable = "avx2")]`, selected
+//!   only after `is_x86_feature_detected!` confirms the CPU supports
+//!   them. Falls back to `Lanes` when compiled for another arch.
+//!
+//! Like `MINMAX_FAST_MATH`, the `MINMAX_SIMD` variable is a *request*:
+//! asking for vector code on a CPU without AVX2 silently lands on the
+//! portable kernels, and every landing spot computes the same bits.
+
+use std::sync::OnceLock;
+
+/// Dispatch level for the vectorized serving kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Plain scalar loops — bit-identical reference paths.
+    Scalar,
+    /// Portable chunks-of-N kernels left to the autovectorizer.
+    Lanes,
+    /// Runtime-detected AVX2 intrinsics (x86_64 only).
+    Avx2,
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Lanes => "lanes",
+            SimdLevel::Avx2 => "avx2",
+        })
+    }
+}
+
+/// Parse a `MINMAX_SIMD` override. `off`/`0`/`false`/`scalar` force the
+/// scalar fallback; `lanes`/`portable` skip the intrinsics paths;
+/// anything else defers to hardware detection.
+fn parse_override(value: &str) -> Option<SimdLevel> {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" | "false" | "scalar" => Some(SimdLevel::Scalar),
+        "lanes" | "portable" => Some(SimdLevel::Lanes),
+        _ => None,
+    }
+}
+
+fn detect() -> SimdLevel {
+    if let Ok(value) = std::env::var("MINMAX_SIMD") {
+        if let Some(forced) = parse_override(&value) {
+            return forced;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return SimdLevel::Avx2;
+    }
+    SimdLevel::Lanes
+}
+
+/// The process-wide dispatch decision: `MINMAX_SIMD` override first,
+/// then hardware detection, cached after the first call.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+/// `true` unless the scalar fallback is forced. The argmin kernels
+/// branch on this once per nonzero, so it must stay a cached load.
+#[inline]
+pub fn wide() -> bool {
+    level() != SimdLevel::Scalar
+}
+
+/// Portable chunk width. Eight f64 lanes span two AVX2 registers (or
+/// four SSE2/NEON ones), enough to keep the add ports busy without
+/// spilling the staging arrays used by the argmin kernels.
+pub const CHUNK: usize = 8;
+
+/// `acc[i] += src[i]` over the paired prefix, dispatched at [`level`].
+///
+/// Slices may differ in length; only the common prefix is touched (the
+/// gather stage passes equal-length class rows, but the contract keeps
+/// the helper panic-free). All levels are bit-identical.
+#[inline]
+pub fn add_assign(acc: &mut [f64], src: &[f64]) {
+    add_assign_at(level(), acc, src);
+}
+
+/// [`add_assign`] with an explicit level — the testable entry point and
+/// the hook benches use to time one path from a single process.
+pub(crate) fn add_assign_at(level: SimdLevel, acc: &mut [f64], src: &[f64]) {
+    match level {
+        SimdLevel::Scalar => {
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a += s;
+            }
+        }
+        SimdLevel::Lanes => add_assign_lanes(acc, src),
+        SimdLevel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Avx2` is only ever produced by `detect` after
+            // `is_x86_feature_detected!("avx2")` (or handed in by a
+            // test that performed the same probe).
+            unsafe {
+                x86::add_assign_avx2(acc, src)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            add_assign_lanes(acc, src);
+        }
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+fn add_assign_lanes(acc: &mut [f64], src: &[f64]) {
+    let n = acc.len().min(src.len());
+    let (acc, src) = (&mut acc[..n], &src[..n]);
+    let mut a = acc.chunks_exact_mut(CHUNK);
+    let mut s = src.chunks_exact(CHUNK);
+    for (av, sv) in (&mut a).zip(&mut s) {
+        for l in 0..CHUNK {
+            av[l] += sv[l];
+        }
+    }
+    for (av, &sv) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *av += sv;
+    }
+}
+
+/// `acc[i] += src[i] as f64` over the paired prefix — the f32-slab
+/// gather. Widening an f32 to f64 is exact, so every level (including
+/// the AVX2 `cvtps_pd` path) produces identical bits.
+#[inline]
+pub fn add_assign_f32(acc: &mut [f64], src: &[f32]) {
+    add_assign_f32_at(level(), acc, src);
+}
+
+/// [`add_assign_f32`] with an explicit level (tests/benches).
+pub(crate) fn add_assign_f32_at(level: SimdLevel, acc: &mut [f64], src: &[f32]) {
+    match level {
+        SimdLevel::Scalar => {
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a += s as f64;
+            }
+        }
+        SimdLevel::Lanes => add_assign_f32_lanes(acc, src),
+        SimdLevel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see `add_assign_at` — `Avx2` implies a positive
+            // runtime AVX2 probe.
+            unsafe {
+                x86::add_assign_f32_avx2(acc, src)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            add_assign_f32_lanes(acc, src);
+        }
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+fn add_assign_f32_lanes(acc: &mut [f64], src: &[f32]) {
+    let n = acc.len().min(src.len());
+    let (acc, src) = (&mut acc[..n], &src[..n]);
+    let mut a = acc.chunks_exact_mut(CHUNK);
+    let mut s = src.chunks_exact(CHUNK);
+    for (av, sv) in (&mut a).zip(&mut s) {
+        for l in 0..CHUNK {
+            av[l] += sv[l] as f64;
+        }
+    }
+    for (av, &sv) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *av += sv as f64;
+    }
+}
+
+/// `acc[i] += src[i] as i32` over the paired prefix — the int8-slab
+/// gather. Integer widening adds are exact at every level and the
+/// chunked shape lowers to `pmovsxbd`+`paddd` (or the NEON equivalent)
+/// without hand-written intrinsics, so dispatch here is just
+/// scalar-vs-chunked.
+#[inline]
+pub fn add_assign_i8(acc: &mut [i32], src: &[i8]) {
+    add_assign_i8_at(wide(), acc, src);
+}
+
+/// [`add_assign_i8`] with the chunked path explicit (tests/benches).
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn add_assign_i8_at(wide: bool, acc: &mut [i32], src: &[i8]) {
+    if !wide {
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a += s as i32;
+        }
+        return;
+    }
+    let n = acc.len().min(src.len());
+    let (acc, src) = (&mut acc[..n], &src[..n]);
+    let mut a = acc.chunks_exact_mut(CHUNK);
+    let mut s = src.chunks_exact(CHUNK);
+    for (av, sv) in (&mut a).zip(&mut s) {
+        for l in 0..CHUNK {
+            av[l] += sv[l] as i32;
+        }
+    }
+    for (av, &sv) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *av += sv as i32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_avx2(acc: &mut [f64], src: &[f64]) {
+        let n = acc.len().min(src.len());
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_loadu_pd(ap.add(i));
+            let s = _mm256_loadu_pd(sp.add(i));
+            _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += *sp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_f32_avx2(acc: &mut [f64], src: &[f32]) {
+        let n = acc.len().min(src.len());
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            // Widen four f32s to f64 (exact), then add in f64 — same
+            // arithmetic as the scalar `as f64` loop.
+            let s = _mm256_cvtps_pd(_mm_loadu_ps(sp.add(i)));
+            let a = _mm256_loadu_pd(ap.add(i));
+            _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += *sp.add(i) as f64;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Every level available on this host, scalar first.
+    fn levels() -> Vec<SimdLevel> {
+        let mut out = vec![SimdLevel::Scalar, SimdLevel::Lanes];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            out.push(SimdLevel::Avx2);
+        }
+        out
+    }
+
+    #[test]
+    fn f64_add_is_bit_identical_across_levels() {
+        let mut rng = Pcg64::new(0x51D0);
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 26, 64, 129] {
+            let base: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let src: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let mut want = base.clone();
+            add_assign_at(SimdLevel::Scalar, &mut want, &src);
+            for level in levels() {
+                let mut got = base.clone();
+                add_assign_at(level, &mut got, &src);
+                let same = want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "f64 add diverged at {level} for n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_widening_add_is_bit_identical_across_levels() {
+        let mut rng = Pcg64::new(0x51D1);
+        for n in [0usize, 1, 2, 4, 6, 8, 13, 33, 100] {
+            let base: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let src: Vec<f32> = (0..n).map(|_| rng.range_f64(-4.0, 4.0) as f32).collect();
+            let mut want = base.clone();
+            add_assign_f32_at(SimdLevel::Scalar, &mut want, &src);
+            for level in levels() {
+                let mut got = base.clone();
+                add_assign_f32_at(level, &mut got, &src);
+                let same = want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "f32 widening add diverged at {level} for n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_widening_add_matches_scalar_exactly() {
+        let mut rng = Pcg64::new(0x51D2);
+        for n in [0usize, 1, 4, 7, 8, 11, 40, 255] {
+            let base: Vec<i32> = (0..n).map(|_| rng.below(2_000) as i32 - 1_000).collect();
+            let src: Vec<i8> = (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let mut want = base.clone();
+            add_assign_i8_at(false, &mut want, &src);
+            let mut got = base.clone();
+            add_assign_i8_at(true, &mut got, &src);
+            assert_eq!(want, got, "i8 widening add diverged for n={n}");
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_touch_only_the_paired_prefix() {
+        for level in levels() {
+            let mut acc = vec![1.0f64; 10];
+            add_assign_at(level, &mut acc, &[1.0; 6]);
+            assert_eq!(&acc[..6], &[2.0; 6], "prefix not added at {level}");
+            assert_eq!(&acc[6..], &[1.0; 4], "suffix disturbed at {level}");
+        }
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        for v in ["off", "0", "false", "scalar", " OFF ", "Scalar"] {
+            assert_eq!(parse_override(v), Some(SimdLevel::Scalar), "{v:?}");
+        }
+        for v in ["lanes", "portable", "LANES"] {
+            assert_eq!(parse_override(v), Some(SimdLevel::Lanes), "{v:?}");
+        }
+        for v in ["", "on", "1", "auto", "avx2"] {
+            assert_eq!(parse_override(v), None, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn level_is_cached_and_consistent_with_wide() {
+        assert_eq!(level(), level());
+        assert_eq!(wide(), level() != SimdLevel::Scalar);
+    }
+}

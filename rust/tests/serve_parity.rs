@@ -226,6 +226,175 @@ fn empty_rows_agree_with_layered_path() {
 }
 
 #[test]
+fn precision_packing_matrix_pins_parity() {
+    // The PR 7 matrix: {f64, f32, int8} slabs × {plain, packed codes}
+    // × {1, 4} threads × b-bit widths {4, 8, 16}. Contracts pinned:
+    // packing and thread count NEVER change bits; f64 is bit-identical
+    // to the PR 5 baseline scorer; f32 decisions track f64 to rounding
+    // (and labels agree on this data); int8 is tolerance-gated (label
+    // agreement — the fine-grained k·scale/2 decision bound is pinned
+    // by the serve module's unit tests, which can see the scale).
+    use minmax::serve::SlabPrecision;
+    let ds = letter();
+    let y2: Vec<i32> = ds.train_y.iter().map(|&c| (c % 2 == 0) as i32).collect();
+    let configs: [(u8, usize, &[i32]); 3] =
+        [(4, 16, &ds.train_y), (8, 8, &ds.train_y), (16, 4, &y2)];
+    let dense = ds.test_x.to_dense();
+    for (i_bits, k, train_y) in configs {
+        let mut pipe = Pipeline::builder().seed(19).samples(k).i_bits(i_bits).build().unwrap();
+        pipe.fit(&ds.train_x, train_y).unwrap();
+        let base = pipe.scorer(ds.dim()).unwrap();
+        let baseline = base.predict_batch_with_threads(&ds.test_x, 1);
+        let mut base_scratch = base.scratch();
+        for precision in [SlabPrecision::F64, SlabPrecision::F32, SlabPrecision::Int8] {
+            let plain = base.clone().with_precision(precision);
+            assert_eq!(plain.precision(), precision, "b={i_bits}: {precision} must engage");
+            let packed = plain.clone().with_packed_codes(true);
+            assert!(packed.packed_codes(), "b={i_bits} codes must pack");
+            let plain_labels = plain.predict_batch_with_threads(&ds.test_x, 1);
+            for (variant, name) in [(&plain, "plain"), (&packed, "packed")] {
+                for threads in [1usize, 4] {
+                    assert_eq!(
+                        variant.predict_batch_with_threads(&ds.test_x, threads),
+                        plain_labels,
+                        "b={i_bits} {precision} {name} threads={threads}"
+                    );
+                }
+            }
+            // Packed decisions are bit-identical to plain, and the
+            // precision tolerance holds against the f64 baseline.
+            let mut sp = plain.scratch();
+            let mut sk = packed.scratch();
+            let c = pipe.n_classes();
+            let (mut dp, mut dk, mut db) = (vec![0.0; c], vec![0.0; c], vec![0.0; c]);
+            for i in 0..dense.rows().min(20) {
+                plain.score_dense_into(dense.row(i), &mut sp, &mut dp);
+                packed.score_dense_into(dense.row(i), &mut sk, &mut dk);
+                for (a, b) in dp.iter().zip(&dk) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "b={i_bits} {precision} row {i}");
+                }
+                base.score_dense_into(dense.row(i), &mut base_scratch, &mut db);
+                match precision {
+                    SlabPrecision::F64 => {
+                        for (a, b) in dp.iter().zip(&db) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "f64 must stay exact, row {i}");
+                        }
+                    }
+                    SlabPrecision::F32 => {
+                        for (a, b) in dp.iter().zip(&db) {
+                            assert!(
+                                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                                "f32 row {i}: {a} vs {b}"
+                            );
+                        }
+                    }
+                    SlabPrecision::Int8 => {}
+                }
+            }
+            match precision {
+                SlabPrecision::F64 | SlabPrecision::F32 => {
+                    assert_eq!(plain_labels, baseline, "b={i_bits} {precision} labels");
+                }
+                SlabPrecision::Int8 => {
+                    let agree = plain_labels.iter().zip(&baseline).filter(|(a, b)| a == b).count();
+                    assert!(
+                        agree * 10 >= baseline.len() * 9,
+                        "b={i_bits} int8 agreement {agree}/{}",
+                        baseline.len()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exported_slabs_roundtrip_at_every_precision() {
+    // Pipeline::export_weights_with → Scorer::from_exported_slab for
+    // all three precisions: the deployment path a coordinator uses when
+    // it only holds exported bytes.
+    use minmax::serve::{ExportedWeights, SlabPrecision};
+    let ds = letter();
+    let mut pipe = Pipeline::builder().seed(7).samples(16).i_bits(4).build().unwrap();
+    pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+    let seed = pipe.sketcher().seed();
+    let expansion = *pipe.expansion();
+    let c = pipe.n_classes();
+    let from_model = pipe.scorer(ds.dim()).unwrap();
+
+    let build = |w: &ExportedWeights| {
+        Scorer::from_exported_slab(seed, ds.dim(), expansion, c, w)
+            .unwrap()
+            .with_fast_math(false)
+    };
+    let f64_scorer = build(&pipe.export_weights_with(SlabPrecision::F64).unwrap());
+    let f32_scorer = build(&pipe.export_weights_with(SlabPrecision::F32).unwrap());
+    let int8_scorer = build(&pipe.export_weights_with(SlabPrecision::Int8).unwrap());
+    assert_eq!(f64_scorer.precision(), SlabPrecision::F64);
+    assert_eq!(f32_scorer.precision(), SlabPrecision::F32);
+    assert_eq!(int8_scorer.precision(), SlabPrecision::Int8);
+
+    // The f64 slab differs from the from-model scorer only in where the
+    // bias enters (folded into slot 0 vs added after the gather), so
+    // decisions agree to f64 rounding and labels match; f32 matches the
+    // legacy from_exported entry bit-for-bit; int8 stays close enough
+    // to agree on almost every label.
+    let legacy = Scorer::from_exported(
+        seed,
+        ds.dim(),
+        expansion,
+        c,
+        match &pipe.export_weights_with(SlabPrecision::F32).unwrap() {
+            ExportedWeights::F32(w) => w,
+            _ => unreachable!(),
+        },
+    )
+    .unwrap()
+    .with_fast_math(false);
+    let want = from_model.predict_batch_with_threads(&ds.test_x, 1);
+    assert_eq!(f64_scorer.predict_batch_with_threads(&ds.test_x, 1), want);
+    assert_eq!(
+        f32_scorer.predict_batch_with_threads(&ds.test_x, 1),
+        legacy.predict_batch_with_threads(&ds.test_x, 1)
+    );
+    let int8_labels = int8_scorer.predict_batch_with_threads(&ds.test_x, 1);
+    let agree = int8_labels.iter().zip(&want).filter(|(a, b)| a == b).count();
+    assert!(agree * 10 >= want.len() * 9, "int8 export agreement {agree}/{}", want.len());
+
+    let dense = ds.test_x.to_dense();
+    let mut sm = from_model.scratch();
+    let mut s64 = f64_scorer.scratch();
+    let (mut a, mut b) = (vec![0.0f64; c], vec![0.0f64; c]);
+    for i in 0..dense.rows().min(20) {
+        if dense.row(i).iter().all(|&v| v <= 0.0) {
+            continue; // empty rows miss the slot-0 bias fold by design
+        }
+        from_model.score_dense_into(dense.row(i), &mut sm, &mut a);
+        f64_scorer.score_dense_into(dense.row(i), &mut s64, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-9 * (1.0 + x.abs()), "row {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn packed_codes_roundtrip_through_the_public_api() {
+    // CodeMatrix → PackedCodes → CodeMatrix is lossless for word-
+    // aligned widths (the finer-grained property test lives in
+    // features::codes; this pins the public surface).
+    let ds = letter();
+    for i_bits in [4u8, 8] {
+        let mut pipe = Pipeline::builder().seed(23).samples(12).i_bits(i_bits).build().unwrap();
+        pipe.fit(&ds.train_x, &ds.train_y).unwrap();
+        let codes = pipe.transform_codes(&ds.test_x);
+        let packed = codes.pack().expect("word-aligned width must pack");
+        assert_eq!(packed.bits(), i_bits);
+        assert_eq!(packed.rows(), codes.rows());
+        assert_eq!(packed.to_code_matrix(), codes, "b={i_bits}");
+    }
+}
+
+#[test]
 fn scaled_pipelines_ride_the_scorer_bit_identically() {
     use minmax::pipeline::Scaling;
     let ds = letter();
