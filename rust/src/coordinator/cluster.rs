@@ -57,12 +57,34 @@
 //! queued request — their own queue first, then stealing siblings' —
 //! and answer each exactly once before exiting. Same guarantee as the
 //! single service: accepted-then-dropped cannot happen.
+//!
+//! ## Query mode
+//!
+//! [`QueryRouter`] is the second service mode: the same queues,
+//! backpressure, shedding, stealing, versioned hot swap, metrics, and
+//! shutdown drain (all shared machinery — the queue and snapshot code
+//! is generic over the request type), but the workers answer **top-k
+//! retrieval** against a shared [`PackedLshIndex`] instead of scoring
+//! against per-worker slabs. The index is large (the packed code slab
+//! plus bucket tables over the whole corpus) and read-only, so unlike
+//! score mode nothing is replicated per shard: every worker clones the
+//! version `Arc` at dequeue and probes the same tables; per-worker
+//! state is one reusable [`QueryScratch`]. `publish` swaps in an index
+//! built over a *new corpus snapshot* — the banding, seed, bit width,
+//! and feature dim must match (replicas must mean the same thing by
+//! "similar"), while the row count is free to change, which is the
+//! whole point of the swap. Responses are bit-identical to a direct
+//! [`PackedLshIndex::query_with`] call on the serving version,
+//! regardless of shard count, stealing, or concurrent swaps (pinned by
+//! `rust/tests/lsh_parity.rs`).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cws::{PackedLshIndex, QueryParams, QueryScratch};
+use crate::data::sparse::SparseRow;
 use crate::data::Matrix;
 use crate::serve::{argmax, Scorer, Scratch, SlabPrecision};
 use crate::util::stats::Histogram;
@@ -156,9 +178,14 @@ struct Versioned {
 }
 
 // ------------------------------------------------------------- queue
+//
+// The queue/steal machinery is generic over the request type: the
+// `score` and `query` service modes differ only in what a worker does
+// with a dequeued request, so they share one MPMC implementation (and
+// one set of backpressure/shedding/drain semantics).
 
-struct QueueInner {
-    queue: VecDeque<ClusterRequest>,
+struct QueueInner<R> {
+    queue: VecDeque<R>,
     closed: bool,
 }
 
@@ -166,8 +193,8 @@ struct QueueInner {
 /// worker pops, idle siblings steal. `push` never blocks — flow
 /// control is rejection, not waiting, so a submitter can fail over to
 /// another shard immediately.
-struct ShardQueue {
-    inner: Mutex<QueueInner>,
+struct ShardQueue<R> {
+    inner: Mutex<QueueInner<R>>,
     ready: Condvar,
 }
 
@@ -177,15 +204,15 @@ enum PushError {
     Closed,
 }
 
-enum Pop {
-    Req(Box<ClusterRequest>),
+enum Pop<R> {
+    Req(Box<R>),
     /// Timed out with nothing queued (steal opportunity).
     Empty,
     /// Closed AND drained — the worker's own queue is finished.
     Closed,
 }
 
-impl ShardQueue {
+impl<R> ShardQueue<R> {
     fn new() -> Self {
         Self {
             inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
@@ -195,12 +222,7 @@ impl ShardQueue {
 
     /// Rejections hand the request back so the submitter can fail
     /// over to another shard without cloning the row.
-    fn push(
-        &self,
-        req: ClusterRequest,
-        cap: usize,
-        watermark: Option<usize>,
-    ) -> Result<(), (PushError, ClusterRequest)> {
+    fn push(&self, req: R, cap: usize, watermark: Option<usize>) -> Result<(), (PushError, R)> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err((PushError::Closed, req));
@@ -222,7 +244,7 @@ impl ShardQueue {
 
     /// Pop, waiting up to `timeout`. Items are always drained before
     /// `Closed` is reported, so closing never strands queued work.
-    fn pop_wait(&self, timeout: Duration) -> Pop {
+    fn pop_wait(&self, timeout: Duration) -> Pop<R> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(r) = g.queue.pop_front() {
@@ -244,7 +266,7 @@ impl ShardQueue {
     }
 
     /// Non-blocking pop (the steal path).
-    fn try_pop(&self) -> Option<Box<ClusterRequest>> {
+    fn try_pop(&self) -> Option<Box<R>> {
         self.inner.lock().unwrap().queue.pop_front().map(Box::new)
     }
 
@@ -264,7 +286,7 @@ impl ShardQueue {
 type VersionTally = Mutex<BTreeMap<u64, u64>>;
 
 struct Shared {
-    queues: Vec<ShardQueue>,
+    queues: Vec<ShardQueue<ClusterRequest>>,
     /// The hot-swap slot. Read (cheap: shared lock + `Arc` clone) at
     /// every dequeue; written only by `publish`.
     model: RwLock<Arc<Versioned>>,
@@ -280,6 +302,94 @@ struct Shared {
 /// siblings for stealable work.
 const STEAL_POLL: Duration = Duration::from_millis(1);
 
+/// Scan sibling queues (not our own — it was just found empty).
+fn steal<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
+    let n = queues.len();
+    (1..n).find_map(|off| queues[(me + off) % n].try_pop())
+}
+
+/// Scan every queue, own first (the shutdown-drain sweep).
+fn steal_any<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
+    let n = queues.len();
+    (0..n).find_map(|off| queues[(me + off) % n].try_pop())
+}
+
+/// Least-deep shard with a rotating round-robin tie-break start, so
+/// equal-depth shards share arrivals instead of all landing on 0.
+fn pick_least_deep<R>(queues: &[ShardQueue<R>], rr: &AtomicU64) -> usize {
+    let n = queues.len();
+    let start = (rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+    let mut best = start;
+    let mut best_depth = usize::MAX;
+    for off in 0..n {
+        let i = (start + off) % n;
+        let d = queues[i].depth();
+        if d < best_depth {
+            best_depth = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Merge per-shard metrics, histograms, and version tallies into the
+/// cluster-wide view — shared by both router modes.
+fn assemble_snapshot<R>(
+    shard_metrics: &[Metrics],
+    shard_versions: &[VersionTally],
+    queues: &[ShardQueue<R>],
+    started: Instant,
+    current_version: u64,
+) -> ClusterSnapshot {
+    let shards: Vec<Snapshot> = shard_metrics.iter().map(|m| m.snapshot()).collect();
+    let mut merged = Histogram::new(&LATENCY_BUCKETS_MS);
+    for s in &shards {
+        merged.merge(&Histogram::with_counts(&LATENCY_BUCKETS_MS, s.latency_hist.clone()));
+    }
+    let mut version_counts: BTreeMap<u64, u64> = BTreeMap::new();
+    for vm in shard_versions {
+        for (&v, &c) in vm.lock().unwrap().iter() {
+            *version_counts.entry(v).or_insert(0) += c;
+        }
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+    let completed: u64 = shards.iter().map(|s| s.completed).sum();
+    ClusterSnapshot {
+        requests: shards.iter().map(|s| s.requests).sum(),
+        completed,
+        rejected: shards.iter().map(|s| s.rejected).sum(),
+        shed: shards.iter().map(|s| s.shed).sum(),
+        queue_depths: queues.iter().map(|q| q.depth()).collect(),
+        elapsed_s: elapsed,
+        throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        latency_p50_ms: merged.quantile(50.0),
+        latency_p90_ms: merged.quantile(90.0),
+        latency_p99_ms: merged.quantile(99.0),
+        current_version,
+        version_counts: version_counts.into_iter().collect(),
+        shards,
+    }
+}
+
+/// The start-time config checks shared by both router modes.
+fn validate_config(cfg: &ClusterConfig) -> Result<(), String> {
+    if cfg.shards == 0 {
+        return Err("cluster needs at least one shard".into());
+    }
+    if cfg.queue_cap == 0 {
+        return Err("queue_cap must be positive".into());
+    }
+    if let Some(w) = cfg.shed_watermark {
+        if w == 0 || w > cfg.queue_cap {
+            return Err(format!(
+                "shed watermark {w} must be in 1..=queue_cap ({})",
+                cfg.queue_cap
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn worker_loop(shard: usize, shared: &Shared) {
     // One long-lived arena per worker. `k`/`dim` are invariant across
     // published versions, so the scratch survives hot swaps; only the
@@ -291,7 +401,7 @@ fn worker_loop(shard: usize, shared: &Shared) {
             Pop::Req(req) => serve(shard, shared, &req, &mut scratch, &mut staging),
             Pop::Empty => {
                 if shared.steal {
-                    if let Some(req) = steal(shard, shared) {
+                    if let Some(req) = steal(shard, &shared.queues) {
                         serve(shard, shared, &req, &mut scratch, &mut staging);
                     }
                 }
@@ -300,25 +410,13 @@ fn worker_loop(shard: usize, shared: &Shared) {
                 // Shutdown drain: the own queue is empty+closed; help
                 // finish whatever is still queued anywhere, then exit.
                 // Queues reject pushes once closed, so this terminates.
-                while let Some(req) = steal_any(shard, shared) {
+                while let Some(req) = steal_any(shard, &shared.queues) {
                     serve(shard, shared, &req, &mut scratch, &mut staging);
                 }
                 return;
             }
         }
     }
-}
-
-/// Scan sibling queues (not our own — it was just found empty).
-fn steal(me: usize, shared: &Shared) -> Option<Box<ClusterRequest>> {
-    let n = shared.queues.len();
-    (1..n).find_map(|off| shared.queues[(me + off) % n].try_pop())
-}
-
-/// Scan every queue, own first (the shutdown-drain sweep).
-fn steal_any(me: usize, shared: &Shared) -> Option<Box<ClusterRequest>> {
-    let n = shared.queues.len();
-    (0..n).find_map(|off| shared.queues[(me + off) % n].try_pop())
 }
 
 fn serve(
@@ -403,20 +501,7 @@ impl ScoreRouter {
     /// arenas and queues, which is what actually needs to be
     /// per-worker).
     pub fn start(scorer: Scorer, cfg: ClusterConfig) -> Result<ScoreRouter, String> {
-        if cfg.shards == 0 {
-            return Err("cluster needs at least one shard".into());
-        }
-        if cfg.queue_cap == 0 {
-            return Err("queue_cap must be positive".into());
-        }
-        if let Some(w) = cfg.shed_watermark {
-            if w == 0 || w > cfg.queue_cap {
-                return Err(format!(
-                    "shed watermark {w} must be in 1..=queue_cap ({})",
-                    cfg.queue_cap
-                ));
-            }
-        }
+        validate_config(&cfg)?;
         let (k, dim, seed) = (scorer.k(), scorer.dim(), scorer.seed());
         let (precision, packed) = (scorer.precision(), scorer.packed_codes());
         let shared = Arc::new(Shared {
@@ -542,19 +627,7 @@ impl ScoreRouter {
     /// Least-deep shard with a rotating round-robin tie-break start, so
     /// equal-depth shards share arrivals instead of all landing on 0.
     fn pick(&self) -> usize {
-        let n = self.cfg.shards;
-        let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
-        let mut best = start;
-        let mut best_depth = usize::MAX;
-        for off in 0..n {
-            let i = (start + off) % n;
-            let d = self.shared.queues[i].depth();
-            if d < best_depth {
-                best_depth = d;
-                best = i;
-            }
-        }
-        best
+        pick_least_deep(&self.shared.queues, &self.rr)
     }
 
     /// Submit one dense row for scoring. Fail-fast flow control: `Shed`
@@ -651,35 +724,13 @@ impl ScoreRouter {
     /// fleet latency quantiles from the merged histograms, queue
     /// depths, and per-version completion tallies.
     pub fn snapshot(&self) -> ClusterSnapshot {
-        let shards: Vec<Snapshot> =
-            self.shared.shard_metrics.iter().map(|m| m.snapshot()).collect();
-        let mut merged = Histogram::new(&LATENCY_BUCKETS_MS);
-        for s in &shards {
-            merged.merge(&Histogram::with_counts(&LATENCY_BUCKETS_MS, s.latency_hist.clone()));
-        }
-        let mut version_counts: BTreeMap<u64, u64> = BTreeMap::new();
-        for vm in &self.shared.shard_versions {
-            for (&v, &c) in vm.lock().unwrap().iter() {
-                *version_counts.entry(v).or_insert(0) += c;
-            }
-        }
-        let elapsed = self.started.elapsed().as_secs_f64();
-        let completed: u64 = shards.iter().map(|s| s.completed).sum();
-        ClusterSnapshot {
-            requests: shards.iter().map(|s| s.requests).sum(),
-            completed,
-            rejected: shards.iter().map(|s| s.rejected).sum(),
-            shed: shards.iter().map(|s| s.shed).sum(),
-            queue_depths: self.shared.queues.iter().map(|q| q.depth()).collect(),
-            elapsed_s: elapsed,
-            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
-            latency_p50_ms: merged.quantile(50.0),
-            latency_p90_ms: merged.quantile(90.0),
-            latency_p99_ms: merged.quantile(99.0),
-            current_version: self.current_version(),
-            version_counts: version_counts.into_iter().collect(),
-            shards,
-        }
+        assemble_snapshot(
+            &self.shared.shard_metrics,
+            &self.shared.shard_versions,
+            &self.shared.queues,
+            self.started,
+            self.current_version(),
+        )
     }
 
     /// Graceful shutdown: close every queue (typed rejections from
@@ -783,6 +834,386 @@ impl ClusterSnapshot {
             self.latency_p99_ms,
             self.queue_depths
         )
+    }
+}
+
+// ------------------------------------------------------- query mode
+
+/// One answered retrieval request — the `query` analog of
+/// [`ClusterScoreResponse`]: ranked hits plus which index version and
+/// shard served it.
+pub struct ClusterQueryResponse {
+    pub id: u64,
+    /// `(row_id, min-max similarity)` descending, ties by ascending id —
+    /// exactly `PackedLshIndex::query_with(query, top, params)` on the
+    /// serving version.
+    pub hits: Vec<(u32, f64)>,
+    /// Index version that answered this request.
+    pub version: u64,
+    /// Shard whose worker served it (≠ accepting shard when stolen).
+    pub shard: usize,
+    /// Total time from submit to completion.
+    pub latency: Duration,
+}
+
+struct QueryRequest {
+    id: u64,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    top: usize,
+    submitted: Instant,
+    tx: mpsc::Sender<ClusterQueryResponse>,
+}
+
+/// A versioned index: the immutable unit the query-mode `Arc` swap
+/// publishes. The index itself is behind its own `Arc` so a caller can
+/// keep a handle for direct comparison (and so republish is cheap).
+struct VersionedIndex {
+    version: u64,
+    index: Arc<PackedLshIndex>,
+}
+
+struct QueryShared {
+    queues: Vec<ShardQueue<QueryRequest>>,
+    /// The hot-swap slot, same protocol as score mode: read (shared
+    /// lock + `Arc` clone) at every dequeue, written only by `publish`.
+    index: RwLock<Arc<VersionedIndex>>,
+    shard_metrics: Vec<Metrics>,
+    shard_versions: Vec<VersionTally>,
+    steal: bool,
+    /// Lookup knobs, fixed at start: every replica must probe and
+    /// prefilter identically or responses would depend on which worker
+    /// served them.
+    params: QueryParams,
+}
+
+fn query_worker_loop(shard: usize, shared: &QueryShared) {
+    // One long-lived retrieval scratch per worker: after warm-up the
+    // serve path is allocation-free except for the response hits Vec.
+    let mut scratch = QueryScratch::new();
+    loop {
+        match shared.queues[shard].pop_wait(STEAL_POLL) {
+            Pop::Req(req) => serve_query(shard, shared, &req, &mut scratch),
+            Pop::Empty => {
+                if shared.steal {
+                    if let Some(req) = steal(shard, &shared.queues) {
+                        serve_query(shard, shared, &req, &mut scratch);
+                    }
+                }
+            }
+            Pop::Closed => {
+                while let Some(req) = steal_any(shard, &shared.queues) {
+                    serve_query(shard, shared, &req, &mut scratch);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn serve_query(
+    shard: usize,
+    shared: &QueryShared,
+    req: &QueryRequest,
+    scratch: &mut QueryScratch,
+) {
+    let metrics = &shared.shard_metrics[shard];
+    metrics.record_queue_wait_ms(req.submitted.elapsed().as_secs_f64() * 1e3);
+    // Pin the version for this request; a concurrent publish cannot
+    // free the index under us (same drain rule as score mode).
+    let model: Arc<VersionedIndex> = shared.index.read().unwrap().clone();
+    let row = SparseRow { indices: &req.indices, values: &req.values };
+    let hits = model.index.query_with(row, req.top, shared.params, scratch).to_vec();
+    let latency = req.submitted.elapsed();
+    metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
+    *shared.shard_versions[shard].lock().unwrap().entry(model.version).or_insert(0) += 1;
+    let _ = req.tx.send(ClusterQueryResponse {
+        id: req.id,
+        hits,
+        version: model.version,
+        shard,
+        latency,
+    });
+}
+
+/// An accepted query submission (see [`Submitted`]).
+pub struct SubmittedQuery {
+    rx: mpsc::Receiver<ClusterQueryResponse>,
+    shard: usize,
+}
+
+impl SubmittedQuery {
+    /// Shard whose queue accepted the request (a stealing worker may
+    /// still serve it — the response's `shard` field is authoritative).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block for the response. `ShuttingDown` here means a worker died
+    /// abnormally — graceful shutdown answers every accepted request.
+    pub fn wait(self) -> Result<ClusterQueryResponse, ClusterError> {
+        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)
+    }
+}
+
+/// The sharded retrieval front door — the `query` service mode next to
+/// [`ScoreRouter`]'s `score`. Same queues, backpressure, shedding,
+/// stealing, versioned hot swap, metrics, and shutdown drain; workers
+/// own a [`QueryScratch`] each and answer top-k retrieval against a
+/// shared [`PackedLshIndex`] behind the version `Arc`.
+///
+/// Responses are bit-identical to calling
+/// [`PackedLshIndex::query_with`] directly with the router's params —
+/// sharding, stealing, and hot swaps never change results, only which
+/// version answers (pinned by `rust/tests/lsh_parity.rs`).
+pub struct QueryRouter {
+    shared: Arc<QueryShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stopping: AtomicBool,
+    rr: AtomicU64,
+    cfg: ClusterConfig,
+    started: Instant,
+    // Invariant shape every published index must match: a swap that
+    // changed the banding, seed, truncation width, or feature space
+    // would silently change what "similar" means mid-fleet. The corpus
+    // ROW COUNT may change — that is the point of a hot swap (fresh
+    // corpus snapshots).
+    bands: usize,
+    rows_per_band: usize,
+    seed: u64,
+    bits: u8,
+    cols: usize,
+}
+
+impl QueryRouter {
+    /// Start `cfg.shards` workers serving `index` as version 1. The
+    /// index is NOT cloned per shard — workers share the slab and
+    /// bucket tables behind the version `Arc`; per-worker state is the
+    /// retrieval scratch.
+    pub fn start(
+        index: Arc<PackedLshIndex>,
+        params: QueryParams,
+        cfg: ClusterConfig,
+    ) -> Result<QueryRouter, String> {
+        validate_config(&cfg)?;
+        let c = *index.config();
+        let (bits, cols) = (index.bits(), index.corpus().cols());
+        let shared = Arc::new(QueryShared {
+            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            index: RwLock::new(Arc::new(VersionedIndex { version: 1, index })),
+            shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
+            shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            steal: cfg.steal,
+            params,
+        });
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("minmax-query-w{i}"))
+                .spawn(move || query_worker_loop(i, &sh))
+                .map_err(|e| format!("spawn query worker {i}: {e}"))?;
+            workers.push(h);
+        }
+        Ok(QueryRouter {
+            shared,
+            workers,
+            stopping: AtomicBool::new(false),
+            rr: AtomicU64::new(0),
+            cfg,
+            started: Instant::now(),
+            bands: c.bands,
+            rows_per_band: c.rows_per_band,
+            seed: c.seed,
+            bits,
+            cols,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cfg.shards
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Lookup knobs every worker serves with.
+    pub fn params(&self) -> QueryParams {
+        self.shared.params
+    }
+
+    /// Version currently being published to workers.
+    pub fn current_version(&self) -> u64 {
+        self.shared.index.read().unwrap().version
+    }
+
+    /// Corpus rows of the current version.
+    pub fn corpus_len(&self) -> usize {
+        self.shared.index.read().unwrap().index.len()
+    }
+
+    /// Per-shard metrics handle (tests / scraping).
+    pub fn metrics(&self, shard: usize) -> &Metrics {
+        &self.shared.shard_metrics[shard]
+    }
+
+    /// Publish a new index version: validate the shape invariants
+    /// (banding, seed, bits, feature dim — the corpus row count may
+    /// change), swap the `Arc`. Zero downtime, same drain protocol as
+    /// score mode; every response carries the version that answered it.
+    pub fn publish(&self, index: Arc<PackedLshIndex>) -> Result<u64, ClusterError> {
+        let c = index.config();
+        if c.bands != self.bands || c.rows_per_band != self.rows_per_band {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "banding {}x{} != cluster banding {}x{}",
+                c.bands, c.rows_per_band, self.bands, self.rows_per_band
+            )));
+        }
+        if c.seed != self.seed {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "seed {} != cluster seed {}",
+                c.seed, self.seed
+            )));
+        }
+        if index.bits() != self.bits {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "bits {} != cluster bits {}",
+                index.bits(),
+                self.bits
+            )));
+        }
+        if index.corpus().cols() != self.cols {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "feature dim {} != cluster dim {}",
+                index.corpus().cols(),
+                self.cols
+            )));
+        }
+        let mut slot = self.shared.index.write().unwrap();
+        let version = slot.version + 1;
+        *slot = Arc::new(VersionedIndex { version, index });
+        Ok(version)
+    }
+
+    fn validate(&self, query: SparseRow<'_>) -> Result<(), ClusterError> {
+        if self.stopping.load(Ordering::Acquire) {
+            return Err(ClusterError::ShuttingDown);
+        }
+        if query.indices.len() != query.values.len() {
+            return Err(ClusterError::BadInput(format!(
+                "indices/values length mismatch: {} != {}",
+                query.indices.len(),
+                query.values.len()
+            )));
+        }
+        // Unlike score mode, all-zero input is REJECTED: CWS is
+        // undefined on the empty vector, so there is no meaningful
+        // "similar rows" answer (a direct query returns the empty set;
+        // a service caller almost certainly sent a bug).
+        if query.nnz() == 0 {
+            return Err(ClusterError::BadInput("empty query (no nonzeros)".into()));
+        }
+        if !query.indices.windows(2).all(|w| w[0] < w[1]) {
+            return Err(ClusterError::BadInput("indices not strictly increasing".into()));
+        }
+        if query.indices[query.indices.len() - 1] as usize >= self.cols {
+            return Err(ClusterError::BadInput(format!(
+                "index {} out of range for dim {}",
+                query.indices[query.indices.len() - 1],
+                self.cols
+            )));
+        }
+        if query.values.iter().any(|&v| !v.is_finite() || v <= 0.0) {
+            return Err(ClusterError::BadInput("non-finite or non-positive value".into()));
+        }
+        Ok(())
+    }
+
+    /// Submit one sparse query for top-`top` retrieval. Identical
+    /// flow-control contract to [`ScoreRouter::submit`]: `Shed` past
+    /// the watermark, `QueueFull` only when every shard is at the hard
+    /// cap, failover over full shards first.
+    pub fn submit(
+        &self,
+        id: u64,
+        query: SparseRow<'_>,
+        top: usize,
+    ) -> Result<SubmittedQuery, ClusterError> {
+        self.validate(query)?;
+        let first = pick_least_deep(&self.shared.queues, &self.rr);
+        let n = self.cfg.shards;
+        let (rtx, rrx) = mpsc::channel();
+        let mut req = QueryRequest {
+            id,
+            indices: query.indices.to_vec(),
+            values: query.values.to_vec(),
+            top,
+            submitted: Instant::now(),
+            tx: rtx,
+        };
+        for off in 0..n {
+            let i = (first + off) % n;
+            match self.shared.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
+                Ok(()) => {
+                    self.shared.shard_metrics[i].record_request();
+                    return Ok(SubmittedQuery { rx: rrx, shard: i });
+                }
+                Err((PushError::Shed { depth, watermark }, _)) => {
+                    self.shared.shard_metrics[i].record_shed();
+                    return Err(ClusterError::Shed { depth, watermark });
+                }
+                Err((PushError::Closed, _)) => return Err(ClusterError::ShuttingDown),
+                Err((PushError::Full, back)) => {
+                    req = back;
+                }
+            }
+        }
+        self.shared.shard_metrics[first].record_rejected();
+        Err(ClusterError::QueueFull)
+    }
+
+    /// Blocking submit-and-wait.
+    pub fn query_blocking(
+        &self,
+        id: u64,
+        query: SparseRow<'_>,
+        top: usize,
+    ) -> Result<ClusterQueryResponse, ClusterError> {
+        self.submit(id, query, top)?.wait()
+    }
+
+    /// Cluster-wide snapshot — same shape and reconciliation contract
+    /// as [`ScoreRouter::snapshot`].
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        assemble_snapshot(
+            &self.shared.shard_metrics,
+            &self.shared.shard_versions,
+            &self.shared.queues,
+            self.started,
+            self.current_version(),
+        )
+    }
+
+    /// Graceful shutdown: close every queue, drain, join.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stopping.store(true, Ordering::Release);
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for h in std::mem::take(&mut self.workers) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for QueryRouter {
+    fn drop(&mut self) {
+        self.stop_and_join();
     }
 }
 
@@ -999,5 +1430,114 @@ mod tests {
             ClusterConfig { shed_watermark: Some(9999), queue_cap: 8, ..cfg(1) }
         )
         .is_err());
+    }
+
+    // --------------------------------------------------- query mode
+
+    /// Planted near-duplicate corpus + a packed index over it.
+    fn demo_index(rows: usize, dim: usize, data_seed: u64) -> Arc<PackedLshIndex> {
+        use crate::data::sparse::CsrBuilder;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(data_seed);
+        let mut b = CsrBuilder::new(dim);
+        for _ in 0..rows {
+            let mut row: Vec<(u32, f32)> = Vec::new();
+            for i in 0..dim {
+                if rng.uniform() < 0.25 {
+                    row.push((i as u32, rng.lognormal(0.0, 1.0) as f32));
+                }
+            }
+            b.push_row(if row.is_empty() { vec![(0, 1.0)] } else { row });
+        }
+        let cfg = crate::cws::LshConfig { bands: 8, rows_per_band: 2, seed: 77 };
+        Arc::new(PackedLshIndex::build(Arc::new(b.finish()), cfg, 8).unwrap())
+    }
+
+    #[test]
+    fn query_cluster_matches_direct_index() {
+        let index = demo_index(120, 48, 11);
+        let params = QueryParams { probes: 2, min_agreement: 0.0 };
+        let mut scratch = QueryScratch::new();
+        for shards in [1usize, 4] {
+            let cluster = QueryRouter::start(Arc::clone(&index), params, cfg(shards)).unwrap();
+            assert_eq!(cluster.shards(), shards);
+            assert_eq!(cluster.current_version(), 1);
+            assert_eq!(cluster.corpus_len(), 120);
+            let corpus = Arc::clone(index.corpus());
+            for i in 0..corpus.rows() {
+                let q = corpus.row(i);
+                let resp = cluster.query_blocking(i as u64, q, 5).unwrap();
+                let want = index.query_with(q, 5, params, &mut scratch);
+                assert_eq!(resp.hits, want, "row {i} at {shards} shards");
+                assert_eq!(resp.version, 1);
+                assert!(resp.shard < shards);
+                // The index never misses its own row as the top hit.
+                assert_eq!(resp.hits[0].0, i as u32);
+            }
+            let snap = cluster.snapshot();
+            assert_eq!(snap.requests, corpus.rows() as u64);
+            assert_eq!(snap.completed, snap.requests);
+            assert_eq!(snap.version_counts, vec![(1, snap.completed)]);
+            cluster.shutdown();
+        }
+    }
+
+    #[test]
+    fn query_publish_hot_swap_and_validation() {
+        let index = demo_index(100, 48, 11);
+        let params = QueryParams::default();
+        let cluster = QueryRouter::start(Arc::clone(&index), params, cfg(2)).unwrap();
+        let probe = index.corpus().row(3);
+        assert_eq!(cluster.query_blocking(0, probe, 3).unwrap().version, 1);
+
+        // Same banding/seed/bits/dim over a LARGER corpus snapshot:
+        // the legitimate hot-swap case.
+        let next = demo_index(160, 48, 12);
+        assert_eq!(cluster.publish(Arc::clone(&next)).unwrap(), 2);
+        assert_eq!(cluster.current_version(), 2);
+        assert_eq!(cluster.corpus_len(), 160);
+        let mut scratch = QueryScratch::new();
+        for i in 0..20 {
+            let q = next.corpus().row(i);
+            let resp = cluster.query_blocking(i as u64, q, 5).unwrap();
+            assert_eq!(resp.version, 2, "row {i} must serve on the new version");
+            assert_eq!(resp.hits, next.query_with(q, 5, params, &mut scratch));
+        }
+
+        // Shape mismatches are typed errors, not silent meaning drift.
+        let corpus = Arc::clone(next.corpus());
+        let rebuilt = |bands, rpb, seed, bits| {
+            let c = crate::cws::LshConfig { bands, rows_per_band: rpb, seed };
+            Arc::new(PackedLshIndex::build(Arc::clone(&corpus), c, bits).unwrap())
+        };
+        for bad in [
+            rebuilt(4, 2, 77, 8),  // bands
+            rebuilt(8, 4, 77, 8),  // rows_per_band
+            rebuilt(8, 2, 78, 8),  // seed
+            rebuilt(8, 2, 77, 4),  // bits
+            demo_index(50, 64, 13), // feature dim
+        ] {
+            assert!(matches!(cluster.publish(bad), Err(ClusterError::ShapeMismatch(_))));
+        }
+        assert_eq!(cluster.current_version(), 2, "rejected publishes must not bump");
+
+        // Input validation: typed BadInput, never a worker panic.
+        let bad_input = |ix: &[u32], vs: &[f32]| {
+            let r = cluster.submit(0, SparseRow { indices: ix, values: vs }, 3);
+            assert!(matches!(r, Err(ClusterError::BadInput(_))), "{ix:?}/{vs:?}");
+        };
+        bad_input(&[], &[]); // empty query
+        bad_input(&[2, 1], &[1.0, 1.0]); // unsorted
+        bad_input(&[1, 1], &[1.0, 1.0]); // duplicate
+        bad_input(&[1], &[1.0, 2.0]); // length mismatch
+        bad_input(&[48], &[1.0]); // out of range for dim 48
+        bad_input(&[1], &[-1.0]); // negative
+        bad_input(&[1], &[f32::NAN]); // non-finite
+        bad_input(&[1], &[0.0]); // explicit zero ⇒ empty support
+
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, snap.requests);
+        assert_eq!(snap.version_counts.len(), 2);
+        cluster.shutdown();
     }
 }

@@ -11,10 +11,13 @@
 //!   (score mode), per-request latency metrics + histogram.
 //! * [`router`] — least-loaded routing over replicated services (hash
 //!   or score mode).
-//! * [`cluster`] — the sharded serving cluster: N scorer workers
-//!   behind bounded MPMC queues with work stealing, watermark
-//!   load-shedding, atomic model hot-swap (versioned `Arc` publish),
-//!   and per-shard metrics merged into a cluster snapshot.
+//! * [`cluster`] — the sharded serving cluster: N workers behind
+//!   bounded MPMC queues with work stealing, watermark load-shedding,
+//!   atomic model hot-swap (versioned `Arc` publish), and per-shard
+//!   metrics merged into a cluster snapshot. Two service modes over
+//!   the same machinery: `score` ([`ScoreRouter`], fused linear
+//!   classification) and `query` ([`QueryRouter`], sub-linear top-k
+//!   retrieval against a shared `PackedLshIndex`).
 //! * [`pipeline`] — the offline batch pipeline: hash a dataset, encode
 //!   0-bit CWS one-hot codes (`features::CodeMatrix`, with CSR export
 //!   for IO), train/evaluate the linear model, and export weights in
@@ -31,7 +34,8 @@ pub mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, PjrtSketcher, SketcherBackend};
 pub use cluster::{
-    ClusterConfig, ClusterError, ClusterScoreResponse, ClusterSnapshot, ScoreRouter, Submitted,
+    ClusterConfig, ClusterError, ClusterQueryResponse, ClusterScoreResponse, ClusterSnapshot,
+    QueryRouter, ScoreRouter, Submitted, SubmittedQuery,
 };
 pub use metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 pub use pipeline::{

@@ -7,7 +7,10 @@
 //! Routing policy: least-outstanding-requests with round-robin
 //! tie-breaking; full replicas are skipped; if every queue is full the
 //! submit fails fast with backpressure, preserving the per-replica
-//! semantics.
+//! semantics. The same policy fronts the sharded cluster modes —
+//! `score` ([`super::cluster::ScoreRouter`]) and `query`
+//! ([`super::cluster::QueryRouter`]) — via `pick_least_deep` over
+//! queue depths instead of outstanding counts.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;

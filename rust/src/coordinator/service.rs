@@ -23,6 +23,11 @@
 //! (validated by `rust/tests/pipeline_integration.rs`). A score-mode
 //! service answers plain hash submits too, from the scorer's own
 //! parameter slabs.
+//!
+//! Retrieval (top-k similar rows rather than a class label) is the
+//! third service mode and lives one layer up: see
+//! [`super::cluster::QueryRouter`], which shards an LSH index the same
+//! way [`super::cluster::ScoreRouter`] shards scorers.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;

@@ -1,23 +1,98 @@
-//! LSH index over 0-bit CWS samples — similarity search in min-max
-//! space, the retrieval use-case the paper's lineage (near-duplicate
-//! detection, nearest-neighbor caching [4, 5, 13, 26]) motivates.
+//! Sub-linear retrieval over 0-bit CWS sketches — the banded b-bit LSH
+//! engine behind the crate's search workload.
 //!
 //! Standard banding: `k = bands × rows_per_band` samples per vector; a
-//! band's `rows_per_band` sample values are concatenated into one bucket
+//! band's `rows_per_band` sample values concatenate into one bucket
 //! key. Two vectors with min-max similarity `s` share a specific band
 //! with probability `s^r`, hence collide in ≥1 of `b` bands with
 //! probability `1 − (1 − s^r)^b` — the classic S-curve, tuned by
 //! (bands, rows_per_band). Candidates are exactly re-ranked with the
 //! sparse min-max kernel.
+//!
+//! Two index layouts share that machinery:
+//!
+//! * [`LshIndex`] — the legacy sample-keyed index, kept for parity: each
+//!   band key is an FNV hash of the band's full `i*` tuple. Retrieval
+//!   quality matches exact-tuple banding; memory is the bucket tables
+//!   only (samples are discarded after the build).
+//! * [`PackedLshIndex`] — the production layout: the corpus is sketched
+//!   once through the chunked-parallel engine entry, truncated to b-bit
+//!   codes (arXiv:1105.4385), and stored as one contiguous `[n × words]`
+//!   u64 slab ([`PackedCodes`]). Band `t`'s key is bits
+//!   `[t·r·b, (t+1)·r·b)` *sliced straight out of the packed row* — no
+//!   re-hash, no per-row `Vec`. Lookup supports **multi-probe** (flip
+//!   the lowest-confidence band positions to reach `T` extra buckets per
+//!   band, recovering recall at fewer bands) and an optional packed-code
+//!   Hamming prefilter through [`crate::util::simd::packed_mismatch`]
+//!   before the exact re-rank.
+//!
+//! Both indexes replace the old `HashMap<u64, Vec<u32>>`-per-band
+//! storage with [`BandTable`]: an open-addressed, power-of-two-sized
+//! slot array over one contiguous postings arena (load factor ≤ 0.5,
+//! linear probing on `mix64(key)`), built by sorting `(key, row)` pairs
+//! once — no per-bucket allocations, postings ascending within a
+//! bucket, and lookups touch two cache lines in the common case.
+//!
+//! Queries run through a caller-owned [`QueryScratch`]; after warm-up
+//! `candidates_with` / `query_with` perform **zero heap allocations per
+//! call** (measured by the counting allocator in `bench_lsh.rs`).
+//! [`KnnClassifier`] layers majority / similarity-weighted voting over
+//! the top-k, and `coordinator::cluster::QueryRouter` exposes the whole
+//! thing as the cluster's `query` service mode.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::data::sparse::{Csr, SparseRow};
-use crate::data::Matrix;
+use crate::features::{Expansion, ExpansionError, PackedCodes};
 use crate::kernels::sparse_minmax;
-use crate::sketch::Sketcher;
+use crate::util::simd;
 
-use super::sampler::{CwsHasher, CwsSample};
+use super::engine::{self, SketchScratch};
+use super::sampler::{mix64, CwsSample};
+
+/// Typed construction/validation errors for the LSH layer — the
+/// `Expansion::checked` pattern applied to index builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LshError {
+    /// `bands == 0`: every vector would hash to zero bands and nothing
+    /// is ever retrieved (previously accepted silently).
+    ZeroBands,
+    /// `rows_per_band == 0`: every band key degenerates to the hash of
+    /// the empty tuple, so all rows collide in every band.
+    ZeroRowsPerBand,
+    /// b-bit width without a supported packing (`b` must divide 64 and
+    /// lie in 1..=16 — see [`PackedCodes::supported_bits`]).
+    UnsupportedBits(u8),
+    /// `rows_per_band · bits > 64`: a band key must fit one u64 so it
+    /// can be sliced from the packed row without re-hashing.
+    BandTooWide { rows_per_band: usize, bits: u8 },
+    /// The (k, bits) pair overflows the one-hot code space.
+    CodeSpace(ExpansionError),
+    /// `KnnClassifier` label vector length ≠ corpus rows.
+    LabelMismatch { labels: usize, rows: usize },
+}
+
+impl std::fmt::Display for LshError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LshError::ZeroBands => write!(f, "bands must be >= 1"),
+            LshError::ZeroRowsPerBand => write!(f, "rows_per_band must be >= 1"),
+            LshError::UnsupportedBits(b) => {
+                write!(f, "unsupported b-bit width {b} (need b in {{1,2,4,8,16}})")
+            }
+            LshError::BandTooWide { rows_per_band, bits } => write!(
+                f,
+                "band key {rows_per_band}x{bits} bits exceeds one u64 word"
+            ),
+            LshError::CodeSpace(e) => write!(f, "code space: {e}"),
+            LshError::LabelMismatch { labels, rows } => {
+                write!(f, "label vector length {labels} != corpus rows {rows}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LshError {}
 
 #[derive(Debug, Clone, Copy)]
 pub struct LshConfig {
@@ -27,6 +102,28 @@ pub struct LshConfig {
 }
 
 impl LshConfig {
+    /// Validated construction — the only path that guards the
+    /// `bands == 0` / `rows_per_band == 0` degeneracies (struct-literal
+    /// construction stays possible for backwards compatibility, but
+    /// every index build re-validates).
+    pub fn checked(bands: usize, rows_per_band: usize, seed: u64) -> Result<Self, LshError> {
+        let cfg = Self { bands, rows_per_band, seed };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The degeneracy check shared by [`Self::checked`] and the index
+    /// builds.
+    pub(crate) fn validate(&self) -> Result<(), LshError> {
+        if self.bands == 0 {
+            return Err(LshError::ZeroBands);
+        }
+        if self.rows_per_band == 0 {
+            return Err(LshError::ZeroRowsPerBand);
+        }
+        Ok(())
+    }
+
     pub fn k(&self) -> usize {
         self.bands * self.rows_per_band
     }
@@ -43,38 +140,238 @@ impl Default for LshConfig {
     }
 }
 
-/// An LSH index over the 0-bit CWS samples of a corpus.
+/// Lookup knobs for the packed index (the legacy index ignores them —
+/// its keys hash full tuples, so probing has no bit-level handle).
+///
+/// Defaults are the exact configuration: no extra probes, no Hamming
+/// prefilter — every candidate is re-ranked with the exact kernel, so
+/// parity tests run against `QueryParams::default()`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct QueryParams {
+    /// Extra buckets probed per band. Probe `p` flips band position
+    /// `order[p mod r]` (positions ordered by ascending query
+    /// confidence) by the nonzero code delta `(1 + p/r) mod 2^b` —
+    /// deterministic, and the probe sequence for `T` is a prefix of the
+    /// sequence for `T' > T`, so candidate sets are superset-monotone
+    /// in `probes`.
+    pub probes: usize,
+    /// Minimum fraction of agreeing packed code positions a candidate
+    /// needs to reach the exact re-rank (`0.0` disables the prefilter).
+    /// Computed with [`simd::packed_mismatch`] on the u64 slab — a few
+    /// XOR/popcount words per candidate instead of an O(nnz) kernel.
+    pub min_agreement: f32,
+}
+
+/// Reusable per-query workspace: sketch scratch, the query's packed
+/// words, probe ordering, candidate/result arenas. After the first few
+/// queries every buffer has reached steady-state capacity and
+/// `candidates_with` / `query_with` / `classify_with` allocate nothing
+/// (verified by the counting allocator in `bench_lsh.rs`). A scratch
+/// carries no state between calls: reusing one is bit-identical to a
+/// fresh scratch per query.
+#[derive(Default)]
+pub struct QueryScratch {
+    sketch: SketchScratch,
+    samples: Vec<CwsSample>,
+    qcodes: Vec<u32>,
+    qwords: Vec<u64>,
+    conf: Vec<f32>,
+    order: Vec<u32>,
+    cands: Vec<u32>,
+    scored: Vec<(u32, f64)>,
+    votes: Vec<(i32, f64)>,
+}
+
+impl QueryScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// One band's bucket directory: open-addressed slots (power-of-two
+/// count, ≤ 50% load, linear probing on `mix64(key)`) over a single
+/// contiguous postings arena. `lens[slot] == 0` marks an empty slot —
+/// valid because a real bucket always holds ≥ 1 row. Built once by
+/// sorting the band's `(key, row)` pairs, so postings within a bucket
+/// are ascending row ids and iteration order is deterministic.
+struct BandTable {
+    keys: Vec<u64>,
+    offsets: Vec<u32>,
+    lens: Vec<u32>,
+    postings: Vec<u32>,
+}
+
+impl BandTable {
+    fn build(mut entries: Vec<(u64, u32)>) -> BandTable {
+        entries.sort_unstable();
+        let mut distinct = 0usize;
+        let mut prev = None;
+        for &(key, _) in &entries {
+            if prev != Some(key) {
+                distinct += 1;
+                prev = Some(key);
+            }
+        }
+        let slots = (distinct.max(1) * 2).next_power_of_two();
+        let mask = slots - 1;
+        let mut keys = vec![0u64; slots];
+        let mut offsets = vec![0u32; slots];
+        let mut lens = vec![0u32; slots];
+        let mut postings = Vec::with_capacity(entries.len());
+        let mut i = 0usize;
+        while i < entries.len() {
+            let key = entries[i].0;
+            let start = postings.len() as u32;
+            let mut j = i;
+            while j < entries.len() && entries[j].0 == key {
+                postings.push(entries[j].1);
+                j += 1;
+            }
+            let mut slot = (mix64(key) as usize) & mask;
+            while lens[slot] != 0 {
+                slot = (slot + 1) & mask;
+            }
+            keys[slot] = key;
+            offsets[slot] = start;
+            lens[slot] = (j - i) as u32;
+            i = j;
+        }
+        BandTable { keys, offsets, lens, postings }
+    }
+
+    /// The rows bucketed under `key` (empty slice when absent). Probing
+    /// terminates because load ≤ 0.5 guarantees an empty slot.
+    #[inline]
+    fn bucket(&self, key: u64) -> &[u32] {
+        if self.postings.is_empty() {
+            return &[];
+        }
+        let mask = self.keys.len() - 1;
+        let mut slot = (mix64(key) as usize) & mask;
+        loop {
+            if self.lens[slot] == 0 {
+                return &[];
+            }
+            if self.keys[slot] == key {
+                let o = self.offsets[slot] as usize;
+                return &self.postings[o..o + self.lens[slot] as usize];
+            }
+            slot = (slot + 1) & mask;
+        }
+    }
+
+    fn occupied(&self) -> usize {
+        self.lens.iter().filter(|&&l| l != 0).count()
+    }
+}
+
+/// Slice `len_bits` bits starting at absolute bit `start_bit` out of a
+/// packed row — the band-key slicing contract: band `t`'s key is bits
+/// `[t·r·b, (t+1)·r·b)` of the row's little-endian u64 words, which is
+/// exactly the concatenation of its `r` truncated codes because
+/// [`PackedCodes`] stores slot `j` at bit `(j mod 64/b)·b` of word
+/// `j/(64/b)`.
+#[inline]
+fn band_key_bits(words: &[u64], start_bit: usize, len_bits: usize) -> u64 {
+    let w = start_bit >> 6;
+    let off = start_bit & 63;
+    let mut key = words[w] >> off;
+    if off != 0 && off + len_bits > 64 {
+        key |= words[w + 1] << (64 - off);
+    }
+    if len_bits < 64 {
+        key &= (1u64 << len_bits) - 1;
+    }
+    key
+}
+
+/// Sketch a query into `s.samples` via the engine's lazy sparse entry
+/// (bit-identical to `CwsHasher::hash_sparse` — the pinned engine
+/// contract). Returns `false` for an empty query, which can never match
+/// anything (CWS is undefined on the zero vector).
+fn sketch_query(seed: u64, k: usize, query: SparseRow<'_>, s: &mut QueryScratch) -> bool {
+    if query.nnz() == 0 {
+        return false;
+    }
+    s.samples.clear();
+    s.samples.resize(k, CwsSample { i_star: 0, t_star: 0 });
+    engine::sample_lazy_sparse_with(seed, k, query, &mut s.sketch, &mut s.samples);
+    true
+}
+
+/// The query's weight at coordinate `i` (0 when absent — cannot happen
+/// for an `i*` drawn from the query's own support, but stays total).
+#[inline]
+fn weight_at(row: SparseRow<'_>, i: u32) -> f32 {
+    match row.indices.binary_search(&i) {
+        Ok(p) => row.values[p],
+        Err(_) => 0.0,
+    }
+}
+
+/// Descending similarity, ascending row id on ties; truncate to `n`.
+/// `total_cmp` gives the same order as `partial_cmp` for the finite
+/// nonnegative similarities the kernel produces, without the unwrap.
+fn rank_and_truncate(scored: &mut Vec<(u32, f64)>, n: usize) {
+    scored.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    scored.truncate(n);
+}
+
+/// Merge-dedup the candidate arena in place (`sort_unstable` + `dedup`
+/// are allocation-free), leaving ascending unique row ids.
+fn dedup_candidates(cands: &mut Vec<u32>) {
+    cands.sort_unstable();
+    cands.dedup();
+}
+
+/// The legacy sample-keyed LSH index: band keys are FNV-1a hashes of
+/// the band's full `(i*…)` tuple. Kept as the parity baseline for
+/// [`PackedLshIndex`] (at `b = 16` and `dim ≤ 65536` truncation is
+/// lossless, so both indexes induce identical candidate sets).
 pub struct LshIndex {
     cfg: LshConfig,
-    hasher: CwsHasher,
-    /// One bucket map per band: band key -> row ids.
-    tables: Vec<HashMap<u64, Vec<u32>>>,
-    /// Stored samples (for optional sample-level re-rank) and the corpus.
-    corpus: Csr,
+    /// One open-addressed bucket directory per band.
+    tables: Vec<BandTable>,
+    corpus: Arc<Csr>,
 }
 
 impl LshIndex {
     /// Build over all rows of `corpus` (rows with no nonzeros are
-    /// skipped — they can never be retrieved).
+    /// skipped — they can never be retrieved). The corpus is shared via
+    /// `Arc` so the coordinator's shards reference one copy.
     ///
     /// The whole corpus is sketched through the engine's chunked
-    /// parallel batch entry ([`Sketcher::sketch_matrix`] — bit-identical
-    /// to per-row [`CwsHasher::hash_sparse`] at any `MINMAX_THREADS`);
-    /// bucket insertion stays sequential in ascending row order so
-    /// bucket contents are deterministic.
-    pub fn build(corpus: Csr, cfg: LshConfig) -> LshIndex {
-        let hasher = CwsHasher::new(cfg.seed, cfg.k());
-        let mut tables: Vec<HashMap<u64, Vec<u32>>> = vec![HashMap::new(); cfg.bands];
-        let m = Matrix::Sparse(corpus);
-        let sketched = Sketcher::sketch_matrix(&hasher, &m);
-        let Matrix::Sparse(corpus) = m else { unreachable!("built as sparse") };
+    /// parallel batch entry (bit-identical to per-row
+    /// [`super::sampler::CwsHasher::hash_sparse`] at any
+    /// `MINMAX_THREADS`); bucket assembly sorts `(key, row)` pairs, so
+    /// bucket contents are deterministic and ascending.
+    pub fn try_build(corpus: Arc<Csr>, cfg: LshConfig) -> Result<LshIndex, LshError> {
+        cfg.validate()?;
+        let k = cfg.k();
+        let threads = engine::batch_threads(corpus.rows(), k);
+        let sketched = engine::sketch_csr_with(&corpus, k, threads, |row, s, out| {
+            engine::sample_lazy_sparse_with(cfg.seed, k, row, s, out)
+        });
+        let mut entries: Vec<Vec<(u64, u32)>> = vec![Vec::new(); cfg.bands];
         for (row_id, samples) in sketched.iter().enumerate() {
             let Some(samples) = samples else { continue };
             for (band, key) in band_keys(samples, cfg.rows_per_band).enumerate() {
-                tables[band].entry(key).or_default().push(row_id as u32);
+                entries[band].push((key, row_id as u32));
             }
         }
-        LshIndex { cfg, hasher, tables, corpus }
+        let tables = entries.into_iter().map(BandTable::build).collect();
+        Ok(LshIndex { cfg, tables, corpus })
+    }
+
+    /// Corpus-owning build, kept for source compatibility.
+    #[deprecated(
+        since = "0.8.0",
+        note = "use `LshIndex::try_build(Arc<Csr>, cfg)` — shares the corpus without \
+                cloning and surfaces config errors instead of accepting degenerate \
+                bands/rows_per_band"
+    )]
+    pub fn build(corpus: Csr, cfg: LshConfig) -> LshIndex {
+        Self::try_build(Arc::new(corpus), cfg).expect("invalid LshConfig")
     }
 
     pub fn config(&self) -> &LshConfig {
@@ -89,56 +386,408 @@ impl LshIndex {
         self.corpus.rows() == 0
     }
 
-    /// Candidate row ids for a query: deduplicated and returned in
-    /// ascending row order, so identical input always produces
-    /// identical output (a raw `HashSet` iteration leaked
-    /// nondeterministic ordering run to run).
-    pub fn candidates(&self, query: SparseRow<'_>) -> Vec<u32> {
-        let samples = self.hasher.hash_sparse(query);
-        let mut seen = std::collections::HashSet::new();
-        for (band, key) in band_keys(&samples, self.cfg.rows_per_band).enumerate() {
-            if let Some(ids) = self.tables[band].get(&key) {
-                seen.extend(ids.iter().copied());
-            }
+    pub fn corpus(&self) -> &Arc<Csr> {
+        &self.corpus
+    }
+
+    /// Sketch the query and collect band postings into `s.cands`
+    /// (sorted, deduplicated). Returns `false` for an empty query.
+    fn fill_candidates(&self, query: SparseRow<'_>, s: &mut QueryScratch) -> bool {
+        s.cands.clear();
+        if !sketch_query(self.cfg.seed, self.cfg.k(), query, s) {
+            return false;
         }
-        let mut out: Vec<u32> = seen.into_iter().collect();
-        out.sort_unstable();
-        out
+        for (band, key) in band_keys(&s.samples, self.cfg.rows_per_band).enumerate() {
+            s.cands.extend_from_slice(self.tables[band].bucket(key));
+        }
+        dedup_candidates(&mut s.cands);
+        true
+    }
+
+    /// Candidate row ids: deduplicated, ascending — identical input
+    /// always produces identical output. Zero-alloc once `s` is warm.
+    pub fn candidates_with<'s>(&self, query: SparseRow<'_>, s: &'s mut QueryScratch) -> &'s [u32] {
+        self.fill_candidates(query, s);
+        &s.cands
+    }
+
+    /// Allocating convenience wrapper around [`Self::candidates_with`].
+    pub fn candidates(&self, query: SparseRow<'_>) -> Vec<u32> {
+        let mut s = QueryScratch::new();
+        self.candidates_with(query, &mut s).to_vec()
+    }
+
+    /// Fill `s.scored` with the ranked top-`n` over the candidates.
+    fn fill_topk(&self, query: SparseRow<'_>, n: usize, s: &mut QueryScratch) {
+        let ok = self.fill_candidates(query, s);
+        let QueryScratch { cands, scored, .. } = s;
+        scored.clear();
+        if ok {
+            scored.extend(
+                cands
+                    .iter()
+                    .map(|&id| (id, sparse_minmax(query, self.corpus.row(id as usize)))),
+            );
+            rank_and_truncate(scored, n);
+        }
     }
 
     /// Top-`n` most similar corpus rows by exact min-max similarity,
-    /// re-ranked over the LSH candidates. Returns (row_id, similarity),
-    /// descending.
+    /// re-ranked over the LSH candidates. Returns `(row_id, similarity)`
+    /// descending (ties broken by ascending id). Zero-alloc once `s` is
+    /// warm; an empty query yields an empty slice.
+    pub fn query_with<'s>(
+        &self,
+        query: SparseRow<'_>,
+        n: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [(u32, f64)] {
+        self.fill_topk(query, n, s);
+        &s.scored
+    }
+
+    /// Allocating convenience wrapper around [`Self::query_with`].
     pub fn query(&self, query: SparseRow<'_>, n: usize) -> Vec<(u32, f64)> {
-        let mut scored: Vec<(u32, f64)> = self
-            .candidates(query)
-            .into_iter()
-            .map(|id| (id, sparse_minmax(query, self.corpus.row(id as usize))))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        scored.truncate(n);
-        scored
+        let mut s = QueryScratch::new();
+        self.query_with(query, n, &mut s).to_vec()
     }
 
     /// Average bucket occupancy per band (diagnostics / tests).
     pub fn mean_bucket_size(&self) -> f64 {
-        let (mut total, mut buckets) = (0usize, 0usize);
-        for t in &self.tables {
-            for ids in t.values() {
-                total += ids.len();
-                buckets += 1;
-            }
-        }
-        if buckets == 0 {
-            0.0
-        } else {
-            total as f64 / buckets as f64
-        }
+        mean_bucket_size(&self.tables)
     }
 }
 
-/// Iterate the band keys of a sample vector: each band hashes its
-/// `rows_per_band` `i*` values (0-bit: `t*` ignored) into one u64.
+fn mean_bucket_size(tables: &[BandTable]) -> f64 {
+    let total: usize = tables.iter().map(|t| t.postings.len()).sum();
+    let buckets: usize = tables.iter().map(BandTable::occupied).sum();
+    if buckets == 0 {
+        0.0
+    } else {
+        total as f64 / buckets as f64
+    }
+}
+
+/// The production index: b-bit truncated codes in one contiguous
+/// `[n × words]` u64 slab, band keys sliced straight from the packed
+/// words, open-addressed bucket tables, multi-probe lookup, and an
+/// optional SWAR Hamming prefilter ahead of the exact re-rank.
+///
+/// Memory per row is `⌈k·b/64⌉ · 8` bytes (6 words at k=48, b=8 —
+/// versus ~16 bytes *per sample* for the `Vec<CwsSample>` layout the
+/// legacy index sketches through), so a million-row corpus indexes in
+/// tens of megabytes plus the postings arenas.
+pub struct PackedLshIndex {
+    cfg: LshConfig,
+    bits: u8,
+    /// Bits per band key: `rows_per_band · bits` (validated ≤ 64).
+    band_bits: usize,
+    codes: PackedCodes,
+    tables: Vec<BandTable>,
+    corpus: Arc<Csr>,
+}
+
+impl PackedLshIndex {
+    /// Sketch `corpus` once through the parallel engine entry, truncate
+    /// each sample to its low `bits` bits, pack into the u64 slab, and
+    /// build one bucket table per band from word-sliced keys.
+    ///
+    /// Validates the config (typed errors instead of the old silent
+    /// acceptance), the b-bit width (`bits ∈ {1,2,4,8,16}` so codes
+    /// never straddle words), the band width (`rows_per_band · bits ≤
+    /// 64`), and the code space (`Expansion::checked`).
+    pub fn build(corpus: Arc<Csr>, cfg: LshConfig, bits: u8) -> Result<PackedLshIndex, LshError> {
+        cfg.validate()?;
+        if bits == 0 || bits > 16 || PackedCodes::supported_bits(1usize << bits) != Some(bits) {
+            return Err(LshError::UnsupportedBits(bits));
+        }
+        let band_bits = cfg.rows_per_band * bits as usize;
+        if band_bits > 64 {
+            return Err(LshError::BandTooWide { rows_per_band: cfg.rows_per_band, bits });
+        }
+        let k = cfg.k();
+        Expansion::checked(k, bits, 0).map_err(LshError::CodeSpace)?;
+
+        let threads = engine::batch_threads(corpus.rows(), k);
+        let sketched = engine::sketch_csr_with(&corpus, k, threads, |row, s, out| {
+            engine::sample_lazy_sparse_with(cfg.seed, k, row, s, out)
+        });
+        let codes = PackedCodes::from_samples(&sketched, k, bits)
+            .expect("bits validated against supported_bits");
+        // Free the per-row sample vectors before building the postings
+        // arenas — at a million rows the samples dominate peak memory.
+        drop(sketched);
+
+        let mut tables = Vec::with_capacity(cfg.bands);
+        for t in 0..cfg.bands {
+            let mut entries = Vec::with_capacity(codes.rows());
+            for i in 0..codes.rows() {
+                if codes.is_empty_row(i) {
+                    continue;
+                }
+                let key = band_key_bits(codes.word_row(i), t * band_bits, band_bits);
+                entries.push((key, i as u32));
+            }
+            tables.push(BandTable::build(entries));
+        }
+        Ok(PackedLshIndex { cfg, bits, band_bits, codes, tables, corpus })
+    }
+
+    pub fn config(&self) -> &LshConfig {
+        &self.cfg
+    }
+
+    /// Bits per truncated code.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn len(&self) -> usize {
+        self.corpus.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.corpus.rows() == 0
+    }
+
+    pub fn corpus(&self) -> &Arc<Csr> {
+        &self.corpus
+    }
+
+    /// The packed code slab (diagnostics / tests).
+    pub fn codes(&self) -> &PackedCodes {
+        &self.codes
+    }
+
+    pub fn mean_bucket_size(&self) -> f64 {
+        mean_bucket_size(&self.tables)
+    }
+
+    /// Sketch + pack the query, collect base and probe buckets per
+    /// band into `s.cands` (sorted, deduplicated). Returns `false` for
+    /// an empty query.
+    fn fill_candidates(
+        &self,
+        query: SparseRow<'_>,
+        params: QueryParams,
+        s: &mut QueryScratch,
+    ) -> bool {
+        s.cands.clear();
+        let k = self.cfg.k();
+        if !sketch_query(self.cfg.seed, k, query, s) {
+            return false;
+        }
+        // Pack the query exactly as the build packed corpus rows:
+        // rel = i_star mod 2^b per slot (pack_row_into masks for us).
+        s.qcodes.clear();
+        s.qcodes.extend(s.samples.iter().map(|smp| smp.i_star));
+        PackedCodes::pack_row_into(&s.qcodes, 1usize << self.bits, self.bits, &mut s.qwords);
+        if params.probes > 0 {
+            // Per-sample confidence: the query's weight at the argmin
+            // coordinate. A heavy i* dominates its exponential race, so
+            // its code is stable under resampling; light coordinates
+            // are the likeliest to differ on a true neighbor — flip
+            // those first.
+            s.conf.clear();
+            s.conf.extend(s.samples.iter().map(|smp| weight_at(query, smp.i_star)));
+        }
+
+        let r = self.cfg.rows_per_band;
+        let code_mask = (1u64 << self.bits) - 1;
+        let QueryScratch { qwords, conf, order, cands, .. } = s;
+        for (t, table) in self.tables.iter().enumerate() {
+            let base = band_key_bits(qwords, t * self.band_bits, self.band_bits);
+            cands.extend_from_slice(table.bucket(base));
+            if params.probes == 0 {
+                continue;
+            }
+            // Band-local positions, least-confident first (ties by
+            // position for determinism).
+            order.clear();
+            order.extend(0..r as u32);
+            order.sort_unstable_by(|&a, &b| {
+                conf[t * r + a as usize]
+                    .total_cmp(&conf[t * r + b as usize])
+                    .then(a.cmp(&b))
+            });
+            for p in 0..params.probes {
+                let pos = order[p % r] as usize;
+                let delta = ((1 + p / r) as u64) & code_mask;
+                if delta == 0 {
+                    continue; // wrapped to the identity — nothing new
+                }
+                let probe = base ^ (delta << (pos * self.bits as usize));
+                cands.extend_from_slice(table.bucket(probe));
+            }
+        }
+        dedup_candidates(cands);
+        true
+    }
+
+    /// Candidate row ids under `params`: deduplicated, ascending,
+    /// superset-monotone in `params.probes`. Zero-alloc once `s` is
+    /// warm.
+    pub fn candidates_with<'s>(
+        &self,
+        query: SparseRow<'_>,
+        params: QueryParams,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        self.fill_candidates(query, params, s);
+        &s.cands
+    }
+
+    /// Allocating convenience wrapper around [`Self::candidates_with`].
+    pub fn candidates(&self, query: SparseRow<'_>, params: QueryParams) -> Vec<u32> {
+        let mut s = QueryScratch::new();
+        self.candidates_with(query, params, &mut s).to_vec()
+    }
+
+    /// Fill `s.scored` with the ranked top-`n`: candidates, optional
+    /// packed-Hamming prefilter, exact `sparse_minmax` on survivors.
+    fn fill_topk(&self, query: SparseRow<'_>, n: usize, params: QueryParams, s: &mut QueryScratch) {
+        let ok = self.fill_candidates(query, params, s);
+        let k = self.cfg.k() as u32;
+        let floor = (params.min_agreement.clamp(0.0, 1.0) * k as f32).ceil() as u32;
+        let QueryScratch { cands, scored, qwords, .. } = s;
+        scored.clear();
+        if !ok {
+            return;
+        }
+        for &id in cands.iter() {
+            if floor > 0 {
+                let mism =
+                    simd::packed_mismatch(qwords, self.codes.word_row(id as usize), self.bits);
+                if k - mism < floor {
+                    continue;
+                }
+            }
+            scored.push((id, sparse_minmax(query, self.corpus.row(id as usize))));
+        }
+        rank_and_truncate(scored, n);
+    }
+
+    /// Top-`n` most similar corpus rows under `params`: `(row_id,
+    /// similarity)` descending, ties by ascending id. With default
+    /// params this is the exact re-rank of every candidate; a nonzero
+    /// `min_agreement` short-circuits low-agreement candidates with a
+    /// few XOR/popcount words each. Zero-alloc once `s` is warm.
+    pub fn query_with<'s>(
+        &self,
+        query: SparseRow<'_>,
+        n: usize,
+        params: QueryParams,
+        s: &'s mut QueryScratch,
+    ) -> &'s [(u32, f64)] {
+        self.fill_topk(query, n, params, s);
+        &s.scored
+    }
+
+    /// Allocating convenience wrapper: default params, fresh scratch.
+    pub fn query(&self, query: SparseRow<'_>, n: usize) -> Vec<(u32, f64)> {
+        let mut s = QueryScratch::new();
+        self.query_with(query, n, QueryParams::default(), &mut s).to_vec()
+    }
+}
+
+/// Vote aggregation for [`KnnClassifier`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vote {
+    /// Each of the top-k neighbors contributes one vote.
+    Majority,
+    /// Each neighbor contributes its min-max similarity.
+    Weighted,
+}
+
+/// KNN classification over a [`PackedLshIndex`]: retrieve the top-k
+/// neighbors, vote their labels (majority or similarity-weighted), tie
+/// break by the smaller label. `classify_with` is zero-alloc once the
+/// scratch is warm.
+pub struct KnnClassifier {
+    index: PackedLshIndex,
+    labels: Vec<i32>,
+    neighbors: usize,
+    params: QueryParams,
+    vote: Vote,
+}
+
+impl KnnClassifier {
+    pub fn new(
+        index: PackedLshIndex,
+        labels: Vec<i32>,
+        neighbors: usize,
+    ) -> Result<KnnClassifier, LshError> {
+        if labels.len() != index.len() {
+            return Err(LshError::LabelMismatch { labels: labels.len(), rows: index.len() });
+        }
+        Ok(KnnClassifier {
+            index,
+            labels,
+            neighbors: neighbors.max(1),
+            params: QueryParams::default(),
+            vote: Vote::Majority,
+        })
+    }
+
+    pub fn with_vote(mut self, vote: Vote) -> Self {
+        self.vote = vote;
+        self
+    }
+
+    pub fn with_params(mut self, params: QueryParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn index(&self) -> &PackedLshIndex {
+        &self.index
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// Predict the label for `query`, or `None` when retrieval finds no
+    /// candidates (empty query, or nothing collides in any band).
+    pub fn classify_with(&self, query: SparseRow<'_>, s: &mut QueryScratch) -> Option<i32> {
+        self.index.fill_topk(query, self.neighbors, self.params, s);
+        let QueryScratch { scored, votes, .. } = s;
+        votes.clear();
+        for &(id, sim) in scored.iter() {
+            let label = self.labels[id as usize];
+            let w = match self.vote {
+                Vote::Majority => 1.0,
+                Vote::Weighted => sim,
+            };
+            match votes.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, acc)) => *acc += w,
+                None => votes.push((label, w)),
+            }
+        }
+        let mut best: Option<(i32, f64)> = None;
+        for &(label, w) in votes.iter() {
+            let better = match best {
+                None => true,
+                Some((bl, bw)) => w > bw || (w == bw && label < bl),
+            };
+            if better {
+                best = Some((label, w));
+            }
+        }
+        best.map(|(label, _)| label)
+    }
+
+    /// Allocating convenience wrapper around [`Self::classify_with`].
+    pub fn classify(&self, query: SparseRow<'_>) -> Option<i32> {
+        let mut s = QueryScratch::new();
+        self.classify_with(query, &mut s)
+    }
+}
+
+/// Iterate the legacy band keys of a sample vector: each band FNV-1a
+/// hashes its `rows_per_band` `i*` values (0-bit: `t*` ignored) into
+/// one u64. Unchanged from the HashMap-era index so bucket membership
+/// is bit-compatible across the rebuild.
 fn band_keys<'a>(
     samples: &'a [CwsSample],
     rows_per_band: usize,
@@ -156,6 +805,7 @@ fn band_keys<'a>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cws::sampler::CwsHasher;
     use crate::data::sparse::CsrBuilder;
     use crate::util::rng::Pcg64;
 
@@ -180,11 +830,50 @@ mod tests {
         b.finish()
     }
 
+    fn shared(c: &Csr) -> Arc<Csr> {
+        Arc::new(c.clone())
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_shapes() {
+        assert_eq!(LshConfig::checked(0, 4, 1).unwrap_err(), LshError::ZeroBands);
+        assert_eq!(LshConfig::checked(4, 0, 1).unwrap_err(), LshError::ZeroRowsPerBand);
+        assert!(LshConfig::checked(4, 4, 1).is_ok());
+        // Builds re-validate even for struct-literal configs.
+        let c = corpus(2, 2, 16, 5);
+        let bad = LshConfig { bands: 0, rows_per_band: 3, seed: 1 };
+        assert_eq!(LshIndex::try_build(shared(&c), bad).err(), Some(LshError::ZeroBands));
+        assert_eq!(
+            PackedLshIndex::build(shared(&c), bad, 8).err(),
+            Some(LshError::ZeroBands)
+        );
+    }
+
+    #[test]
+    fn packed_build_rejects_bad_widths() {
+        let c = corpus(2, 2, 16, 5);
+        let cfg = LshConfig { bands: 4, rows_per_band: 3, seed: 1 };
+        for bits in [0u8, 3, 6, 17] {
+            assert_eq!(
+                PackedLshIndex::build(shared(&c), cfg, bits).err(),
+                Some(LshError::UnsupportedBits(bits)),
+                "bits={bits}"
+            );
+        }
+        // 5 codes × 16 bits = 80 > 64: band key can't fit one word.
+        let wide = LshConfig { bands: 4, rows_per_band: 5, seed: 1 };
+        assert_eq!(
+            PackedLshIndex::build(shared(&c), wide, 16).err(),
+            Some(LshError::BandTooWide { rows_per_band: 5, bits: 16 })
+        );
+    }
+
     #[test]
     fn near_duplicates_are_retrieved() {
         let per = 4;
         let c = corpus(12, per, 64, 1);
-        let idx = LshIndex::build(c.clone(), LshConfig { bands: 24, rows_per_band: 3, seed: 9 });
+        let cfg = LshConfig { bands: 24, rows_per_band: 3, seed: 9 };
+        let idx = LshIndex::try_build(shared(&c), cfg).unwrap();
         // Query with each row; its group mates must dominate the top-k.
         let mut hits = 0usize;
         let mut total = 0usize;
@@ -205,11 +894,15 @@ mod tests {
     #[test]
     fn self_query_returns_self_first() {
         let c = corpus(6, 3, 48, 2);
-        let idx = LshIndex::build(c.clone(), LshConfig::default());
+        let idx = LshIndex::try_build(shared(&c), LshConfig::default()).unwrap();
+        let pidx = PackedLshIndex::build(shared(&c), LshConfig::default(), 8).unwrap();
         for q in [0usize, 5, 11] {
             let top = idx.query(c.row(q), 1);
             assert_eq!(top[0].0 as usize, q);
             assert!((top[0].1 - 1.0).abs() < 1e-9);
+            let ptop = pidx.query(c.row(q), 1);
+            assert_eq!(ptop[0].0 as usize, q);
+            assert!((ptop[0].1 - 1.0).abs() < 1e-9);
         }
     }
 
@@ -234,7 +927,7 @@ mod tests {
         b.push_row((0..50).map(|i| (i as u32, 1.0)).collect());
         b.push_row((500..550).map(|i| (i as u32, 1.0)).collect());
         let c = b.finish();
-        let idx = LshIndex::build(c.clone(), LshConfig::default());
+        let idx = LshIndex::try_build(shared(&c), LshConfig::default()).unwrap();
         let cands = idx.candidates(c.row(1));
         assert!(!cands.contains(&0), "disjoint vectors must not collide");
     }
@@ -244,7 +937,8 @@ mod tests {
         let mut b = CsrBuilder::new(8);
         b.push_row(vec![(1, 1.0)]);
         b.push_row(vec![]);
-        let idx = LshIndex::build(b.finish(), LshConfig::default());
+        let c = b.finish();
+        let idx = LshIndex::try_build(shared(&c), LshConfig::default()).unwrap();
         assert_eq!(idx.len(), 2);
         let mut q = CsrBuilder::new(8);
         q.push_row(vec![(1, 1.0)]);
@@ -252,17 +946,36 @@ mod tests {
         let top = idx.query(qm.row(0), 2);
         assert_eq!(top[0].0, 0);
         assert_eq!(top.len(), 1); // the empty row is unreachable
+
+        // An empty *query* returns empty instead of panicking.
+        assert!(idx.query(c.row(1), 2).is_empty());
+        assert!(idx.candidates(c.row(1)).is_empty());
+        let pidx = PackedLshIndex::build(shared(&c), LshConfig::default(), 8).unwrap();
+        assert!(pidx.query(c.row(1), 2).is_empty());
     }
 
     #[test]
     fn candidates_are_sorted_and_deterministic() {
         let c = corpus(8, 4, 48, 7);
-        let idx = LshIndex::build(c.clone(), LshConfig { bands: 20, rows_per_band: 2, seed: 3 });
+        let cfg = LshConfig { bands: 20, rows_per_band: 2, seed: 3 };
+        let idx = LshIndex::try_build(shared(&c), cfg).unwrap();
+        let pidx = PackedLshIndex::build(shared(&c), cfg, 8).unwrap();
+        let mut s = QueryScratch::new();
         for q in 0..c.rows() {
             let a = idx.candidates(c.row(q));
             assert!(!a.is_empty(), "row {q} must at least find itself");
             assert!(a.windows(2).all(|w| w[0] < w[1]), "unsorted/duplicated candidates: {a:?}");
             assert_eq!(a, idx.candidates(c.row(q)), "row {q} output must be stable");
+            // The reusable-scratch entry is bit-identical to the
+            // allocating wrapper.
+            assert_eq!(a, idx.candidates_with(c.row(q), &mut s));
+            let p = pidx.candidates(c.row(q), QueryParams::default());
+            assert!(p.contains(&(q as u32)), "packed row {q} must find itself");
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "packed candidates unsorted: {p:?}");
+            assert_eq!(
+                p,
+                pidx.candidates_with(c.row(q), QueryParams::default(), &mut s)
+            );
         }
     }
 
@@ -273,7 +986,7 @@ mod tests {
         // (identical samples ⇒ identical band keys in every band).
         let c = corpus(5, 3, 32, 9);
         let cfg = LshConfig { bands: 6, rows_per_band: 3, seed: 11 };
-        let idx = LshIndex::build(c.clone(), cfg);
+        let idx = LshIndex::try_build(shared(&c), cfg).unwrap();
         let hasher = CwsHasher::new(cfg.seed, cfg.k());
         for q in 0..c.rows() {
             let cands = idx.candidates(c.row(q));
@@ -282,7 +995,7 @@ mod tests {
             let samples = hasher.hash_sparse(c.row(q));
             for (band, key) in band_keys(&samples, cfg.rows_per_band).enumerate() {
                 assert!(
-                    idx.tables[band].get(&key).is_some_and(|ids| ids.contains(&(q as u32))),
+                    idx.tables[band].bucket(key).contains(&(q as u32)),
                     "row {q} not bucketed under its own key in band {band}"
                 );
             }
@@ -290,10 +1003,178 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_build_matches_try_build() {
+        let c = corpus(4, 3, 32, 13);
+        let cfg = LshConfig { bands: 8, rows_per_band: 2, seed: 21 };
+        let old = LshIndex::build(c.clone(), cfg);
+        let new = LshIndex::try_build(shared(&c), cfg).unwrap();
+        for q in 0..c.rows() {
+            assert_eq!(old.candidates(c.row(q)), new.candidates(c.row(q)));
+            assert_eq!(old.query(c.row(q), 3), new.query(c.row(q), 3));
+        }
+    }
+
+    #[test]
+    fn band_table_bucket_roundtrip() {
+        // Adversarial key set: sequential, duplicated, and colliding
+        // patterns; every inserted (key → ids) group must come back
+        // exactly, absent keys must return empty.
+        let mut entries = Vec::new();
+        for key in [0u64, 1, 2, u64::MAX, 0xdead_beef, 1 << 63, 42] {
+            for id in 0..(key % 5 + 1) as u32 {
+                entries.push((key, id * 10));
+            }
+        }
+        let t = BandTable::build(entries.clone());
+        for key in [0u64, 1, 2, u64::MAX, 0xdead_beef, 1 << 63, 42] {
+            let want: Vec<u32> = {
+                let mut v: Vec<u32> =
+                    entries.iter().filter(|(k, _)| *k == key).map(|&(_, id)| id).collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(t.bucket(key), &want[..], "key {key}");
+        }
+        for absent in [3u64, 7, 12345, u64::MAX - 1] {
+            assert!(t.bucket(absent).is_empty(), "key {absent} should be absent");
+        }
+        assert!(BandTable::build(Vec::new()).bucket(0).is_empty());
+    }
+
+    #[test]
+    fn band_key_slicing_matches_truncated_tuples() {
+        // The word-sliced band key must equal the little-endian
+        // concatenation of the band's truncated codes — the §2.7
+        // slicing contract, checked against a per-row sketch.
+        let c = corpus(3, 2, 40, 17);
+        let cfg = LshConfig { bands: 10, rows_per_band: 3, seed: 23 };
+        for bits in [1u8, 2, 4, 8, 16] {
+            let idx = PackedLshIndex::build(shared(&c), cfg, bits).unwrap();
+            let hasher = CwsHasher::new(cfg.seed, cfg.k());
+            let band_bits = cfg.rows_per_band * bits as usize;
+            for q in 0..c.rows() {
+                let samples = hasher.hash_sparse(c.row(q));
+                for t in 0..cfg.bands {
+                    let mut want = 0u64;
+                    for j in 0..cfg.rows_per_band {
+                        let rel =
+                            samples[t * cfg.rows_per_band + j].i_star as u64 & ((1 << bits) - 1);
+                        want |= rel << (j * bits as usize);
+                    }
+                    let got =
+                        band_key_bits(idx.codes.word_row(q), t * band_bits, band_bits);
+                    assert_eq!(got, want, "row {q} band {t} bits {bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_legacy_topk_at_lossless_bits() {
+        // At b=16 with dim ≤ 65536 truncation is the identity, so the
+        // packed index's band equality classes coincide with exact
+        // tuple equality — which is what the FNV keys hash. Top-k must
+        // agree exactly.
+        let c = corpus(8, 3, 96, 29);
+        let cfg = LshConfig { bands: 12, rows_per_band: 3, seed: 31 };
+        let legacy = LshIndex::try_build(shared(&c), cfg).unwrap();
+        let packed = PackedLshIndex::build(shared(&c), cfg, 16).unwrap();
+        let mut s = QueryScratch::new();
+        for q in 0..c.rows() {
+            assert_eq!(
+                legacy.candidates(c.row(q)),
+                packed.candidates(c.row(q), QueryParams::default()),
+                "row {q} candidate sets diverged"
+            );
+            assert_eq!(
+                legacy.query(c.row(q), 5),
+                packed.query_with(c.row(q), 5, QueryParams::default(), &mut s).to_vec(),
+                "row {q} top-k diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_probe_is_superset_monotone() {
+        let c = corpus(6, 4, 64, 37);
+        let cfg = LshConfig { bands: 8, rows_per_band: 4, seed: 41 };
+        let idx = PackedLshIndex::build(shared(&c), cfg, 4).unwrap();
+        for q in 0..c.rows() {
+            let mut prev: Vec<u32> = Vec::new();
+            for probes in [0usize, 1, 2, 4, 8, 16] {
+                let cur = idx.candidates(c.row(q), QueryParams { probes, min_agreement: 0.0 });
+                assert!(
+                    prev.iter().all(|id| cur.binary_search(id).is_ok()),
+                    "row {q}: probes={probes} dropped a candidate from a smaller T"
+                );
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_prefilter_keeps_exact_matches() {
+        // min_agreement = 1.0 demands every packed position agree — a
+        // self-query survives (agreement k), so it still returns self.
+        let c = corpus(5, 3, 48, 43);
+        let cfg = LshConfig { bands: 10, rows_per_band: 3, seed: 47 };
+        let idx = PackedLshIndex::build(shared(&c), cfg, 8).unwrap();
+        let mut s = QueryScratch::new();
+        for q in 0..c.rows() {
+            let strict = QueryParams { probes: 0, min_agreement: 1.0 };
+            let top = idx.query_with(c.row(q), 1, strict, &mut s);
+            assert_eq!(top[0].0 as usize, q, "self must survive the strictest prefilter");
+            // And the filtered result set is a subset of the unfiltered.
+            let loose: Vec<u32> = idx.query(c.row(q), 16).iter().map(|&(id, _)| id).collect();
+            let tight = idx.query_with(c.row(q), 16, strict, &mut s);
+            assert!(tight.iter().all(|&(id, _)| loose.contains(&id)));
+        }
+    }
+
+    #[test]
+    fn knn_classifier_recovers_group_labels() {
+        let per = 5;
+        let groups = 8;
+        let c = corpus(groups, per, 64, 53);
+        let labels: Vec<i32> = (0..c.rows()).map(|i| (i / per) as i32).collect();
+        let cfg = LshConfig { bands: 16, rows_per_band: 3, seed: 59 };
+        let idx = PackedLshIndex::build(shared(&c), cfg, 8).unwrap();
+        for vote in [Vote::Majority, Vote::Weighted] {
+            let idx2 = PackedLshIndex::build(shared(&c), cfg, 8).unwrap();
+            let knn = KnnClassifier::new(idx2, labels.clone(), per).unwrap().with_vote(vote);
+            let mut s = QueryScratch::new();
+            let mut correct = 0usize;
+            for q in 0..c.rows() {
+                if knn.classify_with(c.row(q), &mut s) == Some(labels[q]) {
+                    correct += 1;
+                }
+            }
+            assert!(
+                correct as f64 / c.rows() as f64 > 0.9,
+                "{vote:?}: {correct}/{} correct",
+                c.rows()
+            );
+        }
+        // Label-length mismatch is a typed error, not a panic.
+        assert_eq!(
+            KnnClassifier::new(idx, vec![0; 3], per).err(),
+            Some(LshError::LabelMismatch { labels: 3, rows: c.rows() })
+        );
+    }
+
+    #[test]
     fn bucket_stats_reasonable() {
         let c = corpus(10, 3, 64, 3);
-        let idx = LshIndex::build(c, LshConfig { bands: 8, rows_per_band: 2, seed: 4 });
+        let idx =
+            LshIndex::try_build(shared(&c), LshConfig { bands: 8, rows_per_band: 2, seed: 4 })
+                .unwrap();
         let m = idx.mean_bucket_size();
         assert!(m >= 1.0 && m <= 30.0, "mean bucket size {m}");
+        let pidx =
+            PackedLshIndex::build(shared(&c), LshConfig { bands: 8, rows_per_band: 2, seed: 4 }, 8)
+                .unwrap();
+        let pm = pidx.mean_bucket_size();
+        assert!(pm >= 1.0 && pm <= 30.0, "packed mean bucket size {pm}");
     }
 }

@@ -44,7 +44,9 @@ pub mod sampler;
 pub mod schemes;
 
 pub use engine::{SketchEngine, SketchScratch};
-pub use lsh::{LshConfig, LshIndex};
+pub use lsh::{
+    KnnClassifier, LshConfig, LshError, LshIndex, PackedLshIndex, QueryParams, QueryScratch, Vote,
+};
 pub use minwise::MinwiseHasher;
 pub use sampler::{materialize_params, CwsHasher, CwsSample, DenseBatchHasher};
 pub use schemes::{collision_fraction, Scheme};

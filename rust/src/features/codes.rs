@@ -267,6 +267,44 @@ impl PackedCodes {
         out.extend((0..self.k).map(|j| Self::unpack_abs(row, cs, self.bits, j)));
     }
 
+    /// Pack engine sketch output straight into the word slab — the LSH
+    /// build path: at a million rows the intermediate `u32`
+    /// [`CodeMatrix`] would be `4k` bytes per row of pure copy traffic,
+    /// so this skips it. Produces exactly
+    /// `Expansion::checked(k, bits, 0).encode(samples).pack()`: the
+    /// 0-bit relative code is `i* mod 2^bits` (the block offset
+    /// `j · 2^bits` contributes nothing modulo the code space). `None`
+    /// rows become empty-masked all-zero rows; returns `None` when
+    /// `bits` has no supported packing.
+    pub(crate) fn from_samples(
+        samples: &[Option<Vec<crate::cws::CwsSample>>],
+        k: usize,
+        bits: u8,
+    ) -> Option<PackedCodes> {
+        let code_space = 1usize << bits;
+        if Self::supported_bits(code_space) != Some(bits) {
+            return None;
+        }
+        let wpr = Self::words_per_row(k, bits);
+        let cpw = 64 / bits as usize;
+        let mask = code_space as u64 - 1;
+        let mut words = vec![0u64; wpr * samples.len()];
+        let mut empty = vec![false; samples.len()];
+        for (i, row) in samples.iter().enumerate() {
+            match row {
+                Some(s) => {
+                    debug_assert_eq!(s.len(), k, "row {i} has {} samples, want {k}", s.len());
+                    let out = &mut words[i * wpr..(i + 1) * wpr];
+                    for (j, smp) in s.iter().enumerate() {
+                        out[j / cpw] |= (smp.i_star as u64 & mask) << ((j % cpw) * bits as usize);
+                    }
+                }
+                None => empty[i] = true,
+            }
+        }
+        Some(PackedCodes { k, bits, dim: k * code_space, words_per_row: wpr, words, empty })
+    }
+
     /// Reconstruct the unpacked [`CodeMatrix`] — the lossless inverse
     /// of [`CodeMatrix::pack`] (pinned by the roundtrip property test).
     pub fn to_code_matrix(&self) -> CodeMatrix {
@@ -408,5 +446,28 @@ mod tests {
         let e = Expansion::new(8, 3);
         let s = samples_for(&[&[1.0f32, 2.0]], 8, 5);
         assert!(e.encode(&s).pack().is_none(), "3-bit codes must not pack");
+    }
+
+    #[test]
+    fn from_samples_equals_encode_then_pack() {
+        // The direct sample→slab path (the LSH build) must produce the
+        // identical PackedCodes as the layered encode().pack() route,
+        // empty rows and tail padding included.
+        for bits in [1u8, 2, 4, 8, 16] {
+            for k in [1usize, 5, 8, 13, 64] {
+                let rows: Vec<Vec<f32>> = vec![
+                    vec![1.0, 0.5, 2.0, 0.0, 0.3],
+                    vec![0.0; 5],
+                    vec![0.2, 0.0, 0.0, 4.0, 1.5],
+                ];
+                let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+                let s = samples_for(&refs, k, 31);
+                let direct = PackedCodes::from_samples(&s, k, bits).expect("supported width");
+                let layered =
+                    Expansion::new(k, bits).encode(&s).pack().expect("supported width");
+                assert_eq!(direct, layered, "bits={bits} k={k}");
+            }
+        }
+        assert!(PackedCodes::from_samples(&[], 4, 3).is_none(), "3-bit must not pack");
     }
 }

@@ -14,8 +14,9 @@ pub use crate::sketch::{MinwiseSketcher, Sketcher};
 
 // Hashing: sampler, schemes, feature expansion.
 pub use crate::cws::{
-    collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, LshConfig,
-    LshIndex, MinwiseHasher, Scheme, SketchEngine, SketchScratch,
+    collision_fraction, materialize_params, CwsHasher, CwsSample, DenseBatchHasher, KnnClassifier,
+    LshConfig, LshError, LshIndex, MinwiseHasher, PackedLshIndex, QueryParams, QueryScratch,
+    Scheme, SketchEngine, SketchScratch, Vote,
 };
 pub use crate::features::{CodeMatrix, Expansion, ExpansionError, PackedCodes};
 
@@ -45,9 +46,9 @@ pub use crate::svm::{
 
 // Serving stack.
 pub use crate::coordinator::{
-    ClusterConfig, ClusterError, ClusterScoreResponse, ClusterSnapshot, HashResponse, HashService,
-    NativeBackend, PipelineConfig, PjrtBackend, Router, ScoreResponse, ScoreRouter, ServiceConfig,
-    SketcherBackend, SubmitError,
+    ClusterConfig, ClusterError, ClusterQueryResponse, ClusterScoreResponse, ClusterSnapshot,
+    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, QueryRouter, Router,
+    ScoreResponse, ScoreRouter, ServiceConfig, SketcherBackend, SubmitError, SubmittedQuery,
 };
 
 // Runtime bridge (stubbed without the `pjrt` feature).

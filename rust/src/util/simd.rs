@@ -221,6 +221,69 @@ pub(crate) fn add_assign_i8_at(wide: bool, acc: &mut [i32], src: &[i8]) {
     }
 }
 
+/// Count mismatching b-bit code slots between two equal-length packed
+/// rows (the `features::PackedCodes::word_row` layout: slot `j` at bit
+/// `(j mod 64/b)·b` of word `j/(64/b)`, zero-padded tail). Because the
+/// tail padding is zero in *both* rows it never mismatches, so the
+/// result counts real slots only — agreement is `k − mismatches`.
+///
+/// This is the LSH candidate prefilter: a handful of XOR + popcount
+/// words per candidate instead of an O(nnz) exact kernel.
+#[inline]
+pub fn packed_mismatch(a: &[u64], b: &[u64], bits: u8) -> u32 {
+    packed_mismatch_at(wide(), a, b, bits)
+}
+
+/// OR-fold each b-bit group of `x` down to its lowest bit, mask the
+/// group LSBs, popcount — the SWAR "any bit set per group" reduction.
+/// Pure integer ops, so scalar and chunked paths are exactly equal.
+#[inline]
+fn mismatch_word(mut x: u64, bits: u8) -> u32 {
+    let mut s = (bits / 2) as u32;
+    while s > 0 {
+        x |= x >> s;
+        s /= 2;
+    }
+    let lsb = match bits {
+        1 => u64::MAX,
+        2 => 0x5555_5555_5555_5555,
+        4 => 0x1111_1111_1111_1111,
+        8 => 0x0101_0101_0101_0101,
+        _ => 0x0001_0001_0001_0001, // 16
+    };
+    (x & lsb).count_ones()
+}
+
+/// [`packed_mismatch`] with the chunked path explicit (tests/benches).
+/// `bits` must be one of {1, 2, 4, 8, 16} — the widths
+/// `features::PackedCodes::supported_bits` admits.
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn packed_mismatch_at(wide: bool, a: &[u64], b: &[u64], bits: u8) -> u32 {
+    debug_assert!(matches!(bits, 1 | 2 | 4 | 8 | 16), "unsupported packed width {bits}");
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    if !wide {
+        let mut total = 0u32;
+        for (&x, &y) in a.iter().zip(b) {
+            total += mismatch_word(x ^ y, bits);
+        }
+        return total;
+    }
+    let mut av = a.chunks_exact(CHUNK);
+    let mut bv = b.chunks_exact(CHUNK);
+    let mut lanes = [0u32; CHUNK];
+    for (ac, bc) in (&mut av).zip(&mut bv) {
+        for l in 0..CHUNK {
+            lanes[l] += mismatch_word(ac[l] ^ bc[l], bits);
+        }
+    }
+    let mut total: u32 = lanes.iter().sum();
+    for (&x, &y) in av.remainder().iter().zip(bv.remainder()) {
+        total += mismatch_word(x ^ y, bits);
+    }
+    total
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
@@ -360,5 +423,63 @@ mod tests {
     fn level_is_cached_and_consistent_with_wide() {
         assert_eq!(level(), level());
         assert_eq!(wide(), level() != SimdLevel::Scalar);
+    }
+
+    /// Slot-by-slot reference: unpack both rows and compare codes.
+    fn mismatch_reference(a: &[u64], b: &[u64], bits: u8, slots: usize) -> u32 {
+        let cpw = 64 / bits as usize;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        (0..slots)
+            .filter(|&j| {
+                let x = (a[j / cpw] >> ((j % cpw) * bits as usize)) & mask;
+                let y = (b[j / cpw] >> ((j % cpw) * bits as usize)) & mask;
+                x != y
+            })
+            .count() as u32
+    }
+
+    #[test]
+    fn packed_mismatch_matches_slotwise_reference() {
+        let mut rng = Pcg64::new(0x51D3);
+        for bits in [1u8, 2, 4, 8, 16] {
+            let cpw = 64 / bits as usize;
+            for words in [0usize, 1, 2, 7, 8, 9, 33] {
+                let mut a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+                let mut b: Vec<u64> = a
+                    .iter()
+                    .map(|&w| if rng.uniform() < 0.5 { w } else { w ^ rng.next_u64() })
+                    .collect();
+                // Zero-pad an arbitrary tail in both rows, as PackedCodes
+                // does for k not a multiple of 64/b: padding never counts.
+                if words > 0 {
+                    let keep = rng.below(cpw as u64 + 1) as usize;
+                    let tail_mask = if keep == cpw {
+                        u64::MAX
+                    } else {
+                        (1u64 << (keep * bits as usize)).wrapping_sub(1)
+                    };
+                    a[words - 1] &= tail_mask;
+                    b[words - 1] &= tail_mask;
+                }
+                let want = mismatch_reference(&a, &b, bits, words * cpw);
+                assert_eq!(packed_mismatch_at(false, &a, &b, bits), want, "scalar b={bits}");
+                assert_eq!(packed_mismatch_at(true, &a, &b, bits), want, "wide b={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mismatch_identity_and_disjoint() {
+        for bits in [1u8, 2, 4, 8, 16] {
+            let a = vec![0xdead_beef_cafe_f00du64; 9];
+            assert_eq!(packed_mismatch_at(false, &a, &a, bits), 0);
+            assert_eq!(packed_mismatch_at(true, &a, &a, bits), 0);
+            // All-ones vs all-zeros: every slot mismatches.
+            let ones = vec![u64::MAX; 9];
+            let zeros = vec![0u64; 9];
+            let slots = (9 * 64 / bits as usize) as u32;
+            assert_eq!(packed_mismatch_at(false, &ones, &zeros, bits), slots);
+            assert_eq!(packed_mismatch_at(true, &ones, &zeros, bits), slots);
+        }
     }
 }

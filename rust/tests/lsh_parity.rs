@@ -1,0 +1,250 @@
+//! Retrieval-engine parity: the banded b-bit LSH index must be a pure
+//! execution change over per-row CWS hashing plus exact re-ranking.
+//!
+//! * The batch-built index (parallel engine, packed slab, open-addressed
+//!   band tables) produces **bit-identical** buckets to hashing each row
+//!   one at a time with `CwsHasher` and grouping by band tuple — at any
+//!   `MINMAX_THREADS` / `MINMAX_SIMD` setting (the CI matrix).
+//! * Multi-probe lookup is superset-monotone in the probe count.
+//! * At a lossless truncation width the packed index and the legacy
+//!   FNV-keyed index agree exactly — candidates and ranked top-k.
+//! * Measured recall@10 tracks the banding S-curve `1 − (1 − s^r)^b`.
+//! * The coordinator `query` service is bit-identical to direct index
+//!   calls at every shard count, before and after a hot swap.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use minmax::coordinator::{ClusterConfig, ClusterError, QueryRouter};
+use minmax::cws::{
+    CwsHasher, LshConfig, LshIndex, PackedLshIndex, QueryParams, QueryScratch,
+};
+use minmax::data::sparse::{Csr, CsrBuilder};
+use minmax::kernels::sparse_minmax;
+use minmax::util::rng::Pcg64;
+
+/// Planted corpus: `groups` clusters of `per_group` near-duplicates
+/// over `dim` columns. `sigma` is the per-weight jitter (small sigma ⇒
+/// high within-group min-max similarity).
+fn corpus(groups: usize, per_group: usize, dim: usize, sigma: f64, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut b = CsrBuilder::new(dim);
+    for _ in 0..groups {
+        let mut proto: Vec<(u32, f32)> = Vec::new();
+        for i in 0..dim {
+            if rng.uniform() < 0.3 {
+                proto.push((i as u32, rng.lognormal(0.0, 1.0) as f32));
+            }
+        }
+        let proto = if proto.is_empty() { vec![(0, 1.0)] } else { proto };
+        for _ in 0..per_group {
+            b.push_row(
+                proto
+                    .iter()
+                    .map(|&(w, v)| (w, (v as f64 * rng.lognormal(0.0, sigma)) as f32))
+                    .collect(),
+            );
+        }
+    }
+    b.finish()
+}
+
+/// Shard counts under test: `MINMAX_TEST_SHARDS` pins one (the CI
+/// matrix), default sweeps both.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("MINMAX_TEST_SHARDS") {
+        Ok(s) => vec![s.trim().parse().expect("MINMAX_TEST_SHARDS must be a shard count")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+/// Reference candidate sets from first principles: hash every row
+/// individually (single-row path — no batching, no slab), truncate
+/// `i*` to `bits`, group rows by exact band tuple, and take the union
+/// of the query row's groups. This is what the banded index *means*;
+/// the packed index must reproduce it bit-for-bit whenever truncation
+/// is collision-free over the corpus (guaranteed here by `dim ≤ 2^bits`).
+fn reference_candidates(c: &Csr, cfg: LshConfig, bits: u8) -> Vec<Vec<u32>> {
+    let hasher = CwsHasher::new(cfg.seed, cfg.k());
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    let tuples: Vec<Vec<u32>> = (0..c.rows())
+        .map(|i| hasher.hash_sparse(c.row(i)).iter().map(|s| s.i_star & mask).collect())
+        .collect();
+    let mut groups: Vec<HashMap<&[u32], Vec<u32>>> = vec![HashMap::new(); cfg.bands];
+    for (row, tuple) in tuples.iter().enumerate() {
+        for (band, chunk) in tuple.chunks(cfg.rows_per_band).enumerate() {
+            groups[band].entry(chunk).or_default().push(row as u32);
+        }
+    }
+    (0..c.rows())
+        .map(|row| {
+            let mut cands: Vec<u32> = tuples[row]
+                .chunks(cfg.rows_per_band)
+                .enumerate()
+                .flat_map(|(band, chunk)| groups[band][chunk].iter().copied())
+                .collect();
+            cands.sort_unstable();
+            cands.dedup();
+            cands
+        })
+        .collect()
+}
+
+#[test]
+fn batched_index_matches_per_row_hashing() {
+    let c = corpus(60, 6, 200, 0.1, 42);
+    let cfg = LshConfig { bands: 8, rows_per_band: 3, seed: 99 };
+    // dim = 200 ≤ 2^8, so 8-bit truncation cannot collide and the
+    // reference grouping is exact for the packed index too.
+    let want = reference_candidates(&c, cfg, 8);
+    let arc = Arc::new(c);
+    let packed = PackedLshIndex::build(Arc::clone(&arc), cfg, 8).unwrap();
+    let legacy = LshIndex::try_build(Arc::clone(&arc), cfg).unwrap();
+    let exact = QueryParams::default();
+    let mut s = QueryScratch::new();
+    for row in 0..arc.rows() {
+        let got = packed.candidates_with(arc.row(row), exact, &mut s);
+        assert_eq!(got, want[row], "packed row {row}");
+        // The legacy index hashes FNV over untruncated tuples; with no
+        // truncation collisions its buckets are the same partition.
+        assert_eq!(legacy.candidates(arc.row(row)), want[row], "legacy row {row}");
+    }
+}
+
+#[test]
+fn multi_probe_is_superset_monotone() {
+    let c = corpus(40, 5, 300, 0.15, 7);
+    let arc = Arc::new(c);
+    let cfg = LshConfig { bands: 6, rows_per_band: 4, seed: 3 };
+    let idx = PackedLshIndex::build(Arc::clone(&arc), cfg, 8).unwrap();
+    let mut s = QueryScratch::new();
+    for row in (0..arc.rows()).step_by(7) {
+        let mut prev: Vec<u32> = Vec::new();
+        for probes in [0usize, 1, 2, 4, 8, 16] {
+            let got =
+                idx.candidates_with(arc.row(row), QueryParams { probes, ..Default::default() }, &mut s)
+                    .to_vec();
+            assert!(
+                prev.iter().all(|id| got.binary_search(id).is_ok()),
+                "row {row}: probes={probes} dropped a candidate from a smaller probe count"
+            );
+            prev = got;
+        }
+    }
+}
+
+#[test]
+fn packed_matches_legacy_topk_at_lossless_bits() {
+    let c = corpus(50, 6, 150, 0.12, 11);
+    let arc = Arc::new(c);
+    let cfg = LshConfig { bands: 8, rows_per_band: 2, seed: 21 };
+    let legacy = LshIndex::try_build(Arc::clone(&arc), cfg).unwrap();
+    // dim = 150 < 2^16: 16-bit truncation is the identity on i*.
+    let packed = PackedLshIndex::build(Arc::clone(&arc), cfg, 16).unwrap();
+    let mut s = QueryScratch::new();
+    for row in 0..arc.rows() {
+        let q = arc.row(row);
+        assert_eq!(
+            packed.candidates_with(q, QueryParams::default(), &mut s).to_vec(),
+            legacy.candidates(q),
+            "row {row} candidates"
+        );
+        assert_eq!(packed.query(q, 5), legacy.query(q, 5), "row {row} top-k");
+    }
+}
+
+#[test]
+fn recall_tracks_s_curve_prediction() {
+    // Tight groups (σ = 0.05 ⇒ within-group s ≈ 0.9): the S-curve at
+    // b=16, r=2 predicts essentially certain candidacy, so recall@10
+    // against exact brute force must be ≥ 0.9 and within noise of the
+    // per-pair prediction average.
+    let c = corpus(100, 12, 400, 0.05, 17);
+    let arc = Arc::new(c);
+    let cfg = LshConfig { bands: 16, rows_per_band: 2, seed: 5 };
+    let idx = PackedLshIndex::build(Arc::clone(&arc), cfg, 8).unwrap();
+    let top = 10usize;
+    let mut s = QueryScratch::new();
+    let (mut hits, mut total) = (0usize, 0usize);
+    let mut predicted = 0.0f64;
+    for row in (0..arc.rows()).step_by(11) {
+        let q = arc.row(row);
+        let mut truth: Vec<(u32, f64)> =
+            (0..arc.rows()).map(|i| (i as u32, sparse_minmax(q, arc.row(i)))).collect();
+        truth.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        truth.truncate(top);
+        let got = idx.query_with(q, top, QueryParams::default(), &mut s);
+        for &(id, sim) in &truth {
+            total += 1;
+            predicted += cfg.candidate_probability(sim);
+            if got.iter().any(|&(g, _)| g == id) {
+                hits += 1;
+            }
+        }
+    }
+    let recall = hits as f64 / total as f64;
+    let expected = predicted / total as f64;
+    assert!(recall >= 0.9, "recall@{top} = {recall:.3} must reach 0.9");
+    assert!(
+        recall >= expected - 0.05,
+        "recall@{top} = {recall:.3} fell below S-curve prediction {expected:.3}"
+    );
+}
+
+#[test]
+fn query_router_matches_direct_index_across_shards_and_swaps() {
+    let v1 = Arc::new(
+        PackedLshIndex::build(
+            Arc::new(corpus(30, 5, 120, 0.1, 23)),
+            LshConfig { bands: 8, rows_per_band: 2, seed: 9 },
+            8,
+        )
+        .unwrap(),
+    );
+    // Same banding/seed/bits/dim, fresh (larger) corpus snapshot: the
+    // legitimate hot-swap payload.
+    let v2 = Arc::new(
+        PackedLshIndex::build(
+            Arc::new(corpus(45, 5, 120, 0.1, 29)),
+            LshConfig { bands: 8, rows_per_band: 2, seed: 9 },
+            8,
+        )
+        .unwrap(),
+    );
+    let params = QueryParams { probes: 1, min_agreement: 0.0 };
+    let mut s = QueryScratch::new();
+    for shards in shard_counts() {
+        let cfg = ClusterConfig { shards, queue_cap: 256, shed_watermark: None, steal: true };
+        let cluster = QueryRouter::start(Arc::clone(&v1), params, cfg).unwrap();
+        for row in 0..v1.len() {
+            let q = v1.corpus().row(row);
+            let resp = cluster.query_blocking(row as u64, q, 5).unwrap();
+            assert_eq!(resp.hits, v1.query_with(q, 5, params, &mut s), "v1 row {row}");
+            assert_eq!(resp.version, 1);
+        }
+
+        // Shape-incompatible indexes are rejected with a typed error.
+        let bad = Arc::new(
+            PackedLshIndex::build(
+                Arc::clone(v2.corpus()),
+                LshConfig { bands: 8, rows_per_band: 2, seed: 10 },
+                8,
+            )
+            .unwrap(),
+        );
+        assert!(matches!(cluster.publish(bad), Err(ClusterError::ShapeMismatch(_))));
+        assert_eq!(cluster.current_version(), 1);
+
+        assert_eq!(cluster.publish(Arc::clone(&v2)).unwrap(), 2);
+        for row in 0..v2.len() {
+            let q = v2.corpus().row(row);
+            let resp = cluster.query_blocking(row as u64, q, 5).unwrap();
+            assert_eq!(resp.hits, v2.query_with(q, 5, params, &mut s), "v2 row {row}");
+            assert_eq!(resp.version, 2);
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, snap.requests);
+        assert_eq!(snap.version_counts.len(), 2);
+        cluster.shutdown();
+    }
+}
