@@ -40,19 +40,29 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to the `System` allocator — every
+// `GlobalAlloc` contract (layout validity, ptr provenance) is upheld
+// by forwarding the caller's arguments unchanged; the counter bump has
+// no allocator-visible effect.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: delegates to `System.alloc` under the caller's contract.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: same layout the caller guaranteed valid.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: delegates to `System.dealloc` under the caller's contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` come from a matching `alloc` above.
+        unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: delegates to `System.realloc` under the caller's contract.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: arguments forwarded unchanged from the caller.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 

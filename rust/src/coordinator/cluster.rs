@@ -15,7 +15,7 @@
 //!   └── shard N-1 ────────┘    └──── work stealing ◄────┘
 //!                │
 //!                ▼
-//!      RwLock<Arc<Versioned>> ── publish() swaps the model Arc;
+//!      SwapCell<Versioned> ──── publish() swaps the model Arc;
 //!      workers re-read it at every dequeue (hot swap, zero downtime)
 //! ```
 //!
@@ -35,7 +35,8 @@
 //!
 //! ## Version-swap protocol
 //!
-//! The current model lives in one `RwLock<Arc<Versioned>>`.
+//! The current model lives in one [`SwapCell`] (an `RwLock<Arc<_>>`
+//! underneath — see `super::queue`).
 //! [`ScoreRouter::publish`] validates the new [`Scorer`]'s shape
 //! (`k`/`dim`/`seed` must match — replicas must stay interchangeable —
 //! and so must the serving plan: slab precision and code packing,
@@ -79,8 +80,6 @@
 //! `rust/tests/lsh_parity.rs`).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::cws::{PackedLshIndex, QueryParams, QueryScratch};
@@ -88,8 +87,13 @@ use crate::data::sparse::SparseRow;
 use crate::data::Matrix;
 use crate::serve::{argmax, Scorer, Scratch, SlabPrecision};
 use crate::util::stats::Histogram;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{mpsc, spawn_named, thread, Arc, Mutex};
 
 use super::metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
+use super::queue::{
+    pick_least_deep, steal, steal_any, Pop, PushError, ShardQueue, SwapCell, STEAL_POLL,
+};
 
 /// Cluster shape and flow-control knobs.
 #[derive(Debug, Clone)]
@@ -177,110 +181,12 @@ struct Versioned {
     scorer: Scorer,
 }
 
-// ------------------------------------------------------------- queue
-//
-// The queue/steal machinery is generic over the request type: the
-// `score` and `query` service modes differ only in what a worker does
-// with a dequeued request, so they share one MPMC implementation (and
-// one set of backpressure/shedding/drain semantics).
-
-struct QueueInner<R> {
-    queue: VecDeque<R>,
-    closed: bool,
-}
-
-/// One bounded MPMC queue: submitters push from any thread, the owning
-/// worker pops, idle siblings steal. `push` never blocks — flow
-/// control is rejection, not waiting, so a submitter can fail over to
-/// another shard immediately.
-struct ShardQueue<R> {
-    inner: Mutex<QueueInner<R>>,
-    ready: Condvar,
-}
-
-enum PushError {
-    Full,
-    Shed { depth: usize, watermark: usize },
-    Closed,
-}
-
-enum Pop<R> {
-    Req(Box<R>),
-    /// Timed out with nothing queued (steal opportunity).
-    Empty,
-    /// Closed AND drained — the worker's own queue is finished.
-    Closed,
-}
-
-impl<R> ShardQueue<R> {
-    fn new() -> Self {
-        Self {
-            inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
-            ready: Condvar::new(),
-        }
-    }
-
-    /// Rejections hand the request back so the submitter can fail
-    /// over to another shard without cloning the row.
-    fn push(&self, req: R, cap: usize, watermark: Option<usize>) -> Result<(), (PushError, R)> {
-        let mut g = self.inner.lock().unwrap();
-        if g.closed {
-            return Err((PushError::Closed, req));
-        }
-        let depth = g.queue.len();
-        if depth >= cap {
-            return Err((PushError::Full, req));
-        }
-        if let Some(w) = watermark {
-            if depth >= w {
-                return Err((PushError::Shed { depth, watermark: w }, req));
-            }
-        }
-        g.queue.push_back(req);
-        drop(g);
-        self.ready.notify_one();
-        Ok(())
-    }
-
-    /// Pop, waiting up to `timeout`. Items are always drained before
-    /// `Closed` is reported, so closing never strands queued work.
-    fn pop_wait(&self, timeout: Duration) -> Pop<R> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(r) = g.queue.pop_front() {
-                return Pop::Req(Box::new(r));
-            }
-            if g.closed {
-                return Pop::Closed;
-            }
-            let (g2, res) = self.ready.wait_timeout(g, timeout).unwrap();
-            g = g2;
-            if res.timed_out() {
-                return match g.queue.pop_front() {
-                    Some(r) => Pop::Req(Box::new(r)),
-                    None if g.closed => Pop::Closed,
-                    None => Pop::Empty,
-                };
-            }
-        }
-    }
-
-    /// Non-blocking pop (the steal path).
-    fn try_pop(&self) -> Option<Box<R>> {
-        self.inner.lock().unwrap().queue.pop_front().map(Box::new)
-    }
-
-    fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.ready.notify_all();
-    }
-
-    fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
-    }
-}
-
 // ------------------------------------------------------------ shared
+//
+// The queue/steal machinery lives in `super::queue` (generic over the
+// request type — the `score` and `query` service modes differ only in
+// what a worker does with a dequeued request), where the loom models
+// in `rust/tests/loom_models.rs` can exercise it directly.
 
 /// Per-shard `version → completed` tally map.
 type VersionTally = Mutex<BTreeMap<u64, u64>>;
@@ -289,47 +195,13 @@ struct Shared {
     queues: Vec<ShardQueue<ClusterRequest>>,
     /// The hot-swap slot. Read (cheap: shared lock + `Arc` clone) at
     /// every dequeue; written only by `publish`.
-    model: RwLock<Arc<Versioned>>,
+    model: SwapCell<Versioned>,
     shard_metrics: Vec<Metrics>,
     /// Per-shard `version → completed` tallies (shard-local so the
     /// serve hot path never contends across shards); merged by
     /// `snapshot()`.
     shard_versions: Vec<VersionTally>,
     steal: bool,
-}
-
-/// How long an idle worker blocks on its own queue before scanning
-/// siblings for stealable work.
-const STEAL_POLL: Duration = Duration::from_millis(1);
-
-/// Scan sibling queues (not our own — it was just found empty).
-fn steal<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
-    let n = queues.len();
-    (1..n).find_map(|off| queues[(me + off) % n].try_pop())
-}
-
-/// Scan every queue, own first (the shutdown-drain sweep).
-fn steal_any<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
-    let n = queues.len();
-    (0..n).find_map(|off| queues[(me + off) % n].try_pop())
-}
-
-/// Least-deep shard with a rotating round-robin tie-break start, so
-/// equal-depth shards share arrivals instead of all landing on 0.
-fn pick_least_deep<R>(queues: &[ShardQueue<R>], rr: &AtomicU64) -> usize {
-    let n = queues.len();
-    let start = (rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
-    let mut best = start;
-    let mut best_depth = usize::MAX;
-    for off in 0..n {
-        let i = (start + off) % n;
-        let d = queues[i].depth();
-        if d < best_depth {
-            best_depth = d;
-            best = i;
-        }
-    }
-    best
 }
 
 /// Merge per-shard metrics, histograms, and version tallies into the
@@ -431,7 +303,7 @@ fn serve(
     // Pick up the current version; in-flight work keeps this Arc alive
     // through a concurrent publish (the drain half of the swap
     // protocol).
-    let model: Arc<Versioned> = shared.model.read().unwrap().clone();
+    let model: Arc<Versioned> = shared.model.get();
     let scorer = &model.scorer;
     let s = scratch.get_or_insert_with(|| scorer.scratch());
     staging.clear();
@@ -457,7 +329,7 @@ fn serve(
 /// swap, and shutdown contracts.
 pub struct ScoreRouter {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     stopping: AtomicBool,
     rr: AtomicU64,
     cfg: ClusterConfig,
@@ -506,7 +378,7 @@ impl ScoreRouter {
         let (precision, packed) = (scorer.precision(), scorer.packed_codes());
         let shared = Arc::new(Shared {
             queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
-            model: RwLock::new(Arc::new(Versioned { version: 1, scorer })),
+            model: SwapCell::new(Versioned { version: 1, scorer }),
             shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
             shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
             steal: cfg.steal,
@@ -514,9 +386,7 @@ impl ScoreRouter {
         let mut workers = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let sh = Arc::clone(&shared);
-            let h = std::thread::Builder::new()
-                .name(format!("minmax-cluster-w{i}"))
-                .spawn(move || worker_loop(i, &sh))
+            let h = spawn_named(format!("minmax-cluster-w{i}"), move || worker_loop(i, &sh))
                 .map_err(|e| format!("spawn cluster worker {i}: {e}"))?;
             workers.push(h);
         }
@@ -545,12 +415,12 @@ impl ScoreRouter {
 
     /// Version currently being published to workers.
     pub fn current_version(&self) -> u64 {
-        self.shared.model.read().unwrap().version
+        self.shared.model.get().version
     }
 
     /// Class count of the current version.
     pub fn n_classes(&self) -> usize {
-        self.shared.model.read().unwrap().scorer.n_classes()
+        self.shared.model.get().scorer.n_classes()
     }
 
     /// Per-shard metrics handle (tests / scraping).
@@ -600,9 +470,10 @@ impl ScoreRouter {
                 self.packed
             )));
         }
-        let mut slot = self.shared.model.write().unwrap();
-        let version = slot.version + 1;
-        *slot = Arc::new(Versioned { version, scorer });
+        let version = self.shared.model.update(|cur| {
+            let version = cur.version + 1;
+            (Versioned { version, scorer }, version)
+        });
         Ok(version)
     }
 
@@ -707,7 +578,7 @@ impl ScoreRouter {
                             Some((j, s)) => out[j] = s.wait()?.label,
                             // Another client owns the queue space; let
                             // the workers drain and retry.
-                            None => std::thread::yield_now(),
+                            None => thread::yield_now(),
                         }
                     }
                     Err(e) => return Err(e),
@@ -877,7 +748,7 @@ struct QueryShared {
     queues: Vec<ShardQueue<QueryRequest>>,
     /// The hot-swap slot, same protocol as score mode: read (shared
     /// lock + `Arc` clone) at every dequeue, written only by `publish`.
-    index: RwLock<Arc<VersionedIndex>>,
+    index: SwapCell<VersionedIndex>,
     shard_metrics: Vec<Metrics>,
     shard_versions: Vec<VersionTally>,
     steal: bool,
@@ -921,7 +792,7 @@ fn serve_query(
     metrics.record_queue_wait_ms(req.submitted.elapsed().as_secs_f64() * 1e3);
     // Pin the version for this request; a concurrent publish cannot
     // free the index under us (same drain rule as score mode).
-    let model: Arc<VersionedIndex> = shared.index.read().unwrap().clone();
+    let model: Arc<VersionedIndex> = shared.index.get();
     let row = SparseRow { indices: &req.indices, values: &req.values };
     let hits = model.index.query_with(row, req.top, shared.params, scratch).to_vec();
     let latency = req.submitted.elapsed();
@@ -968,7 +839,7 @@ impl SubmittedQuery {
 /// version answers (pinned by `rust/tests/lsh_parity.rs`).
 pub struct QueryRouter {
     shared: Arc<QueryShared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     stopping: AtomicBool,
     rr: AtomicU64,
     cfg: ClusterConfig,
@@ -1000,7 +871,7 @@ impl QueryRouter {
         let (bits, cols) = (index.bits(), index.corpus().cols());
         let shared = Arc::new(QueryShared {
             queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
-            index: RwLock::new(Arc::new(VersionedIndex { version: 1, index })),
+            index: SwapCell::new(VersionedIndex { version: 1, index }),
             shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
             shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
             steal: cfg.steal,
@@ -1009,9 +880,7 @@ impl QueryRouter {
         let mut workers = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let sh = Arc::clone(&shared);
-            let h = std::thread::Builder::new()
-                .name(format!("minmax-query-w{i}"))
-                .spawn(move || query_worker_loop(i, &sh))
+            let h = spawn_named(format!("minmax-query-w{i}"), move || query_worker_loop(i, &sh))
                 .map_err(|e| format!("spawn query worker {i}: {e}"))?;
             workers.push(h);
         }
@@ -1045,12 +914,12 @@ impl QueryRouter {
 
     /// Version currently being published to workers.
     pub fn current_version(&self) -> u64 {
-        self.shared.index.read().unwrap().version
+        self.shared.index.get().version
     }
 
     /// Corpus rows of the current version.
     pub fn corpus_len(&self) -> usize {
-        self.shared.index.read().unwrap().index.len()
+        self.shared.index.get().index.len()
     }
 
     /// Per-shard metrics handle (tests / scraping).
@@ -1090,9 +959,10 @@ impl QueryRouter {
                 self.cols
             )));
         }
-        let mut slot = self.shared.index.write().unwrap();
-        let version = slot.version + 1;
-        *slot = Arc::new(VersionedIndex { version, index });
+        let version = self.shared.index.update(|cur| {
+            let version = cur.version + 1;
+            (VersionedIndex { version, index }, version)
+        });
         Ok(version)
     }
 

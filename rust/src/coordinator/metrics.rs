@@ -21,9 +21,10 @@
 //! torn totals appear under load — `metrics::tests::
 //! concurrent_counters_reconcile` hammers exactly this.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use crate::util::stats::{Histogram, Online, Reservoir};
 
@@ -303,6 +304,15 @@ mod tests {
     /// must reconcile exactly at quiescence. Writers follow the service
     /// protocol (request first, then exactly one outcome); concurrent
     /// snapshotters assert the invariant the read ordering guarantees.
+    ///
+    /// Regression note (ISSUE 9): `service.rs` once read its `stopping`
+    /// lifecycle flag with `Ordering::Relaxed` while the cluster used
+    /// Acquire/Release for the same role. Lifecycle and counter flags
+    /// must all use the Release-store/Acquire-load protocol this test
+    /// hammers — `xtask lint` now rejects any `Ordering::Relaxed` in
+    /// `rust/src` without an explicit `relaxed-ok` allowlist marker,
+    /// and `rust/tests/loom_models.rs` model-checks the read-order
+    /// invariant exhaustively at small thread counts.
     #[test]
     fn concurrent_counters_reconcile() {
         const WRITERS: u64 = 4;

@@ -24,11 +24,17 @@
 //!   the layout the `hash_score` AOT serving artifact consumes. (The
 //!   composable object API is [`crate::pipeline`].)
 //! * [`metrics`] — shared observability.
+//! * `queue` (doc-hidden) — the generic MPMC shard-queue + hot-swap
+//!   primitives both cluster modes are built from, exposed so the loom
+//!   models in `rust/tests/loom_models.rs` can explore the production
+//!   implementation directly. Not a supported API surface.
 
 pub mod backend;
 pub mod cluster;
 pub mod metrics;
 pub mod pipeline;
+#[doc(hidden)]
+pub mod queue;
 pub mod router;
 pub mod service;
 

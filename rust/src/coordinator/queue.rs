@@ -1,0 +1,267 @@
+//! Generic MPMC shard-queue machinery plus the versioned hot-swap
+//! cell — extracted from `cluster.rs` so the loom models
+//! (`rust/tests/loom_models.rs`) can exhaustively check the *actual*
+//! production primitives rather than a re-implementation.
+//!
+//! The `score` and `query` service modes differ only in what a worker
+//! does with a dequeued request, so they share this one implementation
+//! (and one set of backpressure/shedding/drain semantics). Everything
+//! here is `#[doc(hidden)] pub`: public enough for the integration-test
+//! harness to drive, but not part of the crate's supported API — the
+//! supported surface is [`super::cluster`] and [`super::service`].
+//!
+//! ## Invariants the loom models pin (DESIGN.md §2.8)
+//!
+//! * **Queue close:** every pushed request is popped exactly once
+//!   before [`Pop::Closed`] is reported; a push after [`close`]
+//!   returns [`PushError::Closed`] with the request handed back.
+//! * **Backpressure vs. shed:** under the depth checks in [`push`],
+//!   accept/[`PushError::Full`]/[`PushError::Shed`] outcomes are
+//!   mutually exclusive per submit and consistent with the depth the
+//!   submitter observed (the mutex serializes depth reads).
+//! * **Swap:** [`SwapCell::get`] returns a fully-initialized value at
+//!   a monotonically non-decreasing version; in-flight holders keep
+//!   their `Arc` alive across an [`SwapCell::update`].
+//! * **Drain:** the close-then-[`steal_any`]-sweep shutdown protocol
+//!   serves every accepted request exactly once.
+//!
+//! [`push`]: ShardQueue::push
+//! [`close`]: ShardQueue::close
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{self, Arc, Condvar, Mutex, RwLock};
+
+struct QueueInner<R> {
+    queue: VecDeque<R>,
+    closed: bool,
+}
+
+/// One bounded MPMC queue: submitters push from any thread, the owning
+/// worker pops, idle siblings steal. `push` never blocks — flow
+/// control is rejection, not waiting, so a submitter can fail over to
+/// another shard immediately.
+pub struct ShardQueue<R> {
+    inner: Mutex<QueueInner<R>>,
+    ready: Condvar,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    Full,
+    Shed { depth: usize, watermark: usize },
+    Closed,
+}
+
+pub enum Pop<R> {
+    Req(Box<R>),
+    /// Timed out with nothing queued (steal opportunity).
+    Empty,
+    /// Closed AND drained — the worker's own queue is finished.
+    Closed,
+}
+
+impl<R> Default for ShardQueue<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R> ShardQueue<R> {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Rejections hand the request back so the submitter can fail
+    /// over to another shard without cloning the row.
+    pub fn push(&self, req: R, cap: usize, watermark: Option<usize>) -> Result<(), (PushError, R)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((PushError::Closed, req));
+        }
+        let depth = g.queue.len();
+        if depth >= cap {
+            return Err((PushError::Full, req));
+        }
+        if let Some(w) = watermark {
+            if depth >= w {
+                return Err((PushError::Shed { depth, watermark: w }, req));
+            }
+        }
+        g.queue.push_back(req);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Pop, waiting up to `timeout`. Items are always drained before
+    /// `Closed` is reported, so closing never strands queued work.
+    ///
+    /// Under loom the facade's `wait_timeout` reports every wakeup as
+    /// a timeout (no time model) — sound here because the timeout arm
+    /// re-checks the queue and the closed flag rather than trusting
+    /// the clock.
+    pub fn pop_wait(&self, timeout: Duration) -> Pop<R> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.queue.pop_front() {
+                return Pop::Req(Box::new(r));
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let (g2, timed_out) = sync::wait_timeout(&self.ready, g, timeout);
+            g = g2;
+            if timed_out {
+                return match g.queue.pop_front() {
+                    Some(r) => Pop::Req(Box::new(r)),
+                    None if g.closed => Pop::Closed,
+                    None => Pop::Empty,
+                };
+            }
+        }
+    }
+
+    /// Non-blocking pop (the steal path).
+    pub fn try_pop(&self) -> Option<Box<R>> {
+        self.inner.lock().unwrap().queue.pop_front().map(Box::new)
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+/// How long an idle worker blocks on its own queue before scanning
+/// siblings for stealable work.
+pub const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// Scan sibling queues (not our own — it was just found empty).
+pub fn steal<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
+    let n = queues.len();
+    (1..n).find_map(|off| queues[(me + off) % n].try_pop())
+}
+
+/// Scan every queue, own first (the shutdown-drain sweep).
+pub fn steal_any<R>(me: usize, queues: &[ShardQueue<R>]) -> Option<Box<R>> {
+    let n = queues.len();
+    (0..n).find_map(|off| queues[(me + off) % n].try_pop())
+}
+
+/// Least-deep shard with a rotating round-robin tie-break start, so
+/// equal-depth shards share arrivals instead of all landing on 0.
+pub fn pick_least_deep<R>(queues: &[ShardQueue<R>], rr: &AtomicU64) -> usize {
+    let n = queues.len();
+    // relaxed-ok: rotating tie-break hint only — any interleaving of
+    // the counter yields a valid start shard; no data is synchronized.
+    let start = (rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+    let mut best = start;
+    let mut best_depth = usize::MAX;
+    for off in 0..n {
+        let i = (start + off) % n;
+        let d = queues[i].depth();
+        if d < best_depth {
+            best_depth = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The versioned hot-swap slot: readers take a shared lock just long
+/// enough to clone the `Arc`; [`update`](SwapCell::update) swaps the
+/// pointer under the write lock. In-flight holders keep the old value
+/// alive until their last clone drops — the drain half of the swap
+/// protocol (module docs, "Swap" invariant).
+pub struct SwapCell<T> {
+    slot: RwLock<Arc<T>>,
+}
+
+impl<T> SwapCell<T> {
+    pub fn new(value: T) -> Self {
+        Self { slot: RwLock::new(Arc::new(value)) }
+    }
+
+    /// Clone the current `Arc` (what workers do at every dequeue).
+    pub fn get(&self) -> Arc<T> {
+        self.slot.read().unwrap().clone()
+    }
+
+    /// Compute the replacement from the current value under the write
+    /// lock and swap it in atomically; returns the closure's second
+    /// output (e.g. the new version number). Validation that must be
+    /// serialized against concurrent publishes belongs inside `f`.
+    pub fn update<U>(&self, f: impl FnOnce(&T) -> (T, U)) -> U {
+        let mut g = self.slot.write().unwrap();
+        let (next, out) = f(&g);
+        *g = Arc::new(next);
+        out
+    }
+}
+
+// Loom's Mutex/Condvar/RwLock are !Sync-transparent in the same way
+// std's are, so no manual Send/Sync impls are needed in either cfg.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_fifo_and_close() {
+        let q: ShardQueue<u32> = ShardQueue::new();
+        q.push(1, 4, None).unwrap();
+        q.push(2, 4, None).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Pop::Req(b) if *b == 1));
+        assert_eq!(q.try_pop().as_deref(), Some(&2));
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Pop::Empty));
+        q.close();
+        assert_eq!(q.push(3, 4, None).unwrap_err().0, PushError::Closed);
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn cap_and_watermark_reject_with_handback() {
+        let q: ShardQueue<u32> = ShardQueue::new();
+        q.push(1, 2, Some(2)).unwrap();
+        q.push(2, 2, Some(2)).unwrap();
+        let (e, req) = q.push(3, 2, Some(2)).unwrap_err();
+        assert_eq!(e, PushError::Full);
+        assert_eq!(req, 3);
+        let (e, _) = q.push(3, 4, Some(2)).unwrap_err();
+        assert_eq!(e, PushError::Shed { depth: 2, watermark: 2 });
+    }
+
+    #[test]
+    fn steal_order_skips_own_queue() {
+        let qs: Vec<ShardQueue<u32>> = (0..3).map(|_| ShardQueue::new()).collect();
+        qs[0].push(10, 8, None).unwrap();
+        qs[2].push(30, 8, None).unwrap();
+        // steal() from shard 0 must not see shard 0's own item.
+        assert_eq!(steal(0, &qs).as_deref(), Some(&30));
+        assert_eq!(steal(0, &qs), None);
+        // steal_any() sweeps own-first.
+        assert_eq!(steal_any(0, &qs).as_deref(), Some(&10));
+    }
+
+    #[test]
+    fn swap_cell_versions_are_monotone() {
+        let cell = SwapCell::new((1u64, "a"));
+        let held = cell.get();
+        let v = cell.update(|cur| ((cur.0 + 1, "b"), cur.0 + 1));
+        assert_eq!(v, 2);
+        assert_eq!(cell.get().1, "b");
+        // In-flight holder still sees the version it dequeued with.
+        assert_eq!(*held, (1, "a"));
+    }
+}

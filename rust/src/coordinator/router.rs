@@ -12,10 +12,9 @@
 //! ([`super::cluster::QueryRouter`]) — via `pick_least_deep` over
 //! queue depths instead of outstanding counts.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-
 use crate::serve::Scorer;
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::mpsc;
 
 use crate::util::stats::Histogram;
 
@@ -86,11 +85,15 @@ impl Router {
     /// rotating round-robin start so load spreads under uniform traffic).
     fn pick(&self) -> usize {
         let n = self.replicas.len();
+        // relaxed-ok: rotating tie-break hint — any counter value
+        // yields a valid start replica; no data is synchronized.
         let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
         let mut best = start;
         let mut best_load = usize::MAX;
         for off in 0..n {
             let i = (start + off) % n;
+            // relaxed-ok: load estimate for routing only — a stale
+            // read routes slightly unevenly, never incorrectly.
             let load = self.outstanding[i].load(Ordering::Relaxed);
             if load < best_load {
                 best_load = load;
@@ -114,6 +117,8 @@ impl Router {
             let i = (first + off) % n;
             match try_submit(&self.replicas[i]) {
                 Ok(rx) => {
+                    // relaxed-ok: outstanding-count routing hint; the
+                    // matching decrement is in `Routed::wait`.
                     self.outstanding[i].fetch_add(1, Ordering::Relaxed);
                     return Ok(Routed { router: self, replica: i, rx });
                 }
@@ -205,6 +210,8 @@ impl<'r, R> Routed<'r, R> {
 
     pub fn wait(self) -> Result<R, SubmitError> {
         let res = self.rx.recv().map_err(|_| SubmitError::ShuttingDown);
+        // relaxed-ok: outstanding-count routing hint (pairs with the
+        // increment in `route`); staleness only skews load spreading.
         self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
         res
     }

@@ -29,10 +29,10 @@
 //! [`super::cluster::QueryRouter`], which shards an LSH index the same
 //! way [`super::cluster::ScoreRouter`] shards scorers.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{mpsc, spawn_named, thread, Arc};
 
 use crate::cws::{CwsSample, SketchScratch};
 use crate::serve::{argmax, Scorer, Scratch};
@@ -150,7 +150,7 @@ pub struct HashService {
     /// `None` once shutdown began — dropping the sender is what closes
     /// the queue and lets the worker drain it.
     tx: Option<mpsc::SyncSender<Msg>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Option<thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
     cfg: ServiceConfig,
@@ -199,22 +199,20 @@ impl HashService {
         let m2 = Arc::clone(&metrics);
         let cfg2 = cfg.clone();
         let boxed: Box<dyn SketcherBackend> = Box::new(backend);
-        let worker = std::thread::Builder::new()
-            .name("minmax-hash-service".into())
-            .spawn(move || {
-                let sketcher = match boxed.build(&cfg2) {
-                    Ok(s) => {
-                        let _ = ready_tx.send(Ok(()));
-                        s
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                run_worker(cfg2, WorkerExec::Hash(sketcher), rx, m2);
-            })
-            .map_err(|e| format!("spawn service worker: {e}"))?;
+        let worker = spawn_named("minmax-hash-service".into(), move || {
+            let sketcher = match boxed.build(&cfg2) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            run_worker(cfg2, WorkerExec::Hash(sketcher), rx, m2);
+        })
+        .map_err(|e| format!("spawn service worker: {e}"))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
             Ok(Err(e)) => {
@@ -261,22 +259,20 @@ impl HashService {
         let stopping = Arc::new(AtomicBool::new(false));
         let m2 = Arc::clone(&metrics);
         let cfg2 = cfg.clone();
-        let worker = std::thread::Builder::new()
-            .name("minmax-score-service".into())
-            .spawn(move || {
-                let scratch = scorer.scratch();
-                let staging = vec![0.0f64; scorer.n_classes()];
-                let samples = vec![CwsSample { i_star: u32::MAX, t_star: 0 }; scorer.k()];
-                let exec = WorkerExec::Score(Box::new(ScoreExec {
-                    scorer,
-                    scratch,
-                    staging,
-                    sketch: SketchScratch::new(),
-                    samples,
-                }));
-                run_worker(cfg2, exec, rx, m2);
-            })
-            .map_err(|e| format!("spawn score worker: {e}"))?;
+        let worker = spawn_named("minmax-score-service".into(), move || {
+            let scratch = scorer.scratch();
+            let staging = vec![0.0f64; scorer.n_classes()];
+            let samples = vec![CwsSample { i_star: u32::MAX, t_star: 0 }; scorer.k()];
+            let exec = WorkerExec::Score(Box::new(ScoreExec {
+                scorer,
+                scratch,
+                staging,
+                sketch: SketchScratch::new(),
+                samples,
+            }));
+            run_worker(cfg2, exec, rx, m2);
+        })
+        .map_err(|e| format!("spawn score worker: {e}"))?;
         Ok(HashService {
             tx: Some(tx),
             worker: Some(worker),
@@ -310,7 +306,14 @@ impl HashService {
     }
 
     fn validate(&self, vector: &[f32]) -> Result<(), SubmitError> {
-        if self.stopping.load(Ordering::Relaxed) {
+        // Acquire pairs with the Release store in `stop_and_drain`,
+        // matching the cluster routers' documented stopping protocol.
+        // This was `Relaxed` through PR 8 — an inconsistency the first
+        // concurrency audit flagged (ISSUE 9): a Relaxed read here is
+        // not ordered against the queue teardown that follows the
+        // store, so a submitter could in principle observe the closed
+        // channel before the flag and return the wrong error variant.
+        if self.stopping.load(Ordering::Acquire) {
             return Err(SubmitError::ShuttingDown);
         }
         if vector.len() != self.cfg.dim {

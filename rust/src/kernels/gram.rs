@@ -25,7 +25,7 @@
 //! order), which makes a streamed full row equal to the mirrored
 //! upper-triangle row of [`super::matrix::kernel_matrix_sym`].
 
-use std::collections::HashMap;
+use std::collections::HashMap; // hash-ok: LRU row cache, keyed lookups only (see Lru).
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -158,6 +158,10 @@ struct CacheEntry {
 
 #[derive(Debug, Default)]
 struct Lru {
+    // hash-ok: row *values* never depend on map iteration — lookups
+    // are keyed, and the one iteration (eviction in `fetch`) picks the
+    // min-stamp victim, with stamps unique per touch, so the victim is
+    // deterministic regardless of iteration order.
     map: HashMap<usize, CacheEntry>,
     clock: u64,
 }
@@ -242,6 +246,8 @@ impl<'a, K: Kernel + Sync> OnTheFly<'a, K> {
 
     pub fn stats(&self) -> GramStats {
         GramStats {
+            // relaxed-ok: monotonic observability counters; never used
+            // to synchronize row data (rows travel behind the mutex).
             rows_computed: self.computed.load(Ordering::Relaxed),
             cache_hits: self.hits.load(Ordering::Relaxed),
         }
@@ -286,11 +292,13 @@ impl<'a, K: Kernel + Sync> OnTheFly<'a, K> {
             let stamp = c.clock;
             if let Some(entry) = c.map.get_mut(&i) {
                 entry.stamp = stamp;
+                // relaxed-ok: observability tally only.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Arc::clone(&entry.row);
             }
         }
         let row = Arc::new(self.compute_row(i));
+        // relaxed-ok: observability tally only.
         self.computed.fetch_add(1, Ordering::Relaxed);
         if self.capacity > 0 {
             let mut c = self.cache.lock().unwrap();
@@ -323,6 +331,7 @@ impl<K: Kernel + Sync> GramSource for OnTheFly<'_, K> {
     }
 
     fn rows_materialized(&self) -> usize {
+        // relaxed-ok: observability tally only.
         self.computed.load(Ordering::Relaxed)
     }
 }

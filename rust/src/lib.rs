@@ -51,6 +51,12 @@
 //!   ([`coordinator::ScoreRouter`]), and the offline batch pipeline.
 //! * [`experiments`] — drivers regenerating every paper table and figure.
 
+// Unsafe hygiene (ISSUE 9): every unsafe operation needs its own
+// `unsafe {}` block with a `// SAFETY:` comment even inside `unsafe
+// fn` bodies — `xtask lint` checks the comments; this makes the blocks
+// explicit.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod util;
 

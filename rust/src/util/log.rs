@@ -16,6 +16,8 @@ static LEVEL: AtomicU8 = AtomicU8::new(1);
 /// Set global log level (also honors `MINMAX_LOG={debug,info,warn,error}`
 /// via [`init_from_env`]).
 pub fn set_level(level: Level) {
+    // relaxed-ok: the level flag gates log emission only; no data is
+    // published through it, so staleness just delays filtering.
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
@@ -32,6 +34,7 @@ pub fn init_from_env() {
 }
 
 pub fn enabled(level: Level) -> bool {
+    // relaxed-ok: see `set_level` — filter flag, not a data carrier.
     level as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 

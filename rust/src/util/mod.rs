@@ -1,7 +1,8 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! RNG + samplers, thread pool, CLI parsing, JSON, statistics, logging,
-//! text tables, runtime-dispatched SIMD kernels, and a mini
-//! property-testing harness.
+//! text tables, runtime-dispatched SIMD kernels, a mini
+//! property-testing harness, and the [`sync`] concurrency facade the
+//! serving stack (and the loom model checker) builds on.
 
 pub mod cli;
 pub mod fastmath;
@@ -12,4 +13,5 @@ pub mod prop;
 pub mod rng;
 pub mod simd;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -11,9 +11,8 @@
 //! case everything degrades to sequential execution with zero thread
 //! overhead — important for honest single-core benchmarks.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, spawn_named, thread, Arc, Mutex};
 
 /// Number of worker threads to use by default: `available_parallelism`,
 /// overridable with the `MINMAX_THREADS` environment variable.
@@ -23,7 +22,7 @@ pub fn default_threads() -> usize {
             return n.max(1);
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` on up to
@@ -55,9 +54,11 @@ where
     let nchunks = threads.min(n.div_ceil(min_chunk)).max(1);
     let next = AtomicUsize::new(0);
     let chunk = n.div_ceil(nchunks);
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         for _ in 0..nchunks {
             s.spawn(|| loop {
+                // relaxed-ok: work-claim counter — fetch_add is atomic
+                // (each chunk claimed once); scope join publishes writes.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 let start = i * chunk;
                 if start >= n {
@@ -90,9 +91,11 @@ where
         return;
     }
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
+                // relaxed-ok: work-claim counter — fetch_add is atomic
+                // (each unit claimed once); scope join publishes writes.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -117,10 +120,10 @@ where
     par_claim(n, threads, |i| {
         *slots[i].lock().unwrap() = Some(f(i));
     });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("claimed unit completed"))
-        .collect()
+    // take() under a (now uncontended) lock rather than into_inner():
+    // the facade's loom Mutex has no into_inner, and this keeps the
+    // module compilable under `--cfg loom`.
+    slots.iter().map(|s| s.lock().unwrap().take().expect("claimed unit completed")).collect()
 }
 
 /// Split `out` into at most `threads` contiguous chunks of at least
@@ -182,9 +185,11 @@ where
     // one block at a time to balance ragged costs.
     let rows: Vec<Mutex<Option<&mut [T]>>> =
         out.chunks_mut(row_len).map(|c| Mutex::new(Some(c))).collect();
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         for _ in 0..threads.min(n_rows) {
             s.spawn(|| loop {
+                // relaxed-ok: work-claim counter — fetch_add is atomic
+                // (each row claimed once); scope join publishes writes.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n_rows {
                     break;
@@ -210,7 +215,7 @@ enum Msg {
 /// are surfaced at drop time via [`ThreadPool::panicked`].
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Msg>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
     panicked: Arc<AtomicUsize>,
     size: usize,
 }
@@ -225,21 +230,21 @@ impl ThreadPool {
         for i in 0..size {
             let rx = Arc::clone(&rx);
             let panicked = Arc::clone(&panicked);
-            let h = std::thread::Builder::new()
-                .name(format!("minmax-worker-{i}"))
-                .spawn(move || loop {
-                    let msg = { rx.lock().unwrap().recv() };
-                    match msg {
-                        Ok(Msg::Run(job)) => {
-                            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-                            if res.is_err() {
-                                panicked.fetch_add(1, Ordering::Relaxed);
-                            }
+            let h = spawn_named(format!("minmax-worker-{i}"), move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                match msg {
+                    Ok(Msg::Run(job)) => {
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                        if res.is_err() {
+                            // relaxed-ok: monotonic panic tally read by
+                            // `panicked()` for observability only.
+                            panicked.fetch_add(1, Ordering::Relaxed);
                         }
-                        Ok(Msg::Shutdown) | Err(_) => break,
                     }
-                })
-                .expect("spawn worker");
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+            })
+            .expect("spawn worker");
             handles.push(h);
         }
         Self { tx: Some(tx), handles, panicked, size }
@@ -260,6 +265,8 @@ impl ThreadPool {
 
     /// Number of jobs that panicked so far.
     pub fn panicked(&self) -> usize {
+        // relaxed-ok: monotonic observability tally; callers polling it
+        // (see `pool_counts_panics_and_survives`) loop until visible.
         self.panicked.load(Ordering::Relaxed)
     }
 }

@@ -298,13 +298,22 @@ mod x86 {
         let sp = src.as_ptr();
         let mut i = 0;
         while i + 4 <= n {
-            let a = _mm256_loadu_pd(ap.add(i));
-            let s = _mm256_loadu_pd(sp.add(i));
-            _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            // SAFETY: `i + 4 <= n <= len` for both slices, so the
+            // unaligned 4-lane loads/stores stay in bounds; `acc` and
+            // `src` cannot alias (`&mut` vs `&`); AVX2 is guaranteed by
+            // the caller contract above.
+            unsafe {
+                let a = _mm256_loadu_pd(ap.add(i));
+                let s = _mm256_loadu_pd(sp.add(i));
+                _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            }
             i += 4;
         }
         while i < n {
-            *ap.add(i) += *sp.add(i);
+            // SAFETY: `i < n <= len` for both slices — scalar tail.
+            unsafe {
+                *ap.add(i) += *sp.add(i);
+            }
             i += 1;
         }
     }
@@ -321,13 +330,22 @@ mod x86 {
         while i + 4 <= n {
             // Widen four f32s to f64 (exact), then add in f64 — same
             // arithmetic as the scalar `as f64` loop.
-            let s = _mm256_cvtps_pd(_mm_loadu_ps(sp.add(i)));
-            let a = _mm256_loadu_pd(ap.add(i));
-            _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            // SAFETY: `i + 4 <= n <= len` for both slices, so the
+            // 4-lane f32 load and f64 load/store stay in bounds; no
+            // aliasing (`&mut` vs `&`); AVX2 guaranteed by the caller
+            // contract above.
+            unsafe {
+                let s = _mm256_cvtps_pd(_mm_loadu_ps(sp.add(i)));
+                let a = _mm256_loadu_pd(ap.add(i));
+                _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, s));
+            }
             i += 4;
         }
         while i < n {
-            *ap.add(i) += *sp.add(i) as f64;
+            // SAFETY: `i < n <= len` for both slices — scalar tail.
+            unsafe {
+                *ap.add(i) += *sp.add(i) as f64;
+            }
             i += 1;
         }
     }

@@ -1,0 +1,170 @@
+//! Concurrency facade: the one place the serving stack imports
+//! synchronization primitives from.
+//!
+//! By default every re-export is the `std` primitive — this module
+//! compiles to nothing but `pub use` lines and two `#[inline]` shims,
+//! so the dependency-free build is unchanged. Under `--cfg loom` the
+//! same paths resolve to the [loom] model checker's instrumented
+//! equivalents, which lets `rust/tests/loom_models.rs` exhaustively
+//! explore thread interleavings of the real queue/swap/drain/metrics
+//! code instead of a hand-copied model of it.
+//!
+//! `coordinator::{cluster, queue, service, metrics, router}` and
+//! `util::pool` MUST import `Arc`/`Mutex`/`Condvar`/`RwLock`/atomics/
+//! threads from here, never from `std::sync`/`std::thread` directly —
+//! `xtask lint` enforces that ban, because one stray `std::Mutex` in a
+//! modeled protocol silently removes it from loom's exploration.
+//!
+//! ## What stays `std` even under loom
+//!
+//! * **`mpsc`** — loom has no channel model. Channels only carry
+//!   *responses* out of the modeled protocols (and the service's
+//!   drop-sender drain, which the loom shutdown model reproduces with
+//!   queue close instead), so the models are written against
+//!   [`crate::coordinator::queue`] primitives and never block on a
+//!   channel.
+//! * **`thread::scope` / `thread::available_parallelism`** — loom has
+//!   neither. The scoped helpers in [`crate::util::pool`] are
+//!   fork-join data parallelism over disjoint indices (no protocol to
+//!   model); they are exercised by Miri/TSan instead.
+//!
+//! ## Loom caveats the facade papers over
+//!
+//! * loom has no time model, so [`wait_timeout`] maps to a plain
+//!   `Condvar::wait` that *always reports a timeout* on wakeup. Callers
+//!   must treat `timed_out == true` as "re-check state", never as "the
+//!   duration elapsed" — which is exactly how
+//!   `queue::ShardQueue::pop_wait` uses it.
+//! * loom has no `thread::Builder`, so [`spawn_named`] drops the name
+//!   under loom. Thread names are observability, not semantics.
+//!
+//! Loom is deliberately NOT a `Cargo.toml` dependency of the default
+//! build: even an optional registry dependency would break offline
+//! resolution (same reasoning as the `pjrt` feature — see the manifest
+//! comment). CI's `loom` job appends the
+//! `[target.'cfg(loom)'.dependencies]` table before building with
+//! `RUSTFLAGS="--cfg loom"`; see `.github/workflows/ci.yml`.
+
+use std::time::Duration;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+/// Channels are always `std` — see the module docs.
+pub use std::sync::mpsc;
+
+/// Thread spawning/yielding: loom-instrumented under `--cfg loom`;
+/// `scope` and `available_parallelism` are always `std` (see the
+/// module docs for why that is sound).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+
+    pub use std::thread::{available_parallelism, scope};
+}
+
+/// `thread::Builder::new().name(name).spawn(f)` under `std`; a plain
+/// (nameless) `loom::thread::spawn` under loom. Every long-lived
+/// worker in the serving stack goes through here so worker threads
+/// keep their `minmax-*` names in production while staying modelable.
+#[cfg(not(loom))]
+pub fn spawn_named<F, T>(name: String, f: F) -> std::io::Result<thread::JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new().name(name).spawn(f)
+}
+
+/// Loom variant of [`spawn_named`]: loom has no `Builder`, so the name
+/// is dropped (names are observability only).
+#[cfg(loom)]
+pub fn spawn_named<F, T>(_name: String, f: F) -> std::io::Result<thread::JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Ok(loom::thread::spawn(f))
+}
+
+/// `Condvar::wait_timeout` with the poisoning unwrapped: returns the
+/// reacquired guard and whether the wait timed out.
+///
+/// Under loom this is a plain `wait` that always reports
+/// `timed_out == true` (loom has no clock): callers must use the flag
+/// only as a "re-check shared state now" signal, never as proof that
+/// wall-clock time passed. `ShardQueue::pop_wait` re-checks the queue
+/// and the closed flag on every timeout report, so it is correct under
+/// both meanings.
+#[cfg(not(loom))]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let (guard, res) = cv.wait_timeout(guard, dur).unwrap();
+    (guard, res.timed_out())
+}
+
+/// Loom variant of [`wait_timeout`] — see the `std` variant's docs.
+#[cfg(loom)]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    (cv.wait(guard).unwrap(), true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::*;
+
+    #[test]
+    fn spawn_named_runs_and_joins() {
+        let h = spawn_named("minmax-facade-test".into(), || 41 + 1).unwrap();
+        assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_timeout_reports_timeout_on_silence() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (g, timed_out) = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out);
+        assert_eq!(*g, 0);
+    }
+
+    #[test]
+    fn wait_timeout_wakes_on_notify() {
+        let shared = Arc::new((Mutex::new(false), Condvar::new()));
+        let s2 = Arc::clone(&shared);
+        let h = thread::spawn(move || {
+            *s2.0.lock().unwrap() = true;
+            s2.1.notify_all();
+        });
+        let mut g = shared.0.lock().unwrap();
+        // Re-check-state loop: the only contract wait_timeout offers.
+        while !*g {
+            let (g2, _) = wait_timeout(&shared.1, g, Duration::from_millis(50));
+            g = g2;
+        }
+        drop(g);
+        h.join().unwrap();
+        let done = AtomicUsize::new(0);
+        done.store(1, Ordering::Release);
+        assert_eq!(done.load(Ordering::Acquire), 1);
+    }
+}

@@ -1,0 +1,270 @@
+//! Model checks over the coordinator's *actual* concurrency
+//! primitives — the shard-queue/steal/swap machinery in
+//! `coordinator::queue` and the counter-ordering contract in
+//! `coordinator::metrics` — not re-implementations of them.
+//!
+//! One body, two build modes:
+//!
+//! * **loom** — the CI `loom` job appends the loom dev-dependency to
+//!   `rust/Cargo.toml` (see the comment there) and builds with
+//!   `RUSTFLAGS="--cfg loom"`. The `util::sync` facade then resolves
+//!   to loom's instrumented primitives and [`model`] is `loom::model`:
+//!   every scenario is explored over **all** interleavings of its 2–3
+//!   threads (bounded by `LOOM_MAX_PREEMPTIONS` in CI).
+//! * **default** — no loom dependency anywhere; [`model`] runs the
+//!   same closure once on real threads. That keeps the scenarios
+//!   compiled, linted, and passing as a deterministic smoke test under
+//!   plain `cargo test -q` (tier-1).
+//!
+//! Scenario rule: every queue is closed before a scenario ends — loom
+//! flags a thread still parked on a Condvar at execution end as a
+//! deadlock, and the production shutdown protocol closes queues anyway.
+//!
+//! The invariants pinned here are catalogued in DESIGN.md §2.8.
+
+use minmax::coordinator::metrics::Metrics;
+use minmax::coordinator::queue::{
+    steal, steal_any, Pop, PushError, ShardQueue, SwapCell, STEAL_POLL,
+};
+use minmax::util::sync::{thread, Arc};
+
+/// Exhaustive interleaving exploration under `--cfg loom`; a single
+/// real-thread execution otherwise.
+#[cfg(loom)]
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    loom::model(f);
+}
+
+#[cfg(not(loom))]
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    f();
+}
+
+/// The worker half of `cluster::worker_loop`, reduced to its queue
+/// discipline: serve own shard, steal from siblings when idle, and on
+/// close run the `steal_any` shutdown sweep so no accepted request is
+/// stranded in a sibling's queue.
+fn drain_worker(me: usize, qs: &[ShardQueue<u64>]) -> Vec<u64> {
+    let mut got = Vec::new();
+    loop {
+        match qs[me].pop_wait(STEAL_POLL) {
+            Pop::Req(r) => got.push(*r),
+            Pop::Empty => {
+                if let Some(r) = steal(me, qs) {
+                    got.push(*r);
+                }
+            }
+            Pop::Closed => break,
+        }
+    }
+    while let Some(r) = steal_any(me, qs) {
+        got.push(*r);
+    }
+    got
+}
+
+/// Invariant: per-shard FIFO with nothing lost or duplicated across a
+/// concurrent close — `Pop::Closed` is only reported after every
+/// accepted request has been handed out.
+#[test]
+fn queue_fifo_no_loss_through_close() {
+    model(|| {
+        let q: Arc<ShardQueue<u64>> = Arc::new(ShardQueue::new());
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                q.push(1, 4, None).unwrap();
+                q.push(2, 4, None).unwrap();
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        loop {
+            match q.pop_wait(STEAL_POLL) {
+                Pop::Req(r) => got.push(*r),
+                Pop::Empty => {}
+                Pop::Closed => break,
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, [1, 2], "FIFO order, nothing lost or duplicated");
+        // A post-close submit is a typed rejection with the request
+        // handed back, never a silent drop.
+        let q2: ShardQueue<u64> = ShardQueue::new();
+        q2.close();
+        assert_eq!(q2.push(9, 4, None).unwrap_err(), (PushError::Closed, 9));
+    });
+}
+
+/// Invariant: with two racing submitters over a watermark of 1,
+/// exactly one lands and exactly one is shed with the depth it
+/// observed — accept and shed are mutually exclusive per submit, and
+/// the shed request is handed back intact for fail-over.
+#[test]
+fn watermark_sheds_exactly_one_of_two() {
+    model(|| {
+        let q: Arc<ShardQueue<u64>> = Arc::new(ShardQueue::new());
+        let submit = |v: u64| {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(v, 2, Some(1)))
+        };
+        let (t1, t2) = (submit(10), submit(20));
+        let mut handed_back = Vec::new();
+        for r in [t1.join().unwrap(), t2.join().unwrap()] {
+            if let Err((e, req)) = r {
+                assert_eq!(e, PushError::Shed { depth: 1, watermark: 1 });
+                handed_back.push(req);
+            }
+        }
+        q.close();
+        let served = match q.pop_wait(STEAL_POLL) {
+            Pop::Req(r) => *r,
+            _ => panic!("the accepted request must be queued"),
+        };
+        assert!(matches!(q.pop_wait(STEAL_POLL), Pop::Closed));
+        assert_eq!(handed_back.len(), 1, "exactly one of two submits is shed");
+        assert_ne!(served, handed_back[0], "the shed request is not also served");
+    });
+}
+
+/// Invariant: the hard cap (no watermark) rejects with
+/// `PushError::Full` instead of `Shed`, again exactly once when two
+/// submitters race over a single free slot.
+#[test]
+fn hard_cap_rejects_exactly_one_of_two() {
+    model(|| {
+        let q: Arc<ShardQueue<u64>> = Arc::new(ShardQueue::new());
+        let submit = |v: u64| {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(v, 1, None))
+        };
+        let (t1, t2) = (submit(10), submit(20));
+        let mut handed_back = Vec::new();
+        for r in [t1.join().unwrap(), t2.join().unwrap()] {
+            if let Err((e, req)) = r {
+                assert_eq!(e, PushError::Full, "cap overflow is backpressure, not shedding");
+                handed_back.push(req);
+            }
+        }
+        q.close();
+        let served = match q.pop_wait(STEAL_POLL) {
+            Pop::Req(r) => *r,
+            _ => panic!("the accepted request must be queued"),
+        };
+        assert!(matches!(q.pop_wait(STEAL_POLL), Pop::Closed));
+        assert_eq!(handed_back.len(), 1, "exactly one of two submits bounces");
+        assert_ne!(served, handed_back[0]);
+    });
+}
+
+/// Invariant: hot swap. Readers racing a publisher only ever see
+/// fully-initialized `(version, payload)` pairs at monotonically
+/// non-decreasing versions, and an in-flight holder's `Arc` survives
+/// both swaps untouched (the drain half of the publish protocol).
+#[test]
+fn swap_cell_monotone_and_inflight_arc_survives() {
+    model(|| {
+        let cell = Arc::new(SwapCell::new((1u64, 10u64)));
+        let held = cell.get();
+        let publisher = {
+            let c = Arc::clone(&cell);
+            thread::spawn(move || {
+                for _ in 0..2 {
+                    c.update(|cur| {
+                        let v = cur.0 + 1;
+                        ((v, v * 10), v)
+                    });
+                }
+            })
+        };
+        let reader = {
+            let c = Arc::clone(&cell);
+            thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..2 {
+                    let cur = c.get();
+                    assert_eq!(cur.1, cur.0 * 10, "never a half-published pair");
+                    assert!(cur.0 >= last, "versions are monotone per reader");
+                    last = cur.0;
+                }
+            })
+        };
+        publisher.join().unwrap();
+        reader.join().unwrap();
+        assert_eq!(*held, (1, 10), "in-flight holder keeps its Arc across swaps");
+        assert_eq!(cell.get().0, 3, "both publishes landed, in order");
+    });
+}
+
+/// Invariant: shutdown drain. Two workers race over two shard queues
+/// (own-pop, sibling steal, then the close-triggered `steal_any`
+/// sweep) while the submitter pushes and closes — every accepted
+/// request is served by exactly one worker, none twice, none stranded.
+#[test]
+fn shutdown_drain_serves_every_request_exactly_once() {
+    model(|| {
+        let qs: Arc<Vec<ShardQueue<u64>>> =
+            Arc::new((0..2).map(|_| ShardQueue::new()).collect());
+        qs[0].push(1, 8, None).unwrap();
+        let workers: Vec<_> = (0..2)
+            .map(|me| {
+                let qs = Arc::clone(&qs);
+                thread::spawn(move || drain_worker(me, &qs))
+            })
+            .collect();
+        qs[1].push(2, 8, None).unwrap();
+        qs[0].push(3, 8, None).unwrap();
+        for q in qs.iter() {
+            q.close();
+        }
+        let mut got: Vec<u64> = Vec::new();
+        for w in workers {
+            got.extend(w.join().unwrap());
+        }
+        got.sort_unstable();
+        assert_eq!(got, [1, 2, 3], "each accepted request served exactly once");
+    });
+}
+
+/// Invariant: the metrics read-order contract. Outcome counters are
+/// Release-incremented after their request increment and snapshot
+/// loads them Acquire *before* the request counter, so a concurrent
+/// snapshot can never report `completed + rejected + shed > requests`
+/// — the torn-total bug the `service.rs` `stopping`-flag audit
+/// (ISSUE 9) is a cousin of.
+#[test]
+fn metrics_snapshot_never_tears() {
+    model(|| {
+        let m = Arc::new(Metrics::new());
+        let w1 = {
+            let m = Arc::clone(&m);
+            thread::spawn(move || {
+                m.record_request();
+                m.record_latency_ms(0.5);
+            })
+        };
+        let w2 = {
+            let m = Arc::clone(&m);
+            thread::spawn(move || {
+                m.record_request();
+                m.record_rejected();
+                m.record_request();
+                m.record_shed();
+            })
+        };
+        let s = m.snapshot();
+        assert!(
+            s.completed + s.rejected + s.shed <= s.requests,
+            "torn snapshot: {} + {} + {} > {}",
+            s.completed,
+            s.rejected,
+            s.shed,
+            s.requests
+        );
+        w1.join().unwrap();
+        w2.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!((s.requests, s.completed, s.rejected, s.shed), (3, 1, 1, 1));
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), s.completed);
+    });
+}

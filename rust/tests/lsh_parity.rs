@@ -111,6 +111,40 @@ fn batched_index_matches_per_row_hashing() {
     }
 }
 
+/// Miri-sized probe of the open-addressed band tables: a corpus small
+/// enough for the interpreter (32 rows, dim 16 ≤ 2^8 so truncation is
+/// collision-free) that still walks the whole build → pack → probe →
+/// candidate-union path. The CI `miri` job runs exactly this test
+/// (`MINMAX_THREADS=1`); natively it is a fast subset of
+/// `batched_index_matches_per_row_hashing`.
+#[test]
+fn miri_band_table_probe() {
+    let c = corpus(8, 4, 16, 0.1, 31);
+    let cfg = LshConfig { bands: 4, rows_per_band: 2, seed: 13 };
+    let want = reference_candidates(&c, cfg, 8);
+    let arc = Arc::new(c);
+    let idx = PackedLshIndex::build(Arc::clone(&arc), cfg, 8).unwrap();
+    let mut s = QueryScratch::new();
+    for row in 0..arc.rows() {
+        let exact =
+            idx.candidates_with(arc.row(row), QueryParams::default(), &mut s).to_vec();
+        assert_eq!(exact, want[row], "row {row}");
+        for probes in [1usize, 2] {
+            let probed = idx
+                .candidates_with(
+                    arc.row(row),
+                    QueryParams { probes, ..Default::default() },
+                    &mut s,
+                )
+                .to_vec();
+            assert!(
+                exact.iter().all(|id| probed.binary_search(id).is_ok()),
+                "row {row}: probing must only add candidates"
+            );
+        }
+    }
+}
+
 #[test]
 fn multi_probe_is_superset_monotone() {
     let c = corpus(40, 5, 300, 0.15, 7);

@@ -1,0 +1,396 @@
+//! Concurrency / unsafe-hygiene lints (DESIGN.md §2.8).
+//!
+//! Four rules, all checked over *code only* — a comment/string stripper
+//! runs first so prose can mention the banned tokens freely:
+//!
+//! 1. **safety-comment** — every `unsafe` token needs a `// SAFETY:`
+//!    comment (or, for `unsafe fn` declarations, a `/// # Safety` doc
+//!    section) within the 8 lines above it (applies everywhere,
+//!    including test modules: unjustified unsafe is never fine).
+//! 2. **relaxed-ordering** — `Ordering::Relaxed` is banned in
+//!    `rust/src` unless a `relaxed-ok:` marker within the 6 lines
+//!    above states why the site is a pure hint/tally (routing hints
+//!    and monotonic observability counters qualify; lifecycle flags
+//!    and anything another thread's reads depend on do not — see the
+//!    `service.rs` `stopping`-flag regression, ISSUE 9).
+//! 3. **std-sync-ban** — `std::sync` / `std::thread` are banned in
+//!    `rust/src/coordinator/` and `rust/src/util/pool.rs`: those
+//!    modules must go through the `util::sync` facade so the loom
+//!    build (`--cfg loom`) model-checks the real code paths. The
+//!    facade itself (`util/sync.rs`) is the one sanctioned importer.
+//! 4. **hash-collection** — `HashMap`/`HashSet` are banned in the
+//!    output-producing subsystems (`cws`, `features`, `serve`,
+//!    `coordinator`, `kernels`) unless a `hash-ok:` marker explains
+//!    why iteration order cannot reach any output (RandomState makes
+//!    iteration order run-dependent, which breaks bit-reproducibility
+//!    — the same reason `cws::lsh` moved to open addressing).
+//!
+//! Rules 2–4 skip everything from the first `#[cfg(test)]` line to end
+//! of file (test modules sit at the bottom of every file in this repo
+//! and may use std primitives or hash maps freely).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint hit; `run` prints these `file:line: [lint] message`.
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+/// Directories scanned by `run`, relative to the repo root.
+const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "xtask/src"];
+
+/// Walk the scan dirs and lint every `.rs` file; returns the violation
+/// count (0 = clean).
+pub fn run(root: &Path) -> io::Result<usize> {
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut n = 0;
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let content = std::fs::read_to_string(f)?;
+        for v in check_file(&rel, &content) {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.lint, v.msg);
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file. Pure function of `(relpath, content)` so the negative
+/// fixtures below can seed violations without touching the filesystem.
+pub fn check_file(relpath: &str, content: &str) -> Vec<Violation> {
+    let stripped = strip_comments_and_strings(content);
+    let raw: Vec<&str> = content.lines().collect();
+    let code: Vec<&str> = stripped.lines().collect();
+    // Everything at/after the first `#[cfg(test)]` is test scaffolding.
+    let cut = raw.iter().position(|l| l.contains("#[cfg(test)]")).unwrap_or(raw.len());
+
+    let in_src = relpath.starts_with("rust/src/");
+    let std_banned = (relpath.starts_with("rust/src/coordinator/")
+        || relpath == "rust/src/util/pool.rs")
+        && relpath != "rust/src/util/sync.rs";
+    let hash_scoped = ["cws", "features", "serve", "coordinator", "kernels"]
+        .iter()
+        .any(|m| relpath.starts_with(&format!("rust/src/{m}/")));
+
+    let mut out = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        if has_word(line, "unsafe")
+            && !marker_above(&raw, idx, "SAFETY:", 8)
+            && !marker_above(&raw, idx, "# Safety", 8)
+        {
+            out.push(Violation {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` comment in the 8 lines above".to_string(),
+            });
+        }
+        if idx >= cut {
+            continue;
+        }
+        if in_src && has_word(line, "Relaxed") && !marker_above(&raw, idx, "relaxed-ok", 6) {
+            out.push(Violation {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "relaxed-ordering",
+                msg: "`Ordering::Relaxed` without a `relaxed-ok:` marker".to_string(),
+            });
+        }
+        if std_banned && (has_word(line, "std::sync") || has_word(line, "std::thread")) {
+            out.push(Violation {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "std-sync-ban",
+                msg: "use the `util::sync` facade so loom can model this module".to_string(),
+            });
+        }
+        if hash_scoped
+            && (has_word(line, "HashMap") || has_word(line, "HashSet"))
+            && !marker_above(&raw, idx, "hash-ok", 6)
+        {
+            out.push(Violation {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "hash-collection",
+                msg: "HashMap/HashSet without a `hash-ok:` marker in an output path".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// True if any raw line in `[idx - window, idx]` contains `marker`
+/// (markers live in comments, so this looks at the *unstripped* text).
+fn marker_above(raw: &[&str], idx: usize, marker: &str, window: usize) -> bool {
+    let lo = idx.saturating_sub(window);
+    raw[lo..=idx.min(raw.len().saturating_sub(1))].iter().any(|l| l.contains(marker))
+}
+
+fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Substring match with identifier boundaries on both ends, so
+/// `unsafe_op_in_unsafe_fn` does not count as `unsafe` and
+/// `std::synchronize` would not count as `std::sync`.
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let end = p + word.len();
+        let before_ok = p == 0 || !is_word_byte(bytes[p - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Replace comment and string-literal *contents* with spaces, byte for
+/// byte, preserving newlines — the output has the same line structure
+/// as the input, with only real code left. Handles `//` and nested
+/// `/* */` comments, `"…"` strings with escapes, `r"…"`/`r#"…"#` raw
+/// strings, and char literals vs. lifetimes (`'x'` vs `'a`).
+fn strip_comments_and_strings(content: &str) -> String {
+    let b = content.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let blank = |c: u8| if c == b'\n' { b'\n' } else { b' ' };
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nests in Rust).
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            out.extend_from_slice(b"  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"…" or r#"…"# (any hash count), only when the
+        // `r` is not the tail of an identifier.
+        if c == b'r' && (i == 0 || !is_word_byte(b[i - 1])) {
+            let mut j = i + 1;
+            while b.get(j) == Some(&b'#') {
+                j += 1;
+            }
+            if b.get(j) == Some(&b'"') {
+                let hashes = j - (i + 1);
+                for _ in i..=j {
+                    out.push(b' ');
+                }
+                i = j + 1;
+                while i < b.len() {
+                    if b[i] == b'"'
+                        && i + 1 + hashes <= b.len()
+                        && b[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#')
+                    {
+                        for _ in 0..=hashes {
+                            out.push(b' ');
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Ordinary string literal.
+        if c == b'"' {
+            out.push(b' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b[i] == b'"' {
+                    out.push(b' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs. lifetime: only literals close with a quote
+        // right after one (possibly escaped) character.
+        if c == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                out.extend_from_slice(b"  ");
+                i += 2;
+                while i < b.len() && b[i] != b'\'' {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(b' ');
+                    i += 1;
+                }
+            } else if b.get(i + 2) == Some(&b'\'') {
+                out.extend_from_slice(b"   ");
+                i += 3;
+            } else {
+                out.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    String::from_utf8(out).expect("stripper replaces whole bytes only")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints(path: &str, src: &str) -> Vec<&'static str> {
+        check_file(path, src).iter().map(|v| v.lint).collect()
+    }
+
+    // The negative fixture the ISSUE demands: a seeded violation must
+    // fail the lint, and the marker/comment must clear it.
+    #[test]
+    fn seeded_unsafe_without_safety_comment_fails() {
+        let bad = "fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+        assert_eq!(lints("rust/src/util/x.rs", bad), ["safety-comment"]);
+        let good = "fn f(p: *mut u8) {\n    // SAFETY: p is valid.\n    unsafe { *p = 0 };\n}\n";
+        assert!(lints("rust/src/util/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_clears_unsafe_fn() {
+        let src = "/// # Safety\n/// `p` must be valid.\npub unsafe fn f(p: *mut u8) {}\n";
+        assert!(lints("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_lint_applies_inside_test_modules_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *mut u8) { unsafe { *p = 0 }; }\n}\n";
+        assert_eq!(lints("rust/src/util/x.rs", src), ["safety-comment"]);
+    }
+
+    #[test]
+    fn seeded_relaxed_without_marker_fails() {
+        let bad = "fn f(a: &AtomicU64) {\n    a.load(Ordering::Relaxed);\n}\n";
+        assert_eq!(lints("rust/src/serve/x.rs", bad), ["relaxed-ordering"]);
+        let good =
+            "fn f(a: &AtomicU64) {\n    // relaxed-ok: tally.\n    a.load(Ordering::Relaxed);\n}\n";
+        assert!(lints("rust/src/serve/x.rs", good).is_empty());
+        // Out of scope: benches measure, they do not synchronize.
+        assert!(lints("rust/benches/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn seeded_std_sync_in_coordinator_fails() {
+        let bad = "use std::sync::Mutex;\nuse std::thread;\n";
+        assert_eq!(lints("rust/src/coordinator/x.rs", bad), ["std-sync-ban", "std-sync-ban"]);
+        assert_eq!(lints("rust/src/util/pool.rs", bad), ["std-sync-ban", "std-sync-ban"]);
+        // The facade is the sanctioned importer; other modules are free.
+        assert!(lints("rust/src/util/sync.rs", bad).is_empty());
+        assert!(lints("rust/src/serve/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn test_modules_exempt_from_scoped_lints() {
+        let src = "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::Arc;\n    \
+                   use std::collections::HashMap;\n    \
+                   fn g(a: &AtomicU64) { a.load(Ordering::Relaxed); }\n}\n";
+        assert!(lints("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seeded_hash_map_without_marker_fails() {
+        let bad = "use std::collections::HashMap;\n";
+        assert_eq!(lints("rust/src/cws/x.rs", bad), ["hash-collection"]);
+        let good = "// hash-ok: keyed lookups only.\nuse std::collections::HashMap;\n";
+        assert!(lints("rust/src/cws/x.rs", good).is_empty());
+        // util/ and data/ are out of scope for the hash lint.
+        assert!(lints("rust/src/util/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn comments_strings_and_identifiers_do_not_trip() {
+        let src = "//! prose: unsafe, Ordering::Relaxed, HashMap\n\
+                   #![deny(unsafe_op_in_unsafe_fn)]\n\
+                   /* block: std::sync unsafe */\n\
+                   fn f() -> &'static str {\n    \"unsafe HashMap std::thread\"\n}\n\
+                   fn g() -> String {\n    r\"unsafe Relaxed\".to_string()\n}\n";
+        assert!(lints("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stripper_preserves_line_structure() {
+        let src = "a // x\nb \"two\nlines\" c\n'q' 'l\n";
+        let stripped = strip_comments_and_strings(src);
+        assert_eq!(stripped.lines().count(), src.lines().count());
+        assert!(stripped.starts_with("a "));
+        assert!(!stripped.contains("two"));
+        // The lifetime tick survives as code; the char literal is gone.
+        assert!(stripped.contains("'l"));
+        assert!(!stripped.contains('q'));
+    }
+
+    #[test]
+    fn marker_window_is_bounded() {
+        // A marker 7 lines up is out of the 6-line relaxed window.
+        let far = "// relaxed-ok: too far away.\n\n\n\n\n\n\n\
+                   fn f(a: &AtomicU64) { a.load(Ordering::Relaxed); }\n";
+        assert_eq!(lints("rust/src/serve/x.rs", far), ["relaxed-ordering"]);
+    }
+}

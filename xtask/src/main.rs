@@ -1,0 +1,42 @@
+//! `cargo xtask` — dependency-free repo automation.
+//!
+//! Subcommands:
+//!
+//! * `lint` — the concurrency/unsafe hygiene lints over
+//!   `rust/{src,benches,tests}` and `xtask/src` (see [`lint`] for the
+//!   rule catalogue and DESIGN.md §2.8 for the rationale). Exits
+//!   non-zero on any violation; CI runs it in the `lint` job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+mod lint;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => match lint::run(&repo_root()) {
+            Ok(0) => {
+                println!("xtask lint: clean");
+                ExitCode::SUCCESS
+            }
+            Ok(n) => {
+                eprintln!("xtask lint: {n} violation(s)");
+                ExitCode::FAILURE
+            }
+            Err(e) => {
+                eprintln!("xtask lint: {e}");
+                ExitCode::FAILURE
+            }
+        },
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The workspace root: xtask always lives one level below it.
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask has a parent").to_path_buf()
+}
