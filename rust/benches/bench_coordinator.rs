@@ -11,7 +11,11 @@
 //!   histogram p50/p99 (must stay finite under overload), shed and
 //!   rejected counts against a deliberately tiny queue;
 //! * `hot-swap/S{n}/*` stats — swaps published under full load, with
-//!   lost-request count (must be 0).
+//!   lost-request count (must be 0);
+//! * `fault/S4/{baseline,fault5}/*` stats — the same open-loop shape
+//!   healthy vs a 5% injected-panic / 0.5% worker-death plan: what
+//!   panic isolation + supervision cost in completed throughput and
+//!   p99 when 1-in-20 requests poisons its worker (DESIGN.md §2.9).
 //!
 //! Run: `cargo bench --bench bench_coordinator [-- --quick]`; CI
 //! uploads `results/bench/bench_coordinator.json` as
@@ -20,7 +24,9 @@
 use std::time::{Duration, Instant};
 
 use minmax::bench::{black_box, Runner};
-use minmax::coordinator::{ClusterConfig, ClusterError, ScoreRouter};
+use minmax::coordinator::{
+    silence_injected_panics, ClusterConfig, ClusterError, FaultPlan, ScoreRouter,
+};
 use minmax::data::synth::{generate, SynthConfig};
 use minmax::data::Dense;
 use minmax::pipeline::Pipeline;
@@ -30,13 +36,14 @@ fn quick() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("MINMAX_BENCH_QUICK").is_ok()
 }
 
-/// Wait until every accepted request has been served (bounded, so a
-/// bug cannot hang the bench).
+/// Wait until every accepted request has been answered — completed,
+/// deadline-expired, or isolated as a worker panic (bounded, so a bug
+/// cannot hang the bench).
 fn drain(cluster: &ScoreRouter) {
     let deadline = Instant::now() + Duration::from_secs(30);
     loop {
         let s = cluster.snapshot();
-        if s.completed >= s.requests {
+        if s.answered() >= s.accepted() {
             return;
         }
         assert!(Instant::now() < deadline, "cluster failed to drain: {}", s.render());
@@ -69,7 +76,13 @@ fn main() {
     for shards in [1usize, 2, 4] {
         let cluster = ScoreRouter::start(
             scorer.clone(),
-            ClusterConfig { shards, queue_cap: 1024, shed_watermark: None, steal: true },
+            ClusterConfig {
+                shards,
+                queue_cap: 1024,
+                shed_watermark: None,
+                steal: true,
+                faults: None,
+            },
         )
         .expect("start cluster");
         // Parity guard before timing: the cluster must compute the
@@ -94,7 +107,13 @@ fn main() {
     for shards in [1usize, 4] {
         let cluster = ScoreRouter::start(
             scorer.clone(),
-            ClusterConfig { shards, queue_cap: 64, shed_watermark: Some(48), steal: true },
+            ClusterConfig {
+                shards,
+                queue_cap: 64,
+                shed_watermark: Some(48),
+                steal: true,
+                faults: None,
+            },
         )
         .expect("start cluster");
         let start = Instant::now();
@@ -113,7 +132,7 @@ fn main() {
         drain(&cluster);
         let snap = cluster.snapshot();
         let secs = start.elapsed().as_secs_f64();
-        assert_eq!(snap.completed, snap.requests, "open loop lost requests");
+        assert_eq!(snap.completed, snap.accepted(), "open loop lost requests");
         assert_eq!(snap.shed, shed);
         assert!(
             snap.latency_p99_ms.is_finite(),
@@ -141,7 +160,13 @@ fn main() {
     for shards in [1usize, 4] {
         let cluster = ScoreRouter::start(
             scorer.clone(),
-            ClusterConfig { shards, queue_cap: 256, shed_watermark: None, steal: true },
+            ClusterConfig {
+                shards,
+                queue_cap: 256,
+                shed_watermark: None,
+                steal: true,
+                faults: None,
+            },
         )
         .expect("start cluster");
         let republished: Scorer = scorer.clone();
@@ -165,8 +190,8 @@ fn main() {
         });
         drain(&cluster);
         let snap = cluster.snapshot();
-        assert_eq!(snap.completed, snap.requests, "hot swap lost requests: {}", snap.render());
-        let lost = snap.requests.saturating_sub(snap.completed);
+        assert_eq!(snap.completed, snap.accepted(), "hot swap lost requests: {}", snap.render());
+        let lost = snap.accepted().saturating_sub(snap.completed);
         assert_eq!(snap.current_version, 1 + swaps as u64);
         let tallied: u64 = snap.version_counts.iter().map(|&(_, c)| c).sum();
         assert_eq!(tallied, snap.completed);
@@ -178,6 +203,67 @@ fn main() {
             snap.version_counts.len() as f64,
             "version",
         );
+        cluster.shutdown();
+    }
+
+    // ---- Fault-rate overhead (panic isolation + supervision) -------
+    // The open-loop shape again at 4 shards, healthy vs a 5%
+    // injected-panic / 0.5% worker-death plan. Plans are passed
+    // programmatically through `ClusterConfig::faults` — the env
+    // gating in `FaultPlan::from_env` only covers debug builds, and
+    // this bench runs in release. The rows answer: what do the unwind
+    // boundary and supervisor respawns cost in completed throughput
+    // and p99 when 1-in-20 requests poisons its worker?
+    silence_injected_panics();
+    let fault5 = FaultPlan {
+        seed: 0xC0FFEE,
+        panic_rate: 0.05,
+        death_rate: 0.005,
+        slow_rate: 0.0,
+        slow: Duration::ZERO,
+        stall_rate: 0.0,
+        stall: Duration::ZERO,
+    };
+    for (label, faults) in [("baseline", None), ("fault5", Some(fault5))] {
+        let injected = faults.is_some();
+        let cluster = ScoreRouter::start(
+            scorer.clone(),
+            ClusterConfig { shards: 4, queue_cap: 1024, shed_watermark: None, steal: true, faults },
+        )
+        .expect("start cluster");
+        let start = Instant::now();
+        let mut i = 0u64;
+        while start.elapsed() < window {
+            match cluster.submit(i, dense.row((i as usize) % n)) {
+                Ok(sub) => drop(sub),
+                Err(ClusterError::QueueFull) => std::thread::yield_now(),
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+            i += 1;
+        }
+        drain(&cluster);
+        let snap = cluster.snapshot();
+        let secs = start.elapsed().as_secs_f64();
+        assert!(snap.reconciles(), "fault leg must reconcile: {}", snap.render());
+        assert!(
+            snap.latency_p99_ms.is_finite(),
+            "p99 must stay finite under injected faults: {}",
+            snap.render()
+        );
+        if injected {
+            assert!(snap.panicked > 0, "5% plan must actually inject: {}", snap.render());
+        } else {
+            assert_eq!(snap.panicked, 0, "healthy leg saw a panic: {}", snap.render());
+            assert_eq!(snap.restarts, 0, "healthy leg respawned a worker: {}", snap.render());
+        }
+        r.stat(
+            &format!("fault/S4/{label}/completed-rps"),
+            snap.completed as f64 / secs,
+            "req/s",
+        );
+        r.stat(&format!("fault/S4/{label}/p99-ms"), snap.latency_p99_ms, "ms");
+        r.stat(&format!("fault/S4/{label}/panicked"), snap.panicked as f64, "req");
+        r.stat(&format!("fault/S4/{label}/restarts"), snap.restarts as f64, "respawn");
         cluster.shutdown();
     }
 

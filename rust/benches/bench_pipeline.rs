@@ -53,7 +53,7 @@ fn main() {
             })
             .collect();
         for rx in rxs {
-            black_box(rx.recv().unwrap());
+            black_box(rx.recv().unwrap().unwrap());
         }
     });
     svc.shutdown();
@@ -100,7 +100,7 @@ fn main() {
                 })
                 .collect();
             for rx in rxs {
-                black_box(rx.recv().unwrap());
+                black_box(rx.recv().unwrap().unwrap());
             }
         });
         svc.shutdown();

@@ -13,10 +13,10 @@
 //!   ├── shard 1: bounded MPMC queue ──► worker 1        │
 //!   ├── …                 ▲    │                        │ idle workers
 //!   └── shard N-1 ────────┘    └──── work stealing ◄────┘
-//!                │
-//!                ▼
-//!      SwapCell<Versioned> ──── publish() swaps the model Arc;
-//!      workers re-read it at every dequeue (hot swap, zero downtime)
+//!                │                        ▲
+//!                ▼                        │ respawn on death
+//!      SwapCell<Versioned>           supervisor thread
+//!      (hot swap, zero downtime)
 //! ```
 //!
 //! ## Queue / backpressure contract
@@ -32,6 +32,53 @@
 //! any shard, and an idle worker steals from a sibling's queue before
 //! sleeping again, so one hot shard cannot strand work while others
 //! idle.
+//!
+//! ## Fault-tolerance contract (see DESIGN.md §2.9)
+//!
+//! * **Panic isolation.** Each request is served inside
+//!   `catch_unwind`: a panic in scoring/retrieval answers *that*
+//!   request with a typed [`ClusterError::WorkerPanicked`] (message
+//!   captured) instead of killing the shard. No lock is held across
+//!   the unwind boundary, so a panic can never poison the version
+//!   tallies or metrics.
+//! * **Supervision.** Workers are owned by a supervisor thread that
+//!   probes for dead shards (a panic that *does* escape the worker
+//!   loop — impossible from request code, possible from injected
+//!   worker deaths or future bugs) and respawns them against the
+//!   current [`SwapCell`] version. Respawns are counted per shard and
+//!   exported as `restarts` in [`ClusterSnapshot`].
+//! * **Deadlines.** A request submitted with
+//!   [`ScoreRouter::submit_with_deadline`] is checked at dequeue:
+//!   expired work is answered immediately with
+//!   [`ClusterError::DeadlineExceeded`] (no compute spent) and
+//!   accounted in `deadline_expired`, next to `shed`.
+//! * **Bounded waits.** [`Submitted::wait_timeout`] never blocks past
+//!   its budget: a lost response surfaces as
+//!   [`ClusterError::WaitTimeout`] instead of a hung client.
+//! * **Backoff, not spin.** The batch clients retry rejected submits
+//!   under a seeded [`RetryPolicy`] (jittered exponential backoff);
+//!   retries and exhausted budgets are exported as
+//!   `retried`/`degraded`.
+//! * **Fault injection.** `ClusterConfig::faults` (or, in debug builds
+//!   only, `MINMAX_FAULT_RATE`/`MINMAX_FAULT_SEED`) arms the seeded
+//!   [`FaultPlan`] harness from [`super::faults`]; the chaos tests in
+//!   `rust/tests/chaos_recovery.rs` drive it to pin the exactly-once
+//!   guarantee across panic → respawn → hot-swap sequences.
+//!
+//! ### Accounting
+//!
+//! `requests` counts every **validated** submit. The outcome counters
+//! partition it exactly:
+//!
+//! ```text
+//! requests == completed + rejected + shed + deadline_expired + panicked
+//! ```
+//!
+//! ([`ClusterSnapshot::reconciles`]). `accepted()` (= `requests -
+//! rejected - shed`) is the number of requests the cluster owes a
+//! response, and every one of them gets **exactly one**: `Ok`,
+//! `WorkerPanicked`, or `DeadlineExceeded` — `answered() ==
+//! completed + panicked + deadline_expired`.
 //!
 //! ## Version-swap protocol
 //!
@@ -56,44 +103,56 @@
 //! [`ScoreRouter::shutdown`] closes every queue (new submits fail with
 //! the typed [`ClusterError::ShuttingDown`]), then workers drain every
 //! queued request — their own queue first, then stealing siblings' —
-//! and answer each exactly once before exiting. Same guarantee as the
-//! single service: accepted-then-dropped cannot happen.
+//! and answer each exactly once before exiting; the supervisor joins
+//! them and finally sweeps any requests stranded by a worker that died
+//! mid-drain. Same guarantee as the single service:
+//! accepted-then-dropped cannot happen, even with fault injection
+//! armed.
 //!
 //! ## Query mode
 //!
 //! [`QueryRouter`] is the second service mode: the same queues,
-//! backpressure, shedding, stealing, versioned hot swap, metrics, and
-//! shutdown drain (all shared machinery — the queue and snapshot code
-//! is generic over the request type), but the workers answer **top-k
-//! retrieval** against a shared [`PackedLshIndex`] instead of scoring
-//! against per-worker slabs. The index is large (the packed code slab
-//! plus bucket tables over the whole corpus) and read-only, so unlike
-//! score mode nothing is replicated per shard: every worker clones the
-//! version `Arc` at dequeue and probes the same tables; per-worker
-//! state is one reusable [`QueryScratch`]. `publish` swaps in an index
-//! built over a *new corpus snapshot* — the banding, seed, bit width,
-//! and feature dim must match (replicas must mean the same thing by
-//! "similar"), while the row count is free to change, which is the
-//! whole point of the swap. Responses are bit-identical to a direct
+//! backpressure, shedding, stealing, versioned hot swap, metrics,
+//! supervision, and shutdown drain (all shared machinery — the
+//! supervised worker core is generic over the [`ServeMode`]), but the
+//! workers answer **top-k retrieval** against a shared
+//! [`PackedLshIndex`] instead of scoring against per-worker slabs. The
+//! index is large (the packed code slab plus bucket tables over the
+//! whole corpus) and read-only, so unlike score mode nothing is
+//! replicated per shard: every worker clones the version `Arc` at
+//! dequeue and probes the same tables; per-worker state is one
+//! reusable [`QueryScratch`]. `publish` swaps in an index built over a
+//! *new corpus snapshot* — the banding, seed, bit width, and feature
+//! dim must match (replicas must mean the same thing by "similar"),
+//! while the row count is free to change, which is the whole point of
+//! the swap. Responses are bit-identical to a direct
 //! [`PackedLshIndex::query_with`] call on the serving version,
-//! regardless of shard count, stealing, or concurrent swaps (pinned by
-//! `rust/tests/lsh_parity.rs`).
+//! regardless of shard count, stealing, respawns, or concurrent swaps
+//! (pinned by `rust/tests/lsh_parity.rs`).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use crate::cws::{PackedLshIndex, QueryParams, QueryScratch};
-use crate::data::sparse::SparseRow;
+use crate::data::sparse::{Csr, SparseRow};
 use crate::data::Matrix;
 use crate::serve::{argmax, Scorer, Scratch, SlabPrecision};
+use crate::util::rng::Pcg64;
 use crate::util::stats::Histogram;
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::util::sync::{mpsc, spawn_named, thread, Arc, Mutex};
+use crate::util::sync::{is_finished, mpsc, spawn_named, thread, Arc, Mutex};
 
+use super::faults::{panic_message, FaultPlan, FaultStream, PostFault, INJECTED};
 use super::metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 use super::queue::{
     pick_least_deep, steal, steal_any, Pop, PushError, ShardQueue, SwapCell, STEAL_POLL,
 };
+
+/// How often the supervisor probes worker liveness. Deaths are rare;
+/// 1ms keeps respawn latency far below any sane request deadline while
+/// costing nothing measurable when everything is healthy.
+const SUPERVISOR_POLL: Duration = Duration::from_millis(1);
 
 /// Cluster shape and flow-control knobs.
 #[derive(Debug, Clone)]
@@ -112,27 +171,42 @@ pub struct ClusterConfig {
     /// pins each request to the shard that accepted it — useful when
     /// benchmarking routing policies.
     pub steal: bool,
+    /// Seeded fault injection (chaos testing / resilience benches).
+    /// `None` additionally consults `MINMAX_FAULT_RATE` in debug
+    /// builds — see [`FaultPlan::from_env`]; release builds ignore the
+    /// environment entirely.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { shards: 2, queue_cap: 1024, shed_watermark: None, steal: true }
+        Self { shards: 2, queue_cap: 1024, shed_watermark: None, steal: true, faults: None }
     }
 }
 
-/// Typed submit/publish errors — the cluster never fails silently.
+/// Typed submit/publish/wait errors — the cluster never fails silently.
 #[derive(Debug)]
 pub enum ClusterError {
     /// Every shard's queue is at `queue_cap` (hard backpressure).
     QueueFull,
     /// Queue depth crossed the load-shedding watermark.
     Shed { depth: usize, watermark: usize },
-    /// Cluster is shutting down (or a worker died).
+    /// Cluster is shutting down.
     ShuttingDown,
     BadInput(String),
     /// `publish` with a scorer whose `k`/`dim`/`seed`/slab precision/
     /// code packing disagree with the cluster's.
     ShapeMismatch(String),
+    /// The worker panicked while serving THIS request. The shard
+    /// survived (the panic was caught at the request boundary); the
+    /// captured panic message is the observability payload.
+    WorkerPanicked { message: String },
+    /// The request's deadline expired before a worker began it.
+    DeadlineExceeded,
+    /// `wait_timeout` elapsed without a response. The request may
+    /// still complete — a later wait on the same handle can pick the
+    /// response up.
+    WaitTimeout,
 }
 
 impl std::fmt::Display for ClusterError {
@@ -145,10 +219,39 @@ impl std::fmt::Display for ClusterError {
             ClusterError::ShuttingDown => write!(f, "cluster shutting down"),
             ClusterError::BadInput(s) => write!(f, "bad input: {s}"),
             ClusterError::ShapeMismatch(s) => write!(f, "scorer shape mismatch: {s}"),
+            ClusterError::WorkerPanicked { message } => {
+                write!(f, "worker panicked serving this request: {message}")
+            }
+            ClusterError::DeadlineExceeded => {
+                write!(f, "request deadline expired before work began")
+            }
+            ClusterError::WaitTimeout => {
+                write!(f, "timed out waiting for the response (request may still complete)")
+            }
         }
     }
 }
 impl std::error::Error for ClusterError {}
+
+/// What travels back over a request's response channel: exactly one of
+/// these per accepted request, no matter what happened to the worker.
+enum Reply<T> {
+    Ok(T),
+    /// The serve closure panicked; the shard survived.
+    Panicked { message: String },
+    /// The deadline expired at dequeue; no compute was spent.
+    DeadlineExceeded,
+}
+
+impl<T> Reply<T> {
+    fn into_result(self) -> Result<T, ClusterError> {
+        match self {
+            Reply::Ok(t) => Ok(t),
+            Reply::Panicked { message } => Err(ClusterError::WorkerPanicked { message }),
+            Reply::DeadlineExceeded => Err(ClusterError::DeadlineExceeded),
+        }
+    }
+}
 
 /// One scored request: decisions + label like the service's
 /// `ScoreResponse`, plus WHICH model version and shard answered —
@@ -172,7 +275,9 @@ struct ClusterRequest {
     id: u64,
     vector: Vec<f32>,
     submitted: Instant,
-    tx: mpsc::Sender<ClusterScoreResponse>,
+    /// Absolute deadline; checked at dequeue.
+    expires: Option<Instant>,
+    tx: mpsc::Sender<Reply<ClusterScoreResponse>>,
 }
 
 /// A versioned model: the immutable unit the `Arc` swap publishes.
@@ -181,45 +286,344 @@ struct Versioned {
     scorer: Scorer,
 }
 
-// ------------------------------------------------------------ shared
+// ------------------------------------------------- supervised core
 //
 // The queue/steal machinery lives in `super::queue` (generic over the
-// request type — the `score` and `query` service modes differ only in
-// what a worker does with a dequeued request), where the loom models
-// in `rust/tests/loom_models.rs` can exercise it directly.
+// request type), where the loom models in `rust/tests/loom_models.rs`
+// can exercise it directly. The supervised worker core below is
+// generic over the service mode: `score` and `query` differ only in
+// what a worker computes for a dequeued request, so panic isolation,
+// deadlines, supervision, and the shutdown sweep are written once.
 
 /// Per-shard `version → completed` tally map.
 type VersionTally = Mutex<BTreeMap<u64, u64>>;
 
-struct Shared {
-    queues: Vec<ShardQueue<ClusterRequest>>,
-    /// The hot-swap slot. Read (cheap: shared lock + `Arc` clone) at
-    /// every dequeue; written only by `publish`.
-    model: SwapCell<Versioned>,
+/// Everything the supervised worker core needs, independent of what
+/// the workers compute: queues, per-shard metrics and version tallies,
+/// flow-control flags, the armed fault plan, and the worker slots the
+/// supervisor owns.
+struct Core<R> {
+    queues: Vec<ShardQueue<R>>,
     shard_metrics: Vec<Metrics>,
     /// Per-shard `version → completed` tallies (shard-local so the
     /// serve hot path never contends across shards); merged by
-    /// `snapshot()`.
+    /// `snapshot()`. Locked only OUTSIDE the unwind boundary, so a
+    /// request panic can never poison a tally.
     shard_versions: Vec<VersionTally>,
     steal: bool,
+    stopping: AtomicBool,
+    /// Batch-client submits retried after QueueFull/Shed.
+    retried: AtomicU64,
+    /// Batch-client requests whose retry budget was exhausted
+    /// (degraded mode: the client keeps waiting at the cap instead of
+    /// failing the batch).
+    degraded: AtomicU64,
+    faults: Option<FaultPlan>,
+    /// One slot per shard, owned by the supervisor. `None` means the
+    /// last (re)spawn failed and will be retried at the next probe.
+    workers: Mutex<Vec<Option<thread::JoinHandle<()>>>>,
 }
+
+impl<R> Core<R> {
+    fn new(cfg: &ClusterConfig) -> Core<R> {
+        Core {
+            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
+            shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            steal: cfg.steal,
+            stopping: AtomicBool::new(false),
+            retried: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            faults: cfg.faults.clone().or_else(FaultPlan::from_env),
+            workers: Mutex::new((0..cfg.shards).map(|_| None).collect()),
+        }
+    }
+
+    /// Graceful shutdown: close every queue (typed rejections from
+    /// here on), then join the supervisor — which joins every worker
+    /// and sweeps anything left in the queues (see
+    /// [`supervisor_loop`]).
+    fn stop_and_join(&self, supervisor: &mut Option<thread::JoinHandle<()>>) {
+        self.stopping.store(true, Ordering::Release);
+        for q in &self.queues {
+            q.close();
+        }
+        if let Some(h) = supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What every queued request must expose to the supervised core.
+trait RequestEnvelope {
+    type Resp: Send + 'static;
+    fn submitted(&self) -> Instant;
+    fn expires(&self) -> Option<Instant>;
+    fn reply_to(&self) -> &mpsc::Sender<Reply<Self::Resp>>;
+}
+
+/// A service mode: the state a worker carries and the computation it
+/// runs per request. Implemented by the score and query shared states.
+trait ServeMode: Send + Sync + Sized + 'static {
+    /// Thread-name infix: workers are `minmax-{NAME}-w{shard}`.
+    const NAME: &'static str;
+    type Req: RequestEnvelope + Send + 'static;
+    type State: Send;
+    fn core(&self) -> &Core<Self::Req>;
+    /// A fresh per-worker state (scratch arenas).
+    fn fresh_state(&self) -> Self::State;
+    /// Discard state that a panic may have left mid-mutation. Called
+    /// after the unwind boundary catches; the next request re-warms.
+    fn reset(&self, state: &mut Self::State);
+    /// The actual work. Runs INSIDE the unwind boundary; must not
+    /// acquire any lock shared with non-panicking code paths.
+    fn compute(
+        &self,
+        shard: usize,
+        req: &Self::Req,
+        state: &mut Self::State,
+    ) -> (<Self::Req as RequestEnvelope>::Resp, u64);
+}
+
+/// Serve one dequeued request: queue-wait accounting, deadline check,
+/// fault-decision draw, the `catch_unwind` boundary around the
+/// compute, and exactly one `Reply` send on every path. Returns the
+/// post-answer fault (if any) for the worker loop to execute — faults
+/// that kill or stall the worker run strictly AFTER the request is
+/// answered, so a worker death can never hold a request hostage.
+fn handle<M: ServeMode>(
+    shared: &M,
+    shard: usize,
+    req: M::Req,
+    state: &mut M::State,
+    faults: Option<&mut FaultStream>,
+) -> Option<PostFault> {
+    let core = shared.core();
+    let metrics = &core.shard_metrics[shard];
+    metrics.record_queue_wait_ms(req.submitted().elapsed().as_secs_f64() * 1e3);
+    if let Some(deadline) = req.expires() {
+        if Instant::now() >= deadline {
+            metrics.record_deadline();
+            let _ = req.reply_to().send(Reply::DeadlineExceeded);
+            return None;
+        }
+    }
+    let decision = match faults {
+        Some(stream) => stream.next(),
+        None => Default::default(),
+    };
+    // The unwind boundary. Nothing in here touches a Mutex the
+    // non-panicking paths share (version tallies and metrics are
+    // updated after the catch), so a panic cannot poison shared state;
+    // the worker's own scratch is reset below.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(d) = decision.slow {
+            thread::sleep(d);
+        }
+        if decision.panic {
+            panic!("{INJECTED}: injected request panic (shard {shard})");
+        }
+        shared.compute(shard, &req, state)
+    }));
+    match outcome {
+        Ok((resp, version)) => {
+            metrics.record_latency_ms(req.submitted().elapsed().as_secs_f64() * 1e3);
+            *core.shard_versions[shard].lock().unwrap().entry(version).or_insert(0) += 1;
+            let _ = req.reply_to().send(Reply::Ok(resp));
+        }
+        Err(payload) => {
+            metrics.record_panicked();
+            shared.reset(state);
+            let _ = req
+                .reply_to()
+                .send(Reply::Panicked { message: panic_message(payload.as_ref()) });
+        }
+    }
+    decision.post
+}
+
+fn worker_loop<M: ServeMode>(shard: usize, shared: &Arc<M>, incarnation: u64) {
+    let core = shared.core();
+    // One long-lived arena per worker incarnation; survives hot swaps
+    // (the shape invariants guarantee it stays valid across versions).
+    let mut state = shared.fresh_state();
+    let mut faults = core.faults.as_ref().map(|p| p.stream(shard, incarnation));
+    loop {
+        let post = match core.queues[shard].pop_wait(STEAL_POLL) {
+            Pop::Req(req) => handle(&**shared, shard, req, &mut state, faults.as_mut()),
+            Pop::Empty => {
+                if core.steal {
+                    match steal(shard, &core.queues) {
+                        Some(req) => handle(&**shared, shard, req, &mut state, faults.as_mut()),
+                        None => None,
+                    }
+                } else {
+                    None
+                }
+            }
+            Pop::Closed => {
+                // Shutdown drain: the own queue is empty+closed; help
+                // finish whatever is still queued anywhere, then exit.
+                // Queues reject pushes once closed, so this
+                // terminates. Post faults are ignored during the drain
+                // (dying here would only slow shutdown down; in-work
+                // faults inside `handle` still fire).
+                while let Some(req) = steal_any(shard, &core.queues) {
+                    let _ = handle(&**shared, shard, req, &mut state, faults.as_mut());
+                }
+                return;
+            }
+        };
+        match post {
+            Some(PostFault::Die) => {
+                panic!("{INJECTED}: injected worker death (shard {shard})")
+            }
+            Some(PostFault::Stall(d)) => thread::sleep(d),
+            None => {}
+        }
+    }
+}
+
+fn spawn_worker<M: ServeMode>(
+    shared: &Arc<M>,
+    shard: usize,
+    incarnation: u64,
+) -> std::io::Result<thread::JoinHandle<()>> {
+    let name = if incarnation == 0 {
+        format!("minmax-{}-w{shard}", M::NAME)
+    } else {
+        format!("minmax-{}-w{shard}-r{incarnation}", M::NAME)
+    };
+    let sh = Arc::clone(shared);
+    spawn_named(name, move || worker_loop(shard, &sh, incarnation))
+}
+
+/// The supervisor: probes worker liveness, joins corpses, respawns
+/// them (counted per shard as `restarts`), and at shutdown joins every
+/// worker then sweeps requests a mid-drain death left behind.
+///
+/// A worker that exits NORMALLY (its `join()` is `Ok`) finished the
+/// shutdown drain — that only happens after the queues close, so it is
+/// never respawned. A worker whose join reports a panic died
+/// abnormally; its queue still holds requests (deaths never hold one —
+/// see [`handle`]), which the respawned incarnation, stealing
+/// siblings, or the final sweep will answer.
+fn supervisor_loop<M: ServeMode>(shared: &Arc<M>) {
+    let core = shared.core();
+    let n = core.queues.len();
+    let mut incarnations = vec![0u64; n];
+    while !core.stopping.load(Ordering::Acquire) {
+        for shard in 0..n {
+            let needs_respawn = {
+                let mut slots = core.workers.lock().unwrap();
+                let dead = matches!(&slots[shard], Some(h) if is_finished(h));
+                if dead {
+                    slots[shard].take().expect("probed Some").join().is_err()
+                } else {
+                    // A `None` slot means a previous (re)spawn failed;
+                    // keep trying.
+                    slots[shard].is_none()
+                }
+            };
+            // Re-check stopping so a shutdown racing a death does not
+            // spawn a worker nobody will need (harmless if it slips
+            // through — the new worker sees closed queues, drains, and
+            // exits into the final join below).
+            if needs_respawn && !core.stopping.load(Ordering::Acquire) {
+                incarnations[shard] += 1;
+                core.shard_metrics[shard].record_restart();
+                if let Ok(h) = spawn_worker(shared, shard, incarnations[shard]) {
+                    core.workers.lock().unwrap()[shard] = Some(h);
+                }
+            }
+        }
+        thread::sleep(SUPERVISOR_POLL);
+    }
+    // Shutdown: collect and join every worker...
+    let slots: Vec<Option<thread::JoinHandle<()>>> = {
+        let mut guard = core.workers.lock().unwrap();
+        guard.iter_mut().map(|s| s.take()).collect()
+    };
+    for h in slots.into_iter().flatten() {
+        let _ = h.join();
+    }
+    // ...then sweep anything a mid-drain death stranded. The queues
+    // are closed, so this terminates; served requests are attributed
+    // to shard 0's metrics (documented in DESIGN.md §2.9 — the
+    // cluster-wide sums are what reconcile). Faults are disarmed here:
+    // the sweep must complete.
+    let mut state = shared.fresh_state();
+    while let Some(req) = steal_any(0, &core.queues) {
+        let _ = handle(&**shared, 0, req, &mut state, None);
+    }
+}
+
+/// Spawn the incarnation-0 worker for every shard, then the supervisor
+/// that owns them.
+fn start_supervised<M: ServeMode>(shared: &Arc<M>) -> Result<thread::JoinHandle<()>, String> {
+    let n = shared.core().queues.len();
+    for shard in 0..n {
+        let h = spawn_worker(shared, shard, 0)
+            .map_err(|e| format!("spawn {} worker {shard}: {e}", M::NAME))?;
+        shared.core().workers.lock().unwrap()[shard] = Some(h);
+    }
+    let sh = Arc::clone(shared);
+    spawn_named(format!("minmax-{}-supervisor", M::NAME), move || supervisor_loop(&sh))
+        .map_err(|e| format!("spawn {} supervisor: {e}", M::NAME))
+}
+
+// ------------------------------------------------------ retry policy
+
+/// Jittered exponential backoff for the blocking batch clients —
+/// replaces the hot-spin retry: `delay(attempt) = min(base · 2^attempt,
+/// cap) · U[0.5, 1)`, with the jitter drawn from a seeded [`Pcg64`] so
+/// a retry schedule is reproducible.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Backoff attempts before a request is declared degraded (the
+    /// client then keeps waiting at `cap` — this closed-loop client
+    /// wants every row answered, so "degraded" is accounting, not
+    /// abandonment).
+    pub max_attempts: u32,
+    /// First-retry delay.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+    /// Jitter seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 10,
+            base: Duration::from_micros(100),
+            cap: Duration::from_millis(10),
+            seed: 0x5EED_BACC,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based).
+    fn delay(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(20));
+        exp.min(self.cap).mul_f64(0.5 + 0.5 * rng.uniform())
+    }
+}
+
+// ------------------------------------------------------------ shared
 
 /// Merge per-shard metrics, histograms, and version tallies into the
 /// cluster-wide view — shared by both router modes.
-fn assemble_snapshot<R>(
-    shard_metrics: &[Metrics],
-    shard_versions: &[VersionTally],
-    queues: &[ShardQueue<R>],
-    started: Instant,
-    current_version: u64,
-) -> ClusterSnapshot {
-    let shards: Vec<Snapshot> = shard_metrics.iter().map(|m| m.snapshot()).collect();
+fn assemble_snapshot<R>(core: &Core<R>, started: Instant, current_version: u64) -> ClusterSnapshot {
+    let shards: Vec<Snapshot> = core.shard_metrics.iter().map(|m| m.snapshot()).collect();
     let mut merged = Histogram::new(&LATENCY_BUCKETS_MS);
     for s in &shards {
         merged.merge(&Histogram::with_counts(&LATENCY_BUCKETS_MS, s.latency_hist.clone()));
     }
     let mut version_counts: BTreeMap<u64, u64> = BTreeMap::new();
-    for vm in shard_versions {
+    for vm in &core.shard_versions {
         for (&v, &c) in vm.lock().unwrap().iter() {
             *version_counts.entry(v).or_insert(0) += c;
         }
@@ -231,7 +635,12 @@ fn assemble_snapshot<R>(
         completed,
         rejected: shards.iter().map(|s| s.rejected).sum(),
         shed: shards.iter().map(|s| s.shed).sum(),
-        queue_depths: queues.iter().map(|q| q.depth()).collect(),
+        deadline_expired: shards.iter().map(|s| s.deadline_expired).sum(),
+        panicked: shards.iter().map(|s| s.panicked).sum(),
+        restarts: shards.iter().map(|s| s.restarts).sum(),
+        retried: core.retried.load(Ordering::Acquire),
+        degraded: core.degraded.load(Ordering::Acquire),
+        queue_depths: core.queues.iter().map(|q| q.depth()).collect(),
         elapsed_s: elapsed,
         throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
         latency_p50_ms: merged.quantile(50.0),
@@ -262,75 +671,91 @@ fn validate_config(cfg: &ClusterConfig) -> Result<(), String> {
     Ok(())
 }
 
-fn worker_loop(shard: usize, shared: &Shared) {
-    // One long-lived arena per worker. `k`/`dim` are invariant across
-    // published versions, so the scratch survives hot swaps; only the
-    // decision staging is (cheaply) resized per request.
-    let mut scratch: Option<Scratch> = None;
-    let mut staging: Vec<f64> = Vec::new();
-    loop {
-        match shared.queues[shard].pop_wait(STEAL_POLL) {
-            Pop::Req(req) => serve(shard, shared, &req, &mut scratch, &mut staging),
-            Pop::Empty => {
-                if shared.steal {
-                    if let Some(req) = steal(shard, &shared.queues) {
-                        serve(shard, shared, &req, &mut scratch, &mut staging);
-                    }
-                }
-            }
-            Pop::Closed => {
-                // Shutdown drain: the own queue is empty+closed; help
-                // finish whatever is still queued anywhere, then exit.
-                // Queues reject pushes once closed, so this terminates.
-                while let Some(req) = steal_any(shard, &shared.queues) {
-                    serve(shard, shared, &req, &mut scratch, &mut staging);
-                }
-                return;
-            }
-        }
+// -------------------------------------------------------- score mode
+
+impl RequestEnvelope for ClusterRequest {
+    type Resp = ClusterScoreResponse;
+    fn submitted(&self) -> Instant {
+        self.submitted
+    }
+    fn expires(&self) -> Option<Instant> {
+        self.expires
+    }
+    fn reply_to(&self) -> &mpsc::Sender<Reply<ClusterScoreResponse>> {
+        &self.tx
     }
 }
 
-fn serve(
-    shard: usize,
-    shared: &Shared,
-    req: &ClusterRequest,
-    scratch: &mut Option<Scratch>,
-    staging: &mut Vec<f64>,
-) {
-    let metrics = &shared.shard_metrics[shard];
-    metrics.record_queue_wait_ms(req.submitted.elapsed().as_secs_f64() * 1e3);
-    // Pick up the current version; in-flight work keeps this Arc alive
-    // through a concurrent publish (the drain half of the swap
-    // protocol).
-    let model: Arc<Versioned> = shared.model.get();
-    let scorer = &model.scorer;
-    let s = scratch.get_or_insert_with(|| scorer.scratch());
-    staging.clear();
-    staging.resize(scorer.n_classes(), 0.0);
-    scorer.score_dense_into(&req.vector, s, staging);
-    let label = argmax(staging);
-    let latency = req.submitted.elapsed();
-    metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
-    *shared.shard_versions[shard].lock().unwrap().entry(model.version).or_insert(0) += 1;
-    let _ = req.tx.send(ClusterScoreResponse {
-        id: req.id,
-        decisions: staging.clone(),
-        label,
-        version: model.version,
-        shard,
-        latency,
-    });
+struct Shared {
+    core: Core<ClusterRequest>,
+    /// The hot-swap slot. Read (cheap: shared lock + `Arc` clone) at
+    /// every dequeue; written only by `publish`.
+    model: SwapCell<Versioned>,
+}
+
+impl ServeMode for Shared {
+    const NAME: &'static str = "cluster";
+    type Req = ClusterRequest;
+    /// Scratch arena + decision staging. `k`/`dim` are invariant
+    /// across published versions, so the scratch survives hot swaps;
+    /// only the staging is (cheaply) resized per request.
+    type State = (Option<Scratch>, Vec<f64>);
+
+    fn core(&self) -> &Core<ClusterRequest> {
+        &self.core
+    }
+
+    fn fresh_state(&self) -> Self::State {
+        (None, Vec::new())
+    }
+
+    fn reset(&self, state: &mut Self::State) {
+        // A panic may have interrupted `score_dense_into` mid-write;
+        // the arena's contents are untrusted now. Drop and re-warm.
+        *state = (None, Vec::new());
+    }
+
+    fn compute(
+        &self,
+        shard: usize,
+        req: &ClusterRequest,
+        state: &mut Self::State,
+    ) -> (ClusterScoreResponse, u64) {
+        let (scratch, staging) = state;
+        // Pick up the current version; in-flight work keeps this Arc
+        // alive through a concurrent publish (the drain half of the
+        // swap protocol).
+        let model: Arc<Versioned> = self.model.get();
+        let scorer = &model.scorer;
+        let s = scratch.get_or_insert_with(|| scorer.scratch());
+        staging.clear();
+        staging.resize(scorer.n_classes(), 0.0);
+        scorer.score_dense_into(&req.vector, s, staging);
+        let label = argmax(staging);
+        let latency = req.submitted.elapsed();
+        (
+            ClusterScoreResponse {
+                id: req.id,
+                decisions: staging.clone(),
+                label,
+                version: model.version,
+                shard,
+                latency,
+            },
+            model.version,
+        )
+    }
 }
 
 // ------------------------------------------------------------ router
 
 /// The sharded scoring front door. See the module docs for the queue,
-/// swap, and shutdown contracts.
+/// swap, fault-tolerance, and shutdown contracts.
 pub struct ScoreRouter {
     shared: Arc<Shared>,
-    workers: Vec<thread::JoinHandle<()>>,
-    stopping: AtomicBool,
+    /// Owns the workers; joined (after the queues close) by
+    /// `stop_and_join`.
+    supervisor: Option<thread::JoinHandle<()>>,
     rr: AtomicU64,
     cfg: ClusterConfig,
     started: Instant,
@@ -348,7 +773,7 @@ pub struct ScoreRouter {
 /// An accepted submission: the response handle plus which shard's
 /// queue took it.
 pub struct Submitted {
-    rx: mpsc::Receiver<ClusterScoreResponse>,
+    rx: mpsc::Receiver<Reply<ClusterScoreResponse>>,
     shard: usize,
 }
 
@@ -359,41 +784,45 @@ impl Submitted {
         self.shard
     }
 
-    /// Block for the response. `ShuttingDown` here means a worker died
-    /// abnormally — graceful shutdown answers every accepted request.
+    /// Block for the response. A caught worker panic or an expired
+    /// deadline come back as typed errors
+    /// ([`ClusterError::WorkerPanicked`] /
+    /// [`ClusterError::DeadlineExceeded`]); `ShuttingDown` cannot
+    /// happen for an accepted request — shutdown answers every one.
     pub fn wait(self) -> Result<ClusterScoreResponse, ClusterError> {
-        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)
+        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)?.into_result()
+    }
+
+    /// Bounded wait: [`ClusterError::WaitTimeout`] after `dur` with no
+    /// response. Non-consuming — the request may still complete, and a
+    /// later `wait`/`wait_timeout` on the same handle picks it up.
+    pub fn wait_timeout(&self, dur: Duration) -> Result<ClusterScoreResponse, ClusterError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(reply) => reply.into_result(),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ClusterError::WaitTimeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ClusterError::ShuttingDown),
+        }
     }
 }
 
 impl ScoreRouter {
-    /// Start `cfg.shards` workers serving `scorer` as version 1. The
-    /// scorer is NOT cloned per shard — workers share one slab behind
-    /// the version `Arc` (replication is of execution state: scratch
-    /// arenas and queues, which is what actually needs to be
-    /// per-worker).
+    /// Start `cfg.shards` supervised workers serving `scorer` as
+    /// version 1. The scorer is NOT cloned per shard — workers share
+    /// one slab behind the version `Arc` (replication is of execution
+    /// state: scratch arenas and queues, which is what actually needs
+    /// to be per-worker).
     pub fn start(scorer: Scorer, cfg: ClusterConfig) -> Result<ScoreRouter, String> {
         validate_config(&cfg)?;
         let (k, dim, seed) = (scorer.k(), scorer.dim(), scorer.seed());
         let (precision, packed) = (scorer.precision(), scorer.packed_codes());
         let shared = Arc::new(Shared {
-            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            core: Core::new(&cfg),
             model: SwapCell::new(Versioned { version: 1, scorer }),
-            shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
-            shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
-            steal: cfg.steal,
         });
-        let mut workers = Vec::with_capacity(cfg.shards);
-        for i in 0..cfg.shards {
-            let sh = Arc::clone(&shared);
-            let h = spawn_named(format!("minmax-cluster-w{i}"), move || worker_loop(i, &sh))
-                .map_err(|e| format!("spawn cluster worker {i}: {e}"))?;
-            workers.push(h);
-        }
+        let supervisor = Some(start_supervised(&shared)?);
         Ok(ScoreRouter {
             shared,
-            workers,
-            stopping: AtomicBool::new(false),
+            supervisor,
             rr: AtomicU64::new(0),
             cfg,
             started: Instant::now(),
@@ -425,15 +854,16 @@ impl ScoreRouter {
 
     /// Per-shard metrics handle (tests / scraping).
     pub fn metrics(&self, shard: usize) -> &Metrics {
-        &self.shared.shard_metrics[shard]
+        &self.shared.core.shard_metrics[shard]
     }
 
     /// Publish a new model version: validate shape, swap the `Arc`.
     /// Returns the new version number. Zero downtime — requests
     /// dequeued before the swap drain against the old version (their
     /// workers hold its `Arc`); every later dequeue scores with the
-    /// new slab. The class count MAY change between versions; each
-    /// response reports the version that produced it.
+    /// new slab, including workers the supervisor respawned. The class
+    /// count MAY change between versions; each response reports the
+    /// version that produced it.
     pub fn publish(&self, scorer: Scorer) -> Result<u64, ClusterError> {
         if scorer.k() != self.k {
             return Err(ClusterError::ShapeMismatch(format!(
@@ -478,7 +908,7 @@ impl ScoreRouter {
     }
 
     fn validate(&self, vector: &[f32]) -> Result<(), ClusterError> {
-        if self.stopping.load(Ordering::Acquire) {
+        if self.shared.core.stopping.load(Ordering::Acquire) {
             return Err(ClusterError::ShuttingDown);
         }
         if vector.len() != self.dim {
@@ -498,38 +928,44 @@ impl ScoreRouter {
     /// Least-deep shard with a rotating round-robin tie-break start, so
     /// equal-depth shards share arrivals instead of all landing on 0.
     fn pick(&self) -> usize {
-        pick_least_deep(&self.shared.queues, &self.rr)
+        pick_least_deep(&self.shared.core.queues, &self.rr)
     }
 
-    /// Submit one dense row for scoring. Fail-fast flow control: `Shed`
-    /// past the watermark (evaluated on the least-loaded shard, so it
-    /// reflects cluster-wide pressure), `QueueFull` only when every
-    /// shard is at the hard cap.
-    pub fn submit(&self, id: u64, vector: &[f32]) -> Result<Submitted, ClusterError> {
+    fn submit_inner(
+        &self,
+        id: u64,
+        vector: &[f32],
+        expires: Option<Instant>,
+    ) -> Result<Submitted, ClusterError> {
         self.validate(vector)?;
+        let core = &self.shared.core;
         let first = self.pick();
         let n = self.cfg.shards;
+        // `requests` counts every VALIDATED submit, recorded on the
+        // first-picked shard before the push so the outcome counters
+        // (completed/rejected/shed/deadline/panicked) always partition
+        // it — the reconciliation the snapshot pins.
+        core.shard_metrics[first].record_request();
         let (rtx, rrx) = mpsc::channel();
-        let mut req = ClusterRequest {
-            id,
-            vector: vector.to_vec(),
-            submitted: Instant::now(),
-            tx: rtx,
-        };
+        let mut req =
+            ClusterRequest { id, vector: vector.to_vec(), submitted: Instant::now(), expires, tx: rtx };
         for off in 0..n {
             let i = (first + off) % n;
-            match self.shared.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
-                Ok(()) => {
-                    self.shared.shard_metrics[i].record_request();
-                    return Ok(Submitted { rx: rrx, shard: i });
-                }
+            match core.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
+                Ok(()) => return Ok(Submitted { rx: rrx, shard: i }),
                 Err((PushError::Shed { depth, watermark }, _)) => {
                     // Terminal: `first` was the least-loaded shard, so
                     // the whole cluster is past the watermark.
-                    self.shared.shard_metrics[i].record_shed();
+                    core.shard_metrics[first].record_shed();
                     return Err(ClusterError::Shed { depth, watermark });
                 }
-                Err((PushError::Closed, _)) => return Err(ClusterError::ShuttingDown),
+                Err((PushError::Closed, _)) => {
+                    // Raced a shutdown past the validate() check;
+                    // counted as a rejection so `requests` still
+                    // partitions exactly.
+                    core.shard_metrics[first].record_rejected();
+                    return Err(ClusterError::ShuttingDown);
+                }
                 Err((PushError::Full, back)) => {
                     // Reclaim the request and fail over to the next
                     // shard.
@@ -537,8 +973,31 @@ impl ScoreRouter {
                 }
             }
         }
-        self.shared.shard_metrics[first].record_rejected();
+        core.shard_metrics[first].record_rejected();
         Err(ClusterError::QueueFull)
+    }
+
+    /// Submit one dense row for scoring. Fail-fast flow control: `Shed`
+    /// past the watermark (evaluated on the least-loaded shard, so it
+    /// reflects cluster-wide pressure), `QueueFull` only when every
+    /// shard is at the hard cap.
+    pub fn submit(&self, id: u64, vector: &[f32]) -> Result<Submitted, ClusterError> {
+        self.submit_inner(id, vector, None)
+    }
+
+    /// [`submit`](Self::submit) with a relative deadline: if no worker
+    /// has STARTED the request `deadline` after submission, it is
+    /// answered with [`ClusterError::DeadlineExceeded`] at dequeue
+    /// (and counted in the snapshot's `deadline_expired`) instead of
+    /// being served stale. Work already started always runs to
+    /// completion — the deadline bounds queueing, not compute.
+    pub fn submit_with_deadline(
+        &self,
+        id: u64,
+        vector: &[f32],
+        deadline: Duration,
+    ) -> Result<Submitted, ClusterError> {
+        self.submit_inner(id, vector, Some(Instant::now() + deadline))
     }
 
     /// Blocking submit-and-wait.
@@ -555,18 +1014,37 @@ impl ScoreRouter {
         Ok(self.score_blocking(id, vector)?.label)
     }
 
+    /// Score a whole matrix through the cluster with the default
+    /// [`RetryPolicy`] — see
+    /// [`score_batch_blocking_with`](Self::score_batch_blocking_with).
+    pub fn score_batch_blocking(&self, x: &Matrix) -> Result<Vec<i32>, ClusterError> {
+        self.score_batch_blocking_with(x, &RetryPolicy::default())
+    }
+
     /// Score a whole matrix through the cluster, in row order — the
     /// batch entry the saturation bench and parity tests drive. A
     /// backpressure-aware closed-loop client: submissions race ahead
     /// until a queue rejects, then the oldest outstanding response is
-    /// reaped before retrying (shed rejections are retried too — this
-    /// client wants every row answered).
-    pub fn score_batch_blocking(&self, x: &Matrix) -> Result<Vec<i32>, ClusterError> {
+    /// reaped before retrying; when nothing is outstanding (another
+    /// client owns the queue space) it backs off under `policy`
+    /// instead of hot-spinning, counting `retried` submits and
+    /// `degraded` requests (budget exhausted; the client keeps waiting
+    /// at the cap — every row gets answered). Shed rejections are
+    /// retried too.
+    pub fn score_batch_blocking_with(
+        &self,
+        x: &Matrix,
+        policy: &RetryPolicy,
+    ) -> Result<Vec<i32>, ClusterError> {
         let dense = x.to_dense();
         let n = dense.rows();
         let mut out = vec![0i32; n];
         let mut pending: VecDeque<(usize, Submitted)> = VecDeque::new();
+        let mut rng = Pcg64::new(policy.seed);
+        let core = &self.shared.core;
         for i in 0..n {
+            let mut attempt = 0u32;
+            let mut degraded = false;
             loop {
                 match self.submit(i as u64, dense.row(i)) {
                     Ok(s) => {
@@ -574,11 +1052,21 @@ impl ScoreRouter {
                         break;
                     }
                     Err(ClusterError::QueueFull) | Err(ClusterError::Shed { .. }) => {
-                        match pending.pop_front() {
-                            Some((j, s)) => out[j] = s.wait()?.label,
-                            // Another client owns the queue space; let
-                            // the workers drain and retry.
-                            None => thread::yield_now(),
+                        core.retried.fetch_add(1, Ordering::Release);
+                        if let Some((j, s)) = pending.pop_front() {
+                            // Reaping our own oldest response frees
+                            // queue space deterministically — no sleep
+                            // needed on this path.
+                            out[j] = s.wait()?.label;
+                        } else if attempt >= policy.max_attempts {
+                            if !degraded {
+                                degraded = true;
+                                core.degraded.fetch_add(1, Ordering::Release);
+                            }
+                            thread::sleep(policy.cap);
+                        } else {
+                            thread::sleep(policy.delay(attempt, &mut rng));
+                            attempt += 1;
                         }
                     }
                     Err(e) => return Err(e),
@@ -593,58 +1081,55 @@ impl ScoreRouter {
 
     /// Cluster-wide snapshot: per-shard metrics plus merged totals,
     /// fleet latency quantiles from the merged histograms, queue
-    /// depths, and per-version completion tallies.
+    /// depths, fault/restart counters, and per-version completion
+    /// tallies.
     pub fn snapshot(&self) -> ClusterSnapshot {
-        assemble_snapshot(
-            &self.shared.shard_metrics,
-            &self.shared.shard_versions,
-            &self.shared.queues,
-            self.started,
-            self.current_version(),
-        )
+        assemble_snapshot(&self.shared.core, self.started, self.current_version())
     }
 
     /// Graceful shutdown: close every queue (typed rejections from
     /// here on), then block until the workers have drained and
     /// answered every accepted request.
     pub fn shutdown(mut self) {
-        self.stop_and_join();
-    }
-
-    fn stop_and_join(&mut self) {
-        self.stopping.store(true, Ordering::Release);
-        for q in &self.shared.queues {
-            q.close();
-        }
-        for h in std::mem::take(&mut self.workers) {
-            let _ = h.join();
-        }
+        self.shared.core.stop_and_join(&mut self.supervisor);
     }
 }
 
 impl Drop for ScoreRouter {
     fn drop(&mut self) {
-        self.stop_and_join();
+        self.shared.core.stop_and_join(&mut self.supervisor);
     }
 }
 
-/// Aggregated cluster state. Semantics differ from the single-service
-/// [`Snapshot`] in one deliberate way: cluster `requests` counts
-/// ACCEPTED submissions (rejections are only in `rejected`/`shed`), so
-/// at quiescence `requests == completed` exactly — the reconciliation
-/// `cluster_parity.rs` pins. Per-shard `requests` vs `completed` may
-/// differ when work stealing moved a request between shards; the
-/// cluster-wide sums always reconcile.
+/// Aggregated cluster state. `requests` counts every VALIDATED submit
+/// (accepted or not), and the outcome counters partition it exactly —
+/// [`reconciles`](Self::reconciles) pins
+/// `completed + rejected + shed + deadline_expired + panicked ==
+/// requests`, even across worker deaths and respawns. Per-shard
+/// `requests` vs `completed` may differ when work stealing or the
+/// shutdown sweep moved a request between shards; the cluster-wide
+/// sums always reconcile.
 #[derive(Debug, Clone)]
 pub struct ClusterSnapshot {
     pub shards: Vec<Snapshot>,
-    /// Accepted submissions, cluster-wide.
+    /// Validated submissions, cluster-wide (accepted or rejected).
     pub requests: u64,
     pub completed: u64,
-    /// Hard-cap backpressure rejections.
+    /// Hard-cap backpressure rejections (plus submits that raced a
+    /// shutdown).
     pub rejected: u64,
     /// Watermark load-shed rejections.
     pub shed: u64,
+    /// Requests whose deadline expired before a worker started them.
+    pub deadline_expired: u64,
+    /// Requests answered with a caught worker panic.
+    pub panicked: u64,
+    /// Worker respawns performed by the supervisor.
+    pub restarts: u64,
+    /// Batch-client submits retried after QueueFull/Shed.
+    pub retried: u64,
+    /// Batch-client requests whose retry budget was exhausted.
+    pub degraded: u64,
     pub queue_depths: Vec<usize>,
     pub elapsed_s: f64,
     /// Completions per second since the cluster started.
@@ -661,6 +1146,24 @@ pub struct ClusterSnapshot {
 }
 
 impl ClusterSnapshot {
+    /// Requests the cluster accepted and therefore owes a response.
+    pub fn accepted(&self) -> u64 {
+        self.requests - self.rejected - self.shed
+    }
+
+    /// Responses actually delivered (success, caught panic, or expired
+    /// deadline). At quiescence `answered() == accepted()`.
+    pub fn answered(&self) -> u64 {
+        self.completed + self.deadline_expired + self.panicked
+    }
+
+    /// The accounting invariant: every validated submit is in exactly
+    /// one outcome bucket. Holds at quiescence (no in-flight work).
+    pub fn reconciles(&self) -> bool {
+        self.completed + self.rejected + self.shed + self.deadline_expired + self.panicked
+            == self.requests
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut j = Json::obj();
@@ -668,6 +1171,11 @@ impl ClusterSnapshot {
             .set("completed", self.completed)
             .set("rejected", self.rejected)
             .set("shed", self.shed)
+            .set("deadline_expired", self.deadline_expired)
+            .set("panicked", self.panicked)
+            .set("restarts", self.restarts)
+            .set("retried", self.retried)
+            .set("degraded", self.degraded)
             .set("elapsed_s", self.elapsed_s)
             .set("throughput_rps", self.throughput_rps)
             .set("latency_p50_ms", self.latency_p50_ms)
@@ -693,12 +1201,16 @@ impl ClusterSnapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "v{} requests={} completed={} rejected={} shed={} rps={:.1} p50={:.2}ms p90={:.2}ms p99={:.2}ms depths={:?}",
+            "v{} requests={} completed={} rejected={} shed={} deadline={} panicked={} restarts={} retried={} rps={:.1} p50={:.2}ms p90={:.2}ms p99={:.2}ms depths={:?}",
             self.current_version,
             self.requests,
             self.completed,
             self.rejected,
             self.shed,
+            self.deadline_expired,
+            self.panicked,
+            self.restarts,
+            self.retried,
             self.throughput_rps,
             self.latency_p50_ms,
             self.latency_p90_ms,
@@ -733,7 +1245,22 @@ struct QueryRequest {
     values: Vec<f32>,
     top: usize,
     submitted: Instant,
-    tx: mpsc::Sender<ClusterQueryResponse>,
+    /// Absolute deadline; checked at dequeue.
+    expires: Option<Instant>,
+    tx: mpsc::Sender<Reply<ClusterQueryResponse>>,
+}
+
+impl RequestEnvelope for QueryRequest {
+    type Resp = ClusterQueryResponse;
+    fn submitted(&self) -> Instant {
+        self.submitted
+    }
+    fn expires(&self) -> Option<Instant> {
+        self.expires
+    }
+    fn reply_to(&self) -> &mpsc::Sender<Reply<ClusterQueryResponse>> {
+        &self.tx
+    }
 }
 
 /// A versioned index: the immutable unit the query-mode `Arc` swap
@@ -745,71 +1272,58 @@ struct VersionedIndex {
 }
 
 struct QueryShared {
-    queues: Vec<ShardQueue<QueryRequest>>,
+    core: Core<QueryRequest>,
     /// The hot-swap slot, same protocol as score mode: read (shared
     /// lock + `Arc` clone) at every dequeue, written only by `publish`.
     index: SwapCell<VersionedIndex>,
-    shard_metrics: Vec<Metrics>,
-    shard_versions: Vec<VersionTally>,
-    steal: bool,
     /// Lookup knobs, fixed at start: every replica must probe and
     /// prefilter identically or responses would depend on which worker
     /// served them.
     params: QueryParams,
 }
 
-fn query_worker_loop(shard: usize, shared: &QueryShared) {
-    // One long-lived retrieval scratch per worker: after warm-up the
-    // serve path is allocation-free except for the response hits Vec.
-    let mut scratch = QueryScratch::new();
-    loop {
-        match shared.queues[shard].pop_wait(STEAL_POLL) {
-            Pop::Req(req) => serve_query(shard, shared, &req, &mut scratch),
-            Pop::Empty => {
-                if shared.steal {
-                    if let Some(req) = steal(shard, &shared.queues) {
-                        serve_query(shard, shared, &req, &mut scratch);
-                    }
-                }
-            }
-            Pop::Closed => {
-                while let Some(req) = steal_any(shard, &shared.queues) {
-                    serve_query(shard, shared, &req, &mut scratch);
-                }
-                return;
-            }
-        }
-    }
-}
+impl ServeMode for QueryShared {
+    const NAME: &'static str = "query";
+    type Req = QueryRequest;
+    /// One long-lived retrieval scratch per worker: after warm-up the
+    /// serve path is allocation-free except for the response hits Vec.
+    type State = QueryScratch;
 
-fn serve_query(
-    shard: usize,
-    shared: &QueryShared,
-    req: &QueryRequest,
-    scratch: &mut QueryScratch,
-) {
-    let metrics = &shared.shard_metrics[shard];
-    metrics.record_queue_wait_ms(req.submitted.elapsed().as_secs_f64() * 1e3);
-    // Pin the version for this request; a concurrent publish cannot
-    // free the index under us (same drain rule as score mode).
-    let model: Arc<VersionedIndex> = shared.index.get();
-    let row = SparseRow { indices: &req.indices, values: &req.values };
-    let hits = model.index.query_with(row, req.top, shared.params, scratch).to_vec();
-    let latency = req.submitted.elapsed();
-    metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
-    *shared.shard_versions[shard].lock().unwrap().entry(model.version).or_insert(0) += 1;
-    let _ = req.tx.send(ClusterQueryResponse {
-        id: req.id,
-        hits,
-        version: model.version,
-        shard,
-        latency,
-    });
+    fn core(&self) -> &Core<QueryRequest> {
+        &self.core
+    }
+
+    fn fresh_state(&self) -> QueryScratch {
+        QueryScratch::new()
+    }
+
+    fn reset(&self, state: &mut QueryScratch) {
+        // A panic may have left probe buffers mid-mutation; start over.
+        *state = QueryScratch::new();
+    }
+
+    fn compute(
+        &self,
+        shard: usize,
+        req: &QueryRequest,
+        scratch: &mut QueryScratch,
+    ) -> (ClusterQueryResponse, u64) {
+        // Pin the version for this request; a concurrent publish cannot
+        // free the index under us (same drain rule as score mode).
+        let model: Arc<VersionedIndex> = self.index.get();
+        let row = SparseRow { indices: &req.indices, values: &req.values };
+        let hits = model.index.query_with(row, req.top, self.params, scratch).to_vec();
+        let latency = req.submitted.elapsed();
+        (
+            ClusterQueryResponse { id: req.id, hits, version: model.version, shard, latency },
+            model.version,
+        )
+    }
 }
 
 /// An accepted query submission (see [`Submitted`]).
 pub struct SubmittedQuery {
-    rx: mpsc::Receiver<ClusterQueryResponse>,
+    rx: mpsc::Receiver<Reply<ClusterQueryResponse>>,
     shard: usize,
 }
 
@@ -820,27 +1334,37 @@ impl SubmittedQuery {
         self.shard
     }
 
-    /// Block for the response. `ShuttingDown` here means a worker died
-    /// abnormally — graceful shutdown answers every accepted request.
+    /// Block for the response — same contract as [`Submitted::wait`].
     pub fn wait(self) -> Result<ClusterQueryResponse, ClusterError> {
-        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)
+        self.rx.recv().map_err(|_| ClusterError::ShuttingDown)?.into_result()
+    }
+
+    /// Bounded wait — same contract as [`Submitted::wait_timeout`].
+    pub fn wait_timeout(&self, dur: Duration) -> Result<ClusterQueryResponse, ClusterError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(reply) => reply.into_result(),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ClusterError::WaitTimeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ClusterError::ShuttingDown),
+        }
     }
 }
 
 /// The sharded retrieval front door — the `query` service mode next to
 /// [`ScoreRouter`]'s `score`. Same queues, backpressure, shedding,
-/// stealing, versioned hot swap, metrics, and shutdown drain; workers
-/// own a [`QueryScratch`] each and answer top-k retrieval against a
-/// shared [`PackedLshIndex`] behind the version `Arc`.
+/// stealing, versioned hot swap, metrics, supervision, and shutdown
+/// drain; workers own a [`QueryScratch`] each and answer top-k
+/// retrieval against a shared [`PackedLshIndex`] behind the version
+/// `Arc`.
 ///
 /// Responses are bit-identical to calling
 /// [`PackedLshIndex::query_with`] directly with the router's params —
-/// sharding, stealing, and hot swaps never change results, only which
-/// version answers (pinned by `rust/tests/lsh_parity.rs`).
+/// sharding, stealing, respawns, and hot swaps never change results,
+/// only which version answers (pinned by `rust/tests/lsh_parity.rs`).
 pub struct QueryRouter {
     shared: Arc<QueryShared>,
-    workers: Vec<thread::JoinHandle<()>>,
-    stopping: AtomicBool,
+    /// Owns the workers; joined (after the queues close) by
+    /// `stop_and_join`.
+    supervisor: Option<thread::JoinHandle<()>>,
     rr: AtomicU64,
     cfg: ClusterConfig,
     started: Instant,
@@ -857,10 +1381,10 @@ pub struct QueryRouter {
 }
 
 impl QueryRouter {
-    /// Start `cfg.shards` workers serving `index` as version 1. The
-    /// index is NOT cloned per shard — workers share the slab and
-    /// bucket tables behind the version `Arc`; per-worker state is the
-    /// retrieval scratch.
+    /// Start `cfg.shards` supervised workers serving `index` as
+    /// version 1. The index is NOT cloned per shard — workers share
+    /// the slab and bucket tables behind the version `Arc`; per-worker
+    /// state is the retrieval scratch.
     pub fn start(
         index: Arc<PackedLshIndex>,
         params: QueryParams,
@@ -870,24 +1394,14 @@ impl QueryRouter {
         let c = *index.config();
         let (bits, cols) = (index.bits(), index.corpus().cols());
         let shared = Arc::new(QueryShared {
-            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            core: Core::new(&cfg),
             index: SwapCell::new(VersionedIndex { version: 1, index }),
-            shard_metrics: (0..cfg.shards).map(|_| Metrics::new()).collect(),
-            shard_versions: (0..cfg.shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
-            steal: cfg.steal,
             params,
         });
-        let mut workers = Vec::with_capacity(cfg.shards);
-        for i in 0..cfg.shards {
-            let sh = Arc::clone(&shared);
-            let h = spawn_named(format!("minmax-query-w{i}"), move || query_worker_loop(i, &sh))
-                .map_err(|e| format!("spawn query worker {i}: {e}"))?;
-            workers.push(h);
-        }
+        let supervisor = Some(start_supervised(&shared)?);
         Ok(QueryRouter {
             shared,
-            workers,
-            stopping: AtomicBool::new(false),
+            supervisor,
             rr: AtomicU64::new(0),
             cfg,
             started: Instant::now(),
@@ -924,7 +1438,7 @@ impl QueryRouter {
 
     /// Per-shard metrics handle (tests / scraping).
     pub fn metrics(&self, shard: usize) -> &Metrics {
-        &self.shared.shard_metrics[shard]
+        &self.shared.core.shard_metrics[shard]
     }
 
     /// Publish a new index version: validate the shape invariants
@@ -967,7 +1481,7 @@ impl QueryRouter {
     }
 
     fn validate(&self, query: SparseRow<'_>) -> Result<(), ClusterError> {
-        if self.stopping.load(Ordering::Acquire) {
+        if self.shared.core.stopping.load(Ordering::Acquire) {
             return Err(ClusterError::ShuttingDown);
         }
         if query.indices.len() != query.values.len() {
@@ -1000,6 +1514,51 @@ impl QueryRouter {
         Ok(())
     }
 
+    fn submit_inner(
+        &self,
+        id: u64,
+        query: SparseRow<'_>,
+        top: usize,
+        expires: Option<Instant>,
+    ) -> Result<SubmittedQuery, ClusterError> {
+        self.validate(query)?;
+        let core = &self.shared.core;
+        let first = pick_least_deep(&core.queues, &self.rr);
+        let n = self.cfg.shards;
+        // Same accounting contract as score mode: every validated
+        // submit is a request, recorded before the push.
+        core.shard_metrics[first].record_request();
+        let (rtx, rrx) = mpsc::channel();
+        let mut req = QueryRequest {
+            id,
+            indices: query.indices.to_vec(),
+            values: query.values.to_vec(),
+            top,
+            submitted: Instant::now(),
+            expires,
+            tx: rtx,
+        };
+        for off in 0..n {
+            let i = (first + off) % n;
+            match core.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
+                Ok(()) => return Ok(SubmittedQuery { rx: rrx, shard: i }),
+                Err((PushError::Shed { depth, watermark }, _)) => {
+                    core.shard_metrics[first].record_shed();
+                    return Err(ClusterError::Shed { depth, watermark });
+                }
+                Err((PushError::Closed, _)) => {
+                    core.shard_metrics[first].record_rejected();
+                    return Err(ClusterError::ShuttingDown);
+                }
+                Err((PushError::Full, back)) => {
+                    req = back;
+                }
+            }
+        }
+        core.shard_metrics[first].record_rejected();
+        Err(ClusterError::QueueFull)
+    }
+
     /// Submit one sparse query for top-`top` retrieval. Identical
     /// flow-control contract to [`ScoreRouter::submit`]: `Shed` past
     /// the watermark, `QueueFull` only when every shard is at the hard
@@ -1010,37 +1569,19 @@ impl QueryRouter {
         query: SparseRow<'_>,
         top: usize,
     ) -> Result<SubmittedQuery, ClusterError> {
-        self.validate(query)?;
-        let first = pick_least_deep(&self.shared.queues, &self.rr);
-        let n = self.cfg.shards;
-        let (rtx, rrx) = mpsc::channel();
-        let mut req = QueryRequest {
-            id,
-            indices: query.indices.to_vec(),
-            values: query.values.to_vec(),
-            top,
-            submitted: Instant::now(),
-            tx: rtx,
-        };
-        for off in 0..n {
-            let i = (first + off) % n;
-            match self.shared.queues[i].push(req, self.cfg.queue_cap, self.cfg.shed_watermark) {
-                Ok(()) => {
-                    self.shared.shard_metrics[i].record_request();
-                    return Ok(SubmittedQuery { rx: rrx, shard: i });
-                }
-                Err((PushError::Shed { depth, watermark }, _)) => {
-                    self.shared.shard_metrics[i].record_shed();
-                    return Err(ClusterError::Shed { depth, watermark });
-                }
-                Err((PushError::Closed, _)) => return Err(ClusterError::ShuttingDown),
-                Err((PushError::Full, back)) => {
-                    req = back;
-                }
-            }
-        }
-        self.shared.shard_metrics[first].record_rejected();
-        Err(ClusterError::QueueFull)
+        self.submit_inner(id, query, top, None)
+    }
+
+    /// [`submit`](Self::submit) with a relative deadline — same
+    /// contract as [`ScoreRouter::submit_with_deadline`].
+    pub fn submit_with_deadline(
+        &self,
+        id: u64,
+        query: SparseRow<'_>,
+        top: usize,
+        deadline: Duration,
+    ) -> Result<SubmittedQuery, ClusterError> {
+        self.submit_inner(id, query, top, Some(Instant::now() + deadline))
     }
 
     /// Blocking submit-and-wait.
@@ -1053,42 +1594,89 @@ impl QueryRouter {
         self.submit(id, query, top)?.wait()
     }
 
+    /// Batch retrieval with the default [`RetryPolicy`] — see
+    /// [`query_batch_blocking_with`](Self::query_batch_blocking_with).
+    pub fn query_batch_blocking(
+        &self,
+        queries: &Csr,
+        top: usize,
+    ) -> Result<Vec<Vec<(u32, f64)>>, ClusterError> {
+        self.query_batch_blocking_with(queries, top, &RetryPolicy::default())
+    }
+
+    /// Run every row of `queries` through the cluster in row order —
+    /// the query-mode twin of
+    /// [`ScoreRouter::score_batch_blocking_with`]: a closed-loop
+    /// client that reaps its oldest outstanding response when a submit
+    /// is rejected, and otherwise backs off under `policy` (seeded
+    /// jittered exponential) instead of hot-spinning; `retried` and
+    /// `degraded` are exported in the snapshot.
+    pub fn query_batch_blocking_with(
+        &self,
+        queries: &Csr,
+        top: usize,
+        policy: &RetryPolicy,
+    ) -> Result<Vec<Vec<(u32, f64)>>, ClusterError> {
+        let n = queries.rows();
+        let mut out: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        let mut pending: VecDeque<(usize, SubmittedQuery)> = VecDeque::new();
+        let mut rng = Pcg64::new(policy.seed);
+        let core = &self.shared.core;
+        for i in 0..n {
+            let mut attempt = 0u32;
+            let mut degraded = false;
+            loop {
+                match self.submit(i as u64, queries.row(i), top) {
+                    Ok(s) => {
+                        pending.push_back((i, s));
+                        break;
+                    }
+                    Err(ClusterError::QueueFull) | Err(ClusterError::Shed { .. }) => {
+                        core.retried.fetch_add(1, Ordering::Release);
+                        if let Some((j, s)) = pending.pop_front() {
+                            out[j] = s.wait()?.hits;
+                        } else if attempt >= policy.max_attempts {
+                            if !degraded {
+                                degraded = true;
+                                core.degraded.fetch_add(1, Ordering::Release);
+                            }
+                            thread::sleep(policy.cap);
+                        } else {
+                            thread::sleep(policy.delay(attempt, &mut rng));
+                            attempt += 1;
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        for (j, s) in pending {
+            out[j] = s.wait()?.hits;
+        }
+        Ok(out)
+    }
+
     /// Cluster-wide snapshot — same shape and reconciliation contract
     /// as [`ScoreRouter::snapshot`].
     pub fn snapshot(&self) -> ClusterSnapshot {
-        assemble_snapshot(
-            &self.shared.shard_metrics,
-            &self.shared.shard_versions,
-            &self.shared.queues,
-            self.started,
-            self.current_version(),
-        )
+        assemble_snapshot(&self.shared.core, self.started, self.current_version())
     }
 
     /// Graceful shutdown: close every queue, drain, join.
     pub fn shutdown(mut self) {
-        self.stop_and_join();
-    }
-
-    fn stop_and_join(&mut self) {
-        self.stopping.store(true, Ordering::Release);
-        for q in &self.shared.queues {
-            q.close();
-        }
-        for h in std::mem::take(&mut self.workers) {
-            let _ = h.join();
-        }
+        self.shared.core.stop_and_join(&mut self.supervisor);
     }
 }
 
 impl Drop for QueryRouter {
     fn drop(&mut self) {
-        self.stop_and_join();
+        self.shared.core.stop_and_join(&mut self.supervisor);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::faults::silence_injected_panics;
     use super::*;
     use crate::data::synth::{generate, SynthConfig};
     use crate::prelude::Pipeline;
@@ -1103,7 +1691,34 @@ mod tests {
     }
 
     fn cfg(shards: usize) -> ClusterConfig {
-        ClusterConfig { shards, queue_cap: 64, shed_watermark: None, steal: true }
+        ClusterConfig { shards, queue_cap: 64, shed_watermark: None, steal: true, faults: None }
+    }
+
+    /// A plan injecting ONLY request panics, at certainty.
+    fn all_panic_plan() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            panic_rate: 1.0,
+            death_rate: 0.0,
+            slow_rate: 0.0,
+            slow: Duration::ZERO,
+            stall_rate: 0.0,
+            stall: Duration::ZERO,
+        }
+    }
+
+    /// A plan injecting ONLY worker deaths (after answering), at
+    /// certainty.
+    fn all_death_plan() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            panic_rate: 0.0,
+            death_rate: 1.0,
+            slow_rate: 0.0,
+            slow: Duration::ZERO,
+            stall_rate: 0.0,
+            stall: Duration::ZERO,
+        }
     }
 
     #[test]
@@ -1128,6 +1743,8 @@ mod tests {
         assert_eq!(snap.requests, test.rows() as u64);
         assert_eq!(snap.completed, snap.requests);
         assert_eq!(snap.version_counts, vec![(1, snap.completed)]);
+        assert!(snap.reconciles());
+        assert_eq!(snap.restarts, 0, "healthy run must not respawn");
         cluster.shutdown();
     }
 
@@ -1139,6 +1756,8 @@ mod tests {
         let want = direct.predict_batch(&ds.test_x);
         let got = cluster.score_batch_blocking(&ds.test_x).unwrap();
         assert_eq!(got, want);
+        let snap = cluster.snapshot();
+        assert!(snap.reconciles());
         cluster.shutdown();
     }
 
@@ -1227,7 +1846,13 @@ mod tests {
         // One shard, tiny queue, low watermark: a burst must shed.
         let cluster = ScoreRouter::start(
             scorer,
-            ClusterConfig { shards: 1, queue_cap: 4, shed_watermark: Some(2), steal: false },
+            ClusterConfig {
+                shards: 1,
+                queue_cap: 4,
+                shed_watermark: Some(2),
+                steal: false,
+                faults: None,
+            },
         )
         .unwrap();
         let test = ds.test_x.to_dense();
@@ -1253,8 +1878,11 @@ mod tests {
         }
         let snap = cluster.snapshot();
         assert_eq!(snap.shed, shed);
-        assert_eq!(snap.requests, n_accepted);
+        // `requests` counts every validated submit, shed included.
+        assert_eq!(snap.requests, n_accepted + shed);
         assert_eq!(snap.completed, n_accepted);
+        assert_eq!(snap.accepted(), n_accepted);
+        assert!(snap.reconciles());
         cluster.shutdown();
     }
 
@@ -1263,7 +1891,13 @@ mod tests {
         let (scorer, ds) = demo_scorer(9, 128, 2);
         let cluster = ScoreRouter::start(
             scorer,
-            ClusterConfig { shards: 2, queue_cap: 256, shed_watermark: None, steal: true },
+            ClusterConfig {
+                shards: 2,
+                queue_cap: 256,
+                shed_watermark: None,
+                steal: true,
+                faults: None,
+            },
         )
         .unwrap();
         let test = ds.test_x.to_dense();
@@ -1300,6 +1934,144 @@ mod tests {
             ClusterConfig { shed_watermark: Some(9999), queue_cap: 8, ..cfg(1) }
         )
         .is_err());
+    }
+
+    // ----------------------------------------------- fault tolerance
+
+    #[test]
+    fn injected_panics_become_typed_errors_not_dead_shards() {
+        silence_injected_panics();
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        let cluster = ScoreRouter::start(
+            scorer,
+            ClusterConfig { faults: Some(all_panic_plan()), ..cfg(2) },
+        )
+        .unwrap();
+        let test = ds.test_x.to_dense();
+        let n = 10u64;
+        for i in 0..n {
+            match cluster.score_blocking(i, test.row(i as usize % test.rows())) {
+                Err(ClusterError::WorkerPanicked { message }) => {
+                    assert!(message.contains(INJECTED), "unexpected message: {message}")
+                }
+                Err(other) => panic!("expected WorkerPanicked, got {other}"),
+                Ok(_) => panic!("request {i} must hit the injected panic"),
+            }
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.panicked, n);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.restarts, 0, "caught panics must not kill workers");
+        assert!(snap.reconciles());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn dead_workers_are_respawned_and_keep_serving() {
+        silence_injected_panics();
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        let direct = scorer.clone();
+        // One shard: every request must cross at least one death.
+        let cluster = ScoreRouter::start(
+            scorer,
+            ClusterConfig { faults: Some(all_death_plan()), ..cfg(1) },
+        )
+        .unwrap();
+        let test = ds.test_x.to_dense();
+        let mut scratch = direct.scratch();
+        let mut want = vec![0.0f64; direct.n_classes()];
+        let n = 5u64;
+        for i in 0..n {
+            let resp = cluster
+                .score_blocking(i, test.row(i as usize))
+                .expect("deaths happen after the answer — requests still complete");
+            direct.score_dense_into(test.row(i as usize), &mut scratch, &mut want);
+            assert_eq!(resp.decisions, want, "respawned worker must score identically");
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, n);
+        assert!(snap.restarts >= 1, "the supervisor must have respawned the dead shard");
+        assert!(snap.reconciles());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn deadlines_expire_and_waits_are_bounded() {
+        let (scorer, ds) = demo_scorer(9, 16, 2);
+        let slow_plan = FaultPlan {
+            seed: 3,
+            panic_rate: 0.0,
+            death_rate: 0.0,
+            slow_rate: 1.0,
+            slow: Duration::from_millis(30),
+            stall_rate: 0.0,
+            stall: Duration::ZERO,
+        };
+        let cluster = ScoreRouter::start(
+            scorer,
+            ClusterConfig { faults: Some(slow_plan), ..cfg(1) },
+        )
+        .unwrap();
+        let test = ds.test_x.to_dense();
+        // Bounded wait: the 30ms injected slowdown outlasts a 1ms
+        // budget; the handle stays live and a longer wait succeeds.
+        let s = cluster.submit(0, test.row(0)).unwrap();
+        assert!(matches!(
+            s.wait_timeout(Duration::from_millis(1)),
+            Err(ClusterError::WaitTimeout)
+        ));
+        let resp = s.wait_timeout(Duration::from_secs(10)).expect("request completes late");
+        assert_eq!(resp.id, 0);
+        // A zero deadline has expired by dequeue: answered immediately
+        // with DeadlineExceeded, no compute (and no injected slowdown —
+        // the deadline check precedes fault injection).
+        let s = cluster.submit_with_deadline(1, test.row(1), Duration::ZERO).unwrap();
+        assert!(matches!(s.wait(), Err(ClusterError::DeadlineExceeded)));
+        let snap = cluster.snapshot();
+        assert_eq!(snap.deadline_expired, 1);
+        assert_eq!(snap.completed, 1);
+        assert!(snap.reconciles());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn retry_policy_delay_is_bounded_and_deterministic() {
+        let policy = RetryPolicy::default();
+        let mut rng = Pcg64::new(policy.seed);
+        let mut rng2 = Pcg64::new(policy.seed);
+        for attempt in 0..32 {
+            let d = policy.delay(attempt, &mut rng);
+            assert!(d <= policy.cap, "attempt {attempt}: {d:?} above cap");
+            assert!(d >= policy.base / 2, "attempt {attempt}: {d:?} below base/2");
+            assert_eq!(d, policy.delay(attempt, &mut rng2), "same seed, same schedule");
+        }
+        // The exponential actually grows until the cap pins it.
+        let mut rng = Pcg64::new(7);
+        let d0 = policy.delay(0, &mut rng);
+        assert!(d0 <= policy.base, "attempt 0 jitters within [base/2, base]");
+    }
+
+    #[test]
+    fn query_mode_isolates_injected_panics_too() {
+        silence_injected_panics();
+        let index = demo_index(60, 48, 11);
+        let cluster = QueryRouter::start(
+            Arc::clone(&index),
+            QueryParams::default(),
+            ClusterConfig { faults: Some(all_panic_plan()), ..cfg(2) },
+        )
+        .unwrap();
+        let q = index.corpus().row(0);
+        match cluster.query_blocking(0, q, 3) {
+            Err(ClusterError::WorkerPanicked { message }) => {
+                assert!(message.contains(INJECTED))
+            }
+            other => panic!("expected WorkerPanicked, got {:?}", other.map(|r| r.hits)),
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.panicked, 1);
+        assert!(snap.reconciles());
+        cluster.shutdown();
     }
 
     // --------------------------------------------------- query mode
@@ -1348,8 +2120,30 @@ mod tests {
             assert_eq!(snap.requests, corpus.rows() as u64);
             assert_eq!(snap.completed, snap.requests);
             assert_eq!(snap.version_counts, vec![(1, snap.completed)]);
+            assert!(snap.reconciles());
             cluster.shutdown();
         }
+    }
+
+    #[test]
+    fn query_batch_matches_direct_index() {
+        let index = demo_index(80, 48, 19);
+        let params = QueryParams { probes: 2, min_agreement: 0.0 };
+        let cluster = QueryRouter::start(
+            Arc::clone(&index),
+            params,
+            ClusterConfig { queue_cap: 8, ..cfg(2) },
+        )
+        .unwrap();
+        let corpus = Arc::clone(index.corpus());
+        let got = cluster.query_batch_blocking(&corpus, 5).unwrap();
+        let mut scratch = QueryScratch::new();
+        for i in 0..corpus.rows() {
+            let want = index.query_with(corpus.row(i), 5, params, &mut scratch);
+            assert_eq!(got[i], want, "row {i}");
+        }
+        assert!(cluster.snapshot().reconciles());
+        cluster.shutdown();
     }
 
     #[test]
@@ -1408,6 +2202,7 @@ mod tests {
         let snap = cluster.snapshot();
         assert_eq!(snap.completed, snap.requests);
         assert_eq!(snap.version_counts.len(), 2);
+        assert!(snap.reconciles());
         cluster.shutdown();
     }
 }

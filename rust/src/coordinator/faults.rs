@@ -1,0 +1,252 @@
+//! Seeded fault injection for the serving stack's chaos harness.
+//!
+//! A [`FaultPlan`] describes *rates* of injected misbehavior; a
+//! [`FaultStream`] turns the plan into a deterministic per-worker
+//! decision sequence keyed by `(seed, shard, incarnation)`, so a chaos
+//! run is exactly reproducible from one u64 seed — including across
+//! supervisor respawns, because each incarnation of a shard's worker
+//! draws from its own stream instead of resuming the corpse's.
+//!
+//! Two injection points, matching the cluster's unwind boundary:
+//!
+//! * **In-work faults** run *inside* `catch_unwind`, before the real
+//!   computation: a panic (exercising the typed `WorkerPanicked` reply
+//!   path) or a slow-down (exercising deadlines and queue backlog).
+//! * **Post faults** run *after* the request has been answered: worker
+//!   death (a panic that escapes the worker loop, exercising the
+//!   supervisor's join/respawn path) or a queue stall (the worker
+//!   sleeps while its queue backs up, exercising stealing and shed).
+//!   Deaths deliberately never hold an unanswered request — losing one
+//!   would be a *bug* in the serving stack, not a simulated fault, and
+//!   the chaos tests assert exactly that by reconciling the snapshot.
+//!
+//! ## Gating
+//!
+//! Ambient (environment-variable) activation via [`FaultPlan::from_env`]
+//! is compiled out of release builds: a production binary ignores
+//! `MINMAX_FAULT_RATE`, so stray environment can never inject faults
+//! into a serving deployment. Programmatic plans passed through
+//! `ClusterConfig::faults` work in every profile — the coordinator
+//! bench measures fault-rate overhead in release mode that way.
+
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+/// Marker embedded in every injected panic payload. The unwind
+/// boundary surfaces it in `ClusterError::WorkerPanicked` messages
+/// (chaos tests use it to tell injected panics from real bugs) and
+/// [`silence_injected_panics`] uses it to keep test stderr readable.
+pub const INJECTED: &str = "minmax-injected-fault";
+
+/// Rates and shapes of injected faults. All rates are per-request
+/// probabilities in `[0, 1]`; in-work rates (`panic_rate`,
+/// `slow_rate`) and post rates (`death_rate`, `stall_rate`) are drawn
+/// independently, and within each group the outcomes are mutually
+/// exclusive (panic wins over slow, death wins over stall).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for the deterministic decision streams.
+    pub seed: u64,
+    /// P(injected panic inside the request's unwind boundary).
+    pub panic_rate: f64,
+    /// P(worker death — a panic escaping the worker loop — after a
+    /// request is answered).
+    pub death_rate: f64,
+    /// P(sleeping `slow` inside the unwind boundary before computing).
+    pub slow_rate: f64,
+    pub slow: Duration,
+    /// P(worker sleeping `stall` after a request is answered, letting
+    /// its queue back up).
+    pub stall_rate: f64,
+    pub stall: Duration,
+}
+
+impl FaultPlan {
+    /// The standard chaos mix at a single headline `rate`: panics at
+    /// `rate`, deaths at `rate/2`, slow-downs and stalls at `rate/4`
+    /// each. This is the shape the CI chaos matrix sweeps.
+    pub fn with_rate(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            panic_rate: rate,
+            death_rate: rate / 2.0,
+            slow_rate: rate / 4.0,
+            slow: Duration::from_micros(500),
+            stall_rate: rate / 4.0,
+            stall: Duration::from_millis(1),
+        }
+    }
+
+    /// Ambient activation from `MINMAX_FAULT_RATE` (headline rate) and
+    /// `MINMAX_FAULT_SEED` (optional; defaults to a fixed constant so
+    /// bare `MINMAX_FAULT_RATE=0.2 cargo test` is still deterministic).
+    ///
+    /// Returns `None` in release builds unconditionally — see the
+    /// module-level gating notes.
+    pub fn from_env() -> Option<FaultPlan> {
+        if !cfg!(debug_assertions) {
+            return None;
+        }
+        let rate: f64 = std::env::var("MINMAX_FAULT_RATE").ok()?.trim().parse().ok()?;
+        if rate <= 0.0 {
+            return None;
+        }
+        let seed: u64 = std::env::var("MINMAX_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Some(FaultPlan::with_rate(seed, rate))
+    }
+
+    /// The decision stream for one worker incarnation. Streams are
+    /// keyed so that shard 3's second respawn draws the same sequence
+    /// in every run with the same seed, independent of timing.
+    pub(crate) fn stream(&self, shard: usize, incarnation: u64) -> FaultStream {
+        FaultStream {
+            plan: self.clone(),
+            rng: Pcg64::new_stream(self.seed, (shard as u64) ^ incarnation.rotate_left(32)),
+        }
+    }
+}
+
+/// Deterministic per-worker fault decisions — one [`FaultDecision`]
+/// per served request, always drawing the same number of variates so
+/// the sequence is rate-independent.
+pub(crate) struct FaultStream {
+    plan: FaultPlan,
+    rng: Pcg64,
+}
+
+/// What to inject around one request.
+#[derive(Default)]
+pub(crate) struct FaultDecision {
+    /// Sleep this long inside the unwind boundary before computing.
+    pub slow: Option<Duration>,
+    /// Panic inside the unwind boundary instead of computing.
+    pub panic: bool,
+    /// After the request is answered: die or stall.
+    pub post: Option<PostFault>,
+}
+
+/// A fault the worker executes *after* answering a request.
+pub(crate) enum PostFault {
+    /// Panic out of the worker loop (the supervisor respawns).
+    Die,
+    /// Sleep with the queue untouched (stealing/shed take over).
+    Stall(Duration),
+}
+
+impl FaultStream {
+    pub fn next(&mut self) -> FaultDecision {
+        let work = self.rng.uniform();
+        let post = self.rng.uniform();
+        let plan = &self.plan;
+        let mut d = FaultDecision::default();
+        if work < plan.panic_rate {
+            d.panic = true;
+        } else if work < plan.panic_rate + plan.slow_rate {
+            d.slow = Some(plan.slow);
+        }
+        if post < plan.death_rate {
+            d.post = Some(PostFault::Die);
+        } else if post < plan.death_rate + plan.stall_rate {
+            d.post = Some(PostFault::Stall(plan.stall));
+        }
+        d
+    }
+}
+
+/// Best-effort extraction of a panic payload's message — `&str` and
+/// `String` payloads (everything `panic!` produces) come back verbatim;
+/// anything else gets a placeholder.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
+
+/// Install a process-wide panic hook that suppresses the default
+/// stderr report for *injected* panics (payloads containing
+/// [`INJECTED`]) and delegates everything else to the previously
+/// installed hook. Chaos tests and the fault-rate bench call this once
+/// at startup so thousands of injected panics don't drown real
+/// diagnostics; calling it more than once just deepens the delegation
+/// chain harmlessly.
+pub fn silence_injected_panics() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<String>()
+            .map(|s| s.contains(INJECTED))
+            .or_else(|| info.payload().downcast_ref::<&str>().map(|s| s.contains(INJECTED)))
+            .unwrap_or(false);
+        if !injected {
+            prev(info);
+        }
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(stream: &mut FaultStream, n: usize) -> Vec<(bool, bool, bool, bool)> {
+        (0..n)
+            .map(|_| {
+                let d = stream.next();
+                let (die, stall) = match d.post {
+                    Some(PostFault::Die) => (true, false),
+                    Some(PostFault::Stall(_)) => (false, true),
+                    None => (false, false),
+                };
+                (d.panic, d.slow.is_some(), die, stall)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_incarnation() {
+        let plan = FaultPlan::with_rate(42, 0.3);
+        let a = drain(&mut plan.stream(1, 0), 200);
+        let b = drain(&mut plan.stream(1, 0), 200);
+        assert_eq!(a, b, "same (seed, shard, incarnation) must replay identically");
+        let c = drain(&mut plan.stream(1, 1), 200);
+        let d = drain(&mut plan.stream(2, 0), 200);
+        assert_ne!(a, c, "a respawned worker draws a fresh stream");
+        assert_ne!(a, d, "shards draw distinct streams");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let plan = FaultPlan::with_rate(7, 0.2);
+        let n = 20_000;
+        let draws = drain(&mut plan.stream(0, 0), n);
+        let panics = draws.iter().filter(|d| d.0).count() as f64 / n as f64;
+        let deaths = draws.iter().filter(|d| d.2).count() as f64 / n as f64;
+        assert!((panics - 0.2).abs() < 0.02, "panic rate {panics}");
+        assert!((deaths - 0.1).abs() < 0.02, "death rate {deaths}");
+    }
+
+    #[test]
+    fn zero_rate_injects_nothing() {
+        let plan = FaultPlan::with_rate(7, 0.0);
+        let draws = drain(&mut plan.stream(0, 0), 1000);
+        assert!(draws.iter().all(|d| !d.0 && !d.1 && !d.2 && !d.3));
+    }
+
+    #[test]
+    fn panic_message_extracts_str_and_string() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(s.as_ref()), "boom");
+        let s: Box<dyn std::any::Any + Send> = Box::new(format!("{INJECTED}: x"));
+        assert!(panic_message(s.as_ref()).contains(INJECTED));
+        let s: Box<dyn std::any::Any + Send> = Box::new(17u32);
+        assert!(panic_message(s.as_ref()).contains("unknown"));
+    }
+}

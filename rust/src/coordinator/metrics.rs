@@ -12,7 +12,8 @@
 //!
 //! Increments use `Release`, snapshot loads use `Acquire`, and
 //! [`Metrics::snapshot`] reads the *outcome* counters (`completed`,
-//! `rejected`, `shed`) **before** the `requests` counter. Every
+//! `rejected`, `shed`, `panicked`, `deadline`) **before** the
+//! `requests` counter. Every
 //! outcome increment is preceded by its request increment (same thread
 //! for rejections; via the request queue's happens-before edge for
 //! completions), so observing an outcome implies the matching request
@@ -62,6 +63,18 @@ pub struct Metrics {
     shed: AtomicU64,
     /// Requests answered — exactly one latency observation each.
     completed: AtomicU64,
+    /// Requests answered with a typed `WorkerPanicked` reply: the
+    /// request's own work panicked inside the unwind boundary. Counts
+    /// toward the outcome total, never toward `completed`.
+    panicked: AtomicU64,
+    /// Requests answered with `DeadlineExceeded` at dequeue — the
+    /// client-requested deadline had already passed, so the work was
+    /// skipped. Accounted next to `shed` in the cluster snapshot.
+    deadline: AtomicU64,
+    /// Worker threads respawned by the supervisor after an abnormal
+    /// (panicking) death. Not an outcome counter: restarts are a
+    /// property of the shard, not of any one request.
+    restarts: AtomicU64,
     batches: AtomicU64,
     dists: Mutex<Dists>,
 }
@@ -80,6 +93,9 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+            deadline: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             dists: Mutex::new(Dists {
                 batch_fill: Online::new(),
@@ -101,6 +117,25 @@ impl Metrics {
     /// A request rejected by load shedding (queue-depth watermark).
     pub fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Release);
+    }
+
+    /// A request whose work panicked inside the unwind boundary and
+    /// was answered with a typed `WorkerPanicked` reply — an outcome
+    /// counter, mutually exclusive with `completed`.
+    pub fn record_panicked(&self) {
+        self.panicked.fetch_add(1, Ordering::Release);
+    }
+
+    /// A request answered `DeadlineExceeded` at dequeue — an outcome
+    /// counter, mutually exclusive with `completed`.
+    pub fn record_deadline(&self) {
+        self.deadline.fetch_add(1, Ordering::Release);
+    }
+
+    /// The supervisor respawned this shard's worker after an abnormal
+    /// death (NOT an outcome counter — see the field docs).
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Release);
     }
 
     /// `fill` is the fraction of the batch capacity actually used.
@@ -135,6 +170,9 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Acquire);
         let rejected = self.rejected.load(Ordering::Acquire);
         let shed = self.shed.load(Ordering::Acquire);
+        let panicked = self.panicked.load(Ordering::Acquire);
+        let deadline = self.deadline.load(Ordering::Acquire);
+        let restarts = self.restarts.load(Ordering::Acquire);
         let batches = self.batches.load(Ordering::Acquire);
         let requests = self.requests.load(Ordering::Acquire);
         let elapsed = self.started.elapsed().as_secs_f64();
@@ -143,6 +181,9 @@ impl Metrics {
             rejected,
             shed,
             completed,
+            panicked,
+            deadline_expired: deadline,
+            restarts,
             batches,
             elapsed_s: elapsed,
             throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
@@ -167,9 +208,15 @@ pub struct Snapshot {
     /// `rejected`.
     pub shed: u64,
     /// Requests answered; at quiescence
-    /// `requests == completed + rejected` (service semantics — see
-    /// `Metrics`).
+    /// `requests == completed + rejected + shed + deadline_expired +
+    /// panicked` (the fault-model reconciliation — see `Metrics`).
     pub completed: u64,
+    /// Requests answered with a typed worker-panic reply.
+    pub panicked: u64,
+    /// Requests answered `DeadlineExceeded` at dequeue.
+    pub deadline_expired: u64,
+    /// Supervisor respawns of this shard's worker (not an outcome).
+    pub restarts: u64,
     pub batches: u64,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
@@ -196,6 +243,9 @@ impl Snapshot {
             .set("rejected", self.rejected)
             .set("shed", self.shed)
             .set("completed", self.completed)
+            .set("panicked", self.panicked)
+            .set("deadline_expired", self.deadline_expired)
+            .set("restarts", self.restarts)
             .set("batches", self.batches)
             .set("elapsed_s", self.elapsed_s)
             .set("throughput_rps", self.throughput_rps)
@@ -223,11 +273,14 @@ impl Snapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} completed={} rejected={} shed={} batches={} rps={:.1} fill={:.2} p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            "requests={} completed={} rejected={} shed={} panicked={} deadline={} restarts={} batches={} rps={:.1} fill={:.2} p50={:.2}ms p95={:.2}ms p99={:.2}ms",
             self.requests,
             self.completed,
             self.rejected,
             self.shed,
+            self.panicked,
+            self.deadline_expired,
+            self.restarts,
             self.batches,
             self.throughput_rps,
             self.mean_batch_fill,
@@ -254,11 +307,17 @@ mod tests {
         m.record_batch(4, 4);
         m.record_latency_ms(1.0);
         m.record_latency_ms(3.0);
+        m.record_panicked();
+        m.record_deadline();
+        m.record_restart();
         let s = m.snapshot();
         assert_eq!(s.requests, 5);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.shed, 0);
+        assert_eq!(s.panicked, 1);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.restarts, 1);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
         assert!(s.latency_p50_ms >= 1.0 && s.latency_p50_ms <= 3.0);
@@ -288,6 +347,9 @@ mod tests {
         assert!(json.contains("latency_bucket_le_ms"));
         assert!(json.contains("latency_hist_p99_ms"));
         assert!(json.contains("\"shed\""));
+        assert!(json.contains("\"panicked\""));
+        assert!(json.contains("\"deadline_expired\""));
+        assert!(json.contains("\"restarts\""));
     }
 
     #[test]
@@ -324,10 +386,11 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for i in 0..PER_WRITER {
                     m.record_request();
-                    if (i + t) % 8 == 0 {
-                        m.record_rejected();
-                    } else {
-                        m.record_latency_ms(0.5);
+                    match (i + t) % 8 {
+                        0 => m.record_rejected(),
+                        1 => m.record_panicked(),
+                        2 => m.record_deadline(),
+                        _ => m.record_latency_ms(0.5),
                     }
                 }
             }));
@@ -337,11 +400,11 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for _ in 0..300 {
                     let s = m.snapshot();
+                    let outcomes = s.completed + s.rejected + s.panicked + s.deadline_expired;
                     assert!(
-                        s.completed + s.rejected <= s.requests,
-                        "torn snapshot: completed={} rejected={} > requests={}",
-                        s.completed,
-                        s.rejected,
+                        outcomes <= s.requests,
+                        "torn snapshot: outcomes={} > requests={}",
+                        outcomes,
                         s.requests
                     );
                 }
@@ -352,7 +415,7 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.requests, WRITERS * PER_WRITER);
-        assert_eq!(s.completed + s.rejected, s.requests);
+        assert_eq!(s.completed + s.rejected + s.panicked + s.deadline_expired, s.requests);
         // Every completion left exactly one histogram observation.
         assert_eq!(s.latency_hist.iter().sum::<u64>(), s.completed);
     }

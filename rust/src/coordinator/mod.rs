@@ -17,7 +17,13 @@
 //!   metrics merged into a cluster snapshot. Two service modes over
 //!   the same machinery: `score` ([`ScoreRouter`], fused linear
 //!   classification) and `query` ([`QueryRouter`], sub-linear top-k
-//!   retrieval against a shared `PackedLshIndex`).
+//!   retrieval against a shared `PackedLshIndex`). Workers are
+//!   panic-isolated and supervised: request panics come back as typed
+//!   errors, dead workers are respawned, deadlines bound queueing, and
+//!   batch clients retry under a seeded backoff [`RetryPolicy`].
+//! * [`faults`] — the seeded fault-injection harness
+//!   ([`FaultPlan`]) the chaos tests and resilience benches drive;
+//!   env-activation is compiled out of release builds.
 //! * [`pipeline`] — the offline batch pipeline: hash a dataset, encode
 //!   0-bit CWS one-hot codes (`features::CodeMatrix`, with CSR export
 //!   for IO), train/evaluate the linear model, and export weights in
@@ -31,6 +37,7 @@
 
 pub mod backend;
 pub mod cluster;
+pub mod faults;
 pub mod metrics;
 pub mod pipeline;
 #[doc(hidden)]
@@ -41,8 +48,9 @@ pub mod service;
 pub use backend::{NativeBackend, PjrtBackend, PjrtSketcher, SketcherBackend};
 pub use cluster::{
     ClusterConfig, ClusterError, ClusterQueryResponse, ClusterScoreResponse, ClusterSnapshot,
-    QueryRouter, ScoreRouter, Submitted, SubmittedQuery,
+    QueryRouter, RetryPolicy, ScoreRouter, Submitted, SubmittedQuery,
 };
+pub use faults::{silence_injected_panics, FaultPlan, INJECTED};
 pub use metrics::{Metrics, Snapshot, LATENCY_BUCKETS_MS};
 pub use pipeline::{
     export_scorer_slab, export_scorer_weights, hash_dataset, hash_matrix_native,

@@ -12,6 +12,8 @@
 //! ([`super::cluster::QueryRouter`]) — via `pick_least_deep` over
 //! queue depths instead of outstanding counts.
 
+use std::time::Duration;
+
 use crate::serve::Scorer;
 use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::mpsc;
@@ -109,7 +111,9 @@ impl Router {
     /// decremented by [`Routed::wait`].
     fn route<R>(
         &self,
-        try_submit: impl Fn(&HashService) -> Result<mpsc::Receiver<R>, SubmitError>,
+        try_submit: impl Fn(
+            &HashService,
+        ) -> Result<mpsc::Receiver<Result<R, SubmitError>>, SubmitError>,
     ) -> Result<Routed<'_, R>, SubmitError> {
         let n = self.replicas.len();
         let first = self.pick();
@@ -194,7 +198,7 @@ impl Router {
 pub struct Routed<'r, R> {
     router: &'r Router,
     replica: usize,
-    rx: mpsc::Receiver<R>,
+    rx: mpsc::Receiver<Result<R, SubmitError>>,
 }
 
 /// Hash-mode response handle.
@@ -213,7 +217,30 @@ impl<'r, R> Routed<'r, R> {
         // relaxed-ok: outstanding-count routing hint (pairs with the
         // increment in `route`); staleness only skews load spreading.
         self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
-        res
+        // A worker panic arrives as an `Err(WorkerPanicked)` payload —
+        // one typed response per accepted request, even for poison.
+        res?
+    }
+
+    /// Bounded wait: like [`Routed::wait`] but gives up after
+    /// `timeout` with [`SubmitError::WaitTimeout`]. On timeout the
+    /// request is still in flight — the handle stays usable (`&self`)
+    /// and the replica's outstanding count is only decremented once a
+    /// response (or disconnection) is actually observed, keeping the
+    /// router's load accounting truthful about the straggler.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<R, SubmitError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(inner) => {
+                // relaxed-ok: routing hint, pairs with `route`.
+                self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
+                inner
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(SubmitError::WaitTimeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.router.outstanding[self.replica].fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::ShuttingDown)
+            }
+        }
     }
 }
 
@@ -322,6 +349,26 @@ mod tests {
         // Whether rejections occur depends on timing; the invariant is
         // that accepted + rejected == 50 and nothing is lost.
         assert_eq!(accepted + rejected, 50);
+        router.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_bounds_the_client_and_keeps_the_response() {
+        // A lone request sits in the batcher for max_wait before the
+        // flush: a shorter wait_timeout must return WaitTimeout, and
+        // the response must still be receivable afterwards.
+        let slow_batcher = ServiceConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(200),
+            ..cfg()
+        };
+        let router = Router::start(1, slow_batcher, |_| NativeBackend).unwrap();
+        let v: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let h = router.submit(0, &v).unwrap();
+        assert!(matches!(h.wait_timeout(Duration::from_millis(5)), Err(SubmitError::WaitTimeout)));
+        // The request was not cancelled: a patient wait still gets it.
+        let resp = h.wait_timeout(Duration::from_secs(10)).expect("response after timeout");
+        assert_eq!(resp.id, 0);
         router.shutdown();
     }
 

@@ -24,11 +24,20 @@
 //! service answers plain hash submits too, from the scorer's own
 //! parameter slabs.
 //!
+//! The batch loop is **panic-isolated**: request computation runs
+//! inside `catch_unwind`, so a poisoned vector (or a buggy third-party
+//! backend) answers its own request(s) with the typed
+//! [`SubmitError::WorkerPanicked`] and the worker keeps serving — it
+//! never takes the whole service down with it. The sharded cluster
+//! layer ([`super::cluster`]) extends the same contract with worker
+//! supervision and deadlines.
+//!
 //! Retrieval (top-k similar rows rather than a class label) is the
 //! third service mode and lives one layer up: see
 //! [`super::cluster::QueryRouter`], which shards an LSH index the same
 //! way [`super::cluster::ScoreRouter`] shards scorers.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use crate::util::sync::atomic::{AtomicBool, Ordering};
@@ -39,6 +48,7 @@ use crate::serve::{argmax, Scorer, Scratch};
 use crate::sketch::Sketcher;
 
 use super::backend::SketcherBackend;
+use super::faults::panic_message;
 use super::metrics::Metrics;
 
 #[derive(Debug, Clone)]
@@ -92,10 +102,13 @@ pub struct ScoreResponse {
 
 /// Where a request's answer goes: hash submits want samples, score
 /// submits want decisions. One queue carries both so the batcher and
-/// backpressure logic stay single-path.
+/// backpressure logic stay single-path. The payload is a `Result` so a
+/// request whose computation panicked still gets its exactly-one
+/// response — as the typed [`SubmitError::WorkerPanicked`] — instead
+/// of a dropped channel the client cannot tell from shutdown.
 enum Responder {
-    Hash(mpsc::Sender<HashResponse>),
-    Score(mpsc::Sender<ScoreResponse>),
+    Hash(mpsc::Sender<Result<HashResponse, SubmitError>>),
+    Score(mpsc::Sender<Result<ScoreResponse, SubmitError>>),
 }
 
 struct Request {
@@ -170,6 +183,16 @@ pub enum SubmitError {
     BadInput(String),
     /// `submit_score` on a service started in hash mode.
     NotScoring,
+    /// The worker's computation panicked serving this request. The
+    /// panic was caught at the batch loop's unwind boundary: the worker
+    /// (and every other queued request) keeps going, and this request's
+    /// response channel carries the typed error with the captured panic
+    /// message instead of silently disconnecting.
+    WorkerPanicked { message: String },
+    /// A bounded wait ([`super::Routed::wait_timeout`]) elapsed before
+    /// the response arrived. The request is still in flight — it was
+    /// not cancelled, and its response may still be received later.
+    WaitTimeout,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -179,6 +202,12 @@ impl std::fmt::Display for SubmitError {
             SubmitError::ShuttingDown => write!(f, "service shutting down"),
             SubmitError::BadInput(s) => write!(f, "bad input: {s}"),
             SubmitError::NotScoring => write!(f, "service has no scorer (hash mode)"),
+            SubmitError::WorkerPanicked { message } => {
+                write!(f, "worker panicked serving this request: {message}")
+            }
+            SubmitError::WaitTimeout => {
+                write!(f, "timed out waiting for the response (request may still complete)")
+            }
         }
     }
 }
@@ -346,13 +375,14 @@ impl HashService {
     }
 
     /// Submit one vector for hashing; the response arrives on the
-    /// returned channel. Fails fast with `QueueFull` under
-    /// backpressure.
+    /// returned channel (an `Err(WorkerPanicked)` payload if the
+    /// computation panicked — the request still gets exactly one
+    /// answer). Fails fast with `QueueFull` under backpressure.
     pub fn submit(
         &self,
         id: u64,
         vector: Vec<f32>,
-    ) -> Result<mpsc::Receiver<HashResponse>, SubmitError> {
+    ) -> Result<mpsc::Receiver<Result<HashResponse, SubmitError>>, SubmitError> {
         self.validate(&vector)?;
         let (rtx, rrx) = mpsc::channel();
         self.enqueue(Request {
@@ -370,7 +400,7 @@ impl HashService {
         &self,
         id: u64,
         vector: &[f32],
-    ) -> Result<mpsc::Receiver<ScoreResponse>, SubmitError> {
+    ) -> Result<mpsc::Receiver<Result<ScoreResponse, SubmitError>>, SubmitError> {
         if self.scoring.is_none() {
             return Err(SubmitError::NotScoring);
         }
@@ -389,13 +419,13 @@ impl HashService {
     /// vector — the one owned copy is made here, not by every caller.
     pub fn hash_blocking(&self, id: u64, vector: &[f32]) -> Result<HashResponse, SubmitError> {
         let rx = self.submit(id, vector.to_vec())?;
-        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)?
     }
 
     /// Blocking convenience: submit for scoring and wait.
     pub fn score_blocking(&self, id: u64, vector: &[f32]) -> Result<ScoreResponse, SubmitError> {
         let rx = self.submit_score(id, vector)?;
-        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)?
     }
 
     /// Blocking classification: submit for scoring, return only the
@@ -507,22 +537,48 @@ fn run_batch(exec: &mut WorkerExec, batch: &[Request], metrics: &Metrics) {
     match exec {
         WorkerExec::Hash(sketcher) => {
             let rows: Vec<&[f32]> = batch.iter().map(|r| r.vector.as_slice()).collect();
-            let sketched = sketcher.sketch_dense_batch(&rows);
-            // Hard contract on third-party backends: one output per
-            // request. A silent zip truncation would drop responses.
-            assert_eq!(
-                sketched.len(),
-                batch.len(),
-                "sketcher '{}' returned {} sample streams for {} requests",
-                sketcher.name(),
-                sketched.len(),
-                batch.len()
-            );
-            for (req, samples) in batch.iter().zip(sketched) {
-                match &req.resp {
-                    Responder::Hash(_) => respond_hash(req, samples, metrics),
-                    // submit_score is rejected on hash-mode services.
-                    Responder::Score(_) => unreachable!("score request on hash worker"),
+            // Unwind boundary, per batch: hash backends compute the
+            // whole batch in one call, so a panic inside poisons every
+            // request in it — each gets the typed error — but never
+            // the worker, which keeps serving the next batch. No lock
+            // is held across the boundary (nothing here to poison).
+            let sketched = catch_unwind(AssertUnwindSafe(|| {
+                let sketched = sketcher.sketch_dense_batch(&rows);
+                // Hard contract on third-party backends: one output per
+                // request. A silent zip truncation would drop responses.
+                assert_eq!(
+                    sketched.len(),
+                    batch.len(),
+                    "sketcher '{}' returned {} sample streams for {} requests",
+                    sketcher.name(),
+                    sketched.len(),
+                    batch.len()
+                );
+                sketched
+            }));
+            match sketched {
+                Ok(sketched) => {
+                    for (req, samples) in batch.iter().zip(sketched) {
+                        match &req.resp {
+                            Responder::Hash(_) => respond_hash(req, samples, metrics),
+                            // submit_score is rejected on hash-mode services.
+                            Responder::Score(_) => unreachable!("score request on hash worker"),
+                        }
+                    }
+                }
+                Err(payload) => {
+                    let message = panic_message(payload.as_ref());
+                    for req in batch {
+                        metrics.record_panicked();
+                        match &req.resp {
+                            Responder::Hash(tx) => {
+                                let _ = tx.send(Err(SubmitError::WorkerPanicked {
+                                    message: message.clone(),
+                                }));
+                            }
+                            Responder::Score(_) => unreachable!("score request on hash worker"),
+                        }
+                    }
                 }
             }
         }
@@ -531,29 +587,71 @@ fn run_batch(exec: &mut WorkerExec, batch: &[Request], metrics: &Metrics) {
             for req in batch {
                 match &req.resp {
                     Responder::Score(tx) => {
-                        scorer.score_dense_into(&req.vector, scratch, staging);
-                        let label = argmax(staging);
-                        let latency = req.submitted.elapsed();
-                        metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
-                        let _ = tx.send(ScoreResponse {
-                            id: req.id,
-                            decisions: staging.clone(),
-                            label,
-                            latency,
-                        });
+                        // Unwind boundary, per request: one poisoned
+                        // vector answers with the typed error; the
+                        // batch's other requests still complete.
+                        let computed = catch_unwind(AssertUnwindSafe(|| {
+                            scorer.score_dense_into(&req.vector, scratch, staging);
+                            (staging.clone(), argmax(staging))
+                        }));
+                        match computed {
+                            Ok((decisions, label)) => {
+                                let latency = req.submitted.elapsed();
+                                metrics.record_latency_ms(latency.as_secs_f64() * 1e3);
+                                let _ = tx.send(Ok(ScoreResponse {
+                                    id: req.id,
+                                    decisions,
+                                    label,
+                                    latency,
+                                }));
+                            }
+                            Err(payload) => {
+                                metrics.record_panicked();
+                                reset_score_state(scorer, scratch, sketch, samples);
+                                let _ = tx.send(Err(SubmitError::WorkerPanicked {
+                                    message: panic_message(payload.as_ref()),
+                                }));
+                            }
+                        }
                     }
                     // Hash submits on a score-mode service ride the
                     // scorer's own parameter slabs (note: the scorer
                     // hashes the RAW vector — its scaling stage applies
                     // to scoring only).
-                    Responder::Hash(_) => {
-                        scorer.engine().sketch_dense_with(&req.vector, sketch, samples);
-                        respond_hash(req, samples.clone(), metrics);
+                    Responder::Hash(tx) => {
+                        let computed = catch_unwind(AssertUnwindSafe(|| {
+                            scorer.engine().sketch_dense_with(&req.vector, sketch, samples);
+                            samples.clone()
+                        }));
+                        match computed {
+                            Ok(s) => respond_hash(req, s, metrics),
+                            Err(payload) => {
+                                metrics.record_panicked();
+                                reset_score_state(scorer, scratch, sketch, samples);
+                                let _ = tx.send(Err(SubmitError::WorkerPanicked {
+                                    message: panic_message(payload.as_ref()),
+                                }));
+                            }
+                        }
                     }
                 }
             }
         }
     }
+}
+
+/// After a caught panic the long-lived scratch arenas may hold
+/// partially-written state; rebuild them so the next request starts
+/// from the same clean slate a fresh worker would.
+fn reset_score_state(
+    scorer: &Scorer,
+    scratch: &mut Scratch,
+    sketch: &mut SketchScratch,
+    samples: &mut Vec<CwsSample>,
+) {
+    *scratch = scorer.scratch();
+    *sketch = SketchScratch::new();
+    *samples = vec![CwsSample { i_star: u32::MAX, t_star: 0 }; scorer.k()];
 }
 
 fn respond_hash(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
@@ -563,7 +661,7 @@ fn respond_hash(req: &Request, samples: Vec<CwsSample>, metrics: &Metrics) {
         Responder::Hash(tx) => tx,
         Responder::Score(_) => unreachable!("hash response to score responder"),
     };
-    let _ = tx.send(HashResponse { id: req.id, samples, latency });
+    let _ = tx.send(Ok(HashResponse { id: req.id, samples, latency }));
 }
 
 #[cfg(test)]
@@ -605,7 +703,7 @@ mod tests {
         }
         let hasher = CwsHasher::new(seed, 16);
         for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.id, i as u64);
             assert_eq!(resp.samples, hasher.hash_dense(&inputs[i]));
         }
@@ -687,7 +785,7 @@ mod tests {
         assert!(full > 0, "expected backpressure rejections");
         assert!(svc.metrics().snapshot().rejected > 0);
         for rx in rxs {
-            let _ = rx.recv().unwrap();
+            let _ = rx.recv().unwrap().unwrap();
         }
         svc.shutdown();
     }
@@ -808,12 +906,63 @@ mod tests {
         svc.shutdown();
         // After shutdown returns every accepted response is buffered.
         for (i, rx) in rxs {
-            let resp = rx.recv().expect("accepted request dropped at shutdown");
+            let resp =
+                rx.recv().expect("accepted request dropped at shutdown").expect("request failed");
             assert_eq!(resp.id, i);
             // Exactly one: a second recv must see the closed channel.
             assert!(rx.try_recv().is_err(), "duplicate response for {i}");
         }
         assert_eq!(accepted + rejected, 200);
+    }
+
+    /// A sketcher that panics on a marker vector — stands in for any
+    /// buggy computation so the unwind boundary can be pinned.
+    struct PoisonSketcher(crate::sketch::MinwiseSketcher);
+
+    impl crate::sketch::Sketcher for PoisonSketcher {
+        fn k(&self) -> usize {
+            crate::sketch::Sketcher::k(&self.0)
+        }
+        fn seed(&self) -> u64 {
+            crate::sketch::Sketcher::seed(&self.0)
+        }
+        fn name(&self) -> &'static str {
+            "poison"
+        }
+        fn sketch_sparse(&self, row: crate::data::SparseRow<'_>) -> Vec<CwsSample> {
+            self.0.sketch_sparse(row)
+        }
+        fn sketch_dense(&self, u: &[f32]) -> Vec<CwsSample> {
+            assert!(u[0] != 666.0, "poison vector exploded");
+            crate::sketch::Sketcher::sketch_dense(&self.0, u)
+        }
+    }
+
+    #[test]
+    fn worker_panic_yields_typed_error_and_worker_survives() {
+        let factory = |cfg: &ServiceConfig| -> Result<Box<dyn crate::sketch::Sketcher>, String> {
+            Ok(Box::new(PoisonSketcher(crate::sketch::MinwiseSketcher::new(cfg.seed, cfg.k))))
+        };
+        let svc = HashService::start(cfg(8, 16), factory).unwrap();
+        let good: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let mut poison = good.clone();
+        poison[0] = 666.0;
+        assert!(svc.hash_blocking(0, &good).is_ok());
+        match svc.hash_blocking(1, &poison) {
+            Err(SubmitError::WorkerPanicked { message }) => {
+                assert!(message.contains("poison vector exploded"), "{message}");
+            }
+            Ok(_) => panic!("poison request must fail"),
+            Err(e) => panic!("wrong error: {e}"),
+        }
+        // The worker survived the panic and keeps serving; the panic
+        // is visible in the metrics.
+        let resp = svc.hash_blocking(2, &good).unwrap();
+        assert_eq!(resp.samples.len(), 8);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.panicked, 1);
+        assert_eq!(snap.requests, 3);
+        svc.shutdown();
     }
 
     #[test]

@@ -46,9 +46,10 @@ pub use crate::svm::{
 
 // Serving stack.
 pub use crate::coordinator::{
-    ClusterConfig, ClusterError, ClusterQueryResponse, ClusterScoreResponse, ClusterSnapshot,
-    HashResponse, HashService, NativeBackend, PipelineConfig, PjrtBackend, QueryRouter, Router,
-    ScoreResponse, ScoreRouter, ServiceConfig, SketcherBackend, SubmitError, SubmittedQuery,
+    silence_injected_panics, ClusterConfig, ClusterError, ClusterQueryResponse,
+    ClusterScoreResponse, ClusterSnapshot, FaultPlan, HashResponse, HashService, NativeBackend,
+    PipelineConfig, PjrtBackend, QueryRouter, RetryPolicy, Router, ScoreResponse, ScoreRouter,
+    ServiceConfig, SketcherBackend, SubmitError, SubmittedQuery,
 };
 
 // Runtime bridge (stubbed without the `pjrt` feature).

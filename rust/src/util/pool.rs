@@ -284,26 +284,66 @@ impl Drop for ThreadPool {
     }
 }
 
+/// A job submitted through [`ThreadPool::submit_with_result`] panicked;
+/// the panic message is captured so the waiter can report it.
+#[derive(Debug, Clone)]
+pub struct JobPanicked {
+    pub message: String,
+}
+
+impl std::fmt::Display for JobPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pool job panicked: {}", self.message)
+    }
+}
+impl std::error::Error for JobPanicked {}
+
 /// A one-shot result slot for submitting a job and waiting for its value.
 pub struct JobHandle<T> {
-    rx: mpsc::Receiver<T>,
+    rx: mpsc::Receiver<Result<T, JobPanicked>>,
 }
 
 impl<T> JobHandle<T> {
-    pub fn wait(self) -> T {
-        self.rx.recv().expect("job dropped without result")
+    /// Wait for the job. A panicked job comes back as `Err(JobPanicked)`
+    /// with the message captured — it used to drop its sender, leaving
+    /// the waiter to panic on a closed channel instead of learning what
+    /// went wrong.
+    pub fn wait(self) -> Result<T, JobPanicked> {
+        self.rx.recv().unwrap_or_else(|_| {
+            // The job was dropped without ever running — only possible
+            // if the pool shut down first; surface it the same typed way.
+            Err(JobPanicked { message: "job dropped without running (pool shut down)".into() })
+        })
     }
 }
 
 impl ThreadPool {
     /// Submit a job that returns a value; wait on the returned handle.
+    /// A panic inside `f` is captured for the waiter (see
+    /// [`JobHandle::wait`]) and then re-propagated so the pool's
+    /// [`panicked`](ThreadPool::panicked) tally still counts it.
     pub fn submit_with_result<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
         &self,
         f: F,
     ) -> JobHandle<T> {
         let (tx, rx) = mpsc::channel();
         self.submit(move || {
-            let _ = tx.send(f());
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                Ok(v) => {
+                    let _ = tx.send(Ok(v));
+                }
+                Err(payload) => {
+                    let message = if let Some(s) = payload.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = payload.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "panic payload of unknown type".to_string()
+                    };
+                    let _ = tx.send(Err(JobPanicked { message }));
+                    std::panic::resume_unwind(payload);
+                }
+            }
         });
         JobHandle { rx }
     }
@@ -416,7 +456,7 @@ mod tests {
     fn pool_runs_jobs_and_returns_values() {
         let pool = ThreadPool::new(4);
         let handles: Vec<_> = (0..32).map(|i| pool.submit_with_result(move || i * i)).collect();
-        let vals: Vec<i32> = handles.into_iter().map(|h| h.wait()).collect();
+        let vals: Vec<i32> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
         assert_eq!(vals, (0..32).map(|i| i * i).collect::<Vec<_>>());
         assert_eq!(pool.panicked(), 0);
     }
@@ -425,10 +465,28 @@ mod tests {
     fn pool_counts_panics_and_survives() {
         let pool = ThreadPool::new(2);
         pool.submit(|| panic!("boom"));
-        let ok = pool.submit_with_result(|| 41 + 1).wait();
+        let ok = pool.submit_with_result(|| 41 + 1).wait().unwrap();
         assert_eq!(ok, 42);
         // The panicking job has definitely retired because the queue is FIFO
         // per worker... but with 2 workers ordering isn't guaranteed; wait.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while pool.panicked() == 0 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.panicked(), 1);
+    }
+
+    #[test]
+    fn panicked_result_job_surfaces_as_error_not_hang() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit_with_result(|| -> u32 { panic!("exploded on purpose") });
+        // Regression: this used to panic on a closed channel ("job
+        // dropped without result") instead of reporting the job's panic.
+        let err = h.wait().expect_err("panicked job must yield JobPanicked");
+        assert!(err.message.contains("exploded on purpose"), "got: {}", err.message);
+        // The worker survived and keeps serving...
+        assert_eq!(pool.submit_with_result(|| 7u32).wait().unwrap(), 7);
+        // ...and the pool's panic tally still counts the job.
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
         while pool.panicked() == 0 && std::time::Instant::now() < deadline {
             std::thread::yield_now();

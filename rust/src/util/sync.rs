@@ -71,6 +71,38 @@ pub mod thread {
     pub use loom::thread::{spawn, yield_now, JoinHandle};
 
     pub use std::thread::{available_parallelism, scope};
+
+    /// `std::thread::sleep` by default; under loom (which has no
+    /// clock) a yield — callers must treat sleeps as pacing hints,
+    /// never as synchronization, which is exactly how the supervisor
+    /// poll and the backoff delays use them.
+    #[cfg(not(loom))]
+    pub fn sleep(dur: std::time::Duration) {
+        std::thread::sleep(dur);
+    }
+
+    /// Loom variant of [`sleep`] — see the `std` variant's docs.
+    #[cfg(loom)]
+    pub fn sleep(_dur: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+}
+
+/// Non-blocking "has this thread terminated?" probe, used by the
+/// worker supervisor to detect shard deaths without joining live
+/// threads. Loom's `JoinHandle` has no such probe, so the loom shim
+/// always answers `false` — supervision is exercised by the chaos
+/// harness and TSan, while the loom respawn model drives the
+/// join/respawn handoff directly.
+#[cfg(not(loom))]
+pub fn is_finished<T>(handle: &thread::JoinHandle<T>) -> bool {
+    handle.is_finished()
+}
+
+/// Loom variant of [`is_finished`] — see the `std` variant's docs.
+#[cfg(loom)]
+pub fn is_finished<T>(_handle: &thread::JoinHandle<T>) -> bool {
+    false
 }
 
 /// `thread::Builder::new().name(name).spawn(f)` under `std`; a plain
@@ -135,6 +167,21 @@ mod tests {
     fn spawn_named_runs_and_joins() {
         let h = spawn_named("minmax-facade-test".into(), || 41 + 1).unwrap();
         assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn is_finished_flips_after_exit() {
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        let g2 = Arc::clone(&gate);
+        let h = spawn_named("minmax-finish-probe".into(), move || {
+            drop(g2.lock().unwrap());
+        })
+        .unwrap();
+        // The worker is blocked on the gate, so it cannot be finished.
+        assert!(!is_finished(&h));
+        drop(held);
+        h.join().unwrap();
     }
 
     #[test]

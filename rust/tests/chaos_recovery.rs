@@ -1,0 +1,429 @@
+//! Seeded chaos harness for the fault-tolerant serving cluster.
+//!
+//! Drives the production `ScoreRouter`/`QueryRouter` under injected
+//! worker panics, worker deaths, slow requests, and queue stalls
+//! (`coordinator::faults`, deterministic from one u64 seed) while
+//! models hot-swap underneath, and asserts the fault-tolerance
+//! contract end to end:
+//!
+//! * **Exactly one response per accepted request** — never zero (lost)
+//!   and never two (duplicate), across panic → respawn → hot-swap.
+//! * **Completed predictions are bit-identical** to `Pipeline::predict`
+//!   for the model version that scored them — chaos may fail requests,
+//!   it may never corrupt one.
+//! * **No client blocks past its bound** — every wait here uses
+//!   `wait_timeout`; a timeout is a lost response and fails the test.
+//! * **The snapshot reconciles**: completed + rejected + shed +
+//!   deadline_expired + panicked == requests, with restarts > 0 once
+//!   deaths are injected.
+//!
+//! CI sweeps `MINMAX_FAULT_RATE` ∈ {0, 0.05, 0.2} × `MINMAX_TEST_SHARDS`
+//! ∈ {1, 4} (the `chaos` matrix leg); without the env vars this runs
+//! rate 0.25 over shard counts {1, 4}.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use minmax::coordinator::{
+    silence_injected_panics, ClusterConfig, ClusterError, FaultPlan, QueryRouter, ScoreRouter,
+    INJECTED,
+};
+use minmax::cws::{LshConfig, PackedLshIndex, QueryParams, QueryScratch};
+use minmax::data::sparse::{Csr, CsrBuilder};
+use minmax::data::synth::{generate, SynthConfig};
+use minmax::data::Dataset;
+use minmax::pipeline::Pipeline;
+use minmax::util::rng::Pcg64;
+
+/// Headline fault rate: `MINMAX_FAULT_RATE` (the CI chaos matrix) or a
+/// hefty default so a bare `cargo test` exercises real chaos.
+fn fault_rate() -> f64 {
+    std::env::var("MINMAX_FAULT_RATE").ok().and_then(|s| s.trim().parse().ok()).unwrap_or(0.25)
+}
+
+fn fault_seed() -> u64 {
+    std::env::var("MINMAX_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Shard counts under test: `MINMAX_TEST_SHARDS` pins one (the CI
+/// matrix), default sweeps both.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("MINMAX_TEST_SHARDS") {
+        Ok(s) => vec![s.trim().parse().expect("MINMAX_TEST_SHARDS must be a shard count")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn chaos_cfg(shards: usize, rate: f64) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        queue_cap: 1024,
+        shed_watermark: None,
+        steal: true,
+        faults: Some(FaultPlan::with_rate(fault_seed(), rate)),
+    }
+}
+
+fn letter(data_seed: u64) -> Dataset {
+    generate("letter", SynthConfig { seed: data_seed, n_train: 120, n_test: 60 }).unwrap()
+}
+
+/// Two models with identical serving shape but different weights — the
+/// hot-swap pair (same fixture as `cluster_parity.rs`).
+fn trained_pair() -> (Pipeline, Pipeline, Dataset) {
+    let ds = letter(13);
+    let other = letter(31);
+    assert_eq!(ds.dim(), other.dim());
+    let mut a = Pipeline::builder().seed(7).samples(24).i_bits(4).build().unwrap();
+    a.fit(&ds.train_x, &ds.train_y).unwrap();
+    let mut b = Pipeline::builder().seed(7).samples(24).i_bits(4).build().unwrap();
+    b.fit(&other.train_x, &other.train_y).unwrap();
+    (a, b, ds)
+}
+
+/// After any reply, the response channel must be spent: a second
+/// bounded wait may time out or see the dropped sender, but another
+/// reply would be a duplicate — the exactly-once violation this
+/// harness exists to catch.
+macro_rules! assert_spent {
+    ($probe:expr, $($ctx:tt)+) => {
+        assert!(
+            matches!($probe, Err(ClusterError::WaitTimeout | ClusterError::ShuttingDown)),
+            $($ctx)+
+        )
+    };
+}
+
+/// The flagship: concurrent clients + a hot-swapping publisher over a
+/// faulted score cluster. Every accepted request is answered exactly
+/// once within its bound, completions are bit-identical to the version
+/// that scored them, and the snapshot reconciles with restarts.
+#[test]
+fn chaos_score_cluster_recovers_and_loses_nothing() {
+    silence_injected_panics();
+    let rate = fault_rate();
+    let (pipe_a, pipe_b, ds) = trained_pair();
+    let want_a = pipe_a.predict(&ds.test_x).unwrap();
+    let want_b = pipe_b.predict(&ds.test_x).unwrap();
+    let scorer_a = pipe_a.scorer(ds.dim()).unwrap();
+    let scorer_b = pipe_b.scorer(ds.dim()).unwrap();
+    let test = ds.test_x.to_dense();
+    let rows = test.rows();
+
+    for shards in shard_counts() {
+        let cluster = pipe_a.cluster(ds.dim(), chaos_cfg(shards, rate)).unwrap();
+        let n_clients = 3usize;
+        let per_client = 250usize;
+        let swaps = 12usize;
+        let (ok, panicked, deadline) = std::thread::scope(|s| {
+            // Publisher: alternate B, A, B, … so odd versions are model
+            // A and even versions are model B — hot swaps keep landing
+            // while workers die and respawn.
+            let publisher = s.spawn(|| {
+                for i in 0..swaps {
+                    let next = if i % 2 == 0 { scorer_b.clone() } else { scorer_a.clone() };
+                    cluster.publish(next).unwrap();
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            });
+            let clients: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    let cluster = &cluster;
+                    let test = &test;
+                    let (want_a, want_b) = (&want_a, &want_b);
+                    s.spawn(move || {
+                        let (mut ok, mut panicked, mut deadline) = (0u64, 0u64, 0u64);
+                        for i in 0..per_client {
+                            let row = (c * per_client + i) % rows;
+                            // Every 7th request carries an already-
+                            // expired deadline: it must come back as
+                            // the typed DeadlineExceeded, not hang and
+                            // not burn compute.
+                            let sub = if i % 7 == 3 {
+                                cluster.submit_with_deadline(
+                                    row as u64,
+                                    test.row(row),
+                                    Duration::ZERO,
+                                )
+                            } else {
+                                cluster.submit(row as u64, test.row(row))
+                            };
+                            let sub = match sub {
+                                Ok(sub) => sub,
+                                Err(ClusterError::QueueFull | ClusterError::Shed { .. }) => {
+                                    continue
+                                }
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            };
+                            match sub.wait_timeout(Duration::from_secs(30)) {
+                                Ok(resp) => {
+                                    assert_eq!(resp.id, row as u64);
+                                    let want = if resp.version % 2 == 1 {
+                                        want_a[row]
+                                    } else {
+                                        want_b[row]
+                                    };
+                                    assert_eq!(
+                                        resp.label, want,
+                                        "shards={shards} row {row} version {} must be \
+                                         bit-identical under chaos",
+                                        resp.version
+                                    );
+                                    ok += 1;
+                                }
+                                Err(ClusterError::WorkerPanicked { message }) => {
+                                    assert!(
+                                        message.contains(INJECTED),
+                                        "real bug behind the injection harness: {message}"
+                                    );
+                                    panicked += 1;
+                                }
+                                Err(ClusterError::DeadlineExceeded) => deadline += 1,
+                                Err(e) => {
+                                    panic!("client hung or lost a response (shards={shards}): {e}")
+                                }
+                            }
+                            assert_spent!(
+                                sub.wait_timeout(Duration::ZERO),
+                                "duplicate response: shards={shards} row {row}"
+                            );
+                        }
+                        (ok, panicked, deadline)
+                    })
+                })
+                .collect();
+            let mut totals = (0u64, 0u64, 0u64);
+            for h in clients {
+                let (o, p, d) = h.join().unwrap();
+                totals = (totals.0 + o, totals.1 + p, totals.2 + d);
+            }
+            publisher.join().unwrap();
+            totals
+        });
+
+        // Quiescent: every client waited out its own requests, so the
+        // snapshot must reconcile exactly against the client tallies.
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, ok, "shards={shards}");
+        assert_eq!(snap.panicked, panicked, "shards={shards}");
+        assert_eq!(snap.deadline_expired, deadline, "shards={shards}");
+        assert_eq!(snap.accepted(), ok + panicked + deadline, "shards={shards}");
+        assert_eq!(snap.answered(), snap.accepted(), "shards={shards}");
+        assert!(
+            snap.reconciles(),
+            "shards={shards} accounting must partition requests: {}",
+            snap.render()
+        );
+        assert_eq!(snap.current_version, 1 + swaps as u64);
+        let counted: u64 = snap.version_counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(counted, snap.completed, "every completion tallied under some version");
+        assert!(deadline > 0, "shards={shards} expired-deadline submits must be typed");
+        if rate >= 0.05 {
+            assert!(snap.panicked > 0, "shards={shards} rate {rate} must inject panics");
+            assert!(snap.restarts > 0, "shards={shards} rate {rate} must exercise respawn");
+        }
+        if rate == 0.0 {
+            assert_eq!(snap.panicked, 0, "shards={shards} zero rate injects nothing");
+            assert_eq!(snap.restarts, 0, "shards={shards} zero rate respawns nothing");
+        }
+        cluster.shutdown();
+    }
+}
+
+/// Sparse corpus for the query-mode chaos run.
+fn corpus(rows: usize, dim: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut b = CsrBuilder::new(dim);
+    for _ in 0..rows {
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for i in 0..dim as u32 {
+            if rng.uniform() < 0.3 {
+                row.push((i, rng.lognormal(0.0, 1.0) as f32));
+            }
+        }
+        if row.is_empty() {
+            row.push((0, 1.0));
+        }
+        b.push_row(row);
+    }
+    b.finish()
+}
+
+/// Query mode under the same chaos mix: completed retrievals stay
+/// bit-identical to direct index calls, faults come back typed, and
+/// the snapshot reconciles.
+#[test]
+fn chaos_query_cluster_isolates_faults_and_stays_bit_identical() {
+    silence_injected_panics();
+    let rate = fault_rate();
+    let idx = Arc::new(
+        PackedLshIndex::build(
+            Arc::new(corpus(120, 64, 5)),
+            LshConfig { bands: 8, rows_per_band: 2, seed: 9 },
+            8,
+        )
+        .unwrap(),
+    );
+    let params = QueryParams { probes: 1, min_agreement: 0.0 };
+    let mut scratch = QueryScratch::new();
+    for shards in shard_counts() {
+        let cluster = QueryRouter::start(Arc::clone(&idx), params, chaos_cfg(shards, rate)).unwrap();
+        let (mut ok, mut panicked, mut deadline) = (0u64, 0u64, 0u64);
+        for pass in 0..3u64 {
+            for row in 0..idx.len() {
+                let q = idx.corpus().row(row);
+                let id = pass * 1000 + row as u64;
+                let sub = if row % 7 == 3 {
+                    cluster.submit_with_deadline(id, q, 5, Duration::ZERO)
+                } else {
+                    cluster.submit(id, q, 5)
+                };
+                let sub = match sub {
+                    Ok(sub) => sub,
+                    Err(ClusterError::QueueFull | ClusterError::Shed { .. }) => continue,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                };
+                match sub.wait_timeout(Duration::from_secs(30)) {
+                    Ok(resp) => {
+                        assert_eq!(
+                            resp.hits,
+                            idx.query_with(q, 5, params, &mut scratch),
+                            "shards={shards} row {row} must stay bit-identical under chaos"
+                        );
+                        ok += 1;
+                    }
+                    Err(ClusterError::WorkerPanicked { message }) => {
+                        assert!(
+                            message.contains(INJECTED),
+                            "real bug behind the injection harness: {message}"
+                        );
+                        panicked += 1;
+                    }
+                    Err(ClusterError::DeadlineExceeded) => deadline += 1,
+                    Err(e) => panic!("client hung or lost a response (shards={shards}): {e}"),
+                }
+                assert_spent!(
+                    sub.wait_timeout(Duration::ZERO),
+                    "duplicate response: shards={shards} row {row}"
+                );
+            }
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.completed, ok, "shards={shards}");
+        assert_eq!(snap.panicked, panicked, "shards={shards}");
+        assert_eq!(snap.deadline_expired, deadline, "shards={shards}");
+        assert!(snap.reconciles(), "shards={shards}: {}", snap.render());
+        assert!(deadline > 0, "shards={shards} expired-deadline submits must be typed");
+        if rate >= 0.05 {
+            assert!(snap.panicked > 0, "shards={shards} rate {rate} must inject panics");
+        }
+        if rate >= 0.2 {
+            assert!(snap.restarts > 0, "shards={shards} rate {rate} must exercise respawn");
+        }
+        cluster.shutdown();
+    }
+}
+
+/// Every answered request kills its worker — the harshest supervision
+/// load — and shutdown races the carnage.
+fn death_heavy(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        panic_rate: 0.3,
+        death_rate: 1.0,
+        slow_rate: 0.0,
+        slow: Duration::ZERO,
+        stall_rate: 0.0,
+        stall: Duration::ZERO,
+    }
+}
+
+/// Shutdown while every worker keeps dying must terminate (no
+/// deadlock: the supervisor joins corpses and stops respawning past
+/// the stop flag) and still answer every accepted request — score mode.
+#[test]
+fn chaos_shutdown_races_worker_deaths_without_deadlock_score() {
+    silence_injected_panics();
+    let (pipe_a, _, ds) = trained_pair();
+    let test = ds.test_x.to_dense();
+    let cfg = ClusterConfig {
+        shards: 2,
+        queue_cap: 1024,
+        shed_watermark: None,
+        steal: true,
+        faults: Some(death_heavy(fault_seed())),
+    };
+    let cluster = pipe_a.cluster(ds.dim(), cfg).unwrap();
+    let mut pending = Vec::new();
+    for i in 0..96u64 {
+        match cluster.submit(i, test.row((i as usize) % test.rows())) {
+            Ok(sub) => pending.push(sub),
+            Err(ClusterError::QueueFull | ClusterError::Shed { .. }) => {}
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let accepted = pending.len() as u64;
+    assert!(accepted > 0);
+    cluster.shutdown();
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    for sub in pending {
+        match sub.wait() {
+            Ok(_) => ok += 1,
+            Err(ClusterError::WorkerPanicked { message }) => {
+                assert!(message.contains(INJECTED), "{message}");
+                panicked += 1;
+            }
+            Err(e) => panic!("accepted request lost across shutdown-during-death: {e}"),
+        }
+    }
+    assert_eq!(ok + panicked, accepted, "every accepted request answered exactly once");
+}
+
+/// The same shutdown-during-death race for the query router.
+#[test]
+fn chaos_shutdown_races_worker_deaths_without_deadlock_query() {
+    silence_injected_panics();
+    let idx = Arc::new(
+        PackedLshIndex::build(
+            Arc::new(corpus(60, 48, 11)),
+            LshConfig { bands: 8, rows_per_band: 2, seed: 9 },
+            8,
+        )
+        .unwrap(),
+    );
+    let params = QueryParams { probes: 1, min_agreement: 0.0 };
+    let cfg = ClusterConfig {
+        shards: 2,
+        queue_cap: 1024,
+        shed_watermark: None,
+        steal: true,
+        faults: Some(death_heavy(fault_seed())),
+    };
+    let cluster = QueryRouter::start(Arc::clone(&idx), params, cfg).unwrap();
+    let mut pending = Vec::new();
+    for i in 0..96u64 {
+        match cluster.submit(i, idx.corpus().row((i as usize) % idx.len()), 5) {
+            Ok(sub) => pending.push(sub),
+            Err(ClusterError::QueueFull | ClusterError::Shed { .. }) => {}
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let accepted = pending.len() as u64;
+    assert!(accepted > 0);
+    cluster.shutdown();
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    for sub in pending {
+        match sub.wait() {
+            Ok(_) => ok += 1,
+            Err(ClusterError::WorkerPanicked { message }) => {
+                assert!(message.contains(INJECTED), "{message}");
+                panicked += 1;
+            }
+            Err(e) => panic!("accepted request lost across shutdown-during-death: {e}"),
+        }
+    }
+    assert_eq!(ok + panicked, accepted, "every accepted request answered exactly once");
+}

@@ -45,7 +45,7 @@ fn trained_pair() -> (Pipeline, Pipeline, Dataset) {
 }
 
 fn cfg(shards: usize) -> ClusterConfig {
-    ClusterConfig { shards, queue_cap: 512, shed_watermark: None, steal: true }
+    ClusterConfig { shards, queue_cap: 512, shed_watermark: None, steal: true, faults: None }
 }
 
 #[test]
@@ -84,6 +84,8 @@ fn cluster_matches_pipeline_before_and_after_swap() {
         let snap = cluster.snapshot();
         assert_eq!(snap.completed, snap.requests);
         assert_eq!(snap.rejected + snap.shed, 0);
+        assert!(snap.reconciles(), "accounting must partition requests");
+        assert_eq!(snap.restarts, 0, "healthy run respawns nothing");
         assert_eq!(snap.current_version, 2);
         cluster.shutdown();
     }
@@ -175,8 +177,11 @@ fn hot_swap_under_load_loses_nothing_and_scores_on_tagged_version() {
             publisher.join().unwrap();
             assert!(total > 0);
             let snap = cluster.snapshot();
-            assert_eq!(snap.requests, total, "shards={shards}");
+            // `requests` counts rejected submits too; what the clients
+            // tallied is the accepted subset, and none may be lost.
+            assert_eq!(snap.accepted(), total, "shards={shards}");
             assert_eq!(snap.completed, total, "shards={shards} zero loss");
+            assert!(snap.reconciles(), "shards={shards} accounting partitions requests");
             assert_eq!(snap.current_version, 1 + swaps as u64);
             let counted: u64 = snap.version_counts.iter().map(|&(_, c)| c).sum();
             assert_eq!(counted, total, "every completion tallied under some version");

@@ -226,6 +226,52 @@ fn shutdown_drain_serves_every_request_exactly_once() {
     });
 }
 
+/// Invariant: supervisor respawn handoff (DESIGN.md §2.9). A
+/// first-incarnation worker serves at most one request and dies; the
+/// supervisor joins the corpse and only then spawns the replacement
+/// over the same queues — the production `supervisor_loop` handoff.
+/// Across the death, every accepted request is served by exactly one
+/// incarnation: none lost with the corpse (its last pop was answered
+/// before dying — deaths never hold a request), none served twice.
+#[test]
+fn respawn_handoff_serves_every_request_exactly_once() {
+    model(|| {
+        let qs: Arc<Vec<ShardQueue<u64>>> =
+            Arc::new((0..1).map(|_| ShardQueue::new()).collect());
+        qs[0].push(1, 8, None).unwrap();
+        qs[0].push(2, 8, None).unwrap();
+        // Incarnation 0: serve one request, then die.
+        let w0 = {
+            let qs = Arc::clone(&qs);
+            thread::spawn(move || loop {
+                match qs[0].pop_wait(STEAL_POLL) {
+                    Pop::Req(r) => return vec![*r],
+                    Pop::Empty => {}
+                    Pop::Closed => return Vec::new(),
+                }
+            })
+        };
+        // Supervisor: join the corpse first (its served request is
+        // final), then hand the queues to incarnation 1.
+        let supervisor = {
+            let qs = Arc::clone(&qs);
+            thread::spawn(move || {
+                let mut got = w0.join().unwrap();
+                let w1 = {
+                    let qs = Arc::clone(&qs);
+                    thread::spawn(move || drain_worker(0, &qs))
+                };
+                got.extend(w1.join().unwrap());
+                got
+            })
+        };
+        qs[0].close();
+        let mut got = supervisor.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, [1, 2], "nothing lost with the corpse, nothing served twice");
+    });
+}
+
 /// Invariant: the metrics read-order contract. Outcome counters are
 /// Release-incremented after their request increment and snapshot
 /// loads them Acquire *before* the request counter, so a concurrent

@@ -248,7 +248,13 @@ fn query_router_matches_direct_index_across_shards_and_swaps() {
     let params = QueryParams { probes: 1, min_agreement: 0.0 };
     let mut s = QueryScratch::new();
     for shards in shard_counts() {
-        let cfg = ClusterConfig { shards, queue_cap: 256, shed_watermark: None, steal: true };
+        let cfg = ClusterConfig {
+            shards,
+            queue_cap: 256,
+            shed_watermark: None,
+            steal: true,
+            faults: None,
+        };
         let cluster = QueryRouter::start(Arc::clone(&v1), params, cfg).unwrap();
         for row in 0..v1.len() {
             let q = v1.corpus().row(row);
@@ -278,6 +284,7 @@ fn query_router_matches_direct_index_across_shards_and_swaps() {
         }
         let snap = cluster.snapshot();
         assert_eq!(snap.completed, snap.requests);
+        assert!(snap.reconciles(), "accounting must partition requests");
         assert_eq!(snap.version_counts.len(), 2);
         cluster.shutdown();
     }

@@ -104,7 +104,7 @@ fn pjrt_service_batches_under_load() {
     let v: Vec<f32> = (1..=64).map(|i| i as f32 / 8.0).collect();
     let rxs: Vec<_> = (0..64).map(|i| svc.submit(i, v.clone()).unwrap()).collect();
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.samples.len(), 64);
     }
     let snap = svc.metrics().snapshot();

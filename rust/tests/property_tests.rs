@@ -319,7 +319,10 @@ fn prop_service_responds_to_every_request() {
             }
         }
         for (i, rx) in pending {
-            let resp = rx.recv().map_err(|_| "dropped response")?;
+            let resp = rx
+                .recv()
+                .map_err(|_| "dropped response")?
+                .map_err(|e| format!("worker error: {e}"))?;
             ensure(resp.id == i as u64, "response id matches")?;
             ensure(resp.samples.len() == k, "k samples")?;
         }

@@ -1,6 +1,6 @@
-//! Concurrency / unsafe-hygiene lints (DESIGN.md §2.8).
+//! Concurrency / unsafe-hygiene lints (DESIGN.md §2.8, §2.9).
 //!
-//! Four rules, all checked over *code only* — a comment/string stripper
+//! Five rules, all checked over *code only* — a comment/string stripper
 //! runs first so prose can mention the banned tokens freely:
 //!
 //! 1. **safety-comment** — every `unsafe` token needs a `// SAFETY:`
@@ -24,8 +24,15 @@
 //!    why iteration order cannot reach any output (RandomState makes
 //!    iteration order run-dependent, which breaks bit-reproducibility
 //!    — the same reason `cws::lsh` moved to open addressing).
+//! 5. **bare-spawn** — `thread::spawn` is banned in
+//!    `rust/src/coordinator/`: serving threads must go through
+//!    `util::sync::spawn_named` so every worker/supervisor thread is
+//!    named (panic reports and debugger output identify the shard and
+//!    incarnation — DESIGN.md §2.9's supervision protocol depends on
+//!    it) and spawn failures surface as `Result` instead of a panic in
+//!    the startup path.
 //!
-//! Rules 2–4 skip everything from the first `#[cfg(test)]` line to end
+//! Rules 2–5 skip everything from the first `#[cfg(test)]` line to end
 //! of file (test modules sit at the bottom of every file in this repo
 //! and may use std primitives or hash maps freely).
 
@@ -129,6 +136,16 @@ pub fn check_file(relpath: &str, content: &str) -> Vec<Violation> {
                 line: idx + 1,
                 lint: "std-sync-ban",
                 msg: "use the `util::sync` facade so loom can model this module".to_string(),
+            });
+        }
+        if relpath.starts_with("rust/src/coordinator/") && has_word(line, "thread::spawn") {
+            out.push(Violation {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "bare-spawn",
+                msg: "spawn serving threads via `util::sync::spawn_named` (named for \
+                      supervision, fallible startup)"
+                    .to_string(),
             });
         }
         if hash_scoped
@@ -344,6 +361,23 @@ mod tests {
         // The facade is the sanctioned importer; other modules are free.
         assert!(lints("rust/src/util/sync.rs", bad).is_empty());
         assert!(lints("rust/src/serve/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn seeded_bare_spawn_in_coordinator_fails() {
+        let bad = "fn f() {\n    thread::spawn(|| {});\n}\n";
+        assert_eq!(lints("rust/src/coordinator/x.rs", bad), ["bare-spawn"]);
+        // Fully-qualified spawn trips both the facade ban and the
+        // spawn ban.
+        let qualified = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(lints("rust/src/coordinator/x.rs", qualified), ["std-sync-ban", "bare-spawn"]);
+        let good = "fn f() {\n    spawn_named(\"minmax-w0\".into(), || {}).unwrap();\n}\n";
+        assert!(lints("rust/src/coordinator/x.rs", good).is_empty());
+        // Out of scope: other modules and test code may spawn freely.
+        assert!(lints("rust/src/util/x.rs", bad).is_empty());
+        let in_tests =
+            "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g() { thread::spawn(|| {}); }\n}\n";
+        assert!(lints("rust/src/coordinator/x.rs", in_tests).is_empty());
     }
 
     #[test]
